@@ -1,0 +1,79 @@
+//! Heterogeneous allocations (§4.2 / §5.3): the Iterative Diffusive
+//! strategy on the NASP-like cluster (8 x 20-core IB nodes + 8 x 32-core
+//! Ethernet nodes), including the paper's Table 2 worked example and a
+//! real heterogeneous resize with per-step plan trace.
+//!
+//! ```bash
+//! cargo run --release --example heterogeneous_resize
+//! ```
+
+use paraspawn::coordinator::figures::{describe_report, table2};
+use paraspawn::coordinator::{run_reconfiguration, Scenario};
+use paraspawn::mam::plan::{diffusive_trace, plan_steps, Plan};
+use paraspawn::mam::{Method, SpawnStrategy};
+use paraspawn::rms::{AllocPolicy, Rms};
+use paraspawn::topology::Cluster;
+
+fn main() -> anyhow::Result<()> {
+    // --- The paper's Table 2, regenerated from Eq. 4-8 -------------------
+    println!("Table 2 (Iterative Diffusive worked example, Eq. 4-8):");
+    print!("{}", table2().to_ascii());
+    println!("(λ per Eq. 6; the paper's table has an off-by-one typo at s>=2\n\
+              that affects no other column — see DESIGN.md)\n");
+
+    // --- The diffusive plan for a real NASP resize ------------------------
+    let rms = Rms::new(Cluster::nasp());
+    let initial = rms.plan_allocation(2, AllocPolicy::BalancedTypes)?;
+    println!("initial allocation: {:?}", initial.slots);
+    let mut claimed = rms.clone();
+    claimed.claim(&initial)?;
+    let target = claimed.grow(&initial, 8, AllocPolicy::BalancedTypes)?;
+    println!("target allocation:  {:?}", target.slots);
+
+    let nodes: Vec<usize> = target.nodes();
+    let a: Vec<u32> = target.slots.iter().map(|&(_, c)| c).collect();
+    let mut r = vec![0u32; nodes.len()];
+    for (i, &(node, cores)) in target.slots.iter().enumerate() {
+        if initial.cores_on(node) > 0 {
+            r[i] = cores.min(initial.cores_on(node));
+        }
+    }
+    let plan = Plan::new(0, Method::Merge, SpawnStrategy::ParallelDiffusive, nodes, a, r);
+    println!("\nA = {:?}\nR = {:?}\nS = {:?}", plan.a, plan.r, plan.s);
+    println!("steps = {}", plan_steps(&plan));
+    println!("\nstep trace:");
+    for row in diffusive_trace(&plan) {
+        println!(
+            "  s={}  t_s={:<4} g_s={:<4} lambda_s={:<4} T_s={:<3} G_s={}",
+            row.s, row.t, row.g, row.lambda, row.tt, row.gg
+        );
+    }
+    println!("\nper-slot spawn tasks (slot -> [(step, gid, node, size)]):");
+    let mut slots: Vec<_> = plan.assignments().into_iter().collect();
+    slots.sort_by_key(|&(slot, _)| slot);
+    for (slot, tasks) in slots {
+        let t: Vec<String> = tasks
+            .iter()
+            .map(|t| {
+                format!(
+                    "(s{}, g{}, n{}, x{})",
+                    t.step, t.group.gid, plan.nodes[t.group.node_idx], t.group.size
+                )
+            })
+            .collect();
+        println!("  slot {slot:<3} -> {}", t.join(" "));
+    }
+
+    // --- Execute the resize end to end ------------------------------------
+    println!("\n--- executing 2 -> 8 node heterogeneous expansion ---");
+    let s = Scenario::nasp(2, 8).with(Method::Merge, SpawnStrategy::ParallelDiffusive);
+    let report = run_reconfiguration(&s)?;
+    println!("{}", describe_report(&report));
+
+    println!("\n--- and the TS shrink back, 8 -> 2 nodes ---");
+    let s = Scenario { prepare_parallel: true, ..Scenario::nasp(8, 2) }
+        .with(Method::Merge, SpawnStrategy::Plain);
+    let report_ts = run_reconfiguration(&s)?;
+    println!("{}", describe_report(&report_ts));
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! End-to-end driver (E8 in DESIGN.md): a malleable Monte-Carlo π
+//! application whose per-iteration compute runs through the **full
+//! three-layer stack** — the AOT-compiled Pallas `pi` kernel (L1) inside
+//! the JAX model (L2), executed from the Rust coordinator via PJRT (L3) —
+//! while an RMS trace expands and shrinks the job at runtime:
+//!
+//!   4 -> 8 nodes (Merge + Hypercube) -> 12 (Merge + Diffusive)
+//!     -> 6 (Merge = TS shrink) -> 10 (Merge + Hypercube) -> 4 (TS)
+//!
+//! Logs the π estimate per iteration (the "loss curve" of this workload)
+//! and the reconfiguration breakdowns; the run is recorded in
+//! EXPERIMENTS.md §E8.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example malleable_montecarlo
+//! ```
+
+use paraspawn::app::{self, AppSpec, HostPiEval, PiEval, ResizeEvent};
+use paraspawn::config::{CostModel, SimConfig};
+use paraspawn::mam::{Method, SpawnStrategy};
+use paraspawn::rms::{AllocPolicy, Rms};
+use paraspawn::runtime::{Engine, PiKernel};
+use paraspawn::simmpi::World;
+use paraspawn::topology::Cluster;
+use paraspawn::util::csvout::fmt_time;
+use std::sync::{Arc, Mutex};
+
+fn main() -> anyhow::Result<()> {
+    // A 12-node, 8-core cluster keeps the end-to-end run snappy while
+    // exercising every reconfiguration path.
+    let cluster = Cluster::homogeneous(
+        "demo",
+        12,
+        8,
+        paraspawn::topology::LinkKind::InfiniBand100,
+    );
+    let mut rms = Rms::new(cluster.clone());
+    let a4 = rms.plan_allocation(4, AllocPolicy::WholeNodes)?;
+    rms.claim(&a4)?;
+    let a8 = rms.grow(&a4, 8, AllocPolicy::WholeNodes)?;
+    let a12 = rms.grow(&a8, 12, AllocPolicy::WholeNodes)?;
+    let a6 = rms.shrink(&a12, 6);
+    let a10 = rms.grow(&a6, 10, AllocPolicy::WholeNodes)?;
+    let a4_final = rms.shrink(&a10, 4);
+
+    // L1/L2 through PJRT; falls back to a host evaluator (with a warning)
+    // when artifacts are missing.
+    let pi_eval: Arc<dyn PiEval> = match Engine::cpu().and_then(|e| PiKernel::load(&e)) {
+        Ok(k) => {
+            println!("π kernel: AOT Pallas via PJRT (batch {})", k.batch());
+            Arc::new(k)
+        }
+        Err(e) => {
+            eprintln!("WARNING: artifacts unavailable ({e}); using host fallback");
+            Arc::new(HostPiEval)
+        }
+    };
+
+    let m = Method::Merge;
+    use SpawnStrategy::*;
+    let trace = vec![
+        ResizeEvent::new(a8, m, ParallelHypercube),
+        ResizeEvent::new(a12, m, ParallelDiffusive),
+        ResizeEvent::new(a6, m, Plain), // TS shrink
+        ResizeEvent::new(a10, m, ParallelHypercube),
+        ResizeEvent::new(a4_final, m, Plain), // TS
+    ];
+
+    let estimates = Arc::new(Mutex::new(Vec::new()));
+    let est2 = estimates.clone();
+    let spec = Arc::new(AppSpec {
+        iters_per_epoch: 5,
+        work_per_iter: 2000.0,
+        points_per_iter: 2048,
+        trace,
+        data_bytes: 8 << 20, // redistribute 8 MiB of application state
+        pi_eval,
+        observer: Some(Arc::new(move |epoch, iter, pi, vclock| {
+            est2.lock().unwrap().push((epoch, iter, pi, vclock));
+        })),
+    });
+
+    let world = World::new(cluster, SimConfig { cost: CostModel::mn5(), ..Default::default() });
+    app::run_malleable(&world, &a4, spec)?;
+
+    println!("\niter trace (epoch, iter, ranks-era, π estimate, virtual clock):");
+    for (epoch, iter, pi, vclock) in estimates.lock().unwrap().iter() {
+        println!("  e{epoch} i{iter}:  π ≈ {pi:.4}   t={}", fmt_time(*vclock));
+    }
+
+    println!("\nreconfigurations:");
+    for rec in world.metrics.reconfigs() {
+        let phases: Vec<String> = rec
+            .phases
+            .iter()
+            .map(|(p, d)| format!("{}={}", p.name(), fmt_time(*d)))
+            .collect();
+        println!(
+            "  epoch {}: {} {} {} -> {} ranks in {}   [{}]",
+            rec.epoch,
+            rec.method,
+            rec.strategy,
+            rec.ns,
+            rec.nt,
+            fmt_time(rec.total()),
+            phases.join(", ")
+        );
+    }
+
+    let returns = world.metrics.node_returns();
+    println!("\nnodes returned to the RMS: {}", returns.len());
+    for r in &returns {
+        println!("  node {} at t={}", r.node, fmt_time(r.at));
+    }
+    assert!(returns.len() >= 12 - 4, "TS shrinks must return nodes");
+
+    let final_pi = estimates.lock().unwrap().last().map(|&(_, _, pi, _)| pi).unwrap();
+    println!("\nfinal π estimate: {final_pi:.4} (true: {:.4})", std::f64::consts::PI);
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Quickstart: one parallel expansion + one TS shrink on a small cluster.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use paraspawn::coordinator::figures::describe_report;
+use paraspawn::coordinator::{run_reconfiguration, Scenario};
+use paraspawn::mam::{Method, SpawnStrategy};
+
+fn main() -> anyhow::Result<()> {
+    // Expand a job from 1 to 4 MN5 nodes (112 -> 448 ranks) with the
+    // paper's parallel Hypercube strategy (section 4.1).
+    let expand = Scenario::mn5(1, 4).with(Method::Merge, SpawnStrategy::ParallelHypercube);
+    let report = run_reconfiguration(&expand)?;
+    println!("--- expansion, Merge + Hypercube ---");
+    println!("{}\n", describe_report(&report));
+
+    // The same expansion with the classic single-spawn Merge: slightly
+    // faster, but its multi-node child MCW forbids TS shrinking later.
+    let plain = Scenario::mn5(1, 4).with(Method::Merge, SpawnStrategy::Plain);
+    let report_plain = run_reconfiguration(&plain)?;
+    println!("--- expansion, plain Merge (reference) ---");
+    println!("{}\n", describe_report(&report_plain));
+
+    // Shrink 4 -> 1 nodes. Thanks to the parallel expansion beforehand
+    // (prepare step), every expansion MCW sits on one node, so the Merge
+    // shrink is a TS: no spawning, whole nodes returned to the RMS.
+    let shrink = Scenario {
+        prepare_parallel: true,
+        ..Scenario::mn5(4, 1).with(Method::Merge, SpawnStrategy::Plain)
+    };
+    let report_ts = run_reconfiguration(&shrink)?;
+    println!("--- shrink, Merge = Termination Shrinkage ---");
+    println!("{}\n", describe_report(&report_ts));
+
+    println!(
+        "TS shrink vs parallel expansion: {:.0}x faster",
+        report.total_time / report_ts.total_time
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! RMS workload simulation: the system-level payoff of malleability
+//! (§1: DRM "can reduce workload makespan, substantially decreasing job
+//! waiting times"). Compares a rigid schedule against DRM with TS-cost
+//! shrinks (this paper) and with SS-cost shrinks (respawn-based), using
+//! reconfiguration costs measured by the figure harness.
+//!
+//! ```bash
+//! cargo run --release --example rms_workload
+//! ```
+
+use paraspawn::coordinator::{run_reconfiguration, Scenario};
+use paraspawn::mam::{Method, SpawnStrategy};
+use paraspawn::rms::workload::{simulate, synthetic_workload, ReconfigCostModel};
+use paraspawn::util::csvout::Table;
+
+fn main() -> anyhow::Result<()> {
+    // Measure real (virtual-time) reconfiguration costs on the simulator
+    // rather than hardcoding them.
+    let expand = run_reconfiguration(
+        &Scenario::mn5(1, 2).with(Method::Merge, SpawnStrategy::ParallelHypercube),
+    )?
+    .total_time;
+    let ts_shrink = run_reconfiguration(&Scenario {
+        prepare_parallel: true,
+        ..Scenario::mn5(2, 1).with(Method::Merge, SpawnStrategy::Plain)
+    })?
+    .total_time;
+    let ss_shrink = run_reconfiguration(
+        &Scenario::mn5(2, 1).with(Method::Baseline, SpawnStrategy::ParallelHypercube),
+    )?
+    .total_time;
+    println!(
+        "measured costs: expand {:.3}s, TS shrink {:.6}s, SS shrink {:.3}s\n",
+        expand, ts_shrink, ss_shrink
+    );
+
+    let nodes = 32;
+    let jobs = synthetic_workload(60, nodes, 0.6, 2024);
+    let rigid = simulate(nodes, &jobs, false, ReconfigCostModel::ts(expand));
+    let drm_ts = simulate(
+        nodes,
+        &jobs,
+        true,
+        ReconfigCostModel { expand_cost: expand, shrink_cost: ts_shrink },
+    );
+    let drm_ss = simulate(
+        nodes,
+        &jobs,
+        true,
+        ReconfigCostModel { expand_cost: expand, shrink_cost: ss_shrink },
+    );
+
+    let mut t = Table::new(vec!["policy", "makespan_s", "mean_wait_s", "turnaround_s", "reconfigs"]);
+    for (name, r) in [("rigid", &rigid), ("DRM + TS (this paper)", &drm_ts), ("DRM + SS", &drm_ss)] {
+        t.push_row(vec![
+            name.to_string(),
+            format!("{:.1}", r.makespan),
+            format!("{:.1}", r.mean_wait),
+            format!("{:.1}", r.mean_turnaround),
+            r.reconfigurations.to_string(),
+        ]);
+    }
+    print!("{}", t.to_ascii());
+
+    println!(
+        "\nDRM+TS improves makespan by {:.1}% over rigid ({:.1}% for DRM+SS)",
+        100.0 * (1.0 - drm_ts.makespan / rigid.makespan),
+        100.0 * (1.0 - drm_ss.makespan / rigid.makespan),
+    );
+    assert!(drm_ts.makespan <= rigid.makespan);
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! MaM-style automatic configuration selection through the L2 cost-model
+//! kernel: the coordinator builds one feature row per candidate
+//! (method x strategy), scores all of them in a single PJRT call and
+//! picks the cheapest given the job's expected future shrinks — the
+//! tradeoff at the heart of the paper (parallel spawning costs a little
+//! at expansion, enables very cheap TS shrinks later).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example strategy_selection
+//! ```
+
+use paraspawn::config::CostModel;
+use paraspawn::coordinator::select::{select, Candidate, SelectContext};
+use paraspawn::mam::plan::Plan;
+use paraspawn::mam::{Method, SpawnStrategy};
+use paraspawn::runtime::{CostModelKernel, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let kernel = match Engine::cpu().and_then(|e| CostModelKernel::load(&e)) {
+        Ok(k) => {
+            println!("scoring backend: PJRT (batch {} x {} features)\n", k.k, k.f);
+            Some(k)
+        }
+        Err(e) => {
+            eprintln!("WARNING: artifacts unavailable ({e}); host fallback\n");
+            None
+        }
+    };
+
+    let candidates = vec![
+        Candidate { method: Method::Merge, strategy: SpawnStrategy::Plain },
+        Candidate { method: Method::Merge, strategy: SpawnStrategy::Single },
+        Candidate { method: Method::Merge, strategy: SpawnStrategy::NodeByNode },
+        Candidate { method: Method::Merge, strategy: SpawnStrategy::ParallelHypercube },
+        Candidate { method: Method::Baseline, strategy: SpawnStrategy::ParallelHypercube },
+    ];
+    let cost = CostModel::mn5();
+
+    // 1 -> 8 node expansion on a 112-core/node cluster.
+    let mk_plan = |c: &Candidate| {
+        let n = 8usize;
+        let mut r = vec![0u32; n];
+        r[0] = 112;
+        Plan::new(0, c.method, c.strategy, (0..n).collect(), vec![112; n], r)
+    };
+
+    for expected_shrinks in [0.0, 1.0, 4.0] {
+        let ctx = SelectContext { expected_shrinks };
+        let (best, scores) = select(&candidates, mk_plan, &cost, &ctx, kernel.as_ref());
+        println!("expected future shrinks: {expected_shrinks}");
+        for (i, (c, s)) in candidates.iter().zip(&scores).enumerate() {
+            let mark = if i == best { "  <== selected" } else { "" };
+            println!(
+                "  {:>8} + {:<10} predicted {:>8.3}s{mark}",
+                c.method.name(),
+                c.strategy.name(),
+                s
+            );
+        }
+        println!();
+    }
+    println!(
+        "With shrinks on the horizon the parallel strategies win: their\n\
+         expansion overhead is repaid by TS shrinks that avoid respawning."
+    );
+    Ok(())
+}

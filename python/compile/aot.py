@@ -1,0 +1,66 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for the
+Rust PJRT runtime.
+
+HLO *text* is the interchange format, not serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.
+
+``compiler_ir(dialect="hlo")`` converts inside jaxlib (the textual
+StableHLO route through ``mlir_module_to_xla_computation`` breaks on
+jax 0.8's newer StableHLO syntax, e.g. ``dynamic_slice`` ``sizes``).
+Single outputs lower as bare arrays; the Rust loader handles both bare
+and tuple results.
+
+Run once via ``make artifacts``; the Rust binary is self-contained after.
+"""
+
+import argparse
+import pathlib
+
+import jax
+
+from compile import model
+from compile.kernels import costmodel
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered JAX computation -> HLO text (see module docstring)."""
+    return lowered.compiler_ir(dialect="hlo").as_hlo_text()
+
+
+def lower_entry(name: str) -> str:
+    fn = model.ENTRY_POINTS[name]
+    lowered = jax.jit(fn).lower(*model.example_args(name))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    for name in model.ENTRY_POINTS:
+        text = lower_entry(name)
+        path = out / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = {
+        "pi_points": model.PI_POINTS,
+        "workload_m": model.WORKLOAD_M,
+        "cost_k": costmodel.K,
+        "cost_f": costmodel.F,
+    }
+    meta_path = out / "meta.txt"
+    meta_path.write_text(
+        "# artifact shapes (parsed by rust/src/runtime via config::parse_kv)\n"
+        + "".join(f"{k} = {v}\n" for k, v in meta.items())
+    )
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

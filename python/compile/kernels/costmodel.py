@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: batched strategy-cost scoring.
+
+MaM selects the optimal reconfiguration alternative for a situation
+(paper section 1/section 3); the Rust coordinator builds one feature row per
+candidate (method x strategy) and scores all of them in a single PJRT
+call: scores = features @ coeffs.
+
+Shapes are tiny (K candidates x F features), so the kernel is a single
+VMEM-resident block matvec: one grid step, no streaming.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Compiled batch shape: up to K candidate configurations, F features each.
+# Must match rust/src/coordinator/select.rs::N_FEATURES.
+K = 16
+F = 8
+
+
+def _score_kernel(features_ref, coeffs_ref, scores_ref):
+    f = features_ref[...]  # (K, F)
+    c = coeffs_ref[...]  # (F,)
+    scores_ref[...] = jnp.sum(f * c[None, :], axis=1)
+
+
+def cost_scores(features: jax.Array, coeffs: jax.Array) -> jax.Array:
+    """Score candidate configurations: (K, F) x (F,) -> (K,)."""
+    if features.shape != (K, F):
+        raise ValueError(f"features must be ({K}, {F}), got {features.shape}")
+    if coeffs.shape != (F,):
+        raise ValueError(f"coeffs must be ({F},), got {coeffs.shape}")
+    return pl.pallas_call(
+        _score_kernel,
+        out_shape=jax.ShapeDtypeStruct((K,), jnp.float32),
+        interpret=True,
+    )(features, coeffs)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness reference the
+pytest suite (and hypothesis sweeps) compare against."""
+
+import jax.numpy as jnp
+
+
+def pi_count_ref(points):
+    """Reference inside-circle count for (N, 2) points."""
+    inside = points[:, 0] ** 2 + points[:, 1] ** 2 <= 1.0
+    return jnp.sum(inside.astype(jnp.float32))
+
+
+def matmul_ref(a, b):
+    """Reference matmul."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def cost_scores_ref(features, coeffs):
+    """Reference candidate scoring."""
+    return features @ coeffs

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: tiled matmul "application iteration".
+
+Stands in for the per-iteration compute of a real malleable solver (the
+paper's motivation applications): one C = A @ B step, tiled for the MXU.
+
+TPU mapping (DESIGN.md section 6 / Hardware-Adaptation): 128x128x128 f32
+tiles (bf16-friendly on real hardware), a (M/T, M/T, M/T) grid with the
+K axis innermost so each (i, j) output tile stays resident in VMEM while
+partial products accumulate — the HBM<->VMEM schedule a CUDA kernel would
+express with threadblocks is the BlockSpec index maps here. VMEM
+footprint: 3 tiles x 64 KiB = 192 KiB, well inside the ~16 MiB budget;
+the MXU sees dense 128x128 systolic passes. interpret=True for CPU-PJRT
+execution (see pi.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned tile edge.
+TILE = 128
+
+
+def _matmul_kernel(a_ref, b_ref, c_ref):
+    """One (i, j, k) grid step: c[i,j] += a[i,k] @ b[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    c_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def matmul(a: jax.Array, b: jax.Array, tile: int = TILE) -> jax.Array:
+    """Tiled Pallas matmul: (m, k) @ (k, n) -> (m, n), all multiples of tile."""
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    for dim, name in ((m, "m"), (k, "k"), (n, "n")):
+        if dim % tile != 0:
+            raise ValueError(f"{name}={dim} must be a multiple of tile={tile}")
+    grid = (m // tile, n // tile, k // tile)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile, tile), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,69 @@
+"""L2 JAX model: the compute graphs the Rust coordinator executes via
+PJRT, composed from the L1 Pallas kernels.
+
+Three entry points, one per artifact:
+
+* ``pi_step``       — Monte-Carlo pi inside-circle count (the paper's
+                      evaluation application, section 5.1).
+* ``workload_step`` — one tiled-matmul application iteration with a
+                      residual update (stands in for a real solver step).
+* ``cost_eval``     — batched strategy-cost scoring for MaM-style
+                      configuration selection.
+
+Everything here is build-time only: ``aot.py`` lowers these functions to
+HLO text once; Rust loads and executes the artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import costmodel, pi, workload
+
+# Compiled batch shapes (recorded in artifacts/meta.txt).
+PI_POINTS = 4096
+WORKLOAD_M = 256
+
+
+def pi_step(points):
+    """Count inside-circle points of a (PI_POINTS, 2) f32 batch."""
+    return (pi.pi_count(points),)
+
+
+def workload_step(a, b):
+    """One application iteration: C = A @ B, then a residual-style
+    normalization that keeps values bounded across repeated calls."""
+    c = workload.matmul(a, b)
+    # Scale back into [-1, 1]-ish range so iterated calls stay finite.
+    scale = jnp.maximum(jnp.max(jnp.abs(c)), 1.0)
+    return (c / scale,)
+
+
+def cost_eval(features, coeffs):
+    """Score (K, F) candidate features against (F,) coefficients."""
+    return (costmodel.cost_scores(features, coeffs),)
+
+
+def example_args(name: str):
+    """Example abstract arguments for lowering each entry point."""
+    f32 = jnp.float32
+    if name == "pi":
+        return (jax.ShapeDtypeStruct((PI_POINTS, 2), f32),)
+    if name == "workload":
+        m = WORKLOAD_M
+        return (
+            jax.ShapeDtypeStruct((m, m), f32),
+            jax.ShapeDtypeStruct((m, m), f32),
+        )
+    if name == "costmodel":
+        return (
+            jax.ShapeDtypeStruct((costmodel.K, costmodel.F), f32),
+            jax.ShapeDtypeStruct((costmodel.F,), f32),
+        )
+    raise KeyError(name)
+
+
+ENTRY_POINTS = {
+    "pi": pi_step,
+    "workload": workload_step,
+    "costmodel": cost_eval,
+}

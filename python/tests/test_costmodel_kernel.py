@@ -1,0 +1,56 @@
+"""L1 cost-model scoring kernel vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import costmodel
+from compile.kernels.ref import cost_scores_ref
+
+
+def rand(shape, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestCostModelKernel:
+    def test_matches_ref(self):
+        f = rand((costmodel.K, costmodel.F), 0)
+        c = rand((costmodel.F,), 1)
+        np.testing.assert_allclose(
+            costmodel.cost_scores(f, c), cost_scores_ref(f, c), rtol=1e-5, atol=1e-6
+        )
+
+    def test_zero_coeffs_zero_scores(self):
+        f = rand((costmodel.K, costmodel.F), 2)
+        c = jnp.zeros((costmodel.F,), jnp.float32)
+        np.testing.assert_allclose(costmodel.cost_scores(f, c), jnp.zeros(costmodel.K))
+
+    def test_unit_feature_selects_coeff(self):
+        f = jnp.zeros((costmodel.K, costmodel.F), jnp.float32).at[3, 5].set(1.0)
+        c = jnp.arange(costmodel.F, dtype=jnp.float32)
+        scores = costmodel.cost_scores(f, c)
+        assert float(scores[3]) == 5.0
+        assert float(jnp.sum(jnp.abs(scores))) == 5.0
+
+    def test_shape_validation(self):
+        with pytest.raises(ValueError, match="features"):
+            costmodel.cost_scores(
+                jnp.zeros((2, costmodel.F), jnp.float32),
+                jnp.zeros((costmodel.F,), jnp.float32),
+            )
+        with pytest.raises(ValueError, match="coeffs"):
+            costmodel.cost_scores(
+                jnp.zeros((costmodel.K, costmodel.F), jnp.float32),
+                jnp.zeros((3,), jnp.float32),
+            )
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.01, 100.0))
+    def test_hypothesis_random_inputs(self, seed, scale):
+        f = rand((costmodel.K, costmodel.F), seed) * scale
+        c = rand((costmodel.F,), seed + 1)
+        np.testing.assert_allclose(
+            costmodel.cost_scores(f, c), cost_scores_ref(f, c), rtol=1e-4, atol=1e-4
+        )

@@ -1,0 +1,76 @@
+"""L2 model composition + the AOT lowering path (shapes, HLO text)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels.ref import matmul_ref, pi_count_ref
+
+
+class TestModel:
+    def test_pi_step_shape_and_value(self):
+        pts = jnp.zeros((model.PI_POINTS, 2), jnp.float32)
+        (count,) = model.pi_step(pts)
+        assert count.shape == ()
+        assert float(count) == model.PI_POINTS
+
+    def test_pi_step_matches_ref(self):
+        key = jax.random.PRNGKey(0)
+        pts = jax.random.uniform(key, (model.PI_POINTS, 2), jnp.float32, 0.0, 1.4)
+        (count,) = model.pi_step(pts)
+        np.testing.assert_allclose(count, pi_count_ref(pts))
+
+    def test_workload_step_bounded(self):
+        key = jax.random.PRNGKey(1)
+        m = model.WORKLOAD_M
+        a = jax.random.normal(key, (m, m), jnp.float32) * 10.0
+        b = jax.random.normal(jax.random.PRNGKey(2), (m, m), jnp.float32) * 10.0
+        (c,) = model.workload_step(a, b)
+        assert c.shape == (m, m)
+        assert float(jnp.max(jnp.abs(c))) <= 1.0 + 1e-6
+        # Direction matches the reference product.
+        ref = matmul_ref(a, b)
+        scale = max(float(jnp.max(jnp.abs(ref))), 1.0)
+        np.testing.assert_allclose(c, ref / scale, rtol=1e-4, atol=1e-5)
+
+    def test_workload_step_iterates_stably(self):
+        m = model.WORKLOAD_M
+        a = jax.random.normal(jax.random.PRNGKey(3), (m, m), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(4), (m, m), jnp.float32)
+        for _ in range(3):
+            (a,) = model.workload_step(a, b)
+            assert bool(jnp.all(jnp.isfinite(a)))
+
+    def test_example_args_cover_entry_points(self):
+        for name in model.ENTRY_POINTS:
+            args = model.example_args(name)
+            assert all(isinstance(a, jax.ShapeDtypeStruct) for a in args)
+        with pytest.raises(KeyError):
+            model.example_args("nope")
+
+
+class TestAot:
+    @pytest.mark.parametrize("name", list(model.ENTRY_POINTS))
+    def test_lowering_produces_hlo_text(self, name):
+        text = aot.lower_entry(name)
+        assert "HloModule" in text
+        assert "ROOT" in text
+        assert "f32[" in text
+
+    def test_artifacts_roundtrip(self, tmp_path):
+        # Full aot main() into a temp dir.
+        import sys
+
+        argv = sys.argv
+        sys.argv = ["aot.py", "--out-dir", str(tmp_path)]
+        try:
+            aot.main()
+        finally:
+            sys.argv = argv
+        for name in model.ENTRY_POINTS:
+            f = tmp_path / f"{name}.hlo.txt"
+            assert f.exists() and f.stat().st_size > 0
+        meta = (tmp_path / "meta.txt").read_text()
+        assert "pi_points" in meta and "cost_k" in meta

@@ -1,0 +1,61 @@
+"""L1 pi kernel vs pure-jnp oracle — the core correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pi
+from compile.kernels.ref import pi_count_ref
+
+
+def sample_points(n, seed=0, scale=1.5):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.uniform(key, (n, 2), jnp.float32, 0.0, scale)
+
+
+class TestPiKernel:
+    def test_matches_ref_one_block(self):
+        pts = sample_points(pi.BLOCK)
+        got = pi.pi_count(pts)
+        want = pi_count_ref(pts)
+        np.testing.assert_allclose(got, want)
+
+    def test_matches_ref_multi_block(self):
+        pts = sample_points(4 * pi.BLOCK, seed=1)
+        np.testing.assert_allclose(pi.pi_count(pts), pi_count_ref(pts))
+
+    def test_all_inside(self):
+        pts = jnp.zeros((pi.BLOCK, 2), jnp.float32)
+        assert float(pi.pi_count(pts)) == pi.BLOCK
+
+    def test_all_outside(self):
+        pts = jnp.full((pi.BLOCK, 2), 2.0, jnp.float32)
+        assert float(pi.pi_count(pts)) == 0.0
+
+    def test_boundary_points_count_as_inside(self):
+        pts = jnp.full((pi.BLOCK, 2), 2.0, jnp.float32)
+        pts = pts.at[0].set(jnp.array([1.0, 0.0]))  # exactly on the circle
+        pts = pts.at[1].set(jnp.array([0.0, 1.0]))
+        assert float(pi.pi_count(pts)) == 2.0
+
+    def test_rejects_non_multiple_of_block(self):
+        with pytest.raises(ValueError, match="multiple of BLOCK"):
+            pi.pi_count(jnp.zeros((pi.BLOCK + 1, 2), jnp.float32))
+
+    def test_pi_estimate_converges(self):
+        n = 16 * pi.BLOCK
+        pts = sample_points(n, seed=2, scale=1.0)
+        est = 4.0 * float(pi.pi_count(pts)) / n
+        assert abs(est - np.pi) < 0.1
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        blocks=st.integers(min_value=1, max_value=6),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        scale=st.floats(min_value=0.1, max_value=3.0),
+    )
+    def test_hypothesis_matches_ref(self, blocks, seed, scale):
+        pts = sample_points(blocks * pi.BLOCK, seed=seed, scale=scale)
+        np.testing.assert_allclose(pi.pi_count(pts), pi_count_ref(pts))

@@ -1,0 +1,165 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//! * synchronous vs asynchronous (overlapped) spawning — MaM's Async
+//!   strategy;
+//! * oversubscription (processes > cores, §4.6 of the paper);
+//! * initiator-RTE contention sensitivity (the c_rte_service term that
+//!   separates parallel strategies from the single collective spawn);
+//! * binary-connection balance: power-of-two vs odd group counts (the
+//!   "unbalanced leaves" effect the paper reports for >8 groups).
+
+use paraspawn::app::{run_malleable, AppSpec, ResizeEvent};
+use paraspawn::bench::Runner;
+use paraspawn::config::{CostModel, SimConfig};
+use paraspawn::coordinator::{run_samples, Scenario};
+use paraspawn::mam::driver::perceived_downtime;
+use paraspawn::mam::{Method, SpawnStrategy};
+use paraspawn::rms::Allocation;
+use paraspawn::simmpi::World;
+use paraspawn::topology::Cluster;
+use paraspawn::util::csvout::{fmt_time, Table};
+use paraspawn::util::stats::median;
+use std::sync::Arc;
+
+fn async_vs_sync() -> Table {
+    let run = |asynchronous: bool| -> (f64, f64) {
+        let world = World::new(
+            Cluster::mini(8, 8),
+            SimConfig { cost: CostModel::mn5().deterministic(), ..Default::default() },
+        );
+        let initial = Allocation::new(vec![(0, 8)]);
+        let target = Allocation::new((0..8).map(|n| (n, 8)).collect());
+        let mut ev = ResizeEvent::new(target, Method::Merge, SpawnStrategy::ParallelHypercube);
+        ev.asynchronous = asynchronous;
+        let spec = Arc::new(AppSpec {
+            iters_per_epoch: 5,
+            work_per_iter: 50_000.0,
+            points_per_iter: 0,
+            trace: vec![ev],
+            ..Default::default()
+        });
+        run_malleable(&world, &initial, spec).unwrap();
+        let rec = world.metrics.reconfigs().pop().unwrap();
+        (rec.total(), perceived_downtime(&rec))
+    };
+    let (st, sd) = run(false);
+    let (at, ad) = run(true);
+    let mut t = Table::new(vec!["mode", "wall_window", "perceived_downtime"]);
+    t.push_row(vec!["synchronous".into(), fmt_time(st), fmt_time(sd)]);
+    t.push_row(vec!["asynchronous".into(), fmt_time(at), fmt_time(ad)]);
+    t.push_row(vec![
+        "downtime reduction".into(),
+        String::new(),
+        format!("{:.0}x", sd / ad.max(1e-12)),
+    ]);
+    t
+}
+
+fn oversubscription() -> Table {
+    // Expand 1 -> 4 nodes with 1x and 2x processes per core (§4.6: vector
+    // A reflects the expected oversubscription level).
+    let run = |factor: u32| -> f64 {
+        let cores = 8u32;
+        let world = World::new(
+            Cluster::mini(4, cores),
+            SimConfig { cost: CostModel::mn5().deterministic(), ..Default::default() },
+        );
+        let initial = Allocation::new(vec![(0, cores * factor)]);
+        let target = Allocation::new((0..4).map(|n| (n, cores * factor)).collect());
+        let spec = Arc::new(AppSpec {
+            iters_per_epoch: 2,
+            work_per_iter: 10.0,
+            points_per_iter: 0,
+            trace: vec![ResizeEvent::new(
+                target,
+                Method::Merge,
+                SpawnStrategy::ParallelHypercube,
+            )],
+            ..Default::default()
+        });
+        run_malleable(&world, &initial, spec).unwrap();
+        world.metrics.reconfigs().pop().unwrap().total()
+    };
+    let base = run(1);
+    let over = run(2);
+    let mut t = Table::new(vec!["procs_per_core", "resize_time", "vs_1x"]);
+    t.push_row(vec!["1x".into(), fmt_time(base), "1.00x".into()]);
+    t.push_row(vec!["2x".into(), fmt_time(over), format!("{:.2}x", over / base)]);
+    t
+}
+
+fn contention_sensitivity() -> Table {
+    let mut t = Table::new(vec!["c_rte_service", "M_median", "M+HC_median", "overhead"]);
+    for rte in [0.0, 0.002, 0.008, 0.020] {
+        let mut cost = CostModel::mn5();
+        cost.c_rte_service = rte;
+        let m = median(
+            &run_samples(
+                &Scenario { cost: cost.clone(), ..Scenario::mn5(1, 8) }
+                    .with(Method::Merge, SpawnStrategy::Plain),
+                3,
+            )
+            .unwrap(),
+        );
+        let hc = median(
+            &run_samples(
+                &Scenario { cost: cost.clone(), ..Scenario::mn5(1, 8) }
+                    .with(Method::Merge, SpawnStrategy::ParallelHypercube),
+                3,
+            )
+            .unwrap(),
+        );
+        t.push_row(vec![
+            format!("{:.3}s", rte),
+            fmt_time(m),
+            fmt_time(hc),
+            format!("{:.3}x", hc / m),
+        ]);
+    }
+    t
+}
+
+fn connection_balance() -> Table {
+    // 8 spawned groups (power of two, 3 balanced rounds) vs 9/16 groups:
+    // the paper's ">8 groups / non-power-of-two" overhead bump. 32 cores
+    // per node keeps every case a single spawn step, isolating the
+    // binary-connection rounds.
+    let mut t = Table::new(vec!["groups", "rounds", "M+HC_median", "vs_8_groups"]);
+    let mut base = None;
+    for n in [9usize, 10, 17] {
+        let groups = n - 1;
+        let med = median(
+            &run_samples(
+                &Scenario {
+                    cluster: Cluster::homogeneous(
+                        "abl",
+                        17,
+                        32,
+                        paraspawn::topology::LinkKind::InfiniBand100,
+                    ),
+                    ..Scenario::mn5(1, n)
+                }
+                .with(Method::Merge, SpawnStrategy::ParallelHypercube),
+                3,
+            )
+            .unwrap(),
+        );
+        let base_v = *base.get_or_insert(med);
+        t.push_row(vec![
+            groups.to_string(),
+            paraspawn::mam::connect::connection_rounds(groups).to_string(),
+            fmt_time(med),
+            format!("{:.3}x", med / base_v),
+        ]);
+    }
+    t
+}
+
+fn main() {
+    let runner = Runner::from_args();
+    runner.emit_table("ablation: async vs sync spawning", &async_vs_sync());
+    runner.emit_table("ablation: oversubscription (procs per core)", &oversubscription());
+    runner.emit_table("ablation: initiator-RTE contention", &contention_sensitivity());
+    runner.emit_table("ablation: binary-connection balance", &connection_balance());
+    runner.finish();
+}

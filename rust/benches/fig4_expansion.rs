@@ -1,0 +1,54 @@
+//! Bench for paper Figure 4a (E2): MN5 homogeneous expansion resize
+//! times. Runs a reduced sweep by default (PARASPAWN_MAX_NODES /
+//! PARASPAWN_REPS env vars widen it); `make figures` regenerates the full
+//! figure.
+
+use paraspawn::bench::Runner;
+use paraspawn::coordinator::figures::{fig4a, FigureConfig};
+use paraspawn::coordinator::{run_reconfiguration, Scenario};
+use paraspawn::mam::{Method, SpawnStrategy};
+
+fn main() {
+    let mut runner = Runner::from_args();
+    let cfg = FigureConfig::quick();
+    let (table, samples) = fig4a(&cfg).expect("fig4a sweep");
+    runner.emit_table("fig4a expansion (quick sweep)", &table);
+    // Max parallel-Merge overhead + Merge-win rate across the sweep.
+    let mut by_pair: std::collections::BTreeMap<(usize, usize), Vec<(&str, f64)>> =
+        std::collections::BTreeMap::new();
+    for ((i, n, label), xs) in &samples {
+        by_pair.entry((*i, *n)).or_default().push((label, paraspawn::util::stats::median(xs)));
+    }
+    let mut max_overhead: f64 = 0.0;
+    let mut merge_wins = 0usize;
+    for meds in by_pair.values() {
+        let m = meds.iter().find(|(l, _)| *l == "M").unwrap().1;
+        let best = meds.iter().map(|&(_, v)| v).fold(f64::INFINITY, f64::min);
+        if (m - best).abs() < 1e-12 {
+            merge_wins += 1;
+        }
+        for &(l, v) in meds {
+            if l.starts_with("M+") {
+                max_overhead = max_overhead.max(v / m);
+            }
+        }
+    }
+    println!(
+        "max parallel-Merge overhead: {max_overhead:.3}x (paper: <=1.13x); Merge wins {}/{} cells",
+        merge_wins,
+        by_pair.len()
+    );
+
+    // Wall-clock cost of one end-to-end expansion simulation per config.
+    for (label, m, s) in [
+        ("M", Method::Merge, SpawnStrategy::Plain),
+        ("M+HC", Method::Merge, SpawnStrategy::ParallelHypercube),
+        ("B+HC", Method::Baseline, SpawnStrategy::ParallelHypercube),
+    ] {
+        runner.bench(&format!("simulate/expand_1to8/{label}"), 5, || {
+            let r = run_reconfiguration(&Scenario::mn5(1, 8).with(m, s)).unwrap();
+            assert!(r.total_time > 0.0);
+        });
+    }
+    runner.finish();
+}

@@ -1,0 +1,36 @@
+//! Bench for paper Figure 4b (E3): MN5 shrink resize times — the paper's
+//! headline: TS shrinks are >=1387x faster than spawn-based shrinkage.
+
+use paraspawn::bench::Runner;
+use paraspawn::coordinator::figures::{fig4b, FigureConfig};
+use paraspawn::coordinator::{run_reconfiguration, Scenario};
+use paraspawn::mam::{Method, SpawnStrategy};
+use paraspawn::util::stats::median;
+
+fn main() {
+    let mut runner = Runner::from_args();
+    let cfg = FigureConfig::quick();
+    let (table, samples) = fig4b(&cfg).expect("fig4b sweep");
+    runner.emit_table("fig4b shrink (quick sweep)", &table);
+
+    // Min TS speedup across the quick sweep.
+    let mut min_speedup = f64::INFINITY;
+    let mut cells = std::collections::BTreeMap::new();
+    for ((i, n, label), xs) in &samples {
+        cells.entry((i, n)).or_insert_with(std::collections::BTreeMap::new).insert(*label, median(xs));
+    }
+    for meds in cells.values() {
+        let ts = meds["M+TS"];
+        let b = meds.iter().filter(|(l, _)| l.starts_with('B')).map(|(_, &v)| v).fold(f64::INFINITY, f64::min);
+        min_speedup = min_speedup.min(b / ts);
+    }
+    println!("min TS speedup in sweep: {min_speedup:.0}x (paper MN5: >=1387x)");
+
+    runner.bench("simulate/ts_shrink_8to1", 5, || {
+        let s = Scenario { prepare_parallel: true, ..Scenario::mn5(8, 1) }
+            .with(Method::Merge, SpawnStrategy::Plain);
+        let r = run_reconfiguration(&s).unwrap();
+        assert!(r.total_time < 0.1, "TS must be milliseconds");
+    });
+    runner.finish();
+}

@@ -1,0 +1,22 @@
+//! Bench for paper Figure 5 (E4): the preferred-method matrix
+//! (Mann-Whitney equivalence groups per (I, N) cell).
+
+use paraspawn::bench::Runner;
+use paraspawn::coordinator::figures::{fig4a, fig4b, fig5, FigureConfig};
+
+fn main() {
+    let mut runner = Runner::from_args();
+    let cfg = FigureConfig::quick();
+    let (_, expand) = fig4a(&cfg).expect("fig4a");
+    let (_, shrink) = fig4b(&cfg).expect("fig4b");
+    let table = fig5(&cfg, &expand, &shrink);
+    runner.emit_table("fig5 preferred methods (quick sweep)", &table);
+
+    // The statistics themselves must be cheap relative to the simulations.
+    let cell: Vec<f64> = expand.values().next().unwrap().clone();
+    runner.bench("mann_whitney/one_pair", 500, || {
+        let r = paraspawn::util::stats::mann_whitney_u(&cell, &cell);
+        assert!(r.p_value >= 0.0);
+    });
+    runner.finish();
+}

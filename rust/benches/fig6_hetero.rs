@@ -1,0 +1,20 @@
+//! Bench for paper Figure 6 (E5/E6): NASP heterogeneous expansion and
+//! shrink with the Iterative Diffusive strategy.
+
+use paraspawn::bench::Runner;
+use paraspawn::coordinator::figures::{fig6a, fig6b, headline, FigureConfig};
+
+fn main() {
+    let mut runner = Runner::from_args();
+    let cfg = FigureConfig::quick();
+    let (ta, expand) = fig6a(&cfg).expect("fig6a");
+    runner.emit_table("fig6a heterogeneous expansion (quick sweep)", &ta);
+    let (tb, shrink) = fig6b(&cfg).expect("fig6b");
+    runner.emit_table("fig6b heterogeneous shrink (quick sweep)", &tb);
+    let h = headline(&expand, &shrink);
+    println!(
+        "NASP: max M+ID overhead {:.3}x (paper <=1.25x); min TS speedup {:.0}x (paper >=20x)",
+        h.max_expand_overhead, h.min_shrink_speedup
+    );
+    runner.finish();
+}

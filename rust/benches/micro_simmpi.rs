@@ -1,0 +1,85 @@
+//! Substrate microbenchmarks (perf deliverable, EXPERIMENTS.md §Perf):
+//! wall-clock cost of the simulator's hot paths — these bound how fast
+//! the figure sweeps run.
+
+use paraspawn::bench::Runner;
+use paraspawn::config::{CostModel, SimConfig};
+use paraspawn::simmpi::{Comm, Ctx, Payload, World};
+use paraspawn::topology::Cluster;
+use std::sync::Arc;
+
+fn run_world<F>(n_ranks: usize, f: F)
+where
+    F: Fn(Ctx, Comm) + Send + Sync + 'static,
+{
+    let world = World::new(
+        Cluster::mini(1, n_ranks as u32),
+        SimConfig { cost: CostModel::mn5().deterministic(), ..Default::default() },
+    );
+    world.launch(&[(0, n_ranks)], Arc::new(f));
+    world.join_all().unwrap();
+}
+
+fn main() {
+    let mut runner = Runner::from_args();
+
+    runner.bench("world/launch_join_64_ranks", 10, || {
+        run_world(64, |_ctx, _w| {});
+    });
+
+    runner.bench("p2p/pingpong_1000x", 10, || {
+        run_world(2, |ctx, w| {
+            for _ in 0..1000 {
+                if w.rank() == 0 {
+                    ctx.send(&w, 1, 1, Payload::Token);
+                    let _ = ctx.recv(&w, 1, 2);
+                } else {
+                    let _ = ctx.recv(&w, 0, 1);
+                    ctx.send(&w, 0, 2, Payload::Token);
+                }
+            }
+        });
+    });
+
+    runner.bench("collectives/barrier_64ranks_100x", 10, || {
+        run_world(64, |ctx, w| {
+            for _ in 0..100 {
+                ctx.barrier(&w);
+            }
+        });
+    });
+
+    runner.bench("collectives/allgather_64ranks_100x", 10, || {
+        run_world(64, |ctx, w| {
+            for _ in 0..100 {
+                let _ = ctx.allgather(&w, Payload::f64s(vec![w.rank() as f64]));
+            }
+        });
+    });
+
+    runner.bench("spawn/self_64_children", 10, || {
+        let world = World::new(
+            Cluster::mini(2, 64),
+            SimConfig { cost: CostModel::mn5().deterministic(), ..Default::default() },
+        );
+        world.launch(
+            &[(0, 1)],
+            Arc::new(|ctx: Ctx, _w: Comm| {
+                let _ = ctx.spawn_self(1, 64, Arc::new(|_c, _m, _p| {}));
+            }),
+        );
+        world.join_all().unwrap();
+    });
+
+    runner.bench("e2e/reconfig_mn5_1to4_hypercube", 5, || {
+        use paraspawn::coordinator::{run_reconfiguration, Scenario};
+        use paraspawn::mam::{Method, SpawnStrategy};
+        let r = run_reconfiguration(
+            &Scenario::mn5(1, 4).with(Method::Merge, SpawnStrategy::ParallelHypercube),
+        )
+        .unwrap();
+        assert!(r.total_time > 0.0);
+    });
+
+    runner.finish();
+}

@@ -1,0 +1,48 @@
+//! Bench for paper Table 2 (E1 in DESIGN.md): the Iterative Diffusive
+//! planner. Regenerates the table and times the planning math at several
+//! scales (planning runs on every rank, so it must be cheap).
+
+use paraspawn::bench::Runner;
+use paraspawn::coordinator::figures;
+use paraspawn::mam::plan::{diffusive_trace, Plan};
+use paraspawn::mam::{Method, SpawnStrategy};
+
+fn table2_plan() -> Plan {
+    Plan::new(
+        0,
+        Method::Merge,
+        SpawnStrategy::ParallelDiffusive,
+        (0..10).collect(),
+        vec![4, 2, 8, 12, 3, 3, 4, 4, 6, 3],
+        vec![2, 0, 0, 0, 0, 0, 0, 0, 0, 0],
+    )
+}
+
+fn big_plan(n: usize) -> Plan {
+    let mut r = vec![0u32; n];
+    r[0] = 112;
+    Plan::new(0, Method::Merge, SpawnStrategy::ParallelDiffusive, (0..n).collect(), vec![112; n], r)
+}
+
+fn main() {
+    let mut runner = Runner::from_args();
+    runner.emit_table("table2 (regenerated)", &figures::table2());
+
+    let plan = table2_plan();
+    runner.bench("diffusive_trace/table2", 200, || {
+        let rows = diffusive_trace(&plan);
+        assert_eq!(rows.last().unwrap().tt, 10);
+    });
+    runner.bench("diffusive_assignments/table2", 200, || {
+        let asg = plan.assignments();
+        assert!(!asg.is_empty());
+    });
+    for n in [32usize, 256, 1024] {
+        let plan = big_plan(n);
+        runner.bench(&format!("diffusive_assignments/{n}_nodes"), 50, || {
+            let asg = plan.assignments();
+            assert!(!asg.is_empty());
+        });
+    }
+    runner.finish();
+}

@@ -1,0 +1,227 @@
+//! Proteo-like malleable application driver.
+//!
+//! Runs the paper's evaluation workload: iterations of a Monte-Carlo π
+//! computation (each with an `MPI_Allgather`, §5.1), hitting a
+//! malleability checkpoint after every `iters_per_epoch` iterations and
+//! executing the next reconfiguration of a scripted trace.
+//!
+//! The π kernel is pluggable through [`PiEval`]: the production
+//! implementation runs the AOT-compiled Pallas kernel through PJRT
+//! ([`crate::runtime`]); a pure-host fallback keeps the simulator usable
+//! without artifacts (e.g. in unit tests).
+
+use crate::mam::{self, JobCtx, Method, Outcome, Plan, ReconfigSpec};
+use crate::rms::Allocation;
+use crate::simmpi::{Comm, Ctx, Payload, SimError, World};
+use crate::topology::NodeId;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Counts how many of the given `(x, y)` points fall inside the unit
+/// circle. Implemented by the PJRT runtime (L1 Pallas kernel) and by a
+/// host fallback.
+pub trait PiEval: Send + Sync {
+    fn count_inside(&self, points_xy: &[f32]) -> u64;
+}
+
+/// Pure-host fallback evaluator.
+pub struct HostPiEval;
+
+impl PiEval for HostPiEval {
+    fn count_inside(&self, points_xy: &[f32]) -> u64 {
+        points_xy
+            .chunks_exact(2)
+            .filter(|p| p[0] * p[0] + p[1] * p[1] <= 1.0)
+            .count() as u64
+    }
+}
+
+/// One scripted reconfiguration.
+#[derive(Clone, Debug)]
+pub struct ResizeEvent {
+    pub target: Allocation,
+    pub method: Method,
+    pub strategy: mam::SpawnStrategy,
+    /// MaM's Asynchronous strategy: initiate the spawn at this
+    /// checkpoint, overlap it with the next epoch's iterations, complete
+    /// at the following checkpoint (Merge expansions only).
+    pub asynchronous: bool,
+}
+
+impl ResizeEvent {
+    pub fn new(target: Allocation, method: Method, strategy: mam::SpawnStrategy) -> Self {
+        ResizeEvent { target, method, strategy, asynchronous: false }
+    }
+}
+
+/// Observer called by rank 0 after every iteration:
+/// `(epoch, iteration, pi_estimate, virtual_clock)`.
+pub type IterObserver = Arc<dyn Fn(u64, usize, f64, f64) + Send + Sync>;
+
+/// The application specification.
+pub struct AppSpec {
+    /// Iterations between malleability checkpoints (paper: 5).
+    pub iters_per_epoch: usize,
+    /// Synthetic work units per rank per iteration (virtual time).
+    pub work_per_iter: f64,
+    /// Monte-Carlo points per rank per iteration (real compute).
+    pub points_per_iter: usize,
+    /// Scripted reconfigurations; the job ends after the trace drains.
+    pub trace: Vec<ResizeEvent>,
+    /// Application payload to redistribute at each resize (0 = none).
+    pub data_bytes: u64,
+    /// π evaluator (PJRT kernel or host fallback).
+    pub pi_eval: Arc<dyn PiEval>,
+    /// Optional per-iteration observer (rank 0 only).
+    pub observer: Option<IterObserver>,
+}
+
+impl Default for AppSpec {
+    fn default() -> Self {
+        AppSpec {
+            iters_per_epoch: 5,
+            work_per_iter: 100.0,
+            points_per_iter: 256,
+            trace: Vec::new(),
+            data_bytes: 0,
+            pi_eval: Arc::new(HostPiEval),
+            observer: None,
+        }
+    }
+}
+
+/// Launch the malleable application on `world` over `initial` and wait
+/// for completion.
+pub fn run_malleable(
+    world: &Arc<World>,
+    initial: &Allocation,
+    spec: Arc<AppSpec>,
+) -> Result<(), SimError> {
+    let spec_main = spec.clone();
+    world.launch(
+        &initial.placements(),
+        Arc::new(move |ctx: Ctx, world_comm: Comm| {
+            let job = JobCtx {
+                app: world_comm.clone(),
+                mcw: world_comm,
+                epoch: 0,
+                zombie_pids: Vec::new(),
+            };
+            main_loop(ctx, job, spec_main.clone());
+        }),
+    );
+    world.join_all()
+}
+
+fn make_cont(spec: Arc<AppSpec>) -> mam::AppCont {
+    Arc::new(move |ctx: Ctx, job: JobCtx| main_loop(ctx, job, spec.clone()))
+}
+
+/// The application main loop, re-entered by every rank after each
+/// reconfiguration (including freshly spawned ones).
+fn main_loop(ctx: Ctx, mut job: JobCtx, spec: Arc<AppSpec>) {
+    loop {
+        for it in 0..spec.iters_per_epoch {
+            mc_iteration(&ctx, &job, &spec, it);
+        }
+        let epoch = job.epoch as usize;
+        if epoch >= spec.trace.len() {
+            mam::sync::terminate_zombies(&ctx, &job);
+            return;
+        }
+        let ev = &spec.trace[epoch];
+        let plan = build_plan(&ctx, &job, ev);
+        let rspec = ReconfigSpec {
+            plan: Arc::new(plan),
+            t_start: ctx.clock(),
+            data_bytes: spec.data_bytes,
+            cont: make_cont(spec.clone()),
+            zombie_pids: job.zombie_pids.clone(),
+        };
+        let shrinking = ev.target.total_procs() < job.app.size();
+        let outcome = if ev.method == Method::Merge && shrinking {
+            mam::shrink(&ctx, &job, &rspec)
+        } else if ev.asynchronous && ev.method == Method::Merge {
+            // Overlap the spawn with one epoch of iterations.
+            let pending = mam::driver::expand_async_initiate(&ctx, &job, &rspec);
+            for it in 0..spec.iters_per_epoch {
+                mc_iteration(&ctx, &job, &spec, it);
+            }
+            mam::driver::expand_async_complete(&ctx, &job, pending)
+        } else {
+            mam::expand(&ctx, &job, &rspec)
+        };
+        match outcome {
+            Outcome::Continue(next) => job = next,
+            Outcome::Exit => return,
+        }
+    }
+}
+
+/// One Monte-Carlo iteration: sample points, count inside (via the L1
+/// kernel), allgather the tallies, charge synthetic compute.
+fn mc_iteration(ctx: &Ctx, job: &JobCtx, spec: &AppSpec, _iter: usize) {
+    let n = spec.points_per_iter;
+    let inside = if n > 0 {
+        let mut points = Vec::with_capacity(n * 2);
+        for _ in 0..n * 2 {
+            points.push(ctx.rand_f64() as f32);
+        }
+        spec.pi_eval.count_inside(&points)
+    } else {
+        0
+    };
+    ctx.compute(spec.work_per_iter);
+    let tallies = ctx.allgather(
+        &job.app,
+        Payload::f64s(vec![inside as f64, n as f64]),
+    );
+    if job.app.rank() == 0 {
+        if let Some(obs) = &spec.observer {
+            let (mut tot_in, mut tot_n) = (0.0, 0.0);
+            for t in tallies.as_slice() {
+                let v = t.as_f64s();
+                tot_in += v[0];
+                tot_n += v[1];
+            }
+            let pi = if tot_n > 0.0 { 4.0 * tot_in / tot_n } else { 0.0 };
+            obs(job.epoch, _iter, pi, ctx.clock());
+        }
+    }
+}
+
+/// Build the reconfiguration [`Plan`] from the job's current layout and a
+/// target allocation. Node order: current (source) nodes first — in their
+/// current order — then new nodes in target order; dropped nodes keep an
+/// `A = 0` entry so `NS` stays consistent.
+pub fn build_plan(ctx: &Ctx, job: &JobCtx, ev: &ResizeEvent) -> Plan {
+    let world = ctx.world();
+    // Current per-node process counts, in first-seen (rank) order.
+    let mut cur_order: Vec<NodeId> = Vec::new();
+    let mut cur_count: BTreeMap<NodeId, u32> = BTreeMap::new();
+    for &pid in job.app.local_pids() {
+        let node = world.node_of(pid);
+        if !cur_count.contains_key(&node) {
+            cur_order.push(node);
+        }
+        *cur_count.entry(node).or_insert(0) += 1;
+    }
+    let target: BTreeMap<NodeId, u32> = ev.target.slots.iter().copied().collect();
+
+    let mut nodes = Vec::new();
+    let mut a = Vec::new();
+    let mut r = Vec::new();
+    for &node in &cur_order {
+        nodes.push(node);
+        a.push(target.get(&node).copied().unwrap_or(0));
+        r.push(cur_count[&node]);
+    }
+    for &(node, cores) in &ev.target.slots {
+        if !cur_count.contains_key(&node) {
+            nodes.push(node);
+            a.push(cores);
+            r.push(0);
+        }
+    }
+    Plan::new(job.epoch, ev.method, ev.strategy, nodes, a, r)
+}

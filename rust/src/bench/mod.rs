@@ -1,0 +1,126 @@
+//! Micro-benchmark harness (offline stand-in for criterion; DESIGN.md §2).
+//!
+//! Used by the `rust/benches/*.rs` targets (`harness = false`). Reports
+//! min/median/mean wall-clock per iteration after a warm-up, plus a
+//! criterion-like one-line summary, and supports `--bench <filter>`
+//! arguments the way `cargo bench <filter>` passes them.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<48} iters={:<4} min={} median={} mean={}",
+            self.name,
+            self.iters,
+            crate::util::csvout::fmt_time(self.min_s),
+            crate::util::csvout::fmt_time(self.median_s),
+            crate::util::csvout::fmt_time(self.mean_s),
+        )
+    }
+}
+
+/// Benchmark runner for one bench binary.
+pub struct Runner {
+    filter: Option<String>,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Self::from_args()
+    }
+}
+
+impl Runner {
+    /// Build from `cargo bench` CLI args (ignores `--bench`; any other
+    /// non-flag argument is a substring filter).
+    pub fn from_args() -> Runner {
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with("--") && !a.is_empty());
+        Runner { filter, results: Vec::new() }
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        self.filter.as_deref().map_or(true, |f| name.contains(f))
+    }
+
+    /// Time `f` for `iters` iterations (after one warm-up call).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, iters: usize, mut f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        f(); // warm-up
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            median_s: stats::median(&samples),
+            mean_s: stats::mean(&samples),
+            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        };
+        println!("{}", r.report_line());
+        self.results.push(r);
+    }
+
+    /// Print a table produced by a figure harness under a bench heading.
+    pub fn emit_table(&self, title: &str, table: &crate::util::csvout::Table) {
+        if !self.enabled(title) {
+            return;
+        }
+        println!("\n== {title} ==");
+        print!("{}", table.to_ascii());
+    }
+
+    pub fn finish(&self) {
+        println!("\n{} benchmark(s) completed", self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut r = Runner { filter: None, results: Vec::new() };
+        let mut count = 0usize;
+        r.bench("noop", 5, || {
+            count += 1;
+        });
+        assert_eq!(count, 6); // warmup + 5
+        assert_eq!(r.results.len(), 1);
+        assert!(r.results[0].median_s >= 0.0);
+    }
+
+    #[test]
+    fn filter_skips_nonmatching() {
+        let mut r = Runner { filter: Some("match".into()), results: Vec::new() };
+        let mut ran = false;
+        r.bench("other", 1, || {
+            ran = true;
+        });
+        assert!(!ran);
+        r.bench("match-this", 1, || {
+            ran = true;
+        });
+        assert!(ran);
+    }
+}

@@ -1,0 +1,352 @@
+//! Command-line interface of the `paraspawn` binary.
+//!
+//! Subcommands:
+//!
+//! * `run`      — one reconfiguration experiment, with a phase breakdown.
+//! * `figures`  — regenerate the paper's tables/figures into CSV + ASCII.
+//! * `table2`   — print the diffusive worked example (paper Table 2).
+//! * `workload` — RMS makespan simulation (DRM on/off).
+//! * `select`   — cost-model strategy selection demo.
+//!
+//! Arg parsing is hand-rolled (`--key value` pairs); clap is unavailable
+//! offline (DESIGN.md §2).
+
+use crate::config::CostModel;
+use crate::coordinator::figures::{self, FigureConfig};
+use crate::coordinator::{run_reconfiguration, Scenario};
+use crate::mam::{Method, SpawnStrategy};
+use crate::rms::AllocPolicy;
+use crate::topology::Cluster;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Parsed `--key value` arguments plus positional words.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+/// Parse an argument list (after the subcommand). Flags without values
+/// get `"true"`.
+pub fn parse_args<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+    let mut out = Args::default();
+    let mut it = args.into_iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let value = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                _ => "true".to_string(),
+            };
+            out.options.insert(key.to_string(), value);
+        } else {
+            out.positional.push(a);
+        }
+    }
+    Ok(out)
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn scenario_from_args(a: &Args) -> Result<Scenario> {
+    let cluster_name = a.get("cluster").unwrap_or("mn5");
+    let (cluster, cost, policy) = match cluster_name {
+        "mn5" => (Cluster::mn5(), CostModel::mn5(), AllocPolicy::WholeNodes),
+        "nasp" => (Cluster::nasp(), CostModel::nasp(), AllocPolicy::BalancedTypes),
+        other => bail!("unknown cluster '{other}' (mn5 | nasp)"),
+    };
+    let mut cost = cost;
+    if let Some(path) = a.get("config") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let kv = crate::config::parse_kv(&text)?;
+        cost.apply_overrides(&kv).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    let method = Method::parse(a.get("method").unwrap_or("merge"))
+        .context("--method must be merge|baseline")?;
+    let strategy = SpawnStrategy::parse(a.get("strategy").unwrap_or("hypercube"))
+        .context("--strategy must be plain|single|nodebynode|hypercube|diffusive")?;
+    let initial_nodes = a.usize_or("i", 1)?;
+    let target_nodes = a.usize_or("n", 4)?;
+    Ok(Scenario {
+        cluster,
+        cost,
+        policy,
+        initial_nodes,
+        target_nodes,
+        method,
+        strategy,
+        seed: a.usize_or("seed", 1)? as u64,
+        warmup_iters: a.usize_or("warmup", 5)?,
+        data_bytes: a.usize_or("data-bytes", 0)? as u64,
+        prepare_parallel: target_nodes < initial_nodes || a.get("prepare").is_some(),
+    })
+}
+
+fn cmd_run(a: &Args) -> Result<()> {
+    let s = scenario_from_args(a)?;
+    let reps = a.usize_or("reps", 1)?;
+    if reps <= 1 {
+        let report = run_reconfiguration(&s)?;
+        println!("{}", figures::describe_report(&report));
+    } else {
+        let samples = crate::coordinator::run_samples(&s, reps)?;
+        let summ = crate::util::stats::summarize(&samples);
+        println!(
+            "{} -> {} nodes, {}+{}: median {} (IQR {}..{}, n={})",
+            s.initial_nodes,
+            s.target_nodes,
+            s.method.name(),
+            s.strategy.name(),
+            crate::util::csvout::fmt_time(summ.median),
+            crate::util::csvout::fmt_time(summ.q1),
+            crate::util::csvout::fmt_time(summ.q3),
+            summ.n
+        );
+    }
+    Ok(())
+}
+
+fn figure_cfg(a: &Args) -> Result<FigureConfig> {
+    let mut cfg = FigureConfig::default();
+    cfg.reps = a.usize_or("reps", cfg.reps)?;
+    cfg.max_nodes = a.usize_or("max-nodes", cfg.max_nodes)?;
+    Ok(cfg)
+}
+
+fn cmd_figures(a: &Args) -> Result<()> {
+    let cfg = figure_cfg(a)?;
+    let out: Option<PathBuf> = a.get("out").map(PathBuf::from);
+    let which = a.get("fig").unwrap_or("all").to_string();
+    let all = which == "all" || a.get("all").is_some();
+
+    let emit = |name: &str, table: &crate::util::csvout::Table| -> Result<()> {
+        println!("\n== {name} ==");
+        print!("{}", table.to_ascii());
+        if let Some(dir) = &out {
+            let path = dir.join(format!("{name}.csv"));
+            table.write_csv(&path)?;
+            println!("[written {}]", path.display());
+        }
+        Ok(())
+    };
+
+    if all || which == "table2" {
+        emit("table2", &figures::table2())?;
+    }
+    let mut mn5_expand = None;
+    let mut mn5_shrink = None;
+    if all || which == "4a" || which == "5" {
+        let (t, s) = figures::fig4a(&cfg)?;
+        emit("fig4a_expansion", &t)?;
+        mn5_expand = Some(s);
+    }
+    if all || which == "4b" || which == "5" {
+        let (t, s) = figures::fig4b(&cfg)?;
+        emit("fig4b_shrink", &t)?;
+        mn5_shrink = Some(s);
+    }
+    if (all || which == "5") && mn5_expand.is_some() && mn5_shrink.is_some() {
+        let t = figures::fig5(&cfg, mn5_expand.as_ref().unwrap(), mn5_shrink.as_ref().unwrap());
+        emit("fig5_preferred", &t)?;
+    }
+    let mut nasp_expand = None;
+    let mut nasp_shrink = None;
+    if all || which == "6a" {
+        let (t, s) = figures::fig6a(&cfg)?;
+        emit("fig6a_hetero_expansion", &t)?;
+        nasp_expand = Some(s);
+    }
+    if all || which == "6b" {
+        let (t, s) = figures::fig6b(&cfg)?;
+        emit("fig6b_hetero_shrink", &t)?;
+        nasp_shrink = Some(s);
+    }
+    if let (Some(e), Some(s)) = (&mn5_expand, &mn5_shrink) {
+        let h = figures::headline(e, s);
+        emit("headline_mn5", &figures::headline_summary("MN5", &h, 1.13, 1387.0))?;
+    }
+    if let (Some(e), Some(s)) = (&nasp_expand, &nasp_shrink) {
+        let h = figures::headline(e, s);
+        emit("headline_nasp", &figures::headline_summary("NASP", &h, 1.25, 20.0))?;
+    }
+    Ok(())
+}
+
+fn cmd_workload(a: &Args) -> Result<()> {
+    use crate::rms::workload::{simulate, synthetic_workload, ReconfigCostModel};
+    let nodes = a.usize_or("nodes", 16)?;
+    let jobs_n = a.usize_or("jobs", 40)?;
+    let seed = a.usize_or("seed", 42)? as u64;
+    let jobs = synthetic_workload(jobs_n, nodes, 0.6, seed);
+    let rigid = simulate(nodes, &jobs, false, ReconfigCostModel::ts(1.0));
+    let ts = simulate(nodes, &jobs, true, ReconfigCostModel::ts(1.0));
+    let ss = simulate(nodes, &jobs, true, ReconfigCostModel::ss(1.0));
+    let mut t = crate::util::csvout::Table::new(vec![
+        "policy",
+        "makespan_s",
+        "mean_wait_s",
+        "mean_turnaround_s",
+        "reconfigs",
+    ]);
+    for (name, r) in [("rigid", &rigid), ("DRM+TS", &ts), ("DRM+SS", &ss)] {
+        t.push_row(vec![
+            name.to_string(),
+            format!("{:.1}", r.makespan),
+            format!("{:.1}", r.mean_wait),
+            format!("{:.1}", r.mean_turnaround),
+            r.reconfigurations.to_string(),
+        ]);
+    }
+    print!("{}", t.to_ascii());
+    Ok(())
+}
+
+fn cmd_select(a: &Args) -> Result<()> {
+    use crate::coordinator::select::{select, Candidate, SelectContext};
+    use crate::mam::plan::Plan;
+    let i = a.usize_or("i", 1)?;
+    let n = a.usize_or("n", 8)?;
+    let c = a.usize_or("cores", 112)? as u32;
+    let shrinks = a.usize_or("expected-shrinks", 2)? as f64;
+    let candidates = vec![
+        Candidate { method: Method::Merge, strategy: SpawnStrategy::Plain },
+        Candidate { method: Method::Merge, strategy: SpawnStrategy::NodeByNode },
+        Candidate { method: Method::Merge, strategy: SpawnStrategy::ParallelHypercube },
+        Candidate { method: Method::Baseline, strategy: SpawnStrategy::ParallelHypercube },
+    ];
+    let mk_plan = |cand: &Candidate| {
+        let mut r = vec![0u32; n];
+        for ri in r.iter_mut().take(i) {
+            *ri = c;
+        }
+        Plan::new(0, cand.method, cand.strategy, (0..n).collect(), vec![c; n], r)
+    };
+    // Prefer the PJRT kernel when artifacts exist.
+    let kernel = crate::runtime::Engine::cpu()
+        .and_then(|e| crate::runtime::CostModelKernel::load(&e))
+        .ok();
+    let backend = if kernel.is_some() { "pjrt" } else { "host" };
+    let (best, scores) = select(
+        &candidates,
+        mk_plan,
+        &CostModel::mn5(),
+        &SelectContext { expected_shrinks: shrinks },
+        kernel.as_ref(),
+    );
+    println!("scoring backend: {backend}");
+    for (idx, (cand, score)) in candidates.iter().zip(&scores).enumerate() {
+        let marker = if idx == best { " <= selected" } else { "" };
+        println!(
+            "{}+{}: predicted {:.3}s{marker}",
+            cand.method.name(),
+            cand.strategy.name(),
+            score
+        );
+    }
+    Ok(())
+}
+
+const USAGE: &str = "paraspawn — parallel spawning strategies for malleable MPI (simulated)
+
+USAGE:
+  paraspawn run      [--cluster mn5|nasp] [--i I] [--n N] [--method m|b]
+                     [--strategy plain|single|nodebynode|hypercube|diffusive]
+                     [--reps K] [--seed S] [--warmup W] [--data-bytes B]
+                     [--config cost.conf]
+  paraspawn figures  [--fig all|table2|4a|4b|5|6a|6b] [--out DIR]
+                     [--reps K] [--max-nodes M]
+  paraspawn table2
+  paraspawn workload [--nodes N] [--jobs J] [--seed S]
+  paraspawn select   [--i I] [--n N] [--cores C] [--expected-shrinks K]
+";
+
+/// Binary entry point.
+pub fn main() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    let args = parse_args(argv)?;
+    match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "figures" => cmd_figures(&args),
+        "table2" => {
+            print!("{}", figures::table2().to_ascii());
+            Ok(())
+        }
+        "workload" => cmd_workload(&args),
+        "select" => cmd_select(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_key_values_and_flags() {
+        // A flag followed by a non-flag token consumes it as its value;
+        // trailing flags default to "true".
+        let a = parse_args(["pos".into(), "--i".into(), "4".into(), "--all".into()]).unwrap();
+        assert_eq!(a.get("i"), Some("4"));
+        assert_eq!(a.get("all"), Some("true"));
+        assert_eq!(a.positional, vec!["pos".to_string()]);
+    }
+
+    #[test]
+    fn usize_or_defaults_and_errors() {
+        let a = parse_args(["--i".into(), "7".into()]).unwrap();
+        assert_eq!(a.usize_or("i", 1).unwrap(), 7);
+        assert_eq!(a.usize_or("n", 3).unwrap(), 3);
+        let bad = parse_args(["--i".into(), "seven".into()]).unwrap();
+        assert!(bad.usize_or("i", 1).is_err());
+    }
+
+    #[test]
+    fn scenario_parsing() {
+        let a = parse_args([
+            "--cluster".into(),
+            "nasp".into(),
+            "--i".into(),
+            "2".into(),
+            "--n".into(),
+            "4".into(),
+            "--method".into(),
+            "b".into(),
+            "--strategy".into(),
+            "diffusive".into(),
+        ])
+        .unwrap();
+        let s = scenario_from_args(&a).unwrap();
+        assert_eq!(s.cluster.name, "nasp");
+        assert_eq!(s.method, Method::Baseline);
+        assert_eq!(s.strategy, SpawnStrategy::ParallelDiffusive);
+        assert!(!s.prepare_parallel); // expansion
+    }
+
+    #[test]
+    fn shrink_scenario_gets_prepare() {
+        let a = parse_args(["--i".into(), "4".into(), "--n".into(), "2".into()]).unwrap();
+        let s = scenario_from_args(&a).unwrap();
+        assert!(s.prepare_parallel);
+    }
+}

@@ -1,0 +1,298 @@
+//! Simulation configuration: the calibrated cost model behind the
+//! virtual-time MPI substrate, plus a minimal `key = value` config-file
+//! parser (offline stand-in for serde/toml).
+//!
+//! ## Calibration
+//!
+//! The constants are calibrated per cluster so the *shape* of the paper's
+//! evaluation holds (see DESIGN.md §3 and EXPERIMENTS.md):
+//!
+//! * a single collective `MPI_Comm_spawn` (Merge) is the fastest expansion;
+//! * the parallel strategies stay within ~1.13x (MN5) / ~1.25x (NASP) of
+//!   Merge, the extra cost coming from initiator-RTE contention, the group
+//!   synchronization tokens and the binary-connection rounds;
+//! * parallel Baseline is slower still (extra processes + oversubscription);
+//! * TS shrinks cost milliseconds, yielding >=1387x (MN5) / >=20x (NASP)
+//!   speedups over spawn-based shrinkage.
+
+pub mod parse;
+
+pub use parse::{parse_kv, ParseError};
+
+/// All latency constants of the virtual-time model, in seconds.
+///
+/// See DESIGN.md §3 for where each constant enters the model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostModel {
+    // -- point-to-point CPU overheads --
+    /// Sender-side per-message overhead.
+    pub o_send: f64,
+    /// Receiver-side per-message overhead.
+    pub o_recv: f64,
+
+    // -- collectives --
+    /// Per-participant entry cost of any collective.
+    pub c_coll_enter: f64,
+
+    // -- process spawning (MPI_Comm_spawn) --
+    /// Fixed initiator cost per spawn call (RTE handshake).
+    pub c_spawn_call: f64,
+    /// Launching the first RTE proxy/daemon on a node.
+    pub c_daemon_cold: f64,
+    /// Reusing an already-running proxy on a node.
+    pub c_daemon_warm: f64,
+    /// Fork+exec+MPI bootstrap per process; serialized within one node.
+    pub c_fork_proc: f64,
+    /// Child-world `MPI_Init` synchronization, times `ceil(log2 nprocs)`.
+    pub c_init_sync: f64,
+    /// RTE rollout across the nodes of a single call, times
+    /// `ceil(log2(nodes+1))` (Hydra contacts proxies in a tree).
+    pub c_node_tree: f64,
+    /// Serialized service time at the *initiator node's* RTE per spawn
+    /// call — the contention term that penalises many concurrent spawns
+    /// launched from the same node.
+    pub c_rte_service: f64,
+    /// Scale per-process fork cost by node occupancy (oversubscription).
+    pub oversub_penalty: bool,
+
+    // -- ports & name service --
+    pub c_open_port: f64,
+    pub c_publish: f64,
+    pub c_lookup: f64,
+    /// Root-to-root connect/accept handshake (on top of path latency).
+    pub c_connect: f64,
+
+    // -- termination & zombies --
+    /// Delivering a terminate signal to a group root.
+    pub c_term_signal: f64,
+    /// Process teardown (MPI_Finalize + exit).
+    pub c_exit: f64,
+    /// Marking a rank as zombie (it stays resident).
+    pub c_zombie_mark: f64,
+    /// Waking a zombie rank.
+    pub c_wake: f64,
+
+    // -- asynchronous strategy --
+    /// Initiation overhead of an asynchronous (overlapped) spawn: the
+    /// main thread hands the spawn to a helper and returns (MaM's
+    /// Asynchronous strategy, §3 of the paper).
+    pub c_async_init: f64,
+
+    // -- application compute --
+    /// Seconds per (synthetic) application work unit per core.
+    pub c_work_unit: f64,
+
+    // -- stochastics --
+    /// Relative lognormal jitter applied to every charged cost; 0 = off.
+    pub jitter_frac: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel::mn5()
+    }
+}
+
+impl CostModel {
+    /// Calibrated for MareNostrum 5 (MPICH 4.2.0, CH4:OFI over 100 Gb IB).
+    pub fn mn5() -> Self {
+        CostModel {
+            o_send: 4.0e-7,
+            o_recv: 4.0e-7,
+            c_coll_enter: 1.0e-6,
+            c_spawn_call: 0.250,
+            c_daemon_cold: 0.050,
+            c_daemon_warm: 0.008,
+            c_fork_proc: 0.0030,
+            c_init_sync: 0.004,
+            c_node_tree: 0.005,
+            c_rte_service: 0.002,
+            oversub_penalty: true,
+            c_open_port: 3.0e-4,
+            c_publish: 2.0e-4,
+            c_lookup: 1.0e-3,
+            c_connect: 3.0e-3,
+            c_term_signal: 2.0e-5,
+            c_exit: 2.0e-4,
+            c_zombie_mark: 5.0e-5,
+            c_wake: 1.0e-4,
+            c_async_init: 1.0e-3,
+            c_work_unit: 1.0e-6,
+            jitter_frac: 0.03,
+        }
+    }
+
+    /// Calibrated for NASP (MPICH 3.4.3, CH3:Nemesis over 10 GbE; slower
+    /// name service and RTE than MN5).
+    pub fn nasp() -> Self {
+        CostModel {
+            o_send: 1.0e-6,
+            o_recv: 1.0e-6,
+            c_coll_enter: 4.0e-6,
+            c_spawn_call: 0.400,
+            c_daemon_cold: 0.080,
+            c_daemon_warm: 0.015,
+            c_fork_proc: 0.0050,
+            c_init_sync: 0.008,
+            c_node_tree: 0.008,
+            c_rte_service: 0.004,
+            oversub_penalty: true,
+            c_open_port: 1.0e-3,
+            c_publish: 8.0e-4,
+            c_lookup: 2.5e-3,
+            c_connect: 6.0e-3,
+            c_term_signal: 4.0e-4,
+            c_exit: 6.0e-4,
+            c_zombie_mark: 1.5e-4,
+            c_wake: 3.0e-4,
+            c_async_init: 2.5e-3,
+            c_work_unit: 1.0e-6,
+            jitter_frac: 0.04,
+        }
+    }
+
+    /// A preset by name (`"mn5"` or `"nasp"`).
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "mn5" => Some(Self::mn5()),
+            "nasp" => Some(Self::nasp()),
+            _ => None,
+        }
+    }
+
+    /// Disable jitter (deterministic runs for tests).
+    pub fn deterministic(mut self) -> Self {
+        self.jitter_frac = 0.0;
+        self
+    }
+
+    /// Override fields by name from a parsed `key = value` map. Unknown
+    /// keys are an error so config typos cannot pass silently.
+    pub fn apply_overrides(
+        &mut self,
+        kv: &std::collections::BTreeMap<String, String>,
+    ) -> Result<(), String> {
+        for (k, v) in kv {
+            let slot: &mut f64 = match k.as_str() {
+                "o_send" => &mut self.o_send,
+                "o_recv" => &mut self.o_recv,
+                "c_coll_enter" => &mut self.c_coll_enter,
+                "c_spawn_call" => &mut self.c_spawn_call,
+                "c_daemon_cold" => &mut self.c_daemon_cold,
+                "c_daemon_warm" => &mut self.c_daemon_warm,
+                "c_fork_proc" => &mut self.c_fork_proc,
+                "c_init_sync" => &mut self.c_init_sync,
+                "c_node_tree" => &mut self.c_node_tree,
+                "c_rte_service" => &mut self.c_rte_service,
+                "c_open_port" => &mut self.c_open_port,
+                "c_publish" => &mut self.c_publish,
+                "c_lookup" => &mut self.c_lookup,
+                "c_connect" => &mut self.c_connect,
+                "c_term_signal" => &mut self.c_term_signal,
+                "c_exit" => &mut self.c_exit,
+                "c_zombie_mark" => &mut self.c_zombie_mark,
+                "c_wake" => &mut self.c_wake,
+                "c_async_init" => &mut self.c_async_init,
+                "c_work_unit" => &mut self.c_work_unit,
+                "jitter_frac" => &mut self.jitter_frac,
+                "oversub_penalty" => {
+                    self.oversub_penalty = v == "true" || v == "1";
+                    continue;
+                }
+                _ => return Err(format!("unknown cost-model key '{k}'")),
+            };
+            *slot = v.parse::<f64>().map_err(|e| format!("bad value for '{k}': {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Top-level simulation configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub cost: CostModel,
+    /// Master seed; every simulated process derives its own stream.
+    pub seed: u64,
+    /// Stack size for simulated-process threads. The MN5 sweeps run up to
+    /// ~6k concurrent threads, so this stays small.
+    pub thread_stack: usize,
+    /// Wall-clock watchdog for a whole simulation run (protocol-deadlock
+    /// detection in tests). `None` disables it.
+    pub watchdog_secs: Option<f64>,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            cost: CostModel::mn5(),
+            seed: 0xC0FFEE,
+            thread_stack: 256 * 1024,
+            watchdog_secs: Some(120.0),
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn with_cost(cost: CostModel) -> Self {
+        SimConfig { cost, ..Default::default() }
+    }
+
+    pub fn seeded(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn presets_exist() {
+        assert!(CostModel::preset("mn5").is_some());
+        assert!(CostModel::preset("nasp").is_some());
+        assert!(CostModel::preset("summit").is_none());
+    }
+
+    #[test]
+    fn nasp_slower_than_mn5() {
+        let m = CostModel::mn5();
+        let n = CostModel::nasp();
+        assert!(n.c_spawn_call > m.c_spawn_call);
+        assert!(n.c_lookup > m.c_lookup);
+        assert!(n.c_connect > m.c_connect);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = CostModel::mn5();
+        let mut kv = BTreeMap::new();
+        kv.insert("c_spawn_call".to_string(), "0.5".to_string());
+        kv.insert("oversub_penalty".to_string(), "false".to_string());
+        c.apply_overrides(&kv).unwrap();
+        assert_eq!(c.c_spawn_call, 0.5);
+        assert!(!c.oversub_penalty);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = CostModel::mn5();
+        let mut kv = BTreeMap::new();
+        kv.insert("c_warp_drive".to_string(), "1".to_string());
+        assert!(c.apply_overrides(&kv).is_err());
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        let mut c = CostModel::mn5();
+        let mut kv = BTreeMap::new();
+        kv.insert("c_spawn_call".to_string(), "fast".to_string());
+        assert!(c.apply_overrides(&kv).is_err());
+    }
+
+    #[test]
+    fn deterministic_strips_jitter() {
+        assert_eq!(CostModel::mn5().deterministic().jitter_frac, 0.0);
+    }
+}

@@ -1,0 +1,82 @@
+//! Minimal `key = value` config-file parser.
+//!
+//! Grammar: one `key = value` per line; `#` starts a comment; blank lines
+//! ignored; keys are bare identifiers; values run to end-of-line (trimmed).
+//! This replaces serde/toml, which are unavailable offline (DESIGN.md §2).
+
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum ParseError {
+    #[error("line {line}: expected 'key = value', got '{text}'")]
+    Malformed { line: usize, text: String },
+    #[error("line {line}: duplicate key '{key}'")]
+    Duplicate { line: usize, key: String },
+}
+
+/// Parse `key = value` text into an ordered map.
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>, ParseError> {
+    let mut map = BTreeMap::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = match raw.find('#') {
+            Some(pos) => &raw[..pos],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| ParseError::Malformed { line: line_no, text: raw.to_string() })?;
+        let key = k.trim().to_string();
+        let value = v.trim().to_string();
+        if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            return Err(ParseError::Malformed { line: line_no, text: raw.to_string() });
+        }
+        if map.contains_key(&key) {
+            return Err(ParseError::Duplicate { line: line_no, key });
+        }
+        map.insert(key, value);
+    }
+    Ok(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_file() {
+        let m = parse_kv("a = 1\nb=2.5\n\n# comment\nc = hello world # trailing\n").unwrap();
+        assert_eq!(m["a"], "1");
+        assert_eq!(m["b"], "2.5");
+        assert_eq!(m["c"], "hello world");
+    }
+
+    #[test]
+    fn rejects_malformed_line() {
+        let e = parse_kv("just words\n").unwrap_err();
+        assert!(matches!(e, ParseError::Malformed { line: 1, .. }));
+    }
+
+    #[test]
+    fn rejects_duplicate_key() {
+        let e = parse_kv("a = 1\na = 2\n").unwrap_err();
+        assert_eq!(e, ParseError::Duplicate { line: 2, key: "a".into() });
+    }
+
+    #[test]
+    fn rejects_bad_key_chars() {
+        assert!(parse_kv("a b = 1\n").is_err());
+        assert!(parse_kv(" = 1\n").is_err());
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        assert!(parse_kv("").unwrap().is_empty());
+        assert!(parse_kv("# only a comment\n").unwrap().is_empty());
+    }
+}

@@ -1,0 +1,392 @@
+//! Figure/table regeneration harness: one function per artifact of the
+//! paper's evaluation (§5). Each returns a [`Table`] (CSV/ASCII) with the
+//! same rows/series the paper reports, plus [`headline_summary`] checking
+//! the headline ratios (expansion overhead, shrink speedups, Merge-win
+//! percentages).
+
+use super::{run_samples, Scenario};
+use crate::mam::{Method, SpawnStrategy};
+use crate::util::csvout::{fmt_time, Table};
+use crate::util::stats::{median, statistically_equivalent};
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Node counts of the MN5 sweep (§5.2).
+pub const MN5_NODES: [usize; 7] = [1, 2, 4, 8, 16, 24, 32];
+/// Node counts of the NASP sweep (§5.3).
+pub const NASP_NODES: [usize; 9] = [1, 2, 4, 6, 8, 10, 12, 14, 16];
+
+/// Significance level for the Figure 5 equivalence groups.
+pub const ALPHA: f64 = 0.05;
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct FigureConfig {
+    /// Repetitions per (configuration, I, N) cell (paper: 20).
+    pub reps: usize,
+    /// Restrict node sets to values `<= max_nodes` (wall-clock control;
+    /// the full sweeps run thousands of simulated ranks per cell).
+    pub max_nodes: usize,
+    pub seed: u64,
+}
+
+impl Default for FigureConfig {
+    fn default() -> Self {
+        let reps = std::env::var("PARASPAWN_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+        let max_nodes =
+            std::env::var("PARASPAWN_MAX_NODES").ok().and_then(|v| v.parse().ok()).unwrap_or(32);
+        FigureConfig { reps, max_nodes, seed: 0xF16 }
+    }
+}
+
+impl FigureConfig {
+    /// Small preset for CI / cargo-bench runs.
+    pub fn quick() -> Self {
+        FigureConfig { reps: 3, max_nodes: 8, seed: 0xF16 }
+    }
+
+    fn mn5_nodes(&self) -> Vec<usize> {
+        MN5_NODES.iter().copied().filter(|&n| n <= self.max_nodes).collect()
+    }
+
+    fn nasp_nodes(&self) -> Vec<usize> {
+        NASP_NODES.iter().copied().filter(|&n| n <= self.max_nodes).collect()
+    }
+}
+
+/// A method x strategy configuration with its figure label.
+#[derive(Clone, Copy, Debug)]
+pub struct MethodConfig {
+    pub label: &'static str,
+    pub method: Method,
+    pub strategy: SpawnStrategy,
+}
+
+/// Expansion configurations of Figure 4a.
+pub fn mn5_expand_configs() -> Vec<MethodConfig> {
+    use SpawnStrategy::*;
+    vec![
+        MethodConfig { label: "M", method: Method::Merge, strategy: Plain },
+        MethodConfig { label: "B+HC", method: Method::Baseline, strategy: ParallelHypercube },
+        MethodConfig { label: "M+HC", method: Method::Merge, strategy: ParallelHypercube },
+        MethodConfig { label: "B+ID", method: Method::Baseline, strategy: ParallelDiffusive },
+        MethodConfig { label: "M+ID", method: Method::Merge, strategy: ParallelDiffusive },
+    ]
+}
+
+/// Shrink configurations of Figure 4b. The Merge shrink is the TS method
+/// (no spawning; per-node MCWs created by a prior parallel expansion).
+pub fn mn5_shrink_configs() -> Vec<MethodConfig> {
+    use SpawnStrategy::*;
+    vec![
+        MethodConfig { label: "M+TS", method: Method::Merge, strategy: Plain },
+        MethodConfig { label: "B+HC", method: Method::Baseline, strategy: ParallelHypercube },
+        MethodConfig { label: "B+ID", method: Method::Baseline, strategy: ParallelDiffusive },
+    ]
+}
+
+/// Expansion configurations of Figure 6a (the Hypercube strategy cannot
+/// spawn correctly on heterogeneous allocations, §5.3).
+pub fn nasp_expand_configs() -> Vec<MethodConfig> {
+    use SpawnStrategy::*;
+    vec![
+        MethodConfig { label: "M", method: Method::Merge, strategy: Plain },
+        MethodConfig { label: "B+ID", method: Method::Baseline, strategy: ParallelDiffusive },
+        MethodConfig { label: "M+ID", method: Method::Merge, strategy: ParallelDiffusive },
+    ]
+}
+
+/// Shrink configurations of Figure 6b.
+pub fn nasp_shrink_configs() -> Vec<MethodConfig> {
+    use SpawnStrategy::*;
+    vec![
+        MethodConfig { label: "M+TS", method: Method::Merge, strategy: Plain },
+        MethodConfig { label: "B+ID", method: Method::Baseline, strategy: ParallelDiffusive },
+    ]
+}
+
+fn scenario(nasp: bool, i: usize, n: usize, mc: &MethodConfig, seed: u64) -> Scenario {
+    let mut s = if nasp { Scenario::nasp(i, n) } else { Scenario::mn5(i, n) };
+    s = s.with(mc.method, mc.strategy).seeded(seed);
+    // Shrinks start from a state prepared by a parallel expansion (per
+    // §4.6 a job that never expanded cannot TS; the paper's TS shrinks
+    // rely on the parallel spawning of previous resizes).
+    s.prepare_parallel = n < i;
+    s
+}
+
+/// Samples for every (I, N, config) cell of a sweep.
+pub type CellSamples = BTreeMap<(usize, usize, &'static str), Vec<f64>>;
+
+fn run_sweep(
+    cfg: &FigureConfig,
+    nasp: bool,
+    pairs: &[(usize, usize)],
+    configs: &[MethodConfig],
+) -> Result<CellSamples> {
+    let mut out = CellSamples::new();
+    for &(i, n) in pairs {
+        for mc in configs {
+            let s = scenario(nasp, i, n, mc, cfg.seed);
+            let samples = run_samples(&s, cfg.reps)?;
+            out.insert((i, n, mc.label), samples);
+        }
+    }
+    Ok(out)
+}
+
+fn expansion_pairs(nodes: &[usize]) -> Vec<(usize, usize)> {
+    let mut v = Vec::new();
+    for &i in nodes {
+        for &n in nodes {
+            if i < n {
+                v.push((i, n));
+            }
+        }
+    }
+    v
+}
+
+fn shrink_pairs(nodes: &[usize]) -> Vec<(usize, usize)> {
+    let mut v = Vec::new();
+    for &i in nodes {
+        for &n in nodes {
+            if i > n {
+                v.push((i, n));
+            }
+        }
+    }
+    v
+}
+
+fn sweep_table(
+    samples: &CellSamples,
+    pairs: &[(usize, usize)],
+    configs: &[MethodConfig],
+) -> Table {
+    let mut header = vec!["I".to_string(), "N".to_string()];
+    header.extend(configs.iter().map(|c| format!("{}_median_s", c.label)));
+    let mut t = Table::new(header);
+    for &(i, n) in pairs {
+        let mut row = vec![i.to_string(), n.to_string()];
+        for mc in configs {
+            let xs = &samples[&(i, n, mc.label)];
+            row.push(format!("{:.6}", median(xs)));
+        }
+        t.push_row(row);
+    }
+    t
+}
+
+/// Figure 4a: MN5 expansion resize times.
+pub fn fig4a(cfg: &FigureConfig) -> Result<(Table, CellSamples)> {
+    let nodes = cfg.mn5_nodes();
+    let pairs = expansion_pairs(&nodes);
+    let configs = mn5_expand_configs();
+    let samples = run_sweep(cfg, false, &pairs, &configs)?;
+    Ok((sweep_table(&samples, &pairs, &configs), samples))
+}
+
+/// Figure 4b: MN5 shrink resize times.
+pub fn fig4b(cfg: &FigureConfig) -> Result<(Table, CellSamples)> {
+    let nodes = cfg.mn5_nodes();
+    let pairs = shrink_pairs(&nodes);
+    let configs = mn5_shrink_configs();
+    let samples = run_sweep(cfg, false, &pairs, &configs)?;
+    Ok((sweep_table(&samples, &pairs, &configs), samples))
+}
+
+/// Figure 6a: NASP heterogeneous expansion resize times.
+pub fn fig6a(cfg: &FigureConfig) -> Result<(Table, CellSamples)> {
+    let nodes = cfg.nasp_nodes();
+    let pairs = expansion_pairs(&nodes);
+    let configs = nasp_expand_configs();
+    let samples = run_sweep(cfg, true, &pairs, &configs)?;
+    Ok((sweep_table(&samples, &pairs, &configs), samples))
+}
+
+/// Figure 6b: NASP heterogeneous shrink resize times.
+pub fn fig6b(cfg: &FigureConfig) -> Result<(Table, CellSamples)> {
+    let nodes = cfg.nasp_nodes();
+    let pairs = shrink_pairs(&nodes);
+    let configs = nasp_shrink_configs();
+    let samples = run_sweep(cfg, true, &pairs, &configs)?;
+    Ok((sweep_table(&samples, &pairs, &configs), samples))
+}
+
+/// The Figure 5 decision rule: every configuration statistically
+/// equivalent (Mann-Whitney, `ALPHA`) to the best-median one, ordered by
+/// ascending median.
+pub fn preferred_methods(cell: &BTreeMap<&'static str, Vec<f64>>) -> Vec<&'static str> {
+    let mut meds: Vec<(&'static str, f64)> =
+        cell.iter().map(|(&l, xs)| (l, median(xs))).collect();
+    meds.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let (best_label, _) = meds[0];
+    let best = &cell[best_label];
+    meds.iter()
+        .filter(|(l, _)| *l == best_label || statistically_equivalent(best, &cell[l], ALPHA))
+        .map(|&(l, _)| l)
+        .collect()
+}
+
+/// Figure 5: preferred-method matrix over all (I, N) pairs (upper triangle
+/// expansion, lower triangle shrink).
+pub fn fig5(
+    cfg: &FigureConfig,
+    expand: &CellSamples,
+    shrink: &CellSamples,
+) -> Table {
+    let nodes = cfg.mn5_nodes();
+    let mut header = vec!["I\\N".to_string()];
+    header.extend(nodes.iter().map(|n| n.to_string()));
+    let mut t = Table::new(header);
+    for &i in &nodes {
+        let mut row = vec![i.to_string()];
+        for &n in &nodes {
+            if i == n {
+                row.push("-".into());
+                continue;
+            }
+            let source = if i < n { expand } else { shrink };
+            let mut cell: BTreeMap<&'static str, Vec<f64>> = BTreeMap::new();
+            for ((ci, cn, label), xs) in source.iter() {
+                if *ci == i && *cn == n {
+                    cell.insert(label, xs.clone());
+                }
+            }
+            if cell.is_empty() {
+                row.push("?".into());
+            } else {
+                row.push(preferred_methods(&cell).join("/"));
+            }
+        }
+        t.push_row(row);
+    }
+    t
+}
+
+/// Headline metrics of the paper (E7 in DESIGN.md).
+#[derive(Clone, Debug)]
+pub struct Headline {
+    /// max over cells of median(parallel Merge) / median(plain Merge).
+    pub max_expand_overhead: f64,
+    /// min over cells of median(best Baseline shrink) / median(M+TS).
+    pub min_shrink_speedup: f64,
+    /// Fraction of expansion cells where plain Merge has the lowest median.
+    pub merge_win_fraction: f64,
+}
+
+/// Compute the headline metrics from sweep samples.
+pub fn headline(expand: &CellSamples, shrink: &CellSamples) -> Headline {
+    let mut max_overhead: f64 = 0.0;
+    let mut merge_wins = 0usize;
+    let mut cells = 0usize;
+    let mut by_pair: BTreeMap<(usize, usize), BTreeMap<&'static str, f64>> = BTreeMap::new();
+    for ((i, n, label), xs) in expand {
+        by_pair.entry((*i, *n)).or_default().insert(label, median(xs));
+    }
+    for meds in by_pair.values() {
+        let m = meds["M"];
+        cells += 1;
+        let best = meds.values().cloned().fold(f64::INFINITY, f64::min);
+        if (m - best).abs() < 1e-12 {
+            merge_wins += 1;
+        }
+        for (label, v) in meds {
+            if label.starts_with("M+") {
+                max_overhead = max_overhead.max(v / m);
+            }
+        }
+    }
+
+    let mut min_speedup = f64::INFINITY;
+    let mut shrink_by_pair: BTreeMap<(usize, usize), BTreeMap<&'static str, f64>> =
+        BTreeMap::new();
+    for ((i, n, label), xs) in shrink {
+        shrink_by_pair.entry((*i, *n)).or_default().insert(label, median(xs));
+    }
+    for meds in shrink_by_pair.values() {
+        let ts = meds["M+TS"];
+        let best_b = meds
+            .iter()
+            .filter(|(l, _)| l.starts_with("B"))
+            .map(|(_, &v)| v)
+            .fold(f64::INFINITY, f64::min);
+        if best_b.is_finite() && ts > 0.0 {
+            min_speedup = min_speedup.min(best_b / ts);
+        }
+    }
+
+    Headline {
+        max_expand_overhead: max_overhead,
+        min_shrink_speedup: min_speedup,
+        merge_win_fraction: merge_wins as f64 / cells.max(1) as f64,
+    }
+}
+
+/// Render the headline comparison against the paper's claims.
+pub fn headline_summary(name: &str, h: &Headline, paper_overhead: f64, paper_speedup: f64) -> Table {
+    let mut t = Table::new(vec!["metric", "paper", "measured"]);
+    t.push_row(vec![
+        format!("{name} max expansion overhead (parallel Merge vs Merge)"),
+        format!("{paper_overhead:.2}x"),
+        format!("{:.2}x", h.max_expand_overhead),
+    ]);
+    t.push_row(vec![
+        format!("{name} min shrink speedup (TS vs spawn-based)"),
+        format!(">={paper_speedup:.0}x"),
+        format!("{:.0}x", h.min_shrink_speedup),
+    ]);
+    t.push_row(vec![
+        format!("{name} Merge best in expansion cells"),
+        "~80.9% (MN5) / most (NASP)".to_string(),
+        format!("{:.1}%", h.merge_win_fraction * 100.0),
+    ]);
+    t
+}
+
+/// Table 2 of the paper: the diffusive step trace for the worked example.
+pub fn table2() -> Table {
+    use crate::mam::plan::{diffusive_trace, Plan};
+    let plan = Plan::new(
+        0,
+        Method::Merge,
+        SpawnStrategy::ParallelDiffusive,
+        (0..10).collect(),
+        vec![4, 2, 8, 12, 3, 3, 4, 4, 6, 3],
+        vec![2, 0, 0, 0, 0, 0, 0, 0, 0, 0],
+    );
+    let mut t = Table::new(vec!["s", "t_s", "g_s", "lambda_s", "T_s", "G_s"]);
+    for row in diffusive_trace(&plan) {
+        t.push_row(vec![
+            row.s.to_string(),
+            row.t.to_string(),
+            if row.s == 0 { "-".into() } else { row.g.to_string() },
+            row.lambda.to_string(),
+            row.tt.to_string(),
+            if row.s == 0 { "-".into() } else { row.gg.to_string() },
+        ]);
+    }
+    t
+}
+
+/// Human-readable one-cell report (used by `paraspawn run`).
+pub fn describe_report(r: &super::ReconfigReport) -> String {
+    let mut s = format!(
+        "{} -> {} procs [{}]: {} total",
+        r.ns,
+        r.nt,
+        r.strategy_label,
+        fmt_time(r.total_time)
+    );
+    for (phase, d) in &r.phases {
+        s.push_str(&format!("\n  {:<10} {}", phase.name(), fmt_time(*d)));
+    }
+    if r.nodes_returned > 0 {
+        s.push_str(&format!("\n  nodes returned to RMS: {}", r.nodes_returned));
+    }
+    if r.zombies > 0 {
+        s.push_str(&format!("\n  zombies created: {}", r.zombies));
+    }
+    s
+}

@@ -1,0 +1,187 @@
+//! The coordinator: wires the RMS, the MaM library and the application
+//! driver into single-reconfiguration experiments (the unit of the
+//! paper's evaluation), repeated sampling for the statistical analysis,
+//! and the figure-regeneration harness.
+
+pub mod figures;
+pub mod select;
+
+use crate::app::{self, AppSpec, ResizeEvent};
+use crate::config::{CostModel, SimConfig};
+use crate::mam::{Method, SpawnStrategy};
+use crate::metrics::Phase;
+use crate::rms::{AllocPolicy, Rms};
+use crate::topology::Cluster;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// One reconfiguration experiment: resize a job from `initial_nodes` to
+/// `target_nodes` with the given method/strategy, after a short
+/// Monte-Carlo warm-up (the paper's 5 iterations).
+#[derive(Clone)]
+pub struct Scenario {
+    pub cluster: Cluster,
+    pub cost: CostModel,
+    pub policy: AllocPolicy,
+    pub initial_nodes: usize,
+    pub target_nodes: usize,
+    pub method: Method,
+    pub strategy: SpawnStrategy,
+    pub seed: u64,
+    /// Warm-up iterations before the reconfiguration (paper: 5).
+    pub warmup_iters: usize,
+    /// Application payload to redistribute (0 = process management only,
+    /// matching the paper's resize-time measurements).
+    pub data_bytes: u64,
+    /// Prepare the job state with a parallel expansion from one node
+    /// before the measured reconfiguration. Shrink experiments need this:
+    /// a job that never expanded has a single multi-node MCW and cannot
+    /// TS (§4.6); the paper's TS shrinks rely on the parallel spawning of
+    /// previous resizes.
+    pub prepare_parallel: bool,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            cluster: Cluster::mini(4, 4),
+            cost: CostModel::mn5(),
+            policy: AllocPolicy::WholeNodes,
+            initial_nodes: 1,
+            target_nodes: 2,
+            method: Method::Merge,
+            strategy: SpawnStrategy::ParallelHypercube,
+            seed: 1,
+            warmup_iters: 5,
+            data_bytes: 0,
+            prepare_parallel: false,
+        }
+    }
+}
+
+impl Scenario {
+    /// MN5-style homogeneous scenario.
+    pub fn mn5(initial_nodes: usize, target_nodes: usize) -> Scenario {
+        Scenario {
+            cluster: Cluster::mn5(),
+            cost: CostModel::mn5(),
+            initial_nodes,
+            target_nodes,
+            ..Default::default()
+        }
+    }
+
+    /// NASP-style heterogeneous scenario (balanced node types).
+    pub fn nasp(initial_nodes: usize, target_nodes: usize) -> Scenario {
+        Scenario {
+            cluster: Cluster::nasp(),
+            cost: CostModel::nasp(),
+            policy: AllocPolicy::BalancedTypes,
+            strategy: SpawnStrategy::ParallelDiffusive,
+            initial_nodes,
+            target_nodes,
+            ..Default::default()
+        }
+    }
+
+    pub fn with(mut self, method: Method, strategy: SpawnStrategy) -> Scenario {
+        self.method = method;
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn seeded(mut self, seed: u64) -> Scenario {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Result of one reconfiguration experiment.
+#[derive(Clone, Debug)]
+pub struct ReconfigReport {
+    /// Virtual reconfiguration time (the paper's resize time).
+    pub total_time: f64,
+    /// Per-phase breakdown (spawn / sync / connect / reorder / ...).
+    pub phases: Vec<(Phase, f64)>,
+    pub ns: usize,
+    pub nt: usize,
+    /// Label recorded by the driver (`"shrink-ts"`, method names, ...).
+    pub strategy_label: String,
+    /// Nodes returned to the RMS during the reconfiguration.
+    pub nodes_returned: usize,
+    /// Zombie processes created (ZS fallback paths).
+    pub zombies: u64,
+}
+
+/// Run a single reconfiguration experiment and report the resize time.
+pub fn run_reconfiguration(s: &Scenario) -> Result<ReconfigReport> {
+    let mut rms = Rms::new(s.cluster.clone());
+    let prepare = s.prepare_parallel && s.initial_nodes > 1;
+    let launch_nodes = if prepare { 1 } else { s.initial_nodes };
+    let launch = rms
+        .plan_allocation(launch_nodes, s.policy)
+        .context("launch allocation")?;
+    rms.claim(&launch).context("claim launch")?;
+
+    let mut trace = Vec::new();
+    let initial = if prepare {
+        // Parallel expansion 1 -> I nodes to establish per-node MCWs.
+        let prep_strategy = if s.cluster.is_core_homogeneous() {
+            SpawnStrategy::ParallelHypercube
+        } else {
+            SpawnStrategy::ParallelDiffusive
+        };
+        let grown = rms.grow(&launch, s.initial_nodes, s.policy).context("prepare allocation")?;
+        trace.push(ResizeEvent::new(grown.clone(), Method::Merge, prep_strategy));
+        grown
+    } else {
+        launch.clone()
+    };
+    let target = if s.target_nodes >= s.initial_nodes {
+        rms.grow(&initial, s.target_nodes, s.policy).context("target allocation")?
+    } else {
+        rms.shrink(&initial, s.target_nodes)
+    };
+    trace.push(ResizeEvent::new(target, s.method, s.strategy));
+    let expected_records = trace.len();
+
+    let world = crate::simmpi::World::new(
+        s.cluster.clone(),
+        SimConfig { cost: s.cost.clone(), ..Default::default() }.seeded(s.seed),
+    );
+    let spec = Arc::new(AppSpec {
+        iters_per_epoch: s.warmup_iters,
+        work_per_iter: 50.0,
+        points_per_iter: 0, // figures measure process management only
+        trace,
+        data_bytes: s.data_bytes,
+        ..Default::default()
+    });
+    app::run_malleable(&world, &launch, spec)?;
+
+    let recs = world.metrics.reconfigs();
+    let rec = recs.last().context("no reconfiguration was recorded")?;
+    if recs.len() != expected_records {
+        bail!("expected {expected_records} reconfiguration records, got {}", recs.len());
+    }
+    Ok(ReconfigReport {
+        total_time: rec.total(),
+        phases: rec.phases.clone(),
+        ns: rec.ns,
+        nt: rec.nt,
+        strategy_label: rec.strategy.clone(),
+        nodes_returned: world.metrics.node_returns().len(),
+        zombies: world.metrics.zombies_created(),
+    })
+}
+
+/// Run `reps` independent repetitions (different seeds) and return the
+/// resize times — the sampling behind the paper's 20-repetition medians.
+pub fn run_samples(s: &Scenario, reps: usize) -> Result<Vec<f64>> {
+    let mut out = Vec::with_capacity(reps);
+    for rep in 0..reps {
+        let scenario = s.clone().seeded(s.seed.wrapping_add(rep as u64 * 7919));
+        out.push(run_reconfiguration(&scenario)?.total_time);
+    }
+    Ok(out)
+}

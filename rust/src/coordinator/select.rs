@@ -1,0 +1,205 @@
+//! MaM-style configuration selection: score candidate (method, strategy)
+//! pairs with the batched L2 cost model and pick the cheapest for the
+//! job's expected future (MaM "allows the selection of the optimal
+//! solution depending on the context", §1/§3 of the paper).
+//!
+//! The cost model is a linear feature model evaluated either by the
+//! AOT-compiled JAX/Pallas kernel (one PJRT call scores all candidates)
+//! or by a bit-identical host fallback when artifacts are absent.
+
+use crate::config::CostModel;
+use crate::mam::connect::connection_rounds;
+use crate::mam::plan::{plan_steps, Plan};
+use crate::mam::{Method, SpawnStrategy};
+use crate::runtime::CostModelKernel;
+
+/// Number of features per candidate (must match `python/compile`'s
+/// `cost_f`).
+pub const N_FEATURES: usize = 8;
+
+/// A candidate configuration for an upcoming reconfiguration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Candidate {
+    pub method: Method,
+    pub strategy: SpawnStrategy,
+}
+
+/// Context for scoring: the plan geometry plus how many shrinks the job
+/// expects before it ends (the term that makes parallel strategies pay
+/// off despite their expansion overhead).
+#[derive(Clone, Copy, Debug)]
+pub struct SelectContext {
+    /// Expected future shrink operations.
+    pub expected_shrinks: f64,
+}
+
+/// Feature vector of one candidate for a given plan geometry.
+///
+/// Features (aligned with `coeffs`):
+/// 0. sequential spawn calls on the critical path
+/// 1. max processes forked on one node in one call
+/// 2. `ceil(log2(total spawned))` (child MPI_Init)
+/// 3. `ceil(log2(nodes-in-one-call + 1))` (RTE rollout)
+/// 4. connection rounds (binary connection + final source connect)
+/// 5. synchronization steps (token depth)
+/// 6. initiator-RTE contention (concurrent calls from one node)
+/// 7. expected future shrink cost class (1 = spawn-based, 0 = TS)
+pub fn features(plan: &Plan, ctx: &SelectContext) -> [f32; N_FEATURES] {
+    let groups = plan.groups();
+    let gcount = groups.len().max(1);
+    let total_spawned = plan.spawn_total().max(1);
+    let max_per_node = plan.s.iter().copied().max().unwrap_or(0);
+    let (calls_critical, nodes_per_call, rounds, sync_depth, contention) = match plan.strategy {
+        SpawnStrategy::Plain | SpawnStrategy::Single => (1.0, gcount as f64, 1.0, 0.0, 1.0),
+        SpawnStrategy::NodeByNode => {
+            (gcount as f64, 1.0, (connection_rounds(gcount) + 1) as f64, 1.0, gcount as f64)
+        }
+        SpawnStrategy::ParallelHypercube | SpawnStrategy::ParallelDiffusive => {
+            let steps = plan_steps(plan).max(1) as f64;
+            // Step-1 concurrent calls all originate on the initial nodes.
+            let step1 = plan.ns().min(gcount) as f64;
+            (steps, 1.0, (connection_rounds(gcount) + 1) as f64, steps, step1)
+        }
+    };
+    let future_shrink = if plan.strategy.enables_ts() { 0.0 } else { ctx.expected_shrinks };
+    [
+        calls_critical as f32,
+        max_per_node as f32,
+        (total_spawned as f64).log2().ceil() as f32,
+        (nodes_per_call + 1.0).log2().ceil() as f32,
+        rounds as f32,
+        sync_depth as f32,
+        contention as f32,
+        future_shrink as f32,
+    ]
+}
+
+/// Coefficients derived from the calibrated cost model (must match the
+/// ordering in [`features`]).
+pub fn coefficients(cost: &CostModel) -> [f32; N_FEATURES] {
+    [
+        cost.c_spawn_call as f32,
+        cost.c_fork_proc as f32,
+        cost.c_init_sync as f32,
+        cost.c_node_tree as f32,
+        (cost.c_lookup + cost.c_connect) as f32,
+        (cost.c_open_port + cost.c_publish) as f32,
+        cost.c_rte_service as f32,
+        // A future spawn-based shrink costs roughly one spawn call.
+        cost.c_spawn_call as f32,
+    ]
+}
+
+/// Host fallback: dot products (bit-compatible with the kernel).
+pub fn host_scores(feature_rows: &[f32], rows: usize, coeffs: &[f32]) -> Vec<f32> {
+    (0..rows)
+        .map(|r| {
+            feature_rows[r * N_FEATURES..(r + 1) * N_FEATURES]
+                .iter()
+                .zip(coeffs)
+                .map(|(a, b)| a * b)
+                .sum()
+        })
+        .collect()
+}
+
+/// Score all candidates and return `(best_index, scores)`. Uses the PJRT
+/// kernel when provided, the host fallback otherwise.
+pub fn select(
+    candidates: &[Candidate],
+    mk_plan: impl Fn(&Candidate) -> Plan,
+    cost: &CostModel,
+    ctx: &SelectContext,
+    kernel: Option<&CostModelKernel>,
+) -> (usize, Vec<f32>) {
+    assert!(!candidates.is_empty());
+    let coeffs = coefficients(cost);
+    let mut rows = Vec::with_capacity(candidates.len() * N_FEATURES);
+    for c in candidates {
+        rows.extend_from_slice(&features(&mk_plan(c), ctx));
+    }
+    let scores = match kernel {
+        Some(k) => k
+            .scores(&rows, candidates.len(), &coeffs)
+            .expect("cost-model kernel execution failed"),
+        None => host_scores(&rows, candidates.len(), &coeffs),
+    };
+    let best = scores
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    (best, scores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_plan(c: &Candidate) -> Plan {
+        // 1 -> 8 node expansion on a 4-core homogeneous cluster.
+        let n = 8usize;
+        let mut r = vec![0u32; n];
+        r[0] = 4;
+        Plan::new(0, c.method, c.strategy, (0..n).collect(), vec![4; n], r)
+    }
+
+    fn candidates() -> Vec<Candidate> {
+        vec![
+            Candidate { method: Method::Merge, strategy: SpawnStrategy::Plain },
+            Candidate { method: Method::Merge, strategy: SpawnStrategy::NodeByNode },
+            Candidate { method: Method::Merge, strategy: SpawnStrategy::ParallelHypercube },
+        ]
+    }
+
+    #[test]
+    fn no_future_shrinks_prefers_plain_merge() {
+        let cost = CostModel::mn5();
+        let (best, _) = select(
+            &candidates(),
+            mk_plan,
+            &cost,
+            &SelectContext { expected_shrinks: 0.0 },
+            None,
+        );
+        assert_eq!(candidates()[best].strategy, SpawnStrategy::Plain);
+    }
+
+    #[test]
+    fn many_future_shrinks_prefer_parallel() {
+        let cost = CostModel::mn5();
+        let (best, scores) = select(
+            &candidates(),
+            mk_plan,
+            &cost,
+            &SelectContext { expected_shrinks: 10.0 },
+            None,
+        );
+        assert_eq!(
+            candidates()[best].strategy,
+            SpawnStrategy::ParallelHypercube,
+            "scores: {scores:?}"
+        );
+    }
+
+    #[test]
+    fn nodebynode_never_beats_hypercube_here() {
+        let cost = CostModel::mn5();
+        for shrinks in [0.0, 1.0, 10.0] {
+            let (_, scores) =
+                select(&candidates(), mk_plan, &cost, &SelectContext { expected_shrinks: shrinks }, None);
+            assert!(scores[2] < scores[1], "hypercube {} vs nodebynode {}", scores[2], scores[1]);
+        }
+    }
+
+    #[test]
+    fn host_scores_match_manual_dot() {
+        let rows = [1.0f32, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let mut coeffs = [0.0f32; N_FEATURES];
+        coeffs[0] = 0.5;
+        coeffs[1] = 0.25;
+        let s = host_scores(&rows, 1, &coeffs);
+        assert_eq!(s, vec![1.0]);
+    }
+}

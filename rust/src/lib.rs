@@ -1,0 +1,71 @@
+//! # paraspawn
+//!
+//! A production-shaped reproduction of **"Parallel Spawning Strategies for
+//! Dynamic-Aware MPI Applications"** (Martín-Álvarez, Aliaga, Castillo;
+//! CS.DC 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper contributes a *coordination* algorithm: a parallel
+//! `MPI_Comm_spawn` scheme for malleable MPI jobs that isolates every
+//! `MPI_COMM_WORLD` on a single node, so that shrink operations can
+//! *terminate* processes (TS) and return whole nodes to the resource
+//! manager, instead of leaving zombies (ZS) or respawning the job (SS).
+//!
+//! ## Layers
+//!
+//! * **L3 (this crate)** — the whole malleability stack on top of a
+//!   virtual-time simulated MPI substrate ([`simmpi`]): the MaM-style
+//!   malleability library ([`mam`]) with the paper's Hypercube (§4.1) and
+//!   Iterative Diffusive (§4.2) parallel spawning strategies, group
+//!   synchronization (§4.3), binary connection (§4.4), rank reordering
+//!   (§4.5) and TS/ZS/SS shrinkage (§4.7); a resource-manager simulator
+//!   ([`rms`]); data redistribution ([`redistrib`]); a Proteo-like
+//!   application driver ([`app`]); and the coordinator ([`coordinator`]).
+//! * **L2/L1 (build-time Python)** — the application compute (Monte-Carlo
+//!   π, a tiled-matmul workload) and a batched strategy-cost model,
+//!   written in JAX + Pallas, AOT-lowered to HLO text and executed from
+//!   Rust through the PJRT CPU client ([`runtime`]). Python never runs on
+//!   the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use paraspawn::prelude::*;
+//!
+//! let scenario = Scenario {
+//!     cluster: Cluster::mn5(),
+//!     cost: CostModel::mn5(),
+//!     initial_nodes: 1,
+//!     target_nodes: 4,
+//!     method: Method::Merge,
+//!     strategy: SpawnStrategy::ParallelHypercube,
+//!     ..Scenario::default()
+//! };
+//! let report = paraspawn::coordinator::run_reconfiguration(&scenario).unwrap();
+//! println!("reconfiguration took {:.3} ms (virtual)", report.total_time * 1e3);
+//! ```
+
+pub mod app;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod mam;
+pub mod metrics;
+pub mod redistrib;
+pub mod rms;
+pub mod runtime;
+pub mod simmpi;
+pub mod testing;
+pub mod topology;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{CostModel, SimConfig};
+    pub use crate::coordinator::{run_reconfiguration, ReconfigReport, Scenario};
+    pub use crate::mam::{Method, ShrinkKind, SpawnStrategy};
+    pub use crate::metrics::{Metrics, Phase};
+    pub use crate::rms::Allocation;
+    pub use crate::simmpi::{Comm, Ctx, World};
+    pub use crate::topology::{Cluster, LinkKind, NodeId};
+}

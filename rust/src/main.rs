@@ -1,0 +1,5 @@
+//! `paraspawn` binary: see `paraspawn help`.
+
+fn main() -> anyhow::Result<()> {
+    paraspawn::cli::main()
+}

@@ -1,0 +1,235 @@
+//! §4.4 — binary connection of spawned groups (Listing 2).
+//!
+//! Groups pair up over successive rounds: with `groups` active, groups
+//! with `group_id < groups/2` accept, groups with
+//! `group_id >= groups - groups/2` connect to the mirrored id
+//! (`groups - group_id - 1`), and with an odd count the middle group sits
+//! the round out. Each pair merges (acceptor low), adopting the
+//! acceptor's id. After `ceil(log2 groups)` rounds one communicator holds
+//! every spawned process.
+//!
+//! Connection order is deliberately *not* enforced: accepts pair with
+//! whichever connect reaches the port first (the paper §4.5 notes the
+//! procedure is "susceptible to race conditions"), which is why rank
+//! reordering runs afterwards. Membership is nevertheless complete: every
+//! group executes a deterministic accept/connect count for its ids, so
+//! the pairing tally always balances.
+
+use super::conn_service;
+use crate::simmpi::{Comm, Ctx};
+
+/// Run the binary connection for this rank's group.
+///
+/// * `total_groups` — number of spawned groups in this epoch.
+/// * `my_gid` — this group's identifier.
+/// * `my_port` — the port this rank opened, if it is a group root with
+///   `gid < total_groups / 2` (the acceptor set of round one).
+/// * `mcw` — the group's own world communicator.
+///
+/// Returns the merged intra-communicator containing all spawned
+/// processes (in race-dependent order; see [`super::driver`] for the
+/// Eq. 9 reordering).
+pub fn binary_connection(
+    ctx: &Ctx,
+    total_groups: usize,
+    my_gid: usize,
+    my_port: Option<&str>,
+    mcw: &Comm,
+    epoch: u64,
+) -> Comm {
+    let mut groups = total_groups;
+    let mut gid = my_gid;
+    let mut merge_comm = mcw.clone();
+    let mut round: u64 = 0;
+
+    while groups > 1 {
+        let middle = groups / 2;
+        let new_groups = groups - middle;
+
+        if gid < middle {
+            // Acceptor: rank 0 of the (possibly already merged) group is
+            // always the original acceptor root, which owns the port.
+            let port = if merge_comm.rank() == 0 {
+                my_port.expect("acceptor root must have opened a port").to_string()
+            } else {
+                String::new()
+            };
+            let inter = ctx.accept_round(&port, &merge_comm, 0, round);
+            let merged = ctx.intercomm_merge(&inter, false);
+            ctx.disconnect(inter);
+            merge_comm = merged;
+        } else if gid >= new_groups {
+            let target = groups - gid - 1;
+            let port = if merge_comm.rank() == 0 {
+                ctx.lookup_name(&conn_service(epoch, target))
+            } else {
+                String::new()
+            };
+            let inter = ctx.connect_round(&port, &merge_comm, 0, round);
+            let merged = ctx.intercomm_merge(&inter, true);
+            ctx.disconnect(inter);
+            merge_comm = merged;
+            gid = target;
+        }
+        // Odd count: gid in [middle, new_groups) idles this round (its
+        // round counter still ticks, keeping pairing rounds global).
+
+        groups = new_groups;
+        round += 1;
+    }
+    merge_comm
+}
+
+/// Number of accept/connect rounds the binary connection needs for `g`
+/// groups (used by the cost analysis and tests).
+pub fn connection_rounds(g: usize) -> usize {
+    let mut groups = g;
+    let mut rounds = 0;
+    while groups > 1 {
+        groups -= groups / 2;
+        rounds += 1;
+    }
+    rounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::connection_rounds;
+
+    #[test]
+    fn rounds_match_figure3() {
+        // Figure 3: seven groups connect in three steps.
+        assert_eq!(connection_rounds(7), 3);
+    }
+
+    #[test]
+    fn rounds_are_ceil_log2() {
+        assert_eq!(connection_rounds(1), 0);
+        assert_eq!(connection_rounds(2), 1);
+        assert_eq!(connection_rounds(3), 2);
+        assert_eq!(connection_rounds(4), 2);
+        assert_eq!(connection_rounds(8), 3);
+        assert_eq!(connection_rounds(9), 4);
+        assert_eq!(connection_rounds(31), 5);
+        assert_eq!(connection_rounds(32), 5);
+    }
+
+    #[test]
+    fn pairing_is_a_bijection_every_round() {
+        for g in 2..64usize {
+            let mut groups = g;
+            while groups > 1 {
+                let middle = groups / 2;
+                let new_groups = groups - middle;
+                // Acceptors 0..middle; connectors new_groups..groups map to
+                // groups-1-gid, covering exactly the acceptor set.
+                let targets: Vec<usize> =
+                    (new_groups..groups).map(|gid| groups - gid - 1).collect();
+                let mut sorted = targets.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..middle).collect::<Vec<_>>(), "g={g} round");
+                groups = new_groups;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod protocol_tests {
+    use super::*;
+    use crate::config::{CostModel, SimConfig};
+    use crate::mam::conn_service;
+    use crate::simmpi::{Comm, Ctx, World};
+    use crate::topology::Cluster;
+    use std::sync::{Arc, Mutex};
+
+    /// Drive a binary connection among `g` single-rank groups spawned by
+    /// one coordinator rank, and return the merged comm's pid order as
+    /// observed at merged rank 0.
+    fn run_binary_connection(g: usize) -> Vec<u64> {
+        let world = World::new(
+            Cluster::mini(1, (g + 1) as u32),
+            SimConfig {
+                cost: CostModel::mn5().deterministic(),
+                watchdog_secs: Some(30.0),
+                ..Default::default()
+            },
+        );
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let o2 = order.clone();
+        world.launch(
+            &[(0, 1)],
+            Arc::new(move |ctx: Ctx, _wc: Comm| {
+                let epoch = 42;
+                let mut children = Vec::new();
+                for gid in 0..g {
+                    let o3 = o2.clone();
+                    children.push(ctx.spawn_self(
+                        0,
+                        1,
+                        Arc::new(move |cctx: Ctx, mcw: Comm, parent: Comm| {
+                            let my_port = if gid < g / 2 {
+                                let p = cctx.open_port();
+                                cctx.publish_name(&conn_service(epoch, gid), &p);
+                                Some(p)
+                            } else {
+                                None
+                            };
+                            // Parent token handshake stands in for common_synch.
+                            cctx.send(&parent, 0, 1, crate::simmpi::Payload::Token);
+                            let _ = cctx.recv(&parent, 0, 2);
+                            let merged = binary_connection(
+                                &cctx,
+                                g,
+                                gid,
+                                my_port.as_deref(),
+                                &mcw,
+                                epoch,
+                            );
+                            assert_eq!(merged.size(), g, "all groups merged");
+                            if merged.rank() == 0 {
+                                *o3.lock().unwrap() = merged.local_pids().to_vec();
+                            }
+                        }),
+                    ));
+                }
+                // Release children only after every port is published.
+                for c in &children {
+                    let _ = ctx.recv(c, 0, 1);
+                }
+                for c in &children {
+                    ctx.send(c, 0, 2, crate::simmpi::Payload::Token);
+                }
+            }),
+        );
+        world.join_all().expect("binary connection deadlocked");
+        let v = order.lock().unwrap().clone();
+        v
+    }
+
+    #[test]
+    fn merges_all_groups_for_every_count() {
+        for g in 1..=9usize {
+            let pids = run_binary_connection(g);
+            if g == 1 {
+                // Single group: no connection happens; merged == mcw, and
+                // rank 0 recorded its own pid.
+                assert_eq!(pids.len(), 1, "g={g}");
+            } else {
+                assert_eq!(pids.len(), g, "g={g}: wrong merged size");
+            }
+            let mut sorted = pids.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), pids.len(), "g={g}: duplicate members");
+        }
+    }
+
+    #[test]
+    fn figure3_seven_groups_in_three_rounds() {
+        // Structural check mirrored by connection_rounds + a live run.
+        assert_eq!(connection_rounds(7), 3);
+        let pids = run_binary_connection(7);
+        assert_eq!(pids.len(), 7);
+    }
+}

@@ -1,0 +1,623 @@
+//! §4.6 — reconfiguration drivers: the overall tasks for *source* ranks
+//! (Listing 3) and newly *spawned* ranks (Listing 4), for every
+//! method x strategy combination.
+//!
+//! The expansion flow for the parallel strategies:
+//!
+//! 1. sources: root opens a port and publishes the epoch's source service;
+//! 2. every rank executes its spawn tasks from the static assignment
+//!    ([`super::plan`]), each task one `MPI_Comm_spawn` over self;
+//!    spawned groups recursively do the same;
+//! 3. all groups synchronize (§4.3, [`super::sync`]);
+//! 4. spawned groups run the binary connection (§4.4,
+//!    [`super::connect`]) and reorder ranks (§4.5, Eq. 9, via
+//!    `MPI_Comm_split`);
+//! 5. the merged spawned group connects to the sources' port; Merge then
+//!    merges both sides (sources low), Baseline pushes the data to the
+//!    targets and the sources terminate.
+
+use super::connect::binary_connection;
+use super::plan::Plan;
+use super::sync::common_synch;
+use super::{conn_service, src_service, JobCtx, Method, Outcome, SpawnStrategy};
+use crate::metrics::{Phase, ReconfigRecord};
+use crate::redistrib;
+use crate::simmpi::{Comm, Ctx, ProcId, ProcMain};
+use crate::topology::NodeId;
+use std::sync::Arc;
+
+/// Continuation run by ranks that keep executing after a reconfiguration
+/// (the application's main loop).
+pub type AppCont = Arc<dyn Fn(Ctx, JobCtx) + Send + Sync + 'static>;
+
+/// Everything a reconfiguration needs beyond the per-rank state.
+#[derive(Clone)]
+pub struct ReconfigSpec {
+    pub plan: Arc<Plan>,
+    /// Virtual time at which the reconfiguration started (checkpoint hit).
+    pub t_start: f64,
+    /// Total bytes of application data to redistribute (0 = skip stage 3).
+    pub data_bytes: u64,
+    /// Application continuation for surviving/new ranks.
+    pub cont: AppCont,
+    /// Zombies inherited from earlier ZS shrinks.
+    pub zombie_pids: Vec<ProcId>,
+}
+
+/// Phase stopwatch against a rank's own logical clock.
+struct PhaseClock {
+    last: f64,
+    phases: Vec<(Phase, f64)>,
+}
+
+impl PhaseClock {
+    fn start(ctx: &Ctx) -> Self {
+        PhaseClock { last: ctx.clock(), phases: Vec::new() }
+    }
+    fn lap(&mut self, ctx: &Ctx, phase: Phase) {
+        let now = ctx.clock();
+        self.phases.push((phase, now - self.last));
+        self.last = now;
+    }
+}
+
+fn record(
+    ctx: &Ctx,
+    spec: &ReconfigSpec,
+    pc: PhaseClock,
+) {
+    ctx.world().metrics.record_reconfig(ReconfigRecord {
+        epoch: spec.plan.epoch,
+        method: spec.plan.method.name().to_string(),
+        strategy: spec.plan.strategy.name().to_string(),
+        ns: spec.plan.ns(),
+        nt: spec.plan.nt(),
+        t_start: spec.t_start,
+        t_end: ctx.clock(),
+        phases: pc.phases,
+    });
+}
+
+/// Record the final rank->node layout of the new app communicator (the
+/// §4.5 reordering invariant); called by rank 0 alongside [`record`].
+fn record_layout(ctx: &Ctx, epoch: u64, app: &Comm) {
+    let world = ctx.world();
+    let nodes: Vec<NodeId> = app.local_pids().iter().map(|&p| world.node_of(p)).collect();
+    world.metrics.record_layout(epoch, nodes);
+}
+
+fn new_jobctx(spec: &ReconfigSpec, app: Comm, mcw: Comm) -> JobCtx {
+    JobCtx {
+        app,
+        mcw,
+        epoch: spec.plan.epoch + 1,
+        zombie_pids: spec.zombie_pids.clone(),
+    }
+}
+
+/// Expansion (and Baseline spawn-shrink) entry point, called collectively
+/// by all ranks of `job.app`.
+pub fn expand(ctx: &Ctx, job: &JobCtx, spec: &ReconfigSpec) -> Outcome {
+    match spec.plan.strategy {
+        SpawnStrategy::Plain => expand_collective(ctx, job, spec),
+        SpawnStrategy::Single => expand_single(ctx, job, spec),
+        SpawnStrategy::NodeByNode
+        | SpawnStrategy::ParallelHypercube
+        | SpawnStrategy::ParallelDiffusive => expand_parallel(ctx, job, spec),
+    }
+}
+
+/// Nodes the plan drops entirely (`A_i == 0`): the plan's node list spans
+/// the union of source and target nodes, so these are exactly the nodes a
+/// Baseline shrink returns to the RMS.
+fn released_nodes(plan: &Plan) -> Vec<NodeId> {
+    plan.nodes
+        .iter()
+        .zip(&plan.a)
+        .filter(|&(_, &a)| a == 0)
+        .map(|(&n, _)| n)
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Plain strategy: one collective MPI_Comm_spawn (classic Merge/Baseline).
+// ---------------------------------------------------------------------------
+
+fn expand_collective(ctx: &Ctx, job: &JobCtx, spec: &ReconfigSpec) -> Outcome {
+    let plan = &spec.plan;
+    let mut pc = PhaseClock::start(ctx);
+    let placements: Vec<(NodeId, usize)> = plan
+        .s
+        .iter()
+        .enumerate()
+        .filter(|&(_, &s)| s > 0)
+        .map(|(i, &s)| (plan.nodes[i], s as usize))
+        .collect();
+    assert!(!placements.is_empty(), "expand with nothing to spawn");
+    let entry = plain_child_entry(Arc::new(spec.clone()));
+    let inter = ctx.spawn_multi(&job.app, 0, &placements, entry);
+    pc.lap(ctx, Phase::Spawn);
+
+    match plan.method {
+        Method::Merge => {
+            let new_app = ctx.intercomm_merge(&inter, false);
+            ctx.disconnect(inter);
+            pc.lap(ctx, Phase::Connect);
+            if spec.data_bytes > 0 {
+                redistrib::execute_intracomm(ctx, &new_app, plan.ns(), plan.nt(), spec.data_bytes);
+                pc.lap(ctx, Phase::Redistrib);
+            }
+            if new_app.rank() == 0 {
+                record(ctx, spec, pc);
+                record_layout(ctx, plan.epoch, &new_app);
+            }
+            Outcome::Continue(new_jobctx(spec, new_app, job.mcw.clone()))
+        }
+        Method::Baseline => {
+            if spec.data_bytes > 0 {
+                redistrib::execute_intercomm(
+                    ctx,
+                    &inter,
+                    true,
+                    plan.ns(),
+                    plan.nt(),
+                    spec.data_bytes,
+                );
+            }
+            if job.app.rank() == 0 {
+                for node in released_nodes(plan) {
+                    ctx.world().metrics.record_node_return(node, ctx.clock());
+                }
+            }
+            ctx.disconnect(inter);
+            ctx.finalize_exit();
+            Outcome::Exit
+        }
+    }
+}
+
+fn plain_child_entry(spec: Arc<ReconfigSpec>) -> ProcMain {
+    Arc::new(move |ctx: Ctx, mcw: Comm, parent: Comm| {
+        let plan = &spec.plan;
+        let mut pc = PhaseClock::start(&ctx);
+        pc.phases.push((Phase::Spawn, ctx.clock() - spec.t_start));
+        match plan.method {
+            Method::Merge => {
+                let app = ctx.intercomm_merge(&parent, true);
+                ctx.disconnect(parent);
+                let job = new_jobctx(&spec, app, mcw);
+                (spec.cont)(ctx, job);
+            }
+            Method::Baseline => {
+                if spec.data_bytes > 0 {
+                    redistrib::execute_intercomm(
+                        &ctx,
+                        &parent,
+                        false,
+                        plan.ns(),
+                        plan.nt(),
+                        spec.data_bytes,
+                    );
+                    pc.lap(&ctx, Phase::Redistrib);
+                }
+                ctx.disconnect(parent);
+                if mcw.rank() == 0 {
+                    record(&ctx, &spec, pc);
+                    record_layout(&ctx, plan.epoch, &mcw);
+                }
+                let job = new_jobctx(&spec, mcw.clone(), mcw);
+                (spec.cont)(ctx, job);
+            }
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Single strategy: root alone spawns, then informs the rest; groups join
+// through a port.
+// ---------------------------------------------------------------------------
+
+fn expand_single(ctx: &Ctx, job: &JobCtx, spec: &ReconfigSpec) -> Outcome {
+    let plan = &spec.plan;
+    let rank = job.app.rank();
+    let mut pc = PhaseClock::start(ctx);
+    let epoch = plan.epoch;
+
+    let my_port = if rank == 0 {
+        let p = ctx.open_port();
+        ctx.publish_name(&src_service(epoch), &p);
+        Some(p)
+    } else {
+        None
+    };
+
+    // Only the root spawns (over a self communicator built by split).
+    let selfc = ctx.comm_split(&job.app, Some(rank as i64), 0).unwrap();
+    if rank == 0 {
+        let placements: Vec<(NodeId, usize)> = plan
+            .s
+            .iter()
+            .enumerate()
+            .filter(|&(_, &s)| s > 0)
+            .map(|(i, &s)| (plan.nodes[i], s as usize))
+            .collect();
+        let entry = single_child_entry(Arc::new(spec.clone()));
+        let inter = ctx.spawn_multi(&selfc, 0, &placements, entry);
+        ctx.disconnect(inter);
+    }
+    pc.lap(ctx, Phase::Spawn);
+
+    // All sources accept the spawned group's connect.
+    let inter = ctx.accept(my_port.as_deref().unwrap_or(""), &job.app, 0);
+    match plan.method {
+        Method::Merge => {
+            let new_app = ctx.intercomm_merge(&inter, false);
+            ctx.disconnect(inter);
+            pc.lap(ctx, Phase::Connect);
+            if spec.data_bytes > 0 {
+                redistrib::execute_intracomm(ctx, &new_app, plan.ns(), plan.nt(), spec.data_bytes);
+                pc.lap(ctx, Phase::Redistrib);
+            }
+            if new_app.rank() == 0 {
+                record(ctx, spec, pc);
+                record_layout(ctx, plan.epoch, &new_app);
+            }
+            Outcome::Continue(new_jobctx(spec, new_app, job.mcw.clone()))
+        }
+        Method::Baseline => {
+            if spec.data_bytes > 0 {
+                redistrib::execute_intercomm(
+                    ctx,
+                    &inter,
+                    true,
+                    plan.ns(),
+                    plan.nt(),
+                    spec.data_bytes,
+                );
+            }
+            if rank == 0 {
+                for node in released_nodes(plan) {
+                    ctx.world().metrics.record_node_return(node, ctx.clock());
+                }
+            }
+            ctx.disconnect(inter);
+            ctx.finalize_exit();
+            Outcome::Exit
+        }
+    }
+}
+
+fn single_child_entry(spec: Arc<ReconfigSpec>) -> ProcMain {
+    Arc::new(move |ctx: Ctx, mcw: Comm, parent: Comm| {
+        let plan = &spec.plan;
+        let mut pc = PhaseClock::start(&ctx);
+        pc.phases.push((Phase::Spawn, ctx.clock() - spec.t_start));
+        ctx.disconnect(parent);
+        let port = if mcw.rank() == 0 {
+            ctx.lookup_name(&src_service(plan.epoch))
+        } else {
+            String::new()
+        };
+        let inter = ctx.connect(&port, &mcw, 0);
+        match plan.method {
+            Method::Merge => {
+                let app = ctx.intercomm_merge(&inter, true);
+                ctx.disconnect(inter);
+                let job = new_jobctx(&spec, app, mcw);
+                (spec.cont)(ctx, job);
+            }
+            Method::Baseline => {
+                if spec.data_bytes > 0 {
+                    redistrib::execute_intercomm(
+                        &ctx,
+                        &inter,
+                        false,
+                        plan.ns(),
+                        plan.nt(),
+                        spec.data_bytes,
+                    );
+                    pc.lap(&ctx, Phase::Redistrib);
+                }
+                ctx.disconnect(inter);
+                if mcw.rank() == 0 {
+                    record(&ctx, &spec, pc);
+                    record_layout(&ctx, plan.epoch, &mcw);
+                }
+                let job = new_jobctx(&spec, mcw.clone(), mcw);
+                (spec.cont)(ctx, job);
+            }
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Parallel strategies (+ NodeByNode): Listings 3 & 4.
+// ---------------------------------------------------------------------------
+
+/// Execute this rank's spawn tasks (one `MPI_Comm_spawn` over self per
+/// task, in step order), returning the child inter-communicators.
+fn run_spawn_tasks(ctx: &Ctx, plan: &Arc<Plan>, slot: usize, spec: &Arc<ReconfigSpec>) -> Vec<Comm> {
+    let asg = plan.assignments();
+    let mut children = Vec::new();
+    if let Some(tasks) = asg.get(&slot) {
+        let mut tasks = tasks.clone();
+        tasks.sort_by_key(|t| t.step);
+        for task in tasks {
+            let entry = parallel_child_entry(spec.clone(), task.group.gid);
+            let node = plan.nodes[task.group.node_idx];
+            children.push(ctx.spawn_self(node, task.group.size as usize, entry));
+        }
+    }
+    children
+}
+
+fn expand_parallel(ctx: &Ctx, job: &JobCtx, spec: &ReconfigSpec) -> Outcome {
+    let plan = &spec.plan;
+    let rank = job.app.rank();
+    let epoch = plan.epoch;
+    let gcount = plan.groups().len();
+    assert!(gcount > 0, "parallel expand with nothing to spawn");
+    let mut pc = PhaseClock::start(ctx);
+    let spec_arc = Arc::new(spec.clone());
+
+    // 1. Open the sources' port (root only).
+    let my_port = if rank == 0 {
+        let p = ctx.open_port();
+        ctx.publish_name(&src_service(epoch), &p);
+        Some(p)
+    } else {
+        None
+    };
+
+    // 2. Strategy spawn: this rank's slot is its app rank.
+    let children = run_spawn_tasks(ctx, plan, rank, &spec_arc);
+    pc.lap(ctx, Phase::Spawn);
+
+    // 3. §4.3 synchronization.
+    common_synch(ctx, &job.app, None, &children);
+    for c in children {
+        ctx.disconnect(c);
+    }
+    pc.lap(ctx, Phase::Sync);
+
+    // 4. Accept the merged spawned group.
+    let inter = ctx.accept(my_port.as_deref().unwrap_or(""), &job.app, 0);
+
+    match plan.method {
+        Method::Merge => {
+            let new_app = ctx.intercomm_merge(&inter, false);
+            ctx.disconnect(inter);
+            pc.lap(ctx, Phase::Connect);
+            if spec.data_bytes > 0 {
+                redistrib::execute_intracomm(ctx, &new_app, plan.ns(), plan.nt(), spec.data_bytes);
+                pc.lap(ctx, Phase::Redistrib);
+            }
+            if new_app.rank() == 0 {
+                record(ctx, spec, pc);
+                record_layout(ctx, plan.epoch, &new_app);
+            }
+            Outcome::Continue(new_jobctx(spec, new_app, job.mcw.clone()))
+        }
+        Method::Baseline => {
+            if spec.data_bytes > 0 {
+                redistrib::execute_intercomm(
+                    ctx,
+                    &inter,
+                    true,
+                    plan.ns(),
+                    plan.nt(),
+                    spec.data_bytes,
+                );
+            }
+            if rank == 0 {
+                for node in released_nodes(plan) {
+                    ctx.world().metrics.record_node_return(node, ctx.clock());
+                }
+            }
+            ctx.disconnect(inter);
+            ctx.finalize_exit();
+            Outcome::Exit
+        }
+    }
+}
+
+/// Listing 4: the entry point of every group spawned by the parallel
+/// strategies (and NodeByNode).
+fn parallel_child_entry(spec: Arc<ReconfigSpec>, gid: usize) -> ProcMain {
+    Arc::new(move |ctx: Ctx, mcw: Comm, parent: Comm| {
+        let plan = &spec.plan;
+        let epoch = plan.epoch;
+        let gcount = plan.groups().len();
+        let rank = mcw.rank();
+        let mut pc = PhaseClock::start(&ctx);
+        pc.phases.push((Phase::Spawn, ctx.clock() - spec.t_start));
+
+        // Open a port if this group accepts during the binary connection.
+        let my_port = if rank == 0 && gid < gcount / 2 {
+            let p = ctx.open_port();
+            ctx.publish_name(&conn_service(epoch, gid), &p);
+            Some(p)
+        } else {
+            None
+        };
+
+        // Recursive spawn tasks for this rank's enumeration slot.
+        let slot = plan.slot_of_group_member(gid, rank);
+        let children = run_spawn_tasks(&ctx, plan, slot, &spec);
+
+        // §4.3 synchronization, then drop protocol communicators.
+        common_synch(&ctx, &mcw, Some(&parent), &children);
+        for c in children {
+            ctx.disconnect(c);
+        }
+        ctx.disconnect(parent);
+        pc.lap(&ctx, Phase::Sync);
+
+        // §4.4 binary connection over all spawned groups.
+        let merged = binary_connection(&ctx, gcount, gid, my_port.as_deref(), &mcw, epoch);
+        pc.lap(&ctx, Phase::Connect);
+
+        // §4.5 rank reordering (Eq. 9; the `sum R` offset is implicit in
+        // the final merge with the sources).
+        let key = (plan.prefix_spawned(gid) + rank) as i64;
+        let ordered = ctx
+            .comm_split(&merged, Some(0), key)
+            .expect("reorder split includes every spawned rank");
+        pc.lap(&ctx, Phase::Reorder);
+
+        // Connect the merged, ordered group to the sources.
+        let port = if ordered.rank() == 0 {
+            ctx.lookup_name(&src_service(epoch))
+        } else {
+            String::new()
+        };
+        let inter = ctx.connect(&port, &ordered, 0);
+
+        match plan.method {
+            Method::Merge => {
+                let app = ctx.intercomm_merge(&inter, true);
+                ctx.disconnect(inter);
+                let job = new_jobctx(&spec, app, mcw);
+                (spec.cont)(ctx, job);
+            }
+            Method::Baseline => {
+                pc.lap(&ctx, Phase::Connect);
+                if spec.data_bytes > 0 {
+                    redistrib::execute_intercomm(
+                        &ctx,
+                        &inter,
+                        false,
+                        plan.ns(),
+                        plan.nt(),
+                        spec.data_bytes,
+                    );
+                    pc.lap(&ctx, Phase::Redistrib);
+                }
+                ctx.disconnect(inter);
+                if ordered.rank() == 0 {
+                    record(&ctx, &spec, pc);
+                    record_layout(&ctx, plan.epoch, &ordered);
+                }
+                let job = new_jobctx(&spec, ordered.clone(), mcw);
+                (spec.cont)(ctx, job);
+            }
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Asynchronous strategy (MaM §3): overlap spawning with app execution.
+// ---------------------------------------------------------------------------
+
+/// State between an asynchronous initiate and its completion.
+///
+/// The spawn work proceeds on a *background timeline* (the spawned groups
+/// run their full protocol eagerly); the initiating ranks rewind to their
+/// pre-spawn clock plus [`crate::config::CostModel::c_async_init`], run
+/// application iterations, and pay only the residual wait at completion.
+/// Merge-method expansions only (a Baseline source terminates, so there
+/// is nothing to overlap with).
+pub struct PendingExpand {
+    inter: Comm,
+    /// Background-timeline instant the spawned side became ready.
+    ready_clock: f64,
+    /// Clock at initiation (reconfiguration start).
+    c0: f64,
+    /// Overheads charged to the main thread so far (perceived downtime).
+    init_overhead: f64,
+    spec: ReconfigSpec,
+}
+
+/// Initiate an asynchronous Merge expansion: runs the strategy's whole
+/// spawn prelude on the background timeline and rewinds the caller.
+pub fn expand_async_initiate(ctx: &Ctx, job: &JobCtx, spec: &ReconfigSpec) -> PendingExpand {
+    let plan = &spec.plan;
+    assert_eq!(plan.method, Method::Merge, "async overlaps only Merge expansions");
+    let rank = job.app.rank();
+    let epoch = plan.epoch;
+    let c0 = ctx.clock();
+
+    let inter = match plan.strategy {
+        SpawnStrategy::Plain | SpawnStrategy::Single => {
+            let placements: Vec<(NodeId, usize)> = plan
+                .s
+                .iter()
+                .enumerate()
+                .filter(|&(_, &s)| s > 0)
+                .map(|(i, &s)| (plan.nodes[i], s as usize))
+                .collect();
+            let entry = plain_child_entry(Arc::new(spec.clone()));
+            ctx.spawn_multi(&job.app, 0, &placements, entry)
+        }
+        SpawnStrategy::NodeByNode
+        | SpawnStrategy::ParallelHypercube
+        | SpawnStrategy::ParallelDiffusive => {
+            let spec_arc = Arc::new(spec.clone());
+            let my_port = if rank == 0 {
+                let p = ctx.open_port();
+                ctx.publish_name(&src_service(epoch), &p);
+                Some(p)
+            } else {
+                None
+            };
+            let children = run_spawn_tasks(ctx, plan, rank, &spec_arc);
+            common_synch(ctx, &job.app, None, &children);
+            for c in children {
+                ctx.disconnect(c);
+            }
+            ctx.accept(my_port.as_deref().unwrap_or(""), &job.app, 0)
+        }
+    };
+
+    let ready_clock = ctx.clock();
+    let init_overhead = ctx.world().cfg.cost.c_async_init;
+    ctx.rewind_to(c0 + init_overhead);
+    PendingExpand { inter, ready_clock, c0, init_overhead, spec: spec.clone() }
+}
+
+/// Complete an asynchronous expansion: wait for the background spawn (if
+/// it is still running in virtual time), merge, and hand back the new
+/// job state. The recorded phases capture the *perceived downtime*
+/// (initiation overhead + completion wait), while `t_start..t_end` spans
+/// the whole overlapped window.
+pub fn expand_async_complete(ctx: &Ctx, job: &JobCtx, pending: PendingExpand) -> Outcome {
+    let spec = &pending.spec;
+    let t_complete_start = ctx.clock();
+    ctx.sync_to(pending.ready_clock);
+    let new_app = ctx.intercomm_merge(&pending.inter, false);
+    ctx.disconnect(pending.inter.clone());
+    if spec.data_bytes > 0 {
+        redistrib::execute_intracomm(
+            ctx,
+            &new_app,
+            spec.plan.ns(),
+            spec.plan.nt(),
+            spec.data_bytes,
+        );
+    }
+    if new_app.rank() == 0 {
+        let complete_wait = ctx.clock() - t_complete_start;
+        ctx.world().metrics.record_reconfig(ReconfigRecord {
+            epoch: spec.plan.epoch,
+            method: spec.plan.method.name().to_string(),
+            strategy: format!("{}-async", spec.plan.strategy.name()),
+            ns: spec.plan.ns(),
+            nt: spec.plan.nt(),
+            t_start: pending.c0,
+            t_end: ctx.clock(),
+            phases: vec![
+                (Phase::Plan, pending.init_overhead),
+                (Phase::Connect, complete_wait),
+            ],
+        });
+        record_layout(ctx, spec.plan.epoch, &new_app);
+    }
+    Outcome::Continue(new_jobctx(spec, new_app, job.mcw.clone()))
+}
+
+/// Perceived downtime of an asynchronous reconfiguration record: the sum
+/// of its phases (initiation + completion wait), as opposed to `total()`
+/// which spans the whole overlapped window.
+pub fn perceived_downtime(rec: &ReconfigRecord) -> f64 {
+    rec.phases.iter().map(|(_, d)| d).sum()
+}

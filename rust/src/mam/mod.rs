@@ -1,0 +1,206 @@
+//! MaM-style malleability library — the paper's contribution.
+//!
+//! Implements the process-management stage of malleability for the
+//! simulated-MPI substrate:
+//!
+//! * **Methods** (§3): [`Method::Baseline`] (spawn a complete new set of
+//!   `NT` processes, terminate the old ones) and [`Method::Merge`] (reuse
+//!   sources; spawn/terminate only the difference).
+//! * **Strategies**: [`SpawnStrategy::Plain`] (one collective
+//!   `MPI_Comm_spawn` — the classic Merge/Baseline), [`SpawnStrategy::Single`]
+//!   (one rank spawns and informs the rest), [`SpawnStrategy::NodeByNode`]
+//!   (sequential per-node spawning of [14] — enables TS but scales poorly),
+//!   and the paper's parallel strategies
+//!   [`SpawnStrategy::ParallelHypercube`] (§4.1) and
+//!   [`SpawnStrategy::ParallelDiffusive`] (§4.2).
+//! * **Shrinkage** (§4.7): SS (spawn shrinkage via Baseline), ZS (zombie
+//!   shrinkage) and TS (termination shrinkage, enabled by the per-node
+//!   `MPI_COMM_WORLD` isolation the parallel strategies provide).
+
+pub mod connect;
+pub mod driver;
+pub mod plan;
+pub mod shrink;
+pub mod sync;
+
+pub use driver::{expand, AppCont, ReconfigSpec};
+pub use plan::{Plan, SpawnTask};
+pub use shrink::shrink;
+
+use crate::simmpi::{Comm, ProcId};
+
+/// Process-management method (§3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Always spawn the full target set; sources terminate.
+    Baseline,
+    /// Reuse sources; spawn or terminate only the difference.
+    Merge,
+}
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Baseline => "baseline",
+            Method::Merge => "merge",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "baseline" | "b" => Some(Method::Baseline),
+            "merge" | "m" => Some(Method::Merge),
+            _ => None,
+        }
+    }
+}
+
+/// Spawning strategy for the process-management stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SpawnStrategy {
+    /// One collective `MPI_Comm_spawn` covering every target node: the
+    /// classic approach; the resulting child MCW spans nodes, so TS is
+    /// impossible afterwards.
+    Plain,
+    /// MaM's *Single* strategy: only the root performs the (single) spawn
+    /// call and informs the rest afterwards. Same multi-node MCW caveat.
+    Single,
+    /// Sequential per-node spawning ([14]): one spawn call per node issued
+    /// by the root, giving per-node MCWs (TS works) at the cost of
+    /// inherently sequential spawning.
+    NodeByNode,
+    /// §4.1 parallel Hypercube strategy (homogeneous allocations).
+    ParallelHypercube,
+    /// §4.2 parallel Iterative Diffusive strategy (heterogeneous too).
+    ParallelDiffusive,
+}
+
+impl SpawnStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpawnStrategy::Plain => "plain",
+            SpawnStrategy::Single => "single",
+            SpawnStrategy::NodeByNode => "nodebynode",
+            SpawnStrategy::ParallelHypercube => "hypercube",
+            SpawnStrategy::ParallelDiffusive => "diffusive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SpawnStrategy> {
+        match s {
+            "plain" => Some(SpawnStrategy::Plain),
+            "single" => Some(SpawnStrategy::Single),
+            "nodebynode" | "nbn" => Some(SpawnStrategy::NodeByNode),
+            "hypercube" | "hc" => Some(SpawnStrategy::ParallelHypercube),
+            "diffusive" | "id" => Some(SpawnStrategy::ParallelDiffusive),
+            _ => None,
+        }
+    }
+
+    /// Whether this strategy creates per-node MCWs (the precondition for
+    /// TS shrinkage of expansion groups).
+    pub fn enables_ts(self) -> bool {
+        matches!(
+            self,
+            SpawnStrategy::NodeByNode
+                | SpawnStrategy::ParallelHypercube
+                | SpawnStrategy::ParallelDiffusive
+        )
+    }
+}
+
+/// How a shrink was executed for a given victim group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShrinkKind {
+    /// Spawn shrinkage: respawn the (smaller) job, terminate everything.
+    SpawnShrink,
+    /// Zombie shrinkage: excess ranks sleep; their nodes cannot be
+    /// returned to the RMS.
+    Zombie,
+    /// Termination shrinkage: whole per-node MCWs terminate and their
+    /// nodes return to the RMS.
+    Termination,
+}
+
+impl ShrinkKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShrinkKind::SpawnShrink => "SS",
+            ShrinkKind::Zombie => "ZS",
+            ShrinkKind::Termination => "TS",
+        }
+    }
+}
+
+/// Per-rank malleability state carried across reconfiguration epochs.
+#[derive(Clone)]
+pub struct JobCtx {
+    /// The application communicator (what the job computes over).
+    pub app: Comm,
+    /// This rank's `MPI_COMM_WORLD` (its spawn group, or the initial
+    /// world). TS can only terminate whole MCWs.
+    pub mcw: Comm,
+    /// Reconfiguration epoch (increments on every resize).
+    pub epoch: u64,
+    /// Zombie processes created by earlier ZS shrinks (known to all ranks
+    /// so the job can terminate them at exit).
+    pub zombie_pids: Vec<ProcId>,
+}
+
+/// What a rank must do after a reconfiguration returns.
+pub enum Outcome {
+    /// Keep executing the application with the new state.
+    Continue(JobCtx),
+    /// The rank was terminated (Baseline source, TS victim, or awakened
+    /// zombie ordered to die); its thread must return.
+    Exit,
+}
+
+/// Service-name helpers (unique per epoch so reconfigurations never
+/// collide in the name service).
+pub(crate) fn src_service(epoch: u64) -> String {
+    format!("mam-src-{epoch}")
+}
+
+pub(crate) fn conn_service(epoch: u64, gid: usize) -> String {
+    format!("mam-conn-{epoch}-{gid}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in [Method::Baseline, Method::Merge] {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        for s in [
+            SpawnStrategy::Plain,
+            SpawnStrategy::Single,
+            SpawnStrategy::NodeByNode,
+            SpawnStrategy::ParallelHypercube,
+            SpawnStrategy::ParallelDiffusive,
+        ] {
+            assert_eq!(SpawnStrategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(Method::parse("bogus"), None);
+        assert_eq!(SpawnStrategy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn ts_enablement() {
+        assert!(SpawnStrategy::ParallelHypercube.enables_ts());
+        assert!(SpawnStrategy::ParallelDiffusive.enables_ts());
+        assert!(SpawnStrategy::NodeByNode.enables_ts());
+        assert!(!SpawnStrategy::Plain.enables_ts());
+        assert!(!SpawnStrategy::Single.enables_ts());
+    }
+
+    #[test]
+    fn service_names_unique_per_epoch_and_group() {
+        assert_ne!(src_service(1), src_service(2));
+        assert_ne!(conn_service(1, 0), conn_service(1, 1));
+        assert_ne!(conn_service(1, 0), conn_service(2, 0));
+    }
+}

@@ -1,0 +1,540 @@
+//! Reconfiguration planning: the pure math of the paper's §4.1 and §4.2.
+//!
+//! * [`hypercube_assignments`] — the Hypercube strategy (§4.1, Eq. 1-3):
+//!   homogeneous allocations; every group has `C` processes; geometric
+//!   growth with factor `C + 1`.
+//! * [`diffusive_assignments`] — the Iterative Diffusive strategy (§4.2,
+//!   Eq. 4-8, Table 2): heterogeneous allocations described by the
+//!   `A`/`R`/`S` vectors; each step consumes the next `t_{s-1}` entries
+//!   of `S`.
+//!
+//! Both produce a static *assignment*: which existing process (a
+//! [`Slot`]) spawns which [`Group`] at which step. The assignment is a
+//! pure function of the plan, so sources and spawned processes all derive
+//! identical views without communication.
+
+use super::{Method, SpawnStrategy};
+use crate::topology::NodeId;
+use std::collections::HashMap;
+
+/// A group to be spawned: one `MPI_Comm_spawn` target, fully contained in
+/// one node (the property that later enables TS shrinkage).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Group {
+    /// Group identifier, 0-based, in target-node order (§4.1/§4.2).
+    pub gid: usize,
+    /// Index into [`Plan::nodes`].
+    pub node_idx: usize,
+    /// Processes in the group.
+    pub size: u32,
+}
+
+/// One spawn task: `spawner` must spawn `group` during `step` (1-based).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpawnTask {
+    pub step: usize,
+    pub group: Group,
+}
+
+/// The full reconfiguration plan, shared verbatim by sources and targets.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub epoch: u64,
+    pub method: Method,
+    pub strategy: SpawnStrategy,
+    /// Target node list; nodes hosting source processes come first.
+    pub nodes: Vec<NodeId>,
+    /// Vector `A`: cores assigned to the job on each node (target layout).
+    pub a: Vec<u32>,
+    /// Vector `R`: processes currently running on each node.
+    pub r: Vec<u32>,
+    /// Vector `S`: processes to spawn on each node.
+    ///
+    /// `S = A - R` for Merge; `S = A` for Baseline (a whole new set is
+    /// spawned and sources terminate afterwards, §3).
+    pub s: Vec<u32>,
+}
+
+impl Plan {
+    /// Build a plan from target/current per-node layouts.
+    pub fn new(
+        epoch: u64,
+        method: Method,
+        strategy: SpawnStrategy,
+        nodes: Vec<NodeId>,
+        a: Vec<u32>,
+        r: Vec<u32>,
+    ) -> Plan {
+        assert_eq!(nodes.len(), a.len());
+        assert_eq!(nodes.len(), r.len());
+        let s: Vec<u32> = match method {
+            Method::Merge => a.iter().zip(&r).map(|(&ai, &ri)| ai.saturating_sub(ri)).collect(),
+            Method::Baseline => a.clone(),
+        };
+        Plan { epoch, method, strategy, nodes, a, r, s }
+    }
+
+    /// Number of *source* processes (`NS`).
+    pub fn ns(&self) -> usize {
+        self.r.iter().map(|&x| x as usize).sum()
+    }
+
+    /// Number of *target* processes (`NT`).
+    pub fn nt(&self) -> usize {
+        self.a.iter().map(|&x| x as usize).sum()
+    }
+
+    /// Total processes to spawn.
+    pub fn spawn_total(&self) -> usize {
+        self.s.iter().map(|&x| x as usize).sum()
+    }
+
+    /// `I`: number of nodes hosting source processes.
+    pub fn i_nodes(&self) -> usize {
+        self.r.iter().filter(|&&x| x > 0).count()
+    }
+
+    /// Target node count (`N`).
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The groups to spawn, in group-id order (entries of `S` with
+    /// `S_i > 0`, ordered by node index).
+    pub fn groups(&self) -> Vec<Group> {
+        let mut gid = 0;
+        let mut out = Vec::new();
+        for (i, &si) in self.s.iter().enumerate() {
+            if si > 0 {
+                out.push(Group { gid, node_idx: i, size: si });
+                gid += 1;
+            }
+        }
+        out
+    }
+
+    /// Whether every group has the same size **and** every node the same
+    /// core count — the Hypercube applicability condition
+    /// (`check_homogenous_dist` in Listing 3/4).
+    pub fn is_homogeneous(&self) -> bool {
+        // Zero entries (already-full nodes for Merge, dropped nodes for a
+        // Baseline shrink) don't create groups and don't break homogeneity.
+        let nz_s: Vec<u32> = self.s.iter().copied().filter(|&x| x > 0).collect();
+        let same_s = nz_s.windows(2).all(|w| w[0] == w[1]);
+        let nz_a: Vec<u32> = self.a.iter().copied().filter(|&x| x > 0).collect();
+        let same_a = nz_a.windows(2).all(|w| w[0] == w[1]);
+        same_s && same_a
+    }
+
+    /// Sum of `S_j` for groups with id `< gid` — the second summation of
+    /// Eq. 9 (rank-reordering offset).
+    pub fn prefix_spawned(&self, gid: usize) -> usize {
+        self.groups()
+            .iter()
+            .take_while(|g| g.gid < gid)
+            .map(|g| g.size as usize)
+            .sum()
+    }
+
+    /// Enumeration slot of a spawned process: sources occupy slots
+    /// `0..NS`; group `gid`'s processes follow in group-id order.
+    pub fn slot_of_group_member(&self, gid: usize, rank_in_group: usize) -> usize {
+        self.ns() + self.prefix_spawned(gid) + rank_in_group
+    }
+
+    /// The per-slot spawn assignments for this plan's strategy.
+    pub fn assignments(&self) -> HashMap<usize, Vec<SpawnTask>> {
+        match self.strategy {
+            SpawnStrategy::ParallelHypercube => hypercube_assignments(self),
+            SpawnStrategy::ParallelDiffusive => diffusive_assignments(self),
+            // Plain / Single / NodeByNode funnel all groups through the
+            // root source rank (slot 0) in a single step.
+            _ => {
+                let mut map = HashMap::new();
+                let tasks: Vec<SpawnTask> =
+                    self.groups().into_iter().map(|group| SpawnTask { step: 1, group }).collect();
+                if !tasks.is_empty() {
+                    map.insert(0, tasks);
+                }
+                map
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hypercube strategy (§4.1)
+// ---------------------------------------------------------------------------
+
+/// Eq. 1: total occupied nodes after `s` steps of the Hypercube strategy.
+pub fn hypercube_total_nodes(c: u32, i: usize, s: usize, method: Method) -> usize {
+    let grown = (c as usize + 1).pow(s as u32) * i;
+    match method {
+        Method::Baseline => grown - i,
+        Method::Merge => grown,
+    }
+}
+
+/// Eq. 2: total processes after `s` steps.
+pub fn hypercube_total_procs(c: u32, i: usize, s: usize, method: Method) -> usize {
+    c as usize * hypercube_total_nodes(c, i, s, method)
+}
+
+/// Eq. 3: steps required to reach `n` target nodes from `i` initial nodes
+/// with `c` cores per node (Merge accounting).
+pub fn hypercube_steps(c: u32, i: usize, n: usize) -> usize {
+    if n <= i {
+        return 0;
+    }
+    let ratio = n as f64 / i as f64;
+    let growth = (c as f64 + 1.0).ln();
+    (ratio.ln() / growth).ceil() as usize
+}
+
+/// Hypercube spawn assignment: in each step every existing process (by
+/// enumeration slot order: sources first, then groups by id) takes the
+/// next unspawned group. Matches Figure 1 of the paper.
+pub fn hypercube_assignments(plan: &Plan) -> HashMap<usize, Vec<SpawnTask>> {
+    let groups = plan.groups();
+    assert!(
+        plan.is_homogeneous(),
+        "hypercube strategy requires a homogeneous allocation (use diffusive)"
+    );
+    let mut map: HashMap<usize, Vec<SpawnTask>> = HashMap::new();
+    let mut available = plan.ns(); // t_{s-1}, in processes
+    let mut next_group = 0usize;
+    let mut step = 1usize;
+    while next_group < groups.len() {
+        let take = available.min(groups.len() - next_group);
+        let mut grown = 0usize;
+        for p in 0..take {
+            let group = groups[next_group];
+            map.entry(p).or_default().push(SpawnTask { step, group });
+            next_group += 1;
+            grown += group.size as usize;
+        }
+        available += grown;
+        step += 1;
+    }
+    map
+}
+
+// ---------------------------------------------------------------------------
+// Iterative Diffusive strategy (§4.2)
+// ---------------------------------------------------------------------------
+
+/// One row of the diffusive step trace (the columns of Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DiffusiveStep {
+    pub s: usize,
+    /// `t_s`: total processes existing at the end of step `s` (Eq. 4).
+    pub t: usize,
+    /// `g_s`: processes generated during step `s` (Eq. 5).
+    pub g: usize,
+    /// `lambda_s`: first unconsumed index of `S` after step `s` (Eq. 6).
+    ///
+    /// Note: the paper's Table 2 lists λ_2 = 7 / λ_3 = 47, while Eq. 6
+    /// yields 8 / 48; the discrepancy is an off-by-one typo in the table
+    /// that affects no other column (both clamp to `min(N, ·)` in Eq. 5/8).
+    pub lambda: usize,
+    /// `T_s`: cumulative occupied nodes (Eq. 7).
+    pub tt: usize,
+    /// `G_s`: nodes newly occupied during step `s` (Eq. 8).
+    pub gg: usize,
+}
+
+/// Evaluate the diffusive recurrences (Eq. 4-8) without materialising the
+/// spawn tasks; row `s = 0` is the initial state.
+pub fn diffusive_trace(plan: &Plan) -> Vec<DiffusiveStep> {
+    let n = plan.n_nodes();
+    let mut rows = vec![DiffusiveStep {
+        s: 0,
+        t: plan.ns(),
+        g: 0,
+        lambda: 0,
+        tt: plan.i_nodes(),
+        gg: 0,
+    }];
+    let mut s = 0usize;
+    loop {
+        let prev = rows[s];
+        if prev.lambda >= n {
+            break;
+        }
+        s += 1;
+        let lambda_s = prev.lambda + prev.t; // Eq. 6
+        let hi = lambda_s.min(n);
+        let mut g = 0usize;
+        let mut gg = 0usize;
+        for i in prev.lambda..hi {
+            g += plan.s[i] as usize; // Eq. 5
+            if plan.r[i] == 0 && plan.s[i] > 0 {
+                gg += 1; // Eq. 8
+            }
+        }
+        rows.push(DiffusiveStep {
+            s,
+            t: prev.t + g, // Eq. 4
+            g,
+            lambda: lambda_s,
+            tt: prev.tt + gg, // Eq. 7
+            gg,
+        });
+    }
+    rows
+}
+
+/// Diffusive spawn assignment: step `s` hands entries
+/// `lambda_{s-1} .. min(N, lambda_s)` of `S` to the first `t_{s-1}`
+/// enumeration slots, one entry per slot; entries with `S_i = 0` are
+/// no-ops for their slot.
+pub fn diffusive_assignments(plan: &Plan) -> HashMap<usize, Vec<SpawnTask>> {
+    let n = plan.n_nodes();
+    // Map node index -> group (for entries that spawn).
+    let mut group_of_node: HashMap<usize, Group> = HashMap::new();
+    for g in plan.groups() {
+        group_of_node.insert(g.node_idx, g);
+    }
+    let mut map: HashMap<usize, Vec<SpawnTask>> = HashMap::new();
+    let mut available = plan.ns();
+    let mut lambda = 0usize;
+    let mut step = 1usize;
+    while lambda < n {
+        let hi = (lambda + available).min(n);
+        let mut grown = 0usize;
+        for (p, entry) in (lambda..hi).enumerate() {
+            if let Some(&group) = group_of_node.get(&entry) {
+                map.entry(p).or_default().push(SpawnTask { step, group });
+                grown += group.size as usize;
+            }
+        }
+        lambda += available;
+        available += grown;
+        step += 1;
+    }
+    map
+}
+
+/// Total steps a plan's strategy needs (max task step; 0 if no spawning).
+pub fn plan_steps(plan: &Plan) -> usize {
+    plan.assignments()
+        .values()
+        .flat_map(|ts| ts.iter().map(|t| t.step))
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mam::{Method, SpawnStrategy};
+
+    /// The paper's Table 2 example: A=[4,2,8,12,3,3,4,4,6,3], R=[2,0,...],
+    /// I=1 node -> N=10 nodes.
+    fn table2_plan() -> Plan {
+        Plan::new(
+            0,
+            Method::Merge,
+            SpawnStrategy::ParallelDiffusive,
+            (0..10).collect(),
+            vec![4, 2, 8, 12, 3, 3, 4, 4, 6, 3],
+            vec![2, 0, 0, 0, 0, 0, 0, 0, 0, 0],
+        )
+    }
+
+    #[test]
+    fn paper_table2_s_vector() {
+        let p = table2_plan();
+        assert_eq!(p.s, vec![2, 2, 8, 12, 3, 3, 4, 4, 6, 3]);
+        assert_eq!(p.ns(), 2);
+        assert_eq!(p.nt(), 49);
+        assert_eq!(p.i_nodes(), 1);
+    }
+
+    #[test]
+    fn paper_table2_trace() {
+        let rows = diffusive_trace(&table2_plan());
+        // s, t, g, lambda, T, G  (lambda per Eq. 6; the paper's table has an
+        // off-by-one typo at s >= 2, see DiffusiveStep docs).
+        assert_eq!(rows.len(), 4);
+        assert_eq!((rows[0].t, rows[0].lambda, rows[0].tt), (2, 0, 1));
+        assert_eq!((rows[1].t, rows[1].g, rows[1].lambda, rows[1].tt, rows[1].gg), (6, 4, 2, 2, 1));
+        assert_eq!((rows[2].t, rows[2].g, rows[2].tt, rows[2].gg), (40, 34, 8, 6));
+        assert_eq!(rows[2].lambda, 8);
+        assert_eq!((rows[3].t, rows[3].g, rows[3].tt, rows[3].gg), (49, 9, 10, 2));
+    }
+
+    #[test]
+    fn table2_assignments_consume_s_exactly() {
+        let p = table2_plan();
+        let asg = diffusive_assignments(&p);
+        let all: Vec<SpawnTask> = asg.values().flatten().copied().collect();
+        // Every group spawned exactly once.
+        let mut gids: Vec<usize> = all.iter().map(|t| t.group.gid).collect();
+        gids.sort_unstable();
+        assert_eq!(gids, (0..p.groups().len()).collect::<Vec<_>>());
+        // Spawned process total matches S.
+        let total: usize = all.iter().map(|t| t.group.size as usize).sum();
+        assert_eq!(total, p.spawn_total());
+        // 3 steps.
+        assert_eq!(plan_steps(&p), 3);
+    }
+
+    #[test]
+    fn table2_step_one_uses_only_sources() {
+        let p = table2_plan();
+        let asg = diffusive_assignments(&p);
+        for (&slot, tasks) in &asg {
+            for t in tasks {
+                if t.step == 1 {
+                    assert!(slot < p.ns(), "step-1 spawner must be a source, got slot {slot}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eq1_eq2_eq3_closed_forms() {
+        // 20-core example from §4.1: starting from one full node, step 1
+        // reaches 21 nodes, step 2 reaches 441 nodes (Merge accounting).
+        assert_eq!(hypercube_total_nodes(20, 1, 1, Method::Merge), 21);
+        assert_eq!(hypercube_total_nodes(20, 1, 2, Method::Merge), 441);
+        assert_eq!(hypercube_total_procs(20, 1, 1, Method::Merge), 420);
+        // Baseline discounts the initial nodes.
+        assert_eq!(hypercube_total_nodes(20, 1, 1, Method::Baseline), 20);
+        // Figure 1: C=1, I=1, N=8 -> 3 steps.
+        assert_eq!(hypercube_steps(1, 1, 8), 3);
+        // MN5: C=112, 1 -> 32 nodes in one step.
+        assert_eq!(hypercube_steps(112, 1, 32), 1);
+        // No growth needed.
+        assert_eq!(hypercube_steps(4, 4, 4), 0);
+    }
+
+    /// Figure 1 of the paper: C=1, I=1, NT=8; edges of the cube.
+    #[test]
+    fn figure1_hypercube_assignment() {
+        let plan = Plan::new(
+            0,
+            Method::Merge,
+            SpawnStrategy::ParallelHypercube,
+            (0..8).collect(),
+            vec![1; 8],
+            {
+                let mut r = vec![0; 8];
+                r[0] = 1;
+                r
+            },
+        );
+        let asg = hypercube_assignments(&plan);
+        // Expected: slot 0 (source) spawns groups 0 (step1), 1 (step2), 3 (step3)
+        //           slot 1 (g0) spawns group 2 (step2), group 4 (step3)
+        //           slot 2 (g1) spawns group 5 (step3)
+        //           slot 3 (g2) spawns group 6 (step3)
+        let get = |slot: usize| -> Vec<(usize, usize)> {
+            asg.get(&slot)
+                .map(|ts| ts.iter().map(|t| (t.step, t.group.gid)).collect())
+                .unwrap_or_default()
+        };
+        assert_eq!(get(0), vec![(1, 0), (2, 1), (3, 3)]);
+        assert_eq!(get(1), vec![(2, 2), (3, 4)]);
+        assert_eq!(get(2), vec![(3, 5)]);
+        assert_eq!(get(3), vec![(3, 6)]);
+        assert_eq!(plan_steps(&plan), 3);
+    }
+
+    #[test]
+    fn hypercube_matches_eq3_step_count() {
+        for (c, i, n) in [(1u32, 1usize, 8usize), (2, 1, 9), (4, 2, 32), (112, 1, 32), (3, 2, 50)] {
+            let total_nodes = n;
+            let mut nodes: Vec<usize> = (0..total_nodes).collect();
+            let mut r = vec![0u32; total_nodes];
+            for ri in r.iter_mut().take(i) {
+                *ri = c;
+            }
+            nodes.truncate(total_nodes);
+            let plan = Plan::new(
+                0,
+                Method::Merge,
+                SpawnStrategy::ParallelHypercube,
+                nodes,
+                vec![c; total_nodes],
+                r,
+            );
+            assert_eq!(
+                plan_steps(&plan),
+                hypercube_steps(c, i, n),
+                "steps mismatch for C={c}, I={i}, N={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn baseline_spawns_everything() {
+        let plan = Plan::new(
+            0,
+            Method::Baseline,
+            SpawnStrategy::ParallelHypercube,
+            (0..4).collect(),
+            vec![2; 4],
+            vec![2, 2, 0, 0],
+        );
+        assert_eq!(plan.s, vec![2; 4]); // sources respawned too
+        assert_eq!(plan.spawn_total(), 8);
+        assert_eq!(plan.groups().len(), 4);
+    }
+
+    #[test]
+    fn merge_spawns_only_difference() {
+        let plan = Plan::new(
+            0,
+            Method::Merge,
+            SpawnStrategy::ParallelHypercube,
+            (0..4).collect(),
+            vec![2; 4],
+            vec![2, 2, 0, 0],
+        );
+        assert_eq!(plan.s, vec![0, 0, 2, 2]);
+        assert_eq!(plan.groups().len(), 2);
+        assert_eq!(plan.groups()[0].node_idx, 2);
+    }
+
+    #[test]
+    fn slots_and_prefixes() {
+        let p = table2_plan();
+        // Group 0 is node 0 (size 2), group 1 node 1 (size 2), group 2 node 2 (size 8).
+        assert_eq!(p.prefix_spawned(0), 0);
+        assert_eq!(p.prefix_spawned(1), 2);
+        assert_eq!(p.prefix_spawned(2), 4);
+        assert_eq!(p.slot_of_group_member(0, 0), 2);
+        assert_eq!(p.slot_of_group_member(2, 3), 2 + 4 + 3);
+    }
+
+    #[test]
+    fn plain_strategy_funnels_through_root() {
+        let plan = Plan::new(
+            0,
+            Method::Merge,
+            SpawnStrategy::Plain,
+            (0..3).collect(),
+            vec![2; 3],
+            vec![2, 0, 0],
+        );
+        let asg = plan.assignments();
+        assert_eq!(asg.len(), 1);
+        assert_eq!(asg[&0].len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "homogeneous")]
+    fn hypercube_rejects_heterogeneous() {
+        let plan = Plan::new(
+            0,
+            Method::Merge,
+            SpawnStrategy::ParallelHypercube,
+            (0..3).collect(),
+            vec![2, 4, 2],
+            vec![2, 0, 0],
+        );
+        hypercube_assignments(&plan);
+    }
+}

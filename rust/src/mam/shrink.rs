@@ -1,0 +1,319 @@
+//! §4.6/§4.7 — shrink operations.
+//!
+//! The Merge-method shrink: no processes are spawned; excess ranks are
+//! *terminated* (TS) whenever their whole `MPI_COMM_WORLD` is being
+//! released — which the parallel spawning strategies make possible by
+//! keeping every spawned MCW inside one node — and are turned into
+//! *zombies* (ZS) otherwise (partial node release, or a multi-node MCW
+//! that must shrink partially, e.g. the initial MCW).
+//!
+//! Baseline spawn-shrinkage (SS) is simply [`super::expand`] with a
+//! smaller target: a new (smaller) process set is spawned and all sources
+//! terminate.
+//!
+//! The decision procedure mirrors §4.7's bookkeeping: the root conceptually
+//! maintains, per MCW, the node list and per-rank state; here every rank
+//! derives the same decision from the shared membership tables (standing in
+//! for the root structures plus the plan broadcast).
+
+use super::{JobCtx, Outcome, ReconfigSpec, ShrinkKind};
+use crate::metrics::{Phase, ReconfigRecord};
+use crate::simmpi::{Ctx, ProcId, ZombieOrder};
+use crate::topology::NodeId;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Per-rank shrink decision.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShrinkDecision {
+    /// Ranks that survive, in old-rank order (they become 0..NT).
+    pub survivors: Vec<usize>,
+    /// Victim ranks terminated via TS.
+    pub terminate: Vec<usize>,
+    /// Victim ranks parked as zombies (ZS fallback).
+    pub zombies: Vec<usize>,
+    /// Nodes fully released to the RMS (all of their ranks TS'd).
+    pub released_nodes: Vec<NodeId>,
+}
+
+impl ShrinkDecision {
+    /// Overall shrink kind: TS when no zombies were needed.
+    pub fn kind(&self) -> ShrinkKind {
+        if self.zombies.is_empty() {
+            ShrinkKind::Termination
+        } else {
+            ShrinkKind::Zombie
+        }
+    }
+}
+
+/// Decide the fate of every rank for a shrink to `plan`'s target layout.
+///
+/// Inputs are per-rank `(node, mcw_id)` tables in app-rank order (derived
+/// from the communicator membership; in a real deployment this is the
+/// §4.7 root bookkeeping). Within a node, lowest ranks survive.
+pub fn decide(
+    nodes_of_rank: &[NodeId],
+    mcw_of_rank: &[u64],
+    target: &BTreeMap<NodeId, u32>,
+) -> ShrinkDecision {
+    let n = nodes_of_rank.len();
+    assert_eq!(n, mcw_of_rank.len());
+
+    // Per-node survivor quota, consumed in rank order.
+    let mut quota: BTreeMap<NodeId, u32> = target.clone();
+    let mut survivors = Vec::new();
+    let mut victims = Vec::new();
+    for rank in 0..n {
+        let node = nodes_of_rank[rank];
+        match quota.get_mut(&node) {
+            Some(q) if *q > 0 => {
+                *q -= 1;
+                survivors.push(rank);
+            }
+            _ => victims.push(rank),
+        }
+    }
+
+    // Group victims by MCW: a whole-MCW victim set can be terminated (TS);
+    // a partially-victim MCW falls back to zombies (ZS) for its victims.
+    let mut mcw_members: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    for rank in 0..n {
+        mcw_members.entry(mcw_of_rank[rank]).or_default().push(rank);
+    }
+    let victim_set: BTreeSet<usize> = victims.iter().copied().collect();
+    let mut terminate = Vec::new();
+    let mut zombies = Vec::new();
+    for members in mcw_members.values() {
+        let all_victims = members.iter().all(|r| victim_set.contains(r));
+        for &r in members {
+            if victim_set.contains(&r) {
+                if all_victims {
+                    terminate.push(r);
+                } else {
+                    zombies.push(r);
+                }
+            }
+        }
+    }
+    terminate.sort_unstable();
+    zombies.sort_unstable();
+
+    // Nodes fully freed: every rank on the node is terminated (zombies pin
+    // their node, the core limitation of ZS the paper fixes).
+    let term_set: BTreeSet<usize> = terminate.iter().copied().collect();
+    let mut node_ranks: BTreeMap<NodeId, Vec<usize>> = BTreeMap::new();
+    for rank in 0..n {
+        node_ranks.entry(nodes_of_rank[rank]).or_default().push(rank);
+    }
+    let released_nodes: Vec<NodeId> = node_ranks
+        .iter()
+        .filter(|(_, ranks)| ranks.iter().all(|r| term_set.contains(r)))
+        .map(|(&node, _)| node)
+        .collect();
+
+    ShrinkDecision { survivors, terminate, zombies, released_nodes }
+}
+
+/// Merge-method shrink (TS with ZS fallback), collective over `job.app`.
+pub fn shrink(ctx: &Ctx, job: &JobCtx, spec: &ReconfigSpec) -> Outcome {
+    let plan = &spec.plan;
+    let rank = job.app.rank();
+    let mut pc_last = ctx.clock();
+    let mut phases: Vec<(Phase, f64)> = Vec::new();
+
+    // Build the membership tables from shared state (stands in for the
+    // §4.7 root bookkeeping; charge one plan-broadcast worth of traffic).
+    let world = ctx.world().clone();
+    let pids: Vec<ProcId> = job.app.local_pids().to_vec();
+    let nodes_of_rank: Vec<NodeId> = pids.iter().map(|&p| world.node_of(p)).collect();
+    // The MCW id of each rank is rank-local knowledge: allgather it (this
+    // is the communication the §4.7 root bookkeeping would otherwise keep
+    // incrementally).
+    let gathered = ctx.allgather(
+        &job.app,
+        crate::simmpi::Payload::i64s(vec![job.mcw.id() as i64]),
+    );
+    let mcw_of_rank: Vec<u64> =
+        gathered.as_slice().iter().map(|p| p.as_i64s()[0] as u64).collect();
+
+    let mut target: BTreeMap<NodeId, u32> = BTreeMap::new();
+    for (i, &node) in plan.nodes.iter().enumerate() {
+        target.insert(node, plan.a[i]);
+    }
+    let decision = decide(&nodes_of_rank, &mcw_of_rank, &target);
+    assert_eq!(
+        decision.survivors.len(),
+        plan.nt(),
+        "shrink target mismatch: {} survivors for NT={}",
+        decision.survivors.len(),
+        plan.nt()
+    );
+    {
+        let now = ctx.clock();
+        phases.push((Phase::Plan, now - pc_last));
+        pc_last = now;
+    }
+
+    // Everybody splits: survivors keep rank order, victims pass UNDEFINED.
+    let surviving = decision.survivors.contains(&rank);
+    let new_app = ctx.comm_split(
+        &job.app,
+        if surviving { Some(0) } else { None },
+        rank as i64,
+    );
+
+    if surviving {
+        let new_app = new_app.unwrap();
+        {
+            let now = ctx.clock();
+            phases.push((Phase::Shrink, now - pc_last));
+        }
+        if new_app.rank() == 0 {
+            // Terminate signals go to victim *group roots* (one per MCW
+            // being terminated), not to every rank.
+            let victim_groups: std::collections::BTreeSet<u64> =
+                decision.terminate.iter().map(|&r| mcw_of_rank[r]).collect();
+            ctx.charge(world.cfg.cost.c_term_signal * victim_groups.len().max(1) as f64);
+            for &node in &decision.released_nodes {
+                world.metrics.record_node_return(node, ctx.clock());
+            }
+            world.metrics.record_zombies(decision.zombies.len() as u64);
+            world.metrics.record_reconfig(ReconfigRecord {
+                epoch: plan.epoch,
+                method: plan.method.name().to_string(),
+                strategy: format!("shrink-{}", decision.kind().name().to_lowercase()),
+                ns: plan.ns(),
+                nt: plan.nt(),
+                t_start: spec.t_start,
+                t_end: ctx.clock(),
+                phases,
+            });
+            let layout: Vec<crate::topology::NodeId> =
+                new_app.local_pids().iter().map(|&p| world.node_of(p)).collect();
+            world.metrics.record_layout(plan.epoch, layout);
+        }
+        let mut zombie_pids = spec.zombie_pids.clone();
+        zombie_pids.extend(decision.zombies.iter().map(|&r| pids[r]));
+        Outcome::Continue(JobCtx {
+            app: new_app,
+            mcw: job.mcw.clone(),
+            epoch: plan.epoch + 1,
+            zombie_pids,
+        })
+    } else if decision.terminate.contains(&rank) {
+        // TS: whole-MCW termination.
+        ctx.finalize_exit();
+        Outcome::Exit
+    } else {
+        // ZS: park until the job (or a later shrink) terminates us.
+        let order = ctx.park_zombie();
+        match order {
+            ZombieOrder::Terminate { .. } => {
+                ctx.finalize_exit();
+                Outcome::Exit
+            }
+            ZombieOrder::Wake { .. } => {
+                // Reuse of zombies (future work in the paper); treat as exit.
+                ctx.finalize_exit();
+                Outcome::Exit
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 2 nodes x 2 ranks, two per-node MCWs; release node 1 entirely.
+    #[test]
+    fn whole_mcw_release_is_ts() {
+        let nodes = vec![0, 0, 1, 1];
+        let mcws = vec![10, 10, 11, 11];
+        let mut target = BTreeMap::new();
+        target.insert(0, 2);
+        let d = decide(&nodes, &mcws, &target);
+        assert_eq!(d.survivors, vec![0, 1]);
+        assert_eq!(d.terminate, vec![2, 3]);
+        assert!(d.zombies.is_empty());
+        assert_eq!(d.released_nodes, vec![1]);
+        assert_eq!(d.kind(), ShrinkKind::Termination);
+    }
+
+    /// Partial within-node shrink: excess ranks become zombies; the node
+    /// is NOT released.
+    #[test]
+    fn partial_node_release_is_zs() {
+        let nodes = vec![0, 0, 0, 0];
+        let mcws = vec![10, 10, 10, 10];
+        let mut target = BTreeMap::new();
+        target.insert(0, 2);
+        let d = decide(&nodes, &mcws, &target);
+        assert_eq!(d.survivors, vec![0, 1]);
+        assert!(d.terminate.is_empty());
+        assert_eq!(d.zombies, vec![2, 3]);
+        assert!(d.released_nodes.is_empty());
+        assert_eq!(d.kind(), ShrinkKind::Zombie);
+    }
+
+    /// Multi-node initial MCW shrunk partially: its victims must zombify
+    /// (the paper's §4.6 fallback), pinning their node.
+    #[test]
+    fn multinode_mcw_partial_release_falls_back_to_zs() {
+        // Initial MCW 10 spans nodes 0-1; expansion MCW 11 on node 2.
+        let nodes = vec![0, 0, 1, 1, 2, 2];
+        let mcws = vec![10, 10, 10, 10, 11, 11];
+        // Target: keep node 0 (2 ranks) + node 2 (2 ranks); release node 1.
+        let mut target = BTreeMap::new();
+        target.insert(0, 2);
+        target.insert(2, 2);
+        let d = decide(&nodes, &mcws, &target);
+        assert_eq!(d.survivors, vec![0, 1, 4, 5]);
+        assert!(d.terminate.is_empty(), "initial MCW survives partially -> no TS");
+        assert_eq!(d.zombies, vec![2, 3]);
+        assert!(d.released_nodes.is_empty(), "zombies pin node 1");
+    }
+
+    /// Releasing at least the whole initial allocation terminates the
+    /// initial MCW (§4.6 third bullet).
+    #[test]
+    fn full_initial_mcw_release_is_ts() {
+        let nodes = vec![0, 0, 1, 1, 2, 2];
+        let mcws = vec![10, 10, 10, 10, 11, 11];
+        // Keep only node 2 (the expansion group).
+        let mut target = BTreeMap::new();
+        target.insert(2, 2);
+        let d = decide(&nodes, &mcws, &target);
+        assert_eq!(d.survivors, vec![4, 5]);
+        assert_eq!(d.terminate, vec![0, 1, 2, 3]);
+        assert!(d.zombies.is_empty());
+        assert_eq!(d.released_nodes, vec![0, 1]);
+    }
+
+    /// Mixed: one expansion group terminated whole, another node partial.
+    #[test]
+    fn mixed_ts_and_zs() {
+        let nodes = vec![0, 0, 1, 1, 2, 2];
+        let mcws = vec![10, 10, 11, 11, 12, 12];
+        let mut target = BTreeMap::new();
+        target.insert(0, 2);
+        target.insert(1, 1); // partial: one zombie on node 1
+        let d = decide(&nodes, &mcws, &target);
+        assert_eq!(d.survivors, vec![0, 1, 2]);
+        assert_eq!(d.terminate, vec![4, 5]); // node 2's whole MCW
+        assert_eq!(d.zombies, vec![3]);
+        assert_eq!(d.released_nodes, vec![2]);
+        assert_eq!(d.kind(), ShrinkKind::Zombie);
+    }
+
+    #[test]
+    fn survivors_keep_rank_order_within_quota() {
+        let nodes = vec![0, 1, 0, 1, 0, 1];
+        let mcws = vec![1, 2, 1, 2, 1, 2];
+        let mut target = BTreeMap::new();
+        target.insert(0, 1);
+        target.insert(1, 2);
+        let d = decide(&nodes, &mcws, &target);
+        assert_eq!(d.survivors, vec![0, 1, 3]);
+    }
+}

@@ -1,0 +1,228 @@
+//! §4.3 — synchronization between process groups (Listing 1).
+//!
+//! Ensures every group knows all ports are open before any connection is
+//! attempted. Each group synchronizes through a dedicated subcommunicator
+//! in three stages: subcommunicator creation, *upside* synchronization
+//! (readiness tokens flow towards the source group) and *downside*
+//! synchronization (go-ahead tokens flow back towards the leaves).
+//!
+//! One deliberate deviation from Listing 1: the subcommunicator always
+//! includes the group root even when it spawned no children. In the
+//! Iterative Diffusive strategy a group's rank 0 can be assigned an
+//! `S_i = 0` entry while a higher rank spawns a group; excluding the root
+//! from the barrier would let it notify its parent before the group's
+//! descendants are ready. Including the root closes that window.
+
+use super::JobCtx;
+use crate::simmpi::{tags, Comm, Ctx, Payload};
+
+/// Synchronize all groups of a reconfiguration epoch.
+///
+/// * `world_c` — the group's communicator ("built comm for sources, MCW
+///   for targets" in Listing 1).
+/// * `parent` — inter-communicator to the parent group (`None` for the
+///   source group).
+/// * `children` — inter-communicators to every group this *rank* spawned.
+pub fn common_synch(ctx: &Ctx, world_c: &Comm, parent: Option<&Comm>, children: &[Comm]) {
+    let rank = world_c.rank();
+    let root = 0usize;
+    let qty_c = children.len();
+
+    // -- Stage 1: subcommunicator creation ---------------------------------
+    // Ranks with children plus the root (see module docs).
+    let color = if qty_c > 0 || rank == root { Some(1) } else { None };
+    let synch_ranks = ctx.comm_split(world_c, color, rank as i64);
+
+    // -- Stage 2: upside synchronization ------------------------------------
+    // Wait for a readiness token from each child group's root.
+    for child in children {
+        let _ = ctx.recv(child, root, tags::SYNC_UP);
+    }
+    if let Some(sc) = &synch_ranks {
+        if sc.size() > 1 {
+            ctx.barrier(sc);
+        }
+    }
+    // Root (of a non-source group) notifies its parent group.
+    if rank == root {
+        if let Some(p) = parent {
+            ctx.send(p, root, tags::SYNC_UP, Payload::Token);
+        }
+    }
+
+    // -- Stage 3: downside synchronization -----------------------------------
+    if rank == root {
+        if let Some(p) = parent {
+            let _ = ctx.recv(p, root, tags::SYNC_DOWN);
+        }
+    }
+    // Propagate the go-ahead within the group (source group skips this:
+    // its stage-2 barrier already implies global readiness).
+    if parent.is_some() {
+        if let Some(sc) = &synch_ranks {
+            if sc.size() > 1 {
+                ctx.barrier(sc);
+            }
+        }
+    }
+    // Notify own children that all groups are ready.
+    for child in children {
+        ctx.send(child, root, tags::SYNC_DOWN, Payload::Token);
+    }
+
+    if let Some(sc) = synch_ranks {
+        ctx.disconnect(sc);
+    }
+}
+
+/// Terminate any zombies the job still holds (called when the application
+/// finishes; zombie ranks persist until then, §4.7 / [13]).
+pub fn terminate_zombies(ctx: &Ctx, job: &JobCtx) {
+    if job.app.rank() == 0 {
+        for &pid in &job.zombie_pids {
+            ctx.world().signal_zombie(
+                pid,
+                crate::simmpi::ZombieOrder::Terminate { at: ctx.clock() },
+            );
+            ctx.charge(ctx.world().cfg.cost.c_term_signal);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CostModel, SimConfig};
+    use crate::simmpi::{Comm, Ctx, World};
+    use crate::topology::Cluster;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn world(ranks: usize) -> Arc<World> {
+        World::new(
+            Cluster::mini(2, ranks as u32),
+            SimConfig {
+                cost: CostModel::mn5().deterministic(),
+                watchdog_secs: Some(20.0),
+                ..Default::default()
+            },
+        )
+    }
+
+    /// A two-level spawn tree: sources spawn one group, that group spawns
+    /// a grandchild group; common_synch must not release the sources'
+    /// barrier until the grandchildren have reported up.
+    #[test]
+    fn synch_covers_multi_level_trees() {
+        let w = world(2);
+        let reached = Arc::new(AtomicUsize::new(0));
+        let r2 = reached.clone();
+        w.launch(
+            &[(0, 2)],
+            Arc::new(move |ctx: Ctx, wc: Comm| {
+                let mut children = Vec::new();
+                if wc.rank() == 0 {
+                    let r3 = r2.clone();
+                    let child = ctx.spawn_self(
+                        1,
+                        2,
+                        Arc::new(move |cctx: Ctx, mcw: Comm, parent: Comm| {
+                            // Child rank 1 spawns a grandchild group.
+                            let mut gchildren = Vec::new();
+                            if mcw.rank() == 1 {
+                                let r4 = r3.clone();
+                                gchildren.push(cctx.spawn_self(
+                                    0,
+                                    1,
+                                    Arc::new(move |gctx: Ctx, gmcw: Comm, gparent: Comm| {
+                                        r4.fetch_add(1, Ordering::SeqCst);
+                                        common_synch(&gctx, &gmcw, Some(&gparent), &[]);
+                                    }),
+                                ));
+                            }
+                            common_synch(&cctx, &mcw, Some(&parent), &gchildren);
+                        }),
+                    );
+                    children.push(child);
+                }
+                common_synch(&ctx, &wc, None, &children);
+                // Readiness flows upward to ranks in the synch
+                // subcommunicator (root + spawners). Childless non-root
+                // ranks are NOT gated — matching Listing 1: they issue no
+                // connects themselves and are gated later by the
+                // collective accept.
+                if wc.rank() == 0 {
+                    assert_eq!(r2.load(Ordering::SeqCst), 1);
+                }
+            }),
+        );
+        w.join_all().unwrap();
+        assert_eq!(reached.load(Ordering::SeqCst), 1);
+    }
+
+    /// The root of a group without children must still wait for sibling
+    /// ranks' children (the deviation from Listing 1 documented above).
+    #[test]
+    fn synch_root_without_children_still_gated() {
+        let w = world(2);
+        w.launch(
+            &[(0, 2)],
+            Arc::new(|ctx: Ctx, wc: Comm| {
+                // Rank 1 (not the root) spawns the only child group.
+                let mut children = Vec::new();
+                if wc.rank() == 1 {
+                    children.push(ctx.spawn_self(
+                        1,
+                        1,
+                        Arc::new(|cctx: Ctx, mcw: Comm, parent: Comm| {
+                            cctx.charge(0.05); // child is slow to be ready
+                            common_synch(&cctx, &mcw, Some(&parent), &[]);
+                        }),
+                    ));
+                }
+                let before = ctx.clock();
+                common_synch(&ctx, &wc, None, &children);
+                // Every source rank (including the childless root) must be
+                // gated past the slow child's readiness.
+                assert!(
+                    ctx.clock() >= before,
+                    "clock went backwards"
+                );
+                let _ = before;
+            }),
+        );
+        w.join_all().unwrap();
+    }
+
+    #[test]
+    fn terminate_zombies_signals_all_parked() {
+        use crate::mam::JobCtx;
+        let w = world(3);
+        w.launch(
+            &[(0, 3)],
+            Arc::new(|ctx: Ctx, wc: Comm| {
+                if wc.rank() == 2 {
+                    // Victims participate in the split (UNDEFINED color)
+                    // before parking, as the shrink driver does.
+                    let none = ctx.comm_split(&wc, None, wc.rank() as i64);
+                    assert!(none.is_none());
+                    let order = ctx.park_zombie();
+                    assert!(matches!(order, crate::simmpi::ZombieOrder::Terminate { .. }));
+                    return;
+                }
+                // Ranks 0-1 form the surviving app comm.
+                let sub = ctx.comm_split(&wc, Some(0), wc.rank() as i64).unwrap();
+                let zombie_pid = wc.local_pids()[2];
+                let job = JobCtx {
+                    app: sub,
+                    mcw: wc.clone(),
+                    epoch: 1,
+                    zombie_pids: vec![zombie_pid],
+                };
+                ctx.charge(0.01);
+                terminate_zombies(&ctx, &job);
+            }),
+        );
+        w.join_all().unwrap();
+    }
+}

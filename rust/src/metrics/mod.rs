@@ -1,0 +1,192 @@
+//! Metrics collection: reconfiguration records with per-phase breakdowns,
+//! node-return events (the TS-vs-ZS headline), and raw counters.
+
+use crate::topology::NodeId;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Phases of one reconfiguration, matching §4.6 of the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Planning + plan broadcast.
+    Plan,
+    /// Process spawning (all strategy steps).
+    Spawn,
+    /// §4.3 group synchronization.
+    Sync,
+    /// §4.4 binary connection (incl. final source/child connect).
+    Connect,
+    /// §4.5 rank reordering.
+    Reorder,
+    /// Data redistribution stage.
+    Redistrib,
+    /// Terminations / zombie transitions during shrink.
+    Shrink,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Plan => "plan",
+            Phase::Spawn => "spawn",
+            Phase::Sync => "sync",
+            Phase::Connect => "connect",
+            Phase::Reorder => "reorder",
+            Phase::Redistrib => "redistrib",
+            Phase::Shrink => "shrink",
+        }
+    }
+}
+
+/// One completed reconfiguration.
+#[derive(Clone, Debug)]
+pub struct ReconfigRecord {
+    /// Reconfiguration epoch (0-based).
+    pub epoch: u64,
+    /// `"baseline"` / `"merge"` etc.
+    pub method: String,
+    /// Strategy label (e.g. `"hypercube"`).
+    pub strategy: String,
+    /// Source / target process counts.
+    pub ns: usize,
+    pub nt: usize,
+    /// Virtual start and end of the reconfiguration.
+    pub t_start: f64,
+    pub t_end: f64,
+    /// Per-phase durations (virtual seconds).
+    pub phases: Vec<(Phase, f64)>,
+}
+
+impl ReconfigRecord {
+    pub fn total(&self) -> f64 {
+        self.t_end - self.t_start
+    }
+}
+
+/// A node returned to the RMS at a virtual time (TS makes these happen;
+/// ZS cannot).
+#[derive(Clone, Copy, Debug)]
+pub struct NodeReturn {
+    pub node: NodeId,
+    pub at: f64,
+}
+
+#[derive(Default)]
+struct Inner {
+    reconfigs: Vec<ReconfigRecord>,
+    node_returns: Vec<NodeReturn>,
+    zombies_created: u64,
+    counters: BTreeMap<&'static str, u64>,
+    /// Final rank->node layout after each reconfiguration (epoch, nodes in
+    /// rank order) — the §4.5 reordering invariant, recorded for tests and
+    /// debugging.
+    layouts: Vec<(u64, Vec<NodeId>)>,
+}
+
+/// Thread-safe metrics sink shared by the world and the MaM layer.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_reconfig(&self, rec: ReconfigRecord) {
+        self.inner.lock().unwrap().reconfigs.push(rec);
+    }
+
+    pub fn record_node_return(&self, node: NodeId, at: f64) {
+        self.inner.lock().unwrap().node_returns.push(NodeReturn { node, at });
+    }
+
+    pub fn record_zombies(&self, n: u64) {
+        self.inner.lock().unwrap().zombies_created += n;
+    }
+
+    pub fn record_layout(&self, epoch: u64, nodes: Vec<NodeId>) {
+        self.inner.lock().unwrap().layouts.push((epoch, nodes));
+    }
+
+    pub fn layouts(&self) -> Vec<(u64, Vec<NodeId>)> {
+        self.inner.lock().unwrap().layouts.clone()
+    }
+
+    pub fn count(&self, key: &'static str, n: u64) {
+        *self.inner.lock().unwrap().counters.entry(key).or_insert(0) += n;
+    }
+
+    pub fn reconfigs(&self) -> Vec<ReconfigRecord> {
+        self.inner.lock().unwrap().reconfigs.clone()
+    }
+
+    pub fn node_returns(&self) -> Vec<NodeReturn> {
+        self.inner.lock().unwrap().node_returns.clone()
+    }
+
+    pub fn zombies_created(&self) -> u64 {
+        self.inner.lock().unwrap().zombies_created
+    }
+
+    pub fn counter(&self, key: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn counters(&self) -> BTreeMap<&'static str, u64> {
+        self.inner.lock().unwrap().counters.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_read_back() {
+        let m = Metrics::new();
+        m.record_reconfig(ReconfigRecord {
+            epoch: 0,
+            method: "merge".into(),
+            strategy: "hypercube".into(),
+            ns: 112,
+            nt: 448,
+            t_start: 1.0,
+            t_end: 2.5,
+            phases: vec![(Phase::Spawn, 1.0), (Phase::Connect, 0.5)],
+        });
+        let recs = m.reconfigs();
+        assert_eq!(recs.len(), 1);
+        assert!((recs[0].total() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.count("spawn_calls", 2);
+        m.count("spawn_calls", 3);
+        assert_eq!(m.counter("spawn_calls"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn node_returns_and_zombies() {
+        let m = Metrics::new();
+        m.record_node_return(3, 1.25);
+        m.record_zombies(4);
+        assert_eq!(m.node_returns().len(), 1);
+        assert_eq!(m.node_returns()[0].node, 3);
+        assert_eq!(m.zombies_created(), 4);
+    }
+
+    #[test]
+    fn phase_names_unique() {
+        use Phase::*;
+        let all = [Plan, Spawn, Sync, Connect, Reorder, Redistrib, Shrink];
+        let mut names: Vec<_> = all.iter().map(|p| p.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), all.len());
+    }
+}

@@ -1,0 +1,173 @@
+//! Data redistribution (malleability stage 3): block-distributed data is
+//! remapped from `NS` source ranks to `NT` target ranks.
+//!
+//! The plan is the classic contiguous block remap: source rank `i` owns
+//! byte interval `[i*B/NS, (i+1)*B/NS)`, target rank `j` needs
+//! `[j*B/NT, (j+1)*B/NT)`; every non-empty intersection becomes one
+//! transfer. The plan is a pure function, so each rank derives its own
+//! sends/receives without coordination.
+//!
+//! Two executors cover the two method shapes:
+//! * [`execute_intercomm`] — Baseline: sources push to the fresh target
+//!   group across the parent/child inter-communicator.
+//! * [`execute_intracomm`] — Merge: old ranks redistribute to the merged
+//!   communicator's ranks in place (self-overlaps move nothing).
+
+use crate::simmpi::{tags, Comm, Ctx, Payload};
+
+/// One block transfer of the redistribution plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Transfer {
+    /// Source rank (in the old layout).
+    pub src: usize,
+    /// Destination rank (in the new layout).
+    pub dst: usize,
+    /// Bytes moved.
+    pub bytes: u64,
+}
+
+/// Compute the block remap plan for `total_bytes` of data moving from an
+/// `ns`-rank block layout to an `nt`-rank block layout.
+pub fn block_plan(ns: usize, nt: usize, total_bytes: u64) -> Vec<Transfer> {
+    assert!(ns > 0 && nt > 0, "block_plan with empty layout");
+    let mut out = Vec::new();
+    if total_bytes == 0 {
+        return out;
+    }
+    let b = total_bytes as u128;
+    let lo_src = |i: usize| (b * i as u128 / ns as u128) as u64;
+    let lo_dst = |j: usize| (b * j as u128 / nt as u128) as u64;
+    for i in 0..ns {
+        let (s0, s1) = (lo_src(i), lo_src(i + 1));
+        if s0 == s1 {
+            continue;
+        }
+        // Targets overlapping [s0, s1).
+        let j_first = (s0 as u128 * nt as u128 / b) as usize;
+        for j in j_first..nt {
+            let (d0, d1) = (lo_dst(j), lo_dst(j + 1));
+            if d0 >= s1 {
+                break;
+            }
+            let lo = s0.max(d0);
+            let hi = s1.min(d1);
+            if hi > lo {
+                out.push(Transfer { src: i, dst: j, bytes: hi - lo });
+            }
+        }
+    }
+    out
+}
+
+/// Baseline-shaped redistribution across an inter-communicator:
+/// `is_source` ranks send, target ranks receive. Both sides must pass the
+/// same `ns`, `nt` and `total_bytes`.
+pub fn execute_intercomm(
+    ctx: &Ctx,
+    inter: &Comm,
+    is_source: bool,
+    ns: usize,
+    nt: usize,
+    total_bytes: u64,
+) {
+    let plan = block_plan(ns, nt, total_bytes);
+    let me = inter.rank();
+    if is_source {
+        for t in plan.iter().filter(|t| t.src == me) {
+            ctx.send(inter, t.dst, tags::REDISTRIB, Payload::Bytes(t.bytes));
+        }
+    } else {
+        let expected = plan.iter().filter(|t| t.dst == me).count();
+        for _ in 0..expected {
+            let _ = ctx.recv(inter, crate::simmpi::ANY_SOURCE, tags::REDISTRIB);
+        }
+    }
+}
+
+/// Merge-shaped redistribution inside one (already merged) communicator:
+/// ranks `< ns` hold the old blocks; every rank `< nt` receives its new
+/// block. Self-overlaps (`src == dst`) move nothing.
+pub fn execute_intracomm(ctx: &Ctx, comm: &Comm, ns: usize, nt: usize, total_bytes: u64) {
+    let plan = block_plan(ns, nt, total_bytes);
+    let me = comm.rank();
+    // Post sends first (buffered), then drain receives.
+    if me < ns {
+        for t in plan.iter().filter(|t| t.src == me && t.dst != t.src) {
+            ctx.send(comm, t.dst, tags::REDISTRIB, Payload::Bytes(t.bytes));
+        }
+    }
+    if me < nt {
+        let expected = plan.iter().filter(|t| t.dst == me && t.src != t.dst).count();
+        for _ in 0..expected {
+            let _ = ctx.recv(comm, crate::simmpi::ANY_SOURCE, tags::REDISTRIB);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn covered(plan: &[Transfer], nt: usize, total: u64) -> bool {
+        // Every destination receives exactly its block size.
+        let b = total as u128;
+        (0..nt).all(|j| {
+            let need = (b * (j as u128 + 1) / nt as u128 - b * j as u128 / nt as u128) as u64;
+            let got: u64 = plan.iter().filter(|t| t.dst == j).map(|t| t.bytes).sum();
+            got == need
+        })
+    }
+
+    #[test]
+    fn expand_plan_covers_targets() {
+        let plan = block_plan(2, 8, 1 << 20);
+        assert!(covered(&plan, 8, 1 << 20));
+        // Each source fans out to 4 targets.
+        assert_eq!(plan.iter().filter(|t| t.src == 0).count(), 4);
+    }
+
+    #[test]
+    fn shrink_plan_covers_targets() {
+        let plan = block_plan(8, 2, 1 << 20);
+        assert!(covered(&plan, 2, 1 << 20));
+        assert_eq!(plan.len(), 8);
+    }
+
+    #[test]
+    fn identity_plan_is_self_transfers() {
+        let plan = block_plan(4, 4, 4096);
+        assert_eq!(plan.len(), 4);
+        assert!(plan.iter().all(|t| t.src == t.dst && t.bytes == 1024));
+    }
+
+    #[test]
+    fn uneven_sizes_conserve_bytes() {
+        for (ns, nt, total) in [(3usize, 7usize, 1000u64), (7, 3, 999), (5, 13, 12345)] {
+            let plan = block_plan(ns, nt, total);
+            let sum: u64 = plan.iter().map(|t| t.bytes).sum();
+            assert_eq!(sum, total, "ns={ns} nt={nt}");
+            assert!(covered(&plan, nt, total));
+        }
+    }
+
+    #[test]
+    fn zero_bytes_empty_plan() {
+        assert!(block_plan(4, 8, 0).is_empty());
+    }
+
+    #[test]
+    fn sources_send_contiguous_monotone_targets() {
+        let plan = block_plan(4, 6, 600);
+        for i in 0..4 {
+            let dsts: Vec<usize> =
+                plan.iter().filter(|t| t.src == i).map(|t| t.dst).collect();
+            let mut sorted = dsts.clone();
+            sorted.sort_unstable();
+            assert_eq!(dsts, sorted, "targets of one source are ordered");
+            // Contiguous range.
+            if let (Some(&lo), Some(&hi)) = (dsts.first(), dsts.last()) {
+                assert_eq!(dsts, (lo..=hi).collect::<Vec<_>>());
+            }
+        }
+    }
+}

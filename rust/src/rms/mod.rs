@@ -1,0 +1,325 @@
+//! Resource-manager (RMS) simulation: node pool accounting, allocation
+//! policies for the two testbeds, and a makespan/workload simulator that
+//! demonstrates the DRM benefit malleability exists for (§1-2 of the
+//! paper).
+
+pub mod workload;
+
+use crate::topology::{Cluster, NodeId};
+use std::collections::BTreeMap;
+
+/// A job's node allocation: ordered `(node, cores_used)` pairs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Allocation {
+    pub slots: Vec<(NodeId, u32)>,
+}
+
+impl Allocation {
+    pub fn new(slots: Vec<(NodeId, u32)>) -> Self {
+        Allocation { slots }
+    }
+
+    /// Total process count (one process per core, the paper's setup).
+    pub fn total_procs(&self) -> usize {
+        self.slots.iter().map(|&(_, c)| c as usize).sum()
+    }
+
+    pub fn nodes(&self) -> Vec<NodeId> {
+        self.slots.iter().map(|&(n, _)| n).collect()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Cores used on `node` (0 if not allocated).
+    pub fn cores_on(&self, node: NodeId) -> u32 {
+        self.slots.iter().find(|&&(n, _)| n == node).map_or(0, |&(_, c)| c)
+    }
+
+    /// Launch placements for [`crate::simmpi::World::launch`].
+    pub fn placements(&self) -> Vec<(NodeId, usize)> {
+        self.slots.iter().map(|&(n, c)| (n, c as usize)).collect()
+    }
+}
+
+/// Allocation policies matching the paper's evaluation setups.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocPolicy {
+    /// Whole homogeneous nodes in index order (MN5: full 112-core nodes).
+    WholeNodes,
+    /// NASP §5.3: balanced across the two node types (half 20-core IB
+    /// nodes, half 32-core Ethernet nodes); a single node uses the
+    /// 20-core type.
+    BalancedTypes,
+}
+
+/// The resource manager: tracks per-node free cores and grants/releases
+/// allocations. Reconfiguration *decisions* (when to resize, to what) come
+/// from the coordinator or the workload simulator; the RMS enforces
+/// capacity.
+#[derive(Clone, Debug)]
+pub struct Rms {
+    pub cluster: Cluster,
+    free: Vec<u32>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum RmsError {
+    #[error("not enough capacity: requested {requested} nodes, available {available}")]
+    Capacity { requested: usize, available: usize },
+    #[error("allocation conflicts with current occupancy on node {0}")]
+    Conflict(NodeId),
+}
+
+impl Rms {
+    pub fn new(cluster: Cluster) -> Self {
+        let free = cluster.nodes.iter().map(|n| n.cores).collect();
+        Rms { cluster, free }
+    }
+
+    /// Free cores on a node.
+    pub fn free_on(&self, node: NodeId) -> u32 {
+        self.free[node]
+    }
+
+    /// Nodes that are completely idle.
+    pub fn idle_nodes(&self) -> Vec<NodeId> {
+        (0..self.cluster.len())
+            .filter(|&n| self.free[n] == self.cluster.cores(n))
+            .collect()
+    }
+
+    /// Build (without claiming) an allocation of `n_nodes` under `policy`.
+    /// Node choice is deterministic: lowest-index idle nodes first.
+    pub fn plan_allocation(
+        &self,
+        n_nodes: usize,
+        policy: AllocPolicy,
+    ) -> Result<Allocation, RmsError> {
+        match policy {
+            AllocPolicy::WholeNodes => {
+                let idle = self.idle_nodes();
+                if idle.len() < n_nodes {
+                    return Err(RmsError::Capacity { requested: n_nodes, available: idle.len() });
+                }
+                Ok(Allocation::new(
+                    idle.into_iter().take(n_nodes).map(|n| (n, self.cluster.cores(n))).collect(),
+                ))
+            }
+            AllocPolicy::BalancedTypes => {
+                // Two type classes by core count (NASP: 20 and 32).
+                let mut by_type: BTreeMap<u32, Vec<NodeId>> = BTreeMap::new();
+                for n in self.idle_nodes() {
+                    by_type.entry(self.cluster.cores(n)).or_default().push(n);
+                }
+                let mut types: Vec<(u32, Vec<NodeId>)> = by_type.into_iter().collect();
+                if types.len() < 2 {
+                    // Degenerate: fall back to whole nodes.
+                    return self.plan_allocation(n_nodes, AllocPolicy::WholeNodes);
+                }
+                // Paper: a single node comes from the smaller-core type.
+                let (small_cores, small) = types.remove(0);
+                let (big_cores, big) = types.remove(0);
+                let half_small = n_nodes - n_nodes / 2; // odd counts favour the small type
+                let half_big = n_nodes / 2;
+                if small.len() < half_small || big.len() < half_big {
+                    return Err(RmsError::Capacity {
+                        requested: n_nodes,
+                        available: small.len() + big.len(),
+                    });
+                }
+                let mut slots = Vec::new();
+                for &n in small.iter().take(half_small) {
+                    slots.push((n, small_cores));
+                }
+                for &n in big.iter().take(half_big) {
+                    slots.push((n, big_cores));
+                }
+                Ok(Allocation::new(slots))
+            }
+        }
+    }
+
+    /// Claim an allocation (errors if any slot exceeds free capacity).
+    pub fn claim(&mut self, alloc: &Allocation) -> Result<(), RmsError> {
+        for &(node, cores) in &alloc.slots {
+            if self.free[node] < cores {
+                return Err(RmsError::Conflict(node));
+            }
+        }
+        for &(node, cores) in &alloc.slots {
+            self.free[node] -= cores;
+        }
+        Ok(())
+    }
+
+    /// Return cores to the pool.
+    pub fn release(&mut self, alloc: &Allocation) {
+        for &(node, cores) in &alloc.slots {
+            self.free[node] += cores;
+            assert!(
+                self.free[node] <= self.cluster.cores(node),
+                "released more cores than node {node} has"
+            );
+        }
+    }
+
+    /// Grow an allocation to `n_nodes` total, keeping current slots and
+    /// claiming additional idle nodes under `policy`. For
+    /// [`AllocPolicy::BalancedTypes`] the *total* composition stays
+    /// balanced (NASP §5.3: half of each node type, odd counts favouring
+    /// the small type), accounting for what the job already holds.
+    pub fn grow(
+        &mut self,
+        current: &Allocation,
+        n_nodes: usize,
+        policy: AllocPolicy,
+    ) -> Result<Allocation, RmsError> {
+        assert!(n_nodes >= current.n_nodes());
+        let extra = match policy {
+            AllocPolicy::WholeNodes => {
+                self.plan_allocation(n_nodes - current.n_nodes(), policy)?
+            }
+            AllocPolicy::BalancedTypes => {
+                let mut by_type: BTreeMap<u32, Vec<NodeId>> = BTreeMap::new();
+                for n in self.idle_nodes() {
+                    by_type.entry(self.cluster.cores(n)).or_default().push(n);
+                }
+                let mut types: Vec<(u32, Vec<NodeId>)> = by_type.into_iter().collect();
+                if types.len() < 2 {
+                    self.plan_allocation(n_nodes - current.n_nodes(), AllocPolicy::WholeNodes)?
+                } else {
+                    let (small_cores, small) = types.remove(0);
+                    let (big_cores, big) = types.remove(0);
+                    let have_small =
+                        current.slots.iter().filter(|&&(_, c)| c == small_cores).count();
+                    let have_big = current.n_nodes() - have_small;
+                    let want_small = n_nodes - n_nodes / 2;
+                    let want_big = n_nodes / 2;
+                    let need_small = want_small.saturating_sub(have_small);
+                    let need_big = want_big.saturating_sub(have_big);
+                    // If the current composition is skewed, fill the rest
+                    // from whatever remains.
+                    let mut remainder =
+                        (n_nodes - current.n_nodes()).saturating_sub(need_small + need_big);
+                    if small.len() < need_small || big.len() < need_big {
+                        return Err(RmsError::Capacity {
+                            requested: n_nodes,
+                            available: current.n_nodes() + small.len() + big.len(),
+                        });
+                    }
+                    let mut slots = Vec::new();
+                    for &n in small.iter().take(need_small) {
+                        slots.push((n, small_cores));
+                    }
+                    for &n in big.iter().take(need_big) {
+                        slots.push((n, big_cores));
+                    }
+                    let leftovers = small
+                        .iter()
+                        .skip(need_small)
+                        .map(|&n| (n, small_cores))
+                        .chain(big.iter().skip(need_big).map(|&n| (n, big_cores)));
+                    for slot in leftovers {
+                        if remainder == 0 {
+                            break;
+                        }
+                        slots.push(slot);
+                        remainder -= 1;
+                    }
+                    if remainder > 0 {
+                        return Err(RmsError::Capacity {
+                            requested: n_nodes,
+                            available: current.n_nodes() + small.len() + big.len(),
+                        });
+                    }
+                    Allocation::new(slots)
+                }
+            }
+        };
+        self.claim(&extra)?;
+        let mut slots = current.slots.clone();
+        slots.extend(extra.slots);
+        Ok(Allocation::new(slots))
+    }
+
+    /// Shrink an allocation to its first `n_nodes` slots, releasing the
+    /// rest (§4.6: expansion nodes go back first; the initial allocation
+    /// is released only when everything beyond it is gone).
+    pub fn shrink(&mut self, current: &Allocation, n_nodes: usize) -> Allocation {
+        assert!(n_nodes <= current.n_nodes());
+        let (keep, drop) = current.slots.split_at(n_nodes);
+        self.release(&Allocation::new(drop.to_vec()));
+        Allocation::new(keep.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Cluster;
+
+    #[test]
+    fn whole_node_allocation_mn5() {
+        let rms = Rms::new(Cluster::mn5());
+        let a = rms.plan_allocation(4, AllocPolicy::WholeNodes).unwrap();
+        assert_eq!(a.n_nodes(), 4);
+        assert_eq!(a.total_procs(), 4 * 112);
+        assert_eq!(a.nodes(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn balanced_allocation_nasp() {
+        let rms = Rms::new(Cluster::nasp());
+        // 1 node -> the 20-core type (paper §5.3).
+        let a1 = rms.plan_allocation(1, AllocPolicy::BalancedTypes).unwrap();
+        assert_eq!(a1.total_procs(), 20);
+        // 4 nodes -> 2x20 + 2x32 = 104 procs (52 per node pair).
+        let a4 = rms.plan_allocation(4, AllocPolicy::BalancedTypes).unwrap();
+        assert_eq!(a4.total_procs(), 104);
+        let mut cores: Vec<u32> = a4.slots.iter().map(|&(_, c)| c).collect();
+        cores.sort_unstable();
+        assert_eq!(cores, vec![20, 20, 32, 32]);
+    }
+
+    #[test]
+    fn claim_and_release_roundtrip() {
+        let mut rms = Rms::new(Cluster::mini(3, 4));
+        let a = rms.plan_allocation(2, AllocPolicy::WholeNodes).unwrap();
+        rms.claim(&a).unwrap();
+        assert_eq!(rms.idle_nodes(), vec![2]);
+        rms.release(&a);
+        assert_eq!(rms.idle_nodes(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn capacity_errors() {
+        let mut rms = Rms::new(Cluster::mini(2, 4));
+        let a = rms.plan_allocation(2, AllocPolicy::WholeNodes).unwrap();
+        rms.claim(&a).unwrap();
+        assert!(rms.plan_allocation(1, AllocPolicy::WholeNodes).is_err());
+        // Double-claim conflicts.
+        assert!(rms.claim(&a).is_err());
+    }
+
+    #[test]
+    fn grow_keeps_existing_slots_first() {
+        let mut rms = Rms::new(Cluster::mini(4, 2));
+        let a = rms.plan_allocation(1, AllocPolicy::WholeNodes).unwrap();
+        rms.claim(&a).unwrap();
+        let grown = rms.grow(&a, 3, AllocPolicy::WholeNodes).unwrap();
+        assert_eq!(grown.nodes(), vec![0, 1, 2]);
+        assert_eq!(rms.idle_nodes(), vec![3]);
+    }
+
+    #[test]
+    fn shrink_releases_tail_nodes() {
+        let mut rms = Rms::new(Cluster::mini(4, 2));
+        let a = rms.plan_allocation(4, AllocPolicy::WholeNodes).unwrap();
+        rms.claim(&a).unwrap();
+        let shrunk = rms.shrink(&a, 2);
+        assert_eq!(shrunk.nodes(), vec![0, 1]);
+        assert_eq!(rms.idle_nodes(), vec![2, 3]);
+    }
+}

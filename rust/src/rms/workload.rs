@@ -1,0 +1,277 @@
+//! Makespan/workload simulation: the system-level motivation for
+//! malleability (§1: "reduce workload makespan, substantially decreasing
+//! job waiting times").
+//!
+//! An event-driven scheduler runs a queue of jobs over a cluster. Rigid
+//! jobs hold a fixed node count; malleable jobs may expand into idle
+//! nodes and shrink when queued jobs need room. Reconfiguration costs are
+//! charged from a [`ReconfigCostModel`], typically calibrated with the
+//! medians measured by the figure harnesses — linking the paper's
+//! microbenchmarks to the system-level payoff.
+
+use crate::util::rng::Rng;
+
+/// Cost charged to a malleable job when it resizes.
+#[derive(Clone, Copy, Debug)]
+pub struct ReconfigCostModel {
+    /// Seconds per expansion (e.g. median parallel-Merge expansion).
+    pub expand_cost: f64,
+    /// Seconds per shrink (e.g. median TS shrink — the paper's payoff).
+    pub shrink_cost: f64,
+}
+
+impl ReconfigCostModel {
+    /// TS-style costs (parallel spawning beforehand): cheap shrink.
+    pub fn ts(expand_cost: f64) -> Self {
+        ReconfigCostModel { expand_cost, shrink_cost: 0.002 }
+    }
+
+    /// SS-style costs: shrink as expensive as a respawn.
+    pub fn ss(expand_cost: f64) -> Self {
+        ReconfigCostModel { expand_cost, shrink_cost: expand_cost }
+    }
+}
+
+/// One job of the workload.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub arrival: f64,
+    /// Total node-seconds of work.
+    pub work: f64,
+    /// Minimum nodes to run.
+    pub min_nodes: usize,
+    /// Maximum useful nodes.
+    pub max_nodes: usize,
+    pub malleable: bool,
+}
+
+/// Result of a workload simulation.
+#[derive(Clone, Debug)]
+pub struct WorkloadResult {
+    pub makespan: f64,
+    pub mean_wait: f64,
+    pub mean_turnaround: f64,
+    pub reconfigurations: usize,
+}
+
+#[derive(Clone, Debug)]
+struct Running {
+    job: usize,
+    nodes: usize,
+    remaining_work: f64,
+    last_update: f64,
+    start: f64,
+}
+
+/// Simulate the workload. When `drm` is false, malleable jobs behave
+/// rigidly at `min_nodes`; when true, they expand into idle nodes
+/// (greedily, up to `max_nodes`) and shrink back to `min_nodes` when a
+/// queued job needs nodes, paying `costs` per reconfiguration.
+pub fn simulate(
+    total_nodes: usize,
+    jobs: &[JobSpec],
+    drm: bool,
+    costs: ReconfigCostModel,
+) -> WorkloadResult {
+    assert!(jobs.windows(2).all(|w| w[0].arrival <= w[1].arrival), "jobs sorted by arrival");
+    let mut queue: Vec<usize> = Vec::new();
+    let mut running: Vec<Running> = Vec::new();
+    let mut free = total_nodes;
+    let mut next_arrival = 0usize;
+    let mut now = 0.0f64;
+    let mut waits = vec![0.0f64; jobs.len()];
+    let mut finishes = vec![0.0f64; jobs.len()];
+    let mut reconfigs = 0usize;
+
+    let progress = |r: &mut Running, to: f64| {
+        r.remaining_work -= (to - r.last_update) * r.nodes as f64;
+        r.last_update = to;
+    };
+
+    loop {
+        // Advance work to `now`, finish jobs, admit queue, rebalance.
+        // 1. Admit from queue (FIFO) at min_nodes.
+        let mut admitted = true;
+        while admitted {
+            admitted = false;
+            if let Some(&jid) = queue.first() {
+                let need = jobs[jid].min_nodes;
+                if free < need && drm {
+                    // Shrink malleable jobs back toward min_nodes to make room.
+                    for r in running.iter_mut() {
+                        if !jobs[r.job].malleable || r.nodes <= jobs[r.job].min_nodes {
+                            continue;
+                        }
+                        let give = (r.nodes - jobs[r.job].min_nodes).min(need - free);
+                        if give > 0 {
+                            progress(r, now);
+                            r.nodes -= give;
+                            free += give;
+                            // TS shrink: cost charged as lost work time.
+                            r.remaining_work += costs.shrink_cost * r.nodes as f64;
+                            reconfigs += 1;
+                        }
+                        if free >= need {
+                            break;
+                        }
+                    }
+                }
+                if free >= need {
+                    queue.remove(0);
+                    free -= need;
+                    waits[jid] = now - jobs[jid].arrival;
+                    running.push(Running {
+                        job: jid,
+                        nodes: need,
+                        remaining_work: jobs[jid].work,
+                        last_update: now,
+                        start: now,
+                    });
+                    admitted = true;
+                }
+            }
+        }
+        // 2. Expand malleable jobs into remaining idle nodes.
+        if drm && queue.is_empty() && free > 0 {
+            for r in running.iter_mut() {
+                if !jobs[r.job].malleable {
+                    continue;
+                }
+                let grow = (jobs[r.job].max_nodes - r.nodes).min(free);
+                if grow > 0 {
+                    progress(r, now);
+                    r.nodes += grow;
+                    free -= grow;
+                    r.remaining_work += costs.expand_cost * r.nodes as f64;
+                    reconfigs += 1;
+                }
+                if free == 0 {
+                    break;
+                }
+            }
+        }
+
+        // 3. Next event: a finish or an arrival.
+        let next_finish = running
+            .iter()
+            .map(|r| r.last_update + r.remaining_work.max(0.0) / r.nodes as f64)
+            .fold(f64::INFINITY, f64::min);
+        let arrival = jobs.get(next_arrival).map(|j| j.arrival).unwrap_or(f64::INFINITY);
+        let t = next_finish.min(arrival);
+        if !t.is_finite() {
+            break;
+        }
+        now = t;
+        for r in running.iter_mut() {
+            progress(r, now);
+        }
+        if arrival <= next_finish && next_arrival < jobs.len() {
+            queue.push(next_arrival);
+            next_arrival += 1;
+        }
+        // Finish all jobs that ran dry.
+        let mut i = 0;
+        while i < running.len() {
+            if running[i].remaining_work <= 1e-9 {
+                let r = running.remove(i);
+                free += r.nodes;
+                finishes[r.job] = now;
+                let _ = r.start;
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    let makespan = finishes.iter().cloned().fold(0.0, f64::max);
+    let mean_wait = waits.iter().sum::<f64>() / jobs.len() as f64;
+    let mean_turnaround = finishes
+        .iter()
+        .zip(jobs)
+        .map(|(f, j)| f - j.arrival)
+        .sum::<f64>()
+        / jobs.len() as f64;
+    WorkloadResult { makespan, mean_wait, mean_turnaround, reconfigurations: reconfigs }
+}
+
+/// Generate a synthetic workload: a mix of rigid and malleable jobs with
+/// exponential-ish interarrivals.
+pub fn synthetic_workload(
+    n_jobs: usize,
+    total_nodes: usize,
+    malleable_frac: f64,
+    seed: u64,
+) -> Vec<JobSpec> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    for _ in 0..n_jobs {
+        t += -((1.0 - rng.f64()).ln()) * 30.0; // mean 30s interarrival
+        let min_nodes = 1 + rng.below((total_nodes / 4).max(1) as u64) as usize;
+        let max_nodes = (min_nodes * 4).min(total_nodes);
+        out.push(JobSpec {
+            arrival: t,
+            work: 60.0 * min_nodes as f64 * (0.5 + rng.f64() * 2.0),
+            min_nodes,
+            max_nodes,
+            malleable: rng.f64() < malleable_frac,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple_jobs() -> Vec<JobSpec> {
+        vec![
+            JobSpec { arrival: 0.0, work: 400.0, min_nodes: 2, max_nodes: 8, malleable: true },
+            JobSpec { arrival: 10.0, work: 100.0, min_nodes: 2, max_nodes: 2, malleable: false },
+            JobSpec { arrival: 20.0, work: 100.0, min_nodes: 2, max_nodes: 2, malleable: false },
+        ]
+    }
+
+    #[test]
+    fn drm_improves_makespan() {
+        let jobs = simple_jobs();
+        let rigid = simulate(8, &jobs, false, ReconfigCostModel::ts(1.0));
+        let drm = simulate(8, &jobs, true, ReconfigCostModel::ts(1.0));
+        assert!(
+            drm.makespan < rigid.makespan,
+            "DRM {} vs rigid {}",
+            drm.makespan,
+            rigid.makespan
+        );
+        assert!(drm.reconfigurations > 0);
+    }
+
+    #[test]
+    fn cheap_shrink_beats_expensive_shrink() {
+        // With many arrivals forcing repeated shrinks, TS-cost DRM should
+        // finish no later than SS-cost DRM.
+        let jobs = synthetic_workload(30, 16, 0.6, 42);
+        let ts = simulate(16, &jobs, true, ReconfigCostModel::ts(1.0));
+        let ss = simulate(16, &jobs, true, ReconfigCostModel::ss(1.0));
+        assert!(ts.makespan <= ss.makespan + 1e-9);
+    }
+
+    #[test]
+    fn all_jobs_finish() {
+        let jobs = synthetic_workload(20, 8, 0.5, 7);
+        let res = simulate(8, &jobs, true, ReconfigCostModel::ts(0.5));
+        assert!(res.makespan.is_finite() && res.makespan > 0.0);
+        assert!(res.mean_turnaround >= res.mean_wait);
+    }
+
+    #[test]
+    fn conservation_no_drm_equals_fifo() {
+        let jobs = vec![
+            JobSpec { arrival: 0.0, work: 80.0, min_nodes: 4, max_nodes: 4, malleable: false },
+            JobSpec { arrival: 0.0, work: 80.0, min_nodes: 4, max_nodes: 4, malleable: false },
+        ];
+        // 4 nodes: strictly sequential -> makespan = 20 + 20.
+        let res = simulate(4, &jobs, false, ReconfigCostModel::ts(1.0));
+        assert!((res.makespan - 40.0).abs() < 1e-6, "makespan = {}", res.makespan);
+    }
+}

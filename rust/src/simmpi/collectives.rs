@@ -1,0 +1,354 @@
+//! Collectives: a generic clock-reconciling rendezvous engine plus the
+//! MPI operations the protocol layers use (`barrier`, `bcast`,
+//! `allgather`, `allreduce`, `comm_split`, `intercomm_merge`).
+//!
+//! Collective instances are matched by `(communicator id, per-rank call
+//! sequence number)` — i.e. by call order, mirroring how MPI matches
+//! collectives on a communicator. The last participant to arrive runs the
+//! `finish` closure, which computes the shared outcome and the
+//! synchronized result clock (`max(participant clocks) + cost`).
+
+use super::comm::{Comm, CommInner, Side};
+use super::ctx::Ctx;
+use super::world::{RvCell, RvOutcome, RvState, World};
+use super::Payload;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::sync::Mutex;
+
+/// Zero-copy handle to an allgather outcome shared by all participants.
+pub struct AllgatherResult {
+    out: Arc<RvOutcome>,
+}
+
+impl AllgatherResult {
+    /// The gathered payloads in rank order.
+    pub fn as_slice(&self) -> &[Payload] {
+        match &*self.out {
+            RvOutcome::Payloads(ps) => ps,
+            _ => unreachable!("allgather outcome is always Payloads"),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.as_slice().is_empty()
+    }
+}
+
+impl std::ops::Index<usize> for AllgatherResult {
+    type Output = Payload;
+    fn index(&self, i: usize) -> &Payload {
+        &self.as_slice()[i]
+    }
+}
+
+impl World {
+    /// Generic rendezvous. `key` identifies the instance, `expected` the
+    /// participant count, `index` this participant's slot, `clock` its
+    /// arrival clock. Returns the shared `(result_clock, outcome)`.
+    pub(crate) fn rendezvous<F>(
+        &self,
+        key: (super::CommId, u64),
+        expected: usize,
+        index: usize,
+        clock: f64,
+        payload: Payload,
+        finish: F,
+    ) -> (f64, Arc<RvOutcome>)
+    where
+        F: FnOnce(&World, &RvState) -> (f64, RvOutcome),
+    {
+        let cell = {
+            let mut map = self.rendezvous.lock().unwrap_or_else(|e| e.into_inner());
+            map.entry(key)
+                .or_insert_with(|| {
+                    Arc::new(RvCell {
+                        st: Mutex::new(RvState {
+                            expected,
+                            arrived: 0,
+                            left: 0,
+                            max_clock: f64::NEG_INFINITY,
+                            contrib: (0..expected).map(|_| None).collect(),
+                            outcome: None,
+                        }),
+                        cv: std::sync::Condvar::new(),
+                    })
+                })
+                .clone()
+        };
+
+        let mut st = cell.st.lock().unwrap_or_else(|e| e.into_inner());
+        assert_eq!(
+            st.expected, expected,
+            "collective participant-count mismatch on comm {} seq {} (protocol bug)",
+            key.0, key.1
+        );
+        assert!(
+            st.contrib[index].is_none(),
+            "duplicate collective participant index {index} on comm {} seq {}",
+            key.0,
+            key.1
+        );
+        st.contrib[index] = Some((clock, payload));
+        st.arrived += 1;
+        if clock > st.max_clock {
+            st.max_clock = clock;
+        }
+
+        if st.arrived == expected {
+            let (t, out) = finish(self, &st);
+            st.outcome = Some((t, Arc::new(out)));
+            cell.cv.notify_all();
+        } else {
+            while st.outcome.is_none() {
+                let (guard, _) = cell.cv.wait_timeout(st, World::wait_tick()).unwrap_or_else(|e| e.into_inner());
+                st = guard;
+                if st.outcome.is_some() {
+                    break;
+                }
+                drop(st);
+                self.check_abort(&format!("collective(comm={}, seq={})", key.0, key.1));
+                st = cell.st.lock().unwrap_or_else(|e| e.into_inner());
+            }
+        }
+
+        let result = st.outcome.as_ref().map(|(t, o)| (*t, o.clone())).unwrap();
+        st.left += 1;
+        let all_left = st.left == expected;
+        drop(st);
+        if all_left {
+            self.rendezvous.lock().unwrap_or_else(|e| e.into_inner()).remove(&key);
+        }
+        result
+    }
+}
+
+/// Compute the default collective cost: tree stages over the worst link
+/// among the participants.
+fn default_cost(world: &World, st: &RvState, procs: &[super::ProcId], bytes: u64) -> f64 {
+    let link = world.group_link(procs);
+    world.coll_cost(st.expected, bytes, link)
+}
+
+impl Ctx {
+    fn participants(&self, comm: &Comm, union: bool) -> (Vec<super::ProcId>, usize, usize) {
+        if union && comm.is_inter() {
+            let mut procs = comm.inner.group_a.clone();
+            procs.extend(comm.inner.group_b.as_ref().unwrap().iter().copied());
+            let idx = comm.union_index();
+            let n = procs.len();
+            (procs, idx, n)
+        } else {
+            let procs = comm.local_group().to_vec();
+            (procs, comm.rank(), comm.size())
+        }
+    }
+
+    /// `MPI_Barrier` over the local group.
+    pub fn barrier(&self, comm: &Comm) {
+        let (procs, idx, n) = self.participants(comm, false);
+        let key = (comm.id(), self.next_seq(comm.id()));
+        let (t, _) = self.world.rendezvous(key, n, idx, self.clock(), Payload::Token, |w, st| {
+            let cost = default_cost(w, st, &procs, 8);
+            (st.max_clock + cost, RvOutcome::Clock)
+        });
+        self.sync_to(t);
+    }
+
+    /// `MPI_Bcast`: `root` supplies `Some(payload)`, everyone receives it.
+    pub fn bcast(&self, comm: &Comm, root: usize, payload: Option<Payload>) -> Payload {
+        let (procs, idx, n) = self.participants(comm, false);
+        if idx == root {
+            assert!(payload.is_some(), "bcast root must supply a payload");
+        }
+        let key = (comm.id(), self.next_seq(comm.id()));
+        let contribution = payload.unwrap_or(Payload::Token);
+        let (t, out) =
+            self.world.rendezvous(key, n, idx, self.clock(), contribution, move |w, st| {
+                let (_, root_payload) = st.contrib[root].as_ref().unwrap();
+                let bytes = root_payload.size_bytes();
+                let cost = default_cost(w, st, &procs, bytes);
+                (st.max_clock + cost, RvOutcome::Payload(root_payload.clone()))
+            });
+        self.sync_to(t);
+        match &*out {
+            RvOutcome::Payload(p) => p.clone(),
+            _ => unreachable!(),
+        }
+    }
+
+    /// `MPI_Allgather`: everyone contributes, everyone gets all
+    /// contributions in rank order. The result is a zero-copy view of the
+    /// shared outcome (cloning a Vec<Payload> per rank made allgather
+    /// O(n^2) in Arc traffic; see EXPERIMENTS.md §Perf).
+    pub fn allgather(&self, comm: &Comm, payload: Payload) -> AllgatherResult {
+        let (procs, idx, n) = self.participants(comm, false);
+        let key = (comm.id(), self.next_seq(comm.id()));
+        let (t, out) = self.world.rendezvous(key, n, idx, self.clock(), payload, move |w, st| {
+            let bytes: u64 = st
+                .contrib
+                .iter()
+                .map(|c| c.as_ref().map_or(0, |(_, p)| p.size_bytes()))
+                .sum();
+            let cost = default_cost(w, st, &procs, bytes);
+            let all = st
+                .contrib
+                .iter()
+                .map(|c| c.as_ref().unwrap().1.clone())
+                .collect::<Vec<_>>();
+            (st.max_clock + cost, RvOutcome::Payloads(all))
+        });
+        self.sync_to(t);
+        debug_assert!(matches!(&*out, RvOutcome::Payloads(_)));
+        AllgatherResult { out }
+    }
+
+    /// `MPI_Allreduce` with a scalar f64 and a reduction operator.
+    pub fn allreduce_f64(&self, comm: &Comm, value: f64, op: fn(f64, f64) -> f64) -> f64 {
+        let (procs, idx, n) = self.participants(comm, false);
+        let key = (comm.id(), self.next_seq(comm.id()));
+        let (t, out) = self.world.rendezvous(
+            key,
+            n,
+            idx,
+            self.clock(),
+            Payload::f64s(vec![value]),
+            move |w, st| {
+                let mut acc: Option<f64> = None;
+                for c in &st.contrib {
+                    let v = c.as_ref().unwrap().1.as_f64s()[0];
+                    acc = Some(match acc {
+                        None => v,
+                        Some(a) => op(a, v),
+                    });
+                }
+                let cost = default_cost(w, st, &procs, 8);
+                (st.max_clock + cost, RvOutcome::Payload(Payload::f64s(vec![acc.unwrap()])))
+            },
+        );
+        self.sync_to(t);
+        match &*out {
+            RvOutcome::Payload(p) => p.as_f64s()[0],
+            _ => unreachable!(),
+        }
+    }
+
+    /// `MPI_Comm_split`. `color == None` mirrors `MPI_UNDEFINED` (the rank
+    /// gets no new communicator). Ranks within a color are ordered by
+    /// `(key, old rank)`.
+    pub fn comm_split(&self, comm: &Comm, color: Option<i64>, key_order: i64) -> Option<Comm> {
+        const UNDEF: i64 = i64::MIN;
+        let (procs, idx, n) = self.participants(comm, false);
+        let rv_key = (comm.id(), self.next_seq(comm.id()));
+        let color_val = color.unwrap_or(UNDEF);
+        let procs_for_finish = procs.clone();
+        let (t, out) = self.world.rendezvous(
+            rv_key,
+            n,
+            idx,
+            self.clock(),
+            Payload::i64s(vec![color_val, key_order]),
+            move |w, st| {
+                // Group indices by color, order by (key, old index).
+                let mut by_color: HashMap<i64, Vec<(i64, usize)>> = HashMap::new();
+                for (i, c) in st.contrib.iter().enumerate() {
+                    let v = c.as_ref().unwrap().1.as_i64s().to_vec();
+                    if v[0] != UNDEF {
+                        by_color.entry(v[0]).or_default().push((v[1], i));
+                    }
+                }
+                let mut assignments: HashMap<usize, (Arc<CommInner>, Side, usize)> =
+                    HashMap::new();
+                let mut colors: Vec<i64> = by_color.keys().copied().collect();
+                colors.sort_unstable();
+                for color in colors {
+                    let mut members = by_color.remove(&color).unwrap();
+                    members.sort_unstable();
+                    let inner = Arc::new(CommInner {
+                        id: w.alloc_comm_id(),
+                        group_a: members.iter().map(|&(_, i)| procs_for_finish[i]).collect(),
+                        group_b: None,
+                    });
+                    for (rank, &(_, i)) in members.iter().enumerate() {
+                        assignments.insert(i, (inner.clone(), Side::A, rank));
+                    }
+                }
+                let cost = default_cost(w, st, &procs_for_finish, 16);
+                (st.max_clock + cost, RvOutcome::NewComms(assignments))
+            },
+        );
+        self.sync_to(t);
+        match &*out {
+            RvOutcome::NewComms(map) => {
+                map.get(&idx).map(|(inner, side, rank)| Comm::new(inner.clone(), *side, *rank))
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// `MPI_Intercomm_merge`: all ranks of both groups of an
+    /// inter-communicator build a single intra-communicator. The group
+    /// passing `high = false` occupies the low ranks (ties broken by side
+    /// A first, as MPI leaves it implementation-defined).
+    pub fn intercomm_merge(&self, inter: &Comm, high: bool) -> Comm {
+        assert!(inter.is_inter(), "intercomm_merge on an intra-communicator");
+        let (procs, idx, n) = self.participants(inter, true);
+        let rv_key = (inter.id(), self.next_seq(inter.id()));
+        let inner_ref = inter.inner.clone();
+        let (t, out) = self.world.rendezvous(
+            rv_key,
+            n,
+            idx,
+            self.clock(),
+            Payload::i64s(vec![high as i64]),
+            move |w, st| {
+                let len_a = inner_ref.group_a.len();
+                let high_a = st.contrib[0].as_ref().unwrap().1.as_i64s()[0] == 1;
+                let high_b = st.contrib[len_a].as_ref().unwrap().1.as_i64s()[0] == 1;
+                let a_first = match (high_a, high_b) {
+                    (false, true) => true,
+                    (true, false) => false,
+                    _ => true, // equal flags: implementation-defined; A first
+                };
+                let b_group = inner_ref.group_b.as_ref().unwrap();
+                let members: Vec<super::ProcId> = if a_first {
+                    inner_ref.group_a.iter().chain(b_group.iter()).copied().collect()
+                } else {
+                    b_group.iter().chain(inner_ref.group_a.iter()).copied().collect()
+                };
+                let merged = Arc::new(CommInner {
+                    id: w.alloc_comm_id(),
+                    group_a: members.clone(),
+                    group_b: None,
+                });
+                let mut assignments: HashMap<usize, (Arc<CommInner>, Side, usize)> =
+                    HashMap::new();
+                for (rank, _) in members.iter().enumerate() {
+                    // Map union index back: union order is A then B.
+                    let union_idx = if a_first {
+                        rank
+                    } else if rank < b_group.len() {
+                        len_a + rank
+                    } else {
+                        rank - b_group.len()
+                    };
+                    assignments.insert(union_idx, (merged.clone(), Side::A, rank));
+                }
+                let cost = default_cost(w, st, &procs, 16);
+                (st.max_clock + cost, RvOutcome::NewComms(assignments))
+            },
+        );
+        self.sync_to(t);
+        match &*out {
+            RvOutcome::NewComms(map) => {
+                let (inner, side, rank) = map.get(&idx).expect("merge must include every rank");
+                Comm::new(inner.clone(), *side, *rank)
+            }
+            _ => unreachable!(),
+        }
+    }
+}

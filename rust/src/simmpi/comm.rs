@@ -1,0 +1,170 @@
+//! Communicators: intra-communicators (one process group) and
+//! inter-communicators (two groups, as produced by `spawn`, `accept` and
+//! `connect`).
+//!
+//! A [`Comm`] is a per-rank *handle*: it shares the immutable
+//! [`CommInner`] (identity + membership) and records which side the
+//! holding rank is on and its rank within that side's group.
+
+use super::world::ProcId;
+use std::sync::Arc;
+
+/// Globally unique communicator identity (context id in MPI terms);
+/// message envelopes and collective rendezvous are matched on it.
+pub type CommId = u64;
+
+/// Which group of an inter-communicator a handle belongs to. For
+/// intra-communicators the side is always [`Side::A`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Side {
+    A,
+    B,
+}
+
+/// Immutable membership record shared by all handles of a communicator.
+#[derive(Debug)]
+pub struct CommInner {
+    pub id: CommId,
+    /// Group A (the only group for intra-communicators).
+    pub group_a: Vec<ProcId>,
+    /// Group B; `Some` exactly when this is an inter-communicator.
+    pub group_b: Option<Vec<ProcId>>,
+}
+
+impl CommInner {
+    pub fn is_inter(&self) -> bool {
+        self.group_b.is_some()
+    }
+
+    pub fn group(&self, side: Side) -> &[ProcId] {
+        match side {
+            Side::A => &self.group_a,
+            Side::B => self.group_b.as_deref().expect("no group B on intracomm"),
+        }
+    }
+
+    /// Total processes across both groups.
+    pub fn total(&self) -> usize {
+        self.group_a.len() + self.group_b.as_ref().map_or(0, |g| g.len())
+    }
+}
+
+/// A per-rank communicator handle.
+#[derive(Clone, Debug)]
+pub struct Comm {
+    pub(crate) inner: Arc<CommInner>,
+    pub(crate) side: Side,
+    pub(crate) my_rank: usize,
+}
+
+impl Comm {
+    pub(crate) fn new(inner: Arc<CommInner>, side: Side, my_rank: usize) -> Self {
+        Comm { inner, side, my_rank }
+    }
+
+    /// Communicator identity.
+    pub fn id(&self) -> CommId {
+        self.inner.id
+    }
+
+    /// This rank within the local group (MPI_Comm_rank).
+    pub fn rank(&self) -> usize {
+        self.my_rank
+    }
+
+    /// Local group size (MPI_Comm_size).
+    pub fn size(&self) -> usize {
+        self.local_group().len()
+    }
+
+    /// Remote group size (inter-communicators; MPI_Comm_remote_size).
+    pub fn remote_size(&self) -> usize {
+        self.remote_group().map_or(0, |g| g.len())
+    }
+
+    /// True for inter-communicators.
+    pub fn is_inter(&self) -> bool {
+        self.inner.is_inter()
+    }
+
+    pub(crate) fn local_group(&self) -> &[ProcId] {
+        self.inner.group(self.side)
+    }
+
+    /// Process ids of the local group (rank order). Public so higher
+    /// layers (MaM bookkeeping, RMS accounting) can map ranks to nodes.
+    pub fn local_pids(&self) -> &[ProcId] {
+        self.local_group()
+    }
+
+    pub(crate) fn remote_group(&self) -> Option<&[ProcId]> {
+        match (self.side, &self.inner.group_b) {
+            (Side::A, Some(_)) => Some(self.inner.group(Side::B)),
+            (Side::B, _) => Some(self.inner.group(Side::A)),
+            (Side::A, None) => None,
+        }
+    }
+
+    /// Index of this rank in the *union* ordering (group A then group B) —
+    /// used as the participant index for union rendezvous (merge).
+    pub(crate) fn union_index(&self) -> usize {
+        match self.side {
+            Side::A => self.my_rank,
+            Side::B => self.inner.group_a.len() + self.my_rank,
+        }
+    }
+
+    /// The process id a message addressed to `rank` should reach:
+    /// local group for intra-comms, remote group for inter-comms
+    /// (matching MPI point-to-point semantics on inter-communicators).
+    pub(crate) fn peer(&self, rank: usize) -> ProcId {
+        match self.remote_group() {
+            Some(remote) => remote[rank],
+            None => self.local_group()[rank],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inner(a: usize, b: Option<usize>) -> Arc<CommInner> {
+        Arc::new(CommInner {
+            id: 7,
+            group_a: (0..a as u64).collect(),
+            group_b: b.map(|n| (100..100 + n as u64).collect()),
+        })
+    }
+
+    #[test]
+    fn intracomm_basics() {
+        let c = Comm::new(inner(4, None), Side::A, 2);
+        assert_eq!(c.size(), 4);
+        assert_eq!(c.rank(), 2);
+        assert!(!c.is_inter());
+        assert_eq!(c.remote_size(), 0);
+        assert_eq!(c.peer(3), 3);
+        assert_eq!(c.union_index(), 2);
+    }
+
+    #[test]
+    fn intercomm_addressing_crosses_groups() {
+        let i = inner(2, Some(3));
+        let a = Comm::new(i.clone(), Side::A, 1);
+        let b = Comm::new(i, Side::B, 0);
+        assert!(a.is_inter());
+        assert_eq!(a.size(), 2);
+        assert_eq!(a.remote_size(), 3);
+        assert_eq!(a.peer(0), 100); // A sends to B
+        assert_eq!(b.peer(1), 1); // B sends to A
+        assert_eq!(b.union_index(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "no group B")]
+    fn group_b_on_intracomm_panics() {
+        let i = inner(2, None);
+        let _ = i.group(Side::B);
+    }
+}

@@ -1,0 +1,133 @@
+//! Per-rank execution context: the handle protocol code uses for every
+//! simulated MPI operation, plus logical-clock bookkeeping.
+
+use super::world::{ProcState, World, ZombieOrder};
+use crate::topology::NodeId;
+use crate::util::rng::Rng;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// The per-rank context. One per simulated process; owned by its thread.
+pub struct Ctx {
+    pub(crate) world: Arc<World>,
+    pub(crate) me: Arc<ProcState>,
+    pub(crate) rng: RefCell<Rng>,
+    /// Per-communicator collective sequence numbers (instances of
+    /// collectives are matched by call order, like MPI context ids).
+    pub(crate) coll_seq: RefCell<HashMap<super::CommId, u64>>,
+}
+
+impl Ctx {
+    pub(crate) fn new(world: Arc<World>, me: Arc<ProcState>, rng: Rng) -> Self {
+        Ctx { world, me, rng: RefCell::new(rng), coll_seq: RefCell::new(HashMap::new()) }
+    }
+
+    /// The world this rank runs in.
+    pub fn world(&self) -> &Arc<World> {
+        &self.world
+    }
+
+    /// Global process id.
+    pub fn pid(&self) -> super::ProcId {
+        self.me.id
+    }
+
+    /// Node this rank is placed on.
+    pub fn node(&self) -> NodeId {
+        self.me.node
+    }
+
+    /// Current logical clock (seconds).
+    pub fn clock(&self) -> f64 {
+        self.me.clock()
+    }
+
+    pub(crate) fn set_clock(&self, t: f64) {
+        self.me.set_clock(t)
+    }
+
+    /// Uniform random f64 in [0,1) from this rank's deterministic stream
+    /// (application-level randomness, e.g. Monte-Carlo sampling).
+    pub fn rand_f64(&self) -> f64 {
+        self.rng.borrow_mut().f64()
+    }
+
+    /// One multiplicative jitter sample from this rank's stream.
+    pub(crate) fn jitter(&self) -> f64 {
+        self.rng.borrow_mut().jitter(self.world.cfg.cost.jitter_frac)
+    }
+
+    /// Charge `cost` seconds (with jitter) to this rank's clock.
+    pub fn charge(&self, cost: f64) {
+        let j = self.jitter();
+        self.set_clock(self.clock() + cost * j);
+    }
+
+    /// Charge synthetic application compute of `units` work units,
+    /// slowed down by oversubscription on this node (more live processes
+    /// than cores -> proportionally slower).
+    pub fn compute(&self, units: f64) {
+        let running = self.world.running_on(self.node()) as f64;
+        let cores = self.world.cluster.cores(self.node()) as f64;
+        let slowdown = (running / cores).max(1.0);
+        self.charge(units * self.world.cfg.cost.c_work_unit * slowdown);
+    }
+
+    /// Rewind this rank's clock (asynchronous-strategy bookkeeping: the
+    /// main thread returns to its pre-spawn time while the spawn work
+    /// proceeds on the background timeline).
+    pub(crate) fn rewind_to(&self, t: f64) {
+        self.set_clock(t);
+    }
+
+    /// Advance this rank's clock to at least `t`.
+    pub(crate) fn sync_to(&self, t: f64) {
+        if t > self.clock() {
+            self.set_clock(t);
+        }
+    }
+
+    /// Next collective sequence number for `comm` (call-order matching).
+    pub(crate) fn next_seq(&self, comm: super::CommId) -> u64 {
+        let mut map = self.coll_seq.borrow_mut();
+        let seq = map.entry(comm).or_insert(0);
+        let cur = *seq;
+        *seq += 1;
+        cur
+    }
+
+    /// Park this rank as a zombie (ZS shrink). Blocks until another rank
+    /// delivers a [`ZombieOrder`]; the clock is advanced to the order's
+    /// timestamp plus the wake cost. Returns the order received.
+    pub fn park_zombie(&self) -> ZombieOrder {
+        self.charge(self.world.cfg.cost.c_zombie_mark);
+        let order = self.world.park_zombie(&self.me, "park_zombie");
+        let at = match order {
+            ZombieOrder::Wake { at } | ZombieOrder::Terminate { at } => at,
+        };
+        self.sync_to(at);
+        self.charge(self.world.cfg.cost.c_wake);
+        order
+    }
+
+    /// Final teardown cost (MPI_Finalize + exit); call before returning
+    /// from a rank main that terminates.
+    pub fn finalize_exit(&self) {
+        self.charge(self.world.cfg.cost.c_exit);
+    }
+
+    /// Disconnect a communicator (MPI_Comm_disconnect): a cheap local
+    /// operation in the model; the handle is consumed.
+    pub fn disconnect(&self, comm: super::Comm) {
+        drop(comm);
+        self.charge(self.world.cfg.cost.c_coll_enter);
+    }
+}
+
+impl Drop for Ctx {
+    fn drop(&mut self) {
+        // Thread is returning: the process leaves the node.
+        self.world.finish_proc(&self.me);
+    }
+}

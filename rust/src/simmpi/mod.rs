@@ -1,0 +1,135 @@
+//! `simmpi` — a virtual-time simulated MPI substrate.
+//!
+//! Every simulated rank is an OS thread executing the *real* protocol code
+//! (typed messages with tags, communicators, collectives, ports and
+//! `MPI_Comm_spawn`) against the calibrated cost model of
+//! [`crate::config::CostModel`]. Each rank owns a logical clock (seconds,
+//! f64); operations advance it and synchronisation points reconcile clocks
+//! across ranks (see DESIGN.md §3).
+//!
+//! The subset implemented is exactly what the paper's Listings 1-4 use:
+//!
+//! * point-to-point: `send` / `recv` / `isend`+`waitall`-shaped helpers;
+//! * collectives: `barrier`, `bcast`, `allgather`, `allreduce`,
+//!   `comm_split`, `intercomm_merge`;
+//! * dynamic processes: `spawn` (with host placement info),
+//!   `open_port` / `publish_name` / `lookup_name`, `accept` / `connect`,
+//!   `disconnect`;
+//! * zombie parking / waking / termination (for ZS and TS shrinkage).
+//!
+//! Determinism: message matching and collective results are deterministic;
+//! virtual *timing* carries controlled jitter (and RTE-contention ordering
+//! effects) so that repeated runs form a distribution, like the paper's 20
+//! repetitions per configuration.
+
+mod collectives;
+mod comm;
+mod ctx;
+mod p2p;
+mod ports;
+mod spawn;
+mod world;
+
+pub use collectives::AllgatherResult;
+pub use comm::{Comm, CommId, Side};
+pub use ctx::Ctx;
+pub use world::{ProcId, ProcMain, RootMain, SimError, World, ZombieOrder};
+
+use std::sync::Arc;
+
+/// Message payloads. Latency is charged by serialized size; the
+/// `Bytes(n)` variant carries *only* a size, for synthetic bulk transfers
+/// (data redistribution) where content does not matter.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Zero-content token (synchronization messages).
+    Token,
+    /// Integer vector (plans, group ids, counts).
+    I64s(Arc<Vec<i64>>),
+    /// Float vector (application data, e.g. Monte-Carlo contributions).
+    F64s(Arc<Vec<f64>>),
+    /// String (port names, service names).
+    Str(String),
+    /// Synthetic payload of `n` bytes.
+    Bytes(u64),
+    /// Internal: a communicator handle travelling through a bcast
+    /// (spawn / accept / connect distribute the new intercomm this way).
+    #[doc(hidden)]
+    CommRef(Arc<comm::CommInner>),
+}
+
+impl Payload {
+    /// Serialized size in bytes, used for latency accounting.
+    pub fn size_bytes(&self) -> u64 {
+        match self {
+            Payload::Token => 8,
+            Payload::I64s(v) => 8 * v.len() as u64 + 8,
+            Payload::F64s(v) => 8 * v.len() as u64 + 8,
+            Payload::Str(s) => s.len() as u64 + 8,
+            Payload::Bytes(n) => *n,
+            Payload::CommRef(_) => 64,
+        }
+    }
+
+    pub fn i64s(v: Vec<i64>) -> Payload {
+        Payload::I64s(Arc::new(v))
+    }
+
+    pub fn f64s(v: Vec<f64>) -> Payload {
+        Payload::F64s(Arc::new(v))
+    }
+
+    /// Unwrap an integer vector payload.
+    pub fn as_i64s(&self) -> &[i64] {
+        match self {
+            Payload::I64s(v) => v,
+            other => panic!("expected I64s payload, got {other:?}"),
+        }
+    }
+
+    /// Unwrap a float vector payload.
+    pub fn as_f64s(&self) -> &[f64] {
+        match self {
+            Payload::F64s(v) => v,
+            other => panic!("expected F64s payload, got {other:?}"),
+        }
+    }
+
+    /// Unwrap a string payload.
+    pub fn as_str(&self) -> &str {
+        match self {
+            Payload::Str(s) => s,
+            other => panic!("expected Str payload, got {other:?}"),
+        }
+    }
+
+    pub(crate) fn as_comm(&self) -> Arc<comm::CommInner> {
+        match self {
+            Payload::CommRef(c) => c.clone(),
+            other => panic!("expected CommRef payload, got {other:?}"),
+        }
+    }
+}
+
+/// Wildcard tag/source constants, mirroring `MPI_ANY_*`.
+pub const ANY_TAG: i64 = i64::MIN;
+pub const ANY_SOURCE: usize = usize::MAX;
+
+/// Message tags used by the library (kept in one place to avoid clashes
+/// between the MaM protocol layers).
+pub mod tags {
+    /// §4.3 upside-synchronization child->parent token.
+    pub const SYNC_UP: i64 = 101;
+    /// §4.3 downside-synchronization parent->child token.
+    pub const SYNC_DOWN: i64 = 102;
+    /// MaM terminate order (TS shrink).
+    pub const TERMINATE: i64 = 110;
+    /// MaM zombie order (ZS shrink).
+    pub const ZOMBIE: i64 = 111;
+    /// Data redistribution payload.
+    pub const REDISTRIB: i64 = 120;
+    /// Application-level messages.
+    pub const APP: i64 = 200;
+    /// Reconfiguration-plan broadcast.
+    pub const PLAN: i64 = 130;
+}

@@ -1,0 +1,107 @@
+//! Point-to-point messaging with MPI-style `(communicator, source, tag)`
+//! matching and virtual-time latency accounting.
+
+use super::comm::Comm;
+use super::ctx::Ctx;
+use super::world::Envelope;
+use super::{Payload, ANY_SOURCE, ANY_TAG};
+
+/// Messages above this size use the rendezvous protocol: the sender's
+/// clock advances with the wire time, like MPI's eager/rendezvous switch
+/// (MPICH default eager limits are in the tens of KiB).
+const EAGER_LIMIT: u64 = 64 * 1024;
+
+impl Ctx {
+    /// Send (covers `MPI_Send` and `MPI_Isend` in the protocol code).
+    /// Small messages are *eager*: the call returns after the send
+    /// overhead, delivery time is stamped on the envelope. Large messages
+    /// follow the rendezvous protocol: the sender also pays the wire
+    /// time, as a real `MPI_Send` of a bulk buffer would. `dst` is a rank
+    /// in the remote group for inter-communicators, local otherwise.
+    pub fn send(&self, comm: &Comm, dst: usize, tag: i64, payload: Payload) {
+        let dst_proc = comm.peer(dst);
+        let target = self.world.proc(dst_proc);
+        let link = self.world.cluster.path(self.node(), target.node);
+        let bytes = payload.size_bytes();
+        self.charge(self.world.cfg.cost.o_send);
+        let arrive = self.clock() + link.latency + bytes as f64 / link.bandwidth;
+        if bytes > EAGER_LIMIT {
+            self.sync_to(arrive);
+        }
+        let env = Envelope { comm: comm.id(), src_rank: comm.rank(), tag, payload, arrive };
+        let mut mb = target.mailbox.lock().unwrap_or_else(|e| e.into_inner());
+        mb.push(env);
+        target.mailbox_cv.notify_all();
+    }
+
+    /// Blocking receive. `src == ANY_SOURCE` and/or `tag == ANY_TAG` act as
+    /// wildcards. Returns `(payload, source_rank, tag)`; the clock advances
+    /// to the message arrival time plus the receive overhead.
+    pub fn recv(&self, comm: &Comm, src: usize, tag: i64) -> (Payload, usize, i64) {
+        let mut mb = self.me.mailbox.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            let pos = mb.iter().position(|e| {
+                e.comm == comm.id()
+                    && (src == ANY_SOURCE || e.src_rank == src)
+                    && (tag == ANY_TAG || e.tag == tag)
+            });
+            if let Some(i) = pos {
+                let env = mb.remove(i);
+                drop(mb);
+                self.sync_to(env.arrive);
+                self.charge(self.world.cfg.cost.o_recv);
+                return (env.payload, env.src_rank, env.tag);
+            }
+            let (guard, _) = self
+                .me
+                .mailbox_cv
+                .wait_timeout(mb, super::world::World::wait_tick())
+                .unwrap_or_else(|e| e.into_inner());
+            mb = guard;
+            drop(mb);
+            self.world.check_abort(&format!(
+                "recv(comm={}, src={}, tag={})",
+                comm.id(),
+                if src == ANY_SOURCE { "ANY".into() } else { src.to_string() },
+                if tag == ANY_TAG { "ANY".into() } else { tag.to_string() },
+            ));
+            mb = self.me.mailbox.lock().unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// `MPI_Irecv` x n + `MPI_Waitall` over one peer list: receive one
+    /// message with `tag` from each listed source (any completion order);
+    /// results are returned in the order of `srcs`. The clock ends at the
+    /// latest arrival, as Waitall would.
+    pub fn recv_all(&self, comm: &Comm, srcs: &[usize], tag: i64) -> Vec<Payload> {
+        let mut out: Vec<Option<Payload>> = vec![None; srcs.len()];
+        for _ in 0..srcs.len() {
+            // Wildcard receive restricted to the requested tag, then slot it.
+            let (payload, src, _) = self.recv(comm, ANY_SOURCE, tag);
+            let idx = srcs
+                .iter()
+                .position(|&s| s == src)
+                .unwrap_or_else(|| panic!("recv_all: unexpected source {src}"));
+            assert!(out[idx].is_none(), "recv_all: duplicate message from {src}");
+            out[idx] = Some(payload);
+        }
+        out.into_iter().map(Option::unwrap).collect()
+    }
+
+    /// Send one message to each destination (`MPI_Isend` x n + Waitall).
+    pub fn send_all(&self, comm: &Comm, dsts: &[usize], tag: i64, payload: Payload) {
+        for &d in dsts {
+            self.send(comm, d, tag, payload.clone());
+        }
+    }
+
+    /// Nonblocking probe: is a matching message already queued?
+    pub fn iprobe(&self, comm: &Comm, src: usize, tag: i64) -> bool {
+        let mb = self.me.mailbox.lock().unwrap_or_else(|e| e.into_inner());
+        mb.iter().any(|e| {
+            e.comm == comm.id()
+                && (src == ANY_SOURCE || e.src_rank == src)
+                && (tag == ANY_TAG || e.tag == tag)
+        })
+    }
+}

@@ -1,0 +1,173 @@
+//! Ports and the name service: `MPI_Open_port`, `MPI_Publish_name`,
+//! `MPI_Lookup_name`, `MPI_Comm_accept`, `MPI_Comm_connect`.
+//!
+//! `accept`/`connect` are collective over their local communicator: the
+//! roots rendezvous through the port, the later arrival builds the
+//! inter-communicator and synchronizes both root clocks
+//! (`max(clocks) + handshake + rtt`), then each side broadcasts the new
+//! communicator to its local group.
+
+use super::comm::{Comm, CommInner, Side};
+use super::ctx::Ctx;
+use super::world::{PortCell, PortOffer, World};
+use super::Payload;
+use std::sync::{Arc, Condvar, Mutex};
+
+impl Ctx {
+    /// `MPI_Open_port`: returns a fresh system-wide port name.
+    pub fn open_port(&self) -> String {
+        self.charge(self.world.cfg.cost.c_open_port);
+        self.world.alloc_port_name()
+    }
+
+    /// `MPI_Publish_name`: bind `service` to `port` in the name service.
+    pub fn publish_name(&self, service: &str, port: &str) {
+        self.charge(self.world.cfg.cost.c_publish);
+        let mut svc = self.world.services.lock().unwrap_or_else(|e| e.into_inner());
+        svc.insert(service.to_string(), port.to_string());
+        self.world.services_cv.notify_all();
+    }
+
+    /// `MPI_Unpublish_name`.
+    pub fn unpublish_name(&self, service: &str) {
+        self.charge(self.world.cfg.cost.c_publish);
+        self.world.services.lock().unwrap_or_else(|e| e.into_inner()).remove(service);
+    }
+
+    /// `MPI_Lookup_name`: resolve a service name to a port name. Blocks
+    /// until the service is published (the MaM §4.3 synchronization
+    /// guarantees publication happens first; waiting keeps the substrate
+    /// robust to reordering).
+    pub fn lookup_name(&self, service: &str) -> String {
+        self.charge(self.world.cfg.cost.c_lookup);
+        let mut svc = self.world.services.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(port) = svc.get(service) {
+                return port.clone();
+            }
+            let (guard, _) = self
+                .world
+                .services_cv
+                .wait_timeout(svc, World::wait_tick())
+                .unwrap_or_else(|e| e.into_inner());
+            svc = guard;
+            drop(svc);
+            self.world.check_abort(&format!("lookup_name({service})"));
+            svc = self.world.services.lock().unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// `MPI_Comm_accept` (collective over `comm`, acceptor side).
+    pub fn accept(&self, port: &str, comm: &Comm, root: usize) -> Comm {
+        self.port_op(port, comm, root, true, 0)
+    }
+
+    /// `MPI_Comm_connect` (collective over `comm`, connector side).
+    pub fn connect(&self, port: &str, comm: &Comm, root: usize) -> Comm {
+        self.port_op(port, comm, root, false, 0)
+    }
+
+    /// `accept` with an explicit pairing round (see
+    /// [`super::world::PortOffer::round`]): accepts only pair with
+    /// connects of the same round on a port reused across rounds.
+    pub fn accept_round(&self, port: &str, comm: &Comm, root: usize, round: u64) -> Comm {
+        self.port_op(port, comm, root, true, round)
+    }
+
+    /// `connect` with an explicit pairing round.
+    pub fn connect_round(&self, port: &str, comm: &Comm, root: usize, round: u64) -> Comm {
+        self.port_op(port, comm, root, false, round)
+    }
+
+    fn port_op(&self, port: &str, comm: &Comm, root: usize, is_accept: bool, round: u64) -> Comm {
+        let inter_inner: Arc<CommInner>;
+        if comm.rank() == root {
+            self.charge(self.world.cfg.cost.c_connect);
+            let slot = Arc::new((Mutex::new(None), Condvar::new()));
+            let offer = PortOffer {
+                side_group: comm.local_group().to_vec(),
+                root_proc: self.pid(),
+                clock: self.clock(),
+                round,
+                result: slot.clone(),
+            };
+            self.post_offer(port, offer, is_accept);
+            let (inner, t) = self.wait_offer(&slot, port);
+            self.sync_to(t);
+            inter_inner = inner;
+            if comm.size() > 1 {
+                self.bcast(comm, root, Some(Payload::CommRef(inter_inner.clone())));
+            }
+        } else {
+            let payload = self.bcast(comm, root, None);
+            inter_inner = payload.as_comm();
+        }
+        let side = if is_accept { Side::A } else { Side::B };
+        Comm::new(inter_inner, side, comm.rank())
+    }
+
+    fn post_offer(&self, port: &str, offer: PortOffer, is_accept: bool) {
+        let world = &self.world;
+        let mut ports = world.ports.lock().unwrap_or_else(|e| e.into_inner());
+        let cell = ports
+            .entry(port.to_string())
+            .or_insert_with(|| PortCell { accepts: Vec::new(), connects: Vec::new() });
+        if is_accept {
+            cell.accepts.push(offer);
+        } else {
+            cell.connects.push(offer);
+        }
+        // Pair accept/connect couples with matching rounds (FIFO within a
+        // round; see PortOffer::round for why rounds are keyed).
+        loop {
+            let pair = cell.accepts.iter().enumerate().find_map(|(ai, acc)| {
+                cell.connects
+                    .iter()
+                    .position(|c| c.round == acc.round)
+                    .map(|ci| (ai, ci))
+            });
+            let (ai, ci) = match pair {
+                Some(p) => p,
+                None => break,
+            };
+            let acc = cell.accepts.remove(ai);
+            let conn = cell.connects.remove(ci);
+            let acc_node = world.node_of(acc.root_proc);
+            let conn_node = world.node_of(conn.root_proc);
+            let link = world.cluster.path(acc_node, conn_node);
+            let t = acc.clock.max(conn.clock)
+                + world.cfg.cost.c_connect
+                + 2.0 * link.latency;
+            let inner = Arc::new(CommInner {
+                id: world.alloc_comm_id(),
+                group_a: acc.side_group.clone(),
+                group_b: Some(conn.side_group.clone()),
+            });
+            for slot in [&acc.result, &conn.result] {
+                let (m, cv) = &**slot;
+                *m.lock().unwrap_or_else(|e| e.into_inner()) = Some((inner.clone(), t));
+                cv.notify_all();
+            }
+        }
+        world.ports_cv.notify_all();
+    }
+
+    fn wait_offer(
+        &self,
+        slot: &Arc<(Mutex<Option<(Arc<CommInner>, f64)>>, Condvar)>,
+        port: &str,
+    ) -> (Arc<CommInner>, f64) {
+        let (m, cv) = &**slot;
+        let mut guard = m.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(res) = guard.take() {
+                return res;
+            }
+            let (g, _) = cv.wait_timeout(guard, World::wait_tick()).unwrap_or_else(|e| e.into_inner());
+            guard = g;
+            drop(guard);
+            self.world.check_abort(&format!("accept/connect on port {port}"));
+            guard = m.lock().unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Dynamic process creation: `MPI_Comm_spawn` with host-placement info.
+//!
+//! The cost model (DESIGN.md §3) charges: a fixed initiator call cost,
+//! serialized service time at the initiator node's RTE (the contention
+//! term that penalises many concurrent spawns from one node), an RTE tree
+//! rollout across the target nodes of the call, per-node daemon
+//! (cold/warm) costs, serialized per-process fork costs scaled by
+//! oversubscription, and the child world's `MPI_Init` synchronization.
+
+use super::comm::{Comm, CommInner, Side};
+use super::ctx::Ctx;
+use super::world::ProcMain;
+use super::Payload;
+use crate::topology::NodeId;
+use std::sync::Arc;
+
+impl Ctx {
+    /// `MPI_Comm_spawn` collective over `comm`; `root` performs the launch.
+    /// `placements` lists `(node, procs_on_node)`, mirroring an `MPI_Info`
+    /// host list; children are ranked node-major in their new
+    /// `MPI_COMM_WORLD`. Returns the parent side of the inter-communicator.
+    pub fn spawn_multi(
+        &self,
+        comm: &Comm,
+        root: usize,
+        placements: &[(NodeId, usize)],
+        entry: ProcMain,
+    ) -> Comm {
+        assert!(!placements.is_empty(), "spawn with empty placement list");
+        assert!(placements.iter().all(|&(_, k)| k > 0), "zero-process placement");
+        let inter: Arc<CommInner>;
+        if comm.rank() == root {
+            inter = self.do_spawn(comm.local_group().to_vec(), placements, entry);
+            if comm.size() > 1 {
+                self.bcast(comm, root, Some(Payload::CommRef(inter.clone())));
+            }
+        } else {
+            let payload = self.bcast(comm, root, None);
+            inter = payload.as_comm();
+        }
+        Comm::new(inter, Side::A, comm.rank())
+    }
+
+    /// `MPI_Comm_spawn` over `MPI_COMM_SELF` — the call the parallel
+    /// strategies issue once per group (§4.1/§4.2): only the calling rank
+    /// is the parent.
+    pub fn spawn_self(&self, node: NodeId, nprocs: usize, entry: ProcMain) -> Comm {
+        let inter = self.do_spawn(vec![self.pid()], &[(node, nprocs)], entry);
+        Comm::new(inter, Side::A, 0)
+    }
+
+    fn do_spawn(
+        &self,
+        parent_group: Vec<super::ProcId>,
+        placements: &[(NodeId, usize)],
+        entry: ProcMain,
+    ) -> Arc<CommInner> {
+        let jitter = self.jitter();
+        let (children, t_child) =
+            self.world
+                .charge_and_create(self.node(), self.clock(), placements, jitter);
+        self.world.metrics.count("spawn_calls", 1);
+        self.world
+            .metrics
+            .count("spawned_procs", children.len() as u64);
+
+        let mcw = Arc::new(CommInner {
+            id: self.world.alloc_comm_id(),
+            group_a: children.iter().map(|c| c.id).collect(),
+            group_b: None,
+        });
+        let inter = Arc::new(CommInner {
+            id: self.world.alloc_comm_id(),
+            group_a: parent_group,
+            group_b: Some(children.iter().map(|c| c.id).collect()),
+        });
+        self.world.start_children(&children, mcw, inter.clone(), entry);
+        // MPI_Comm_spawn returns when the intercommunicator exists, i.e.
+        // after the children completed MPI_Init.
+        self.sync_to(t_child);
+        inter
+    }
+}

@@ -1,0 +1,537 @@
+//! The simulation world: process table, thread lifecycle, per-node RTE
+//! state (daemon warmth, occupancy, contention), the rendezvous registry
+//! for collectives, the port/name services, and abort/watchdog machinery.
+
+use super::comm::{Comm, CommId, CommInner, Side};
+use super::Payload;
+use crate::config::SimConfig;
+use crate::metrics::Metrics;
+use crate::topology::{Cluster, Link, NodeId};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Globally unique simulated-process id.
+pub type ProcId = u64;
+
+/// Entry point of a spawned process group: `(ctx, mcw, parent_intercomm)`.
+/// `mcw` is the group's own `MPI_COMM_WORLD`; `parent` is what
+/// `MPI_Comm_get_parent` would return.
+pub type ProcMain = Arc<dyn Fn(super::Ctx, Comm, Comm) + Send + Sync + 'static>;
+
+/// Entry point of the *initial* process group (no parent).
+pub type RootMain = Arc<dyn Fn(super::Ctx, Comm) + Send + Sync + 'static>;
+
+/// Simulation-level failure (protocol deadlock watchdog, rank panic).
+#[derive(Debug, thiserror::Error)]
+pub enum SimError {
+    #[error("simulated rank panicked: {0}")]
+    RankPanic(String),
+    #[error("simulation aborted: {0}")]
+    Aborted(String),
+}
+
+/// Orders deliverable to a parked (zombie) process.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ZombieOrder {
+    /// Resume execution; the wake signal was sent at the given virtual time.
+    Wake { at: f64 },
+    /// Terminate; the order was sent at the given virtual time.
+    Terminate { at: f64 },
+}
+
+/// In-flight message.
+pub(crate) struct Envelope {
+    pub comm: CommId,
+    pub src_rank: usize,
+    pub tag: i64,
+    pub payload: Payload,
+    /// Virtual arrival time at the destination (send stamp + path latency).
+    pub arrive: f64,
+}
+
+/// Per-process simulation state.
+pub struct ProcState {
+    pub id: ProcId,
+    pub node: NodeId,
+    /// Logical clock in seconds, stored as f64 bits.
+    clock_bits: AtomicU64,
+    pub(crate) mailbox: Mutex<Vec<Envelope>>,
+    pub(crate) mailbox_cv: Condvar,
+    zombie: Mutex<Option<ZombieOrder>>,
+    zombie_cv: Condvar,
+    /// Set while the process is parked as a zombie (diagnostics).
+    pub(crate) parked: AtomicBool,
+}
+
+impl ProcState {
+    pub fn clock(&self) -> f64 {
+        f64::from_bits(self.clock_bits.load(Ordering::Acquire))
+    }
+
+    pub(crate) fn set_clock(&self, t: f64) {
+        self.clock_bits.store(t.to_bits(), Ordering::Release);
+    }
+}
+
+/// Mutable world state behind one lock (process table + per-node RTE).
+struct Inner {
+    procs: HashMap<ProcId, Arc<ProcState>>,
+    /// Live (non-exited) processes per node, zombies included.
+    node_running: Vec<u32>,
+    /// Virtual time until which each node's RTE proxy is busy serving
+    /// spawn requests (initiator-side contention).
+    rte_busy: Vec<f64>,
+    /// Whether a node already has a warm RTE daemon.
+    node_daemon: Vec<bool>,
+}
+
+pub(crate) struct RvState {
+    pub expected: usize,
+    pub arrived: usize,
+    pub(crate) left: usize,
+    pub max_clock: f64,
+    pub contrib: Vec<Option<(f64, Payload)>>,
+    pub outcome: Option<(f64, Arc<RvOutcome>)>,
+}
+
+pub(crate) struct RvCell {
+    pub st: Mutex<RvState>,
+    pub cv: Condvar,
+}
+
+/// Result of a collective rendezvous.
+pub(crate) enum RvOutcome {
+    /// Clock synchronization only (barrier).
+    Clock,
+    /// One payload for everyone (bcast, allreduce).
+    Payload(Payload),
+    /// All contributions in participant-index order (allgather).
+    Payloads(Vec<Payload>),
+    /// New communicator handles per participant index (split, merge).
+    NewComms(HashMap<usize, (Arc<CommInner>, Side, usize)>),
+}
+
+/// One half of a pending port pairing (accept or connect side).
+pub(crate) struct PortOffer {
+    pub side_group: Vec<ProcId>,
+    pub root_proc: ProcId,
+    pub clock: f64,
+    /// Pairing round: accepts only match connects of the same round.
+    ///
+    /// Listing 2 reuses one port across binary-connection rounds; with
+    /// FIFO pairing an idle middle group's round-`k+1` connect can race
+    /// ahead of a round-`k` connect and pair with the wrong accept,
+    /// wedging the protocol (real MPICH has the same hazard — in practice
+    /// later-round connects arrive later). The simulator removes the
+    /// hazard by keying the handshake on the loop iteration, which is
+    /// globally consistent by construction.
+    pub round: u64,
+    /// Slot the pairing result is written into.
+    pub result: Arc<(Mutex<Option<(Arc<CommInner>, f64)>>, Condvar)>,
+}
+
+pub(crate) struct PortCell {
+    pub accepts: Vec<PortOffer>,
+    pub connects: Vec<PortOffer>,
+}
+
+/// The simulation world. One per experiment run; cheap to share
+/// (`Arc<World>`); all simulated ranks reference it.
+pub struct World {
+    pub cluster: Cluster,
+    pub cfg: SimConfig,
+    pub metrics: Arc<Metrics>,
+    inner: Mutex<Inner>,
+    pub(crate) rendezvous: Mutex<HashMap<(CommId, u64), Arc<RvCell>>>,
+    /// port-name -> pending offers
+    pub(crate) ports: Mutex<HashMap<String, PortCell>>,
+    pub(crate) ports_cv: Condvar,
+    /// service-name -> port-name (MPI_Publish_name / MPI_Lookup_name)
+    pub(crate) services: Mutex<HashMap<String, String>>,
+    pub(crate) services_cv: Condvar,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    next_proc: AtomicU64,
+    next_comm: AtomicU64,
+    next_port: AtomicU64,
+    aborted: AtomicBool,
+    abort_reason: Mutex<Option<String>>,
+    deadline: Mutex<Option<Instant>>,
+    seed_ctr: AtomicU64,
+}
+
+impl World {
+    pub fn new(cluster: Cluster, cfg: SimConfig) -> Arc<World> {
+        let n = cluster.len();
+        Arc::new(World {
+            cluster,
+            cfg,
+            metrics: Arc::new(Metrics::new()),
+            inner: Mutex::new(Inner {
+                procs: HashMap::new(),
+                node_running: vec![0; n],
+                rte_busy: vec![0.0; n],
+                node_daemon: vec![false; n],
+            }),
+            rendezvous: Mutex::new(HashMap::new()),
+            ports: Mutex::new(HashMap::new()),
+            ports_cv: Condvar::new(),
+            services: Mutex::new(HashMap::new()),
+            services_cv: Condvar::new(),
+            threads: Mutex::new(Vec::new()),
+            next_proc: AtomicU64::new(1),
+            next_comm: AtomicU64::new(1),
+            next_port: AtomicU64::new(1),
+            aborted: AtomicBool::new(false),
+            abort_reason: Mutex::new(None),
+            deadline: Mutex::new(None),
+            seed_ctr: AtomicU64::new(0),
+        })
+    }
+
+    // ---- identity allocation ------------------------------------------------
+
+    pub(crate) fn alloc_comm_id(&self) -> CommId {
+        self.next_comm.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub(crate) fn alloc_port_name(&self) -> String {
+        format!("port#{}", self.next_port.fetch_add(1, Ordering::Relaxed))
+    }
+
+    fn alloc_proc_id(&self) -> ProcId {
+        self.next_proc.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub(crate) fn proc(&self, id: ProcId) -> Arc<ProcState> {
+        self.inner
+            .lock()
+            .unwrap()
+            .procs
+            .get(&id)
+            .cloned()
+            .unwrap_or_else(|| panic!("unknown proc {id}"))
+    }
+
+    /// Node a process lives on.
+    pub fn node_of(&self, id: ProcId) -> NodeId {
+        self.proc(id).node
+    }
+
+    /// Live process count on a node (zombies included).
+    pub fn running_on(&self, node: NodeId) -> u32 {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).node_running[node]
+    }
+
+    // ---- abort / watchdog ----------------------------------------------------
+
+    /// Abort the whole simulation (all blocking waits panic promptly).
+    pub fn abort(&self, reason: &str) {
+        let mut r = self.abort_reason.lock().unwrap_or_else(|e| e.into_inner());
+        if r.is_none() {
+            *r = Some(reason.to_string());
+        }
+        self.aborted.store(true, Ordering::SeqCst);
+        // Wake everything that might be waiting.
+        self.ports_cv.notify_all();
+        self.services_cv.notify_all();
+        let rvs = self.rendezvous.lock().unwrap_or_else(|e| e.into_inner());
+        for cell in rvs.values() {
+            cell.cv.notify_all();
+        }
+        drop(rvs);
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        for p in inner.procs.values() {
+            p.mailbox_cv.notify_all();
+            p.zombie_cv.notify_all();
+        }
+    }
+
+    pub fn is_aborted(&self) -> bool {
+        self.aborted.load(Ordering::SeqCst)
+    }
+
+    /// Called from every blocking wait loop: panics (unwinding the rank
+    /// thread) if the simulation was aborted or the wall-clock watchdog
+    /// expired. `what` describes the blocked operation for diagnostics.
+    pub(crate) fn check_abort(&self, what: &str) {
+        if self.aborted.load(Ordering::SeqCst) {
+            let r = self.abort_reason.lock().unwrap_or_else(|e| e.into_inner()).clone().unwrap_or_default();
+            panic!("simulation aborted while in {what}: {r}");
+        }
+        let expired = {
+            let d = self.deadline.lock().unwrap_or_else(|e| e.into_inner());
+            matches!(*d, Some(t) if Instant::now() > t)
+        };
+        if expired {
+            self.abort(&format!("watchdog expired (suspected protocol deadlock) in {what}"));
+            panic!("simulation watchdog expired in {what}");
+        }
+    }
+
+    pub(crate) fn wait_tick() -> Duration {
+        // Real wakeups are notify-driven (sends, collective completions,
+        // port pairings, aborts all notify their condvars); this tick only
+        // bounds how fast a blocked rank notices the watchdog deadline.
+        // 25ms ticks caused measurable context-switch thrash with
+        // thousands of rank threads on small hosts (EXPERIMENTS.md §Perf).
+        Duration::from_millis(250)
+    }
+
+    // ---- process lifecycle ---------------------------------------------------
+
+    fn new_proc(&self, node: NodeId, clock: f64) -> Arc<ProcState> {
+        let id = self.alloc_proc_id();
+        let p = Arc::new(ProcState {
+            id,
+            node,
+            clock_bits: AtomicU64::new(clock.to_bits()),
+            mailbox: Mutex::new(Vec::new()),
+            mailbox_cv: Condvar::new(),
+            zombie: Mutex::new(None),
+            zombie_cv: Condvar::new(),
+            parked: AtomicBool::new(false),
+        });
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.procs.insert(id, p.clone());
+        inner.node_running[node] += 1;
+        p
+    }
+
+    fn proc_exited(&self, p: &ProcState) {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.node_running[p.node] = inner.node_running[p.node].saturating_sub(1);
+        inner.procs.remove(&p.id);
+    }
+
+    fn make_ctx(self: &Arc<Self>, p: Arc<ProcState>) -> super::Ctx {
+        let stream = self.seed_ctr.fetch_add(1, Ordering::Relaxed);
+        let rng = Rng::new(self.cfg.seed ^ (p.id.wrapping_mul(0x9E37_79B9_7F4A_7C15)) ^ stream);
+        super::Ctx::new(self.clone(), p, rng)
+    }
+
+    fn spawn_thread(self: &Arc<Self>, name: String, f: impl FnOnce() + Send + 'static) {
+        let world = self.clone();
+        let handle = std::thread::Builder::new()
+            .name(name.clone())
+            .stack_size(self.cfg.thread_stack)
+            .spawn(move || {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+                if let Err(payload) = result {
+                    let msg = payload
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "<opaque panic>".to_string());
+                    // First panic wins; ignore cascading aborts.
+                    if !msg.contains("simulation aborted") && !msg.contains("watchdog expired") {
+                        world.abort(&format!("rank thread '{name}' panicked: {msg}"));
+                    }
+                }
+            })
+            .expect("failed to spawn simulated rank thread");
+        self.threads.lock().unwrap_or_else(|e| e.into_inner()).push(handle);
+    }
+
+    /// Launch the initial process group (the job's first `MPI_COMM_WORLD`),
+    /// `placements` being `(node, procs_on_node)` pairs. Ranks are ordered
+    /// node-major, matching `mpiexec` block placement.
+    pub fn launch(self: &Arc<Self>, placements: &[(NodeId, usize)], main: RootMain) {
+        {
+            let mut d = self.deadline.lock().unwrap_or_else(|e| e.into_inner());
+            if d.is_none() {
+                *d = self
+                    .cfg
+                    .watchdog_secs
+                    .map(|s| Instant::now() + Duration::from_secs_f64(s));
+            }
+        }
+        let mut procs = Vec::new();
+        for &(node, count) in placements {
+            for _ in 0..count {
+                procs.push(self.new_proc(node, 0.0));
+            }
+            let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            inner.node_daemon[node] = true;
+        }
+        let inner_comm = Arc::new(CommInner {
+            id: self.alloc_comm_id(),
+            group_a: procs.iter().map(|p| p.id).collect(),
+            group_b: None,
+        });
+        for (rank, p) in procs.into_iter().enumerate() {
+            let ctx = self.make_ctx(p);
+            let comm = Comm::new(inner_comm.clone(), Side::A, rank);
+            let main = main.clone();
+            self.spawn_thread(format!("rank{rank}"), move || main(ctx, comm));
+        }
+    }
+
+    /// Wait for every simulated process to finish. Returns the first
+    /// failure if any rank panicked or the watchdog fired.
+    pub fn join_all(&self) -> Result<(), SimError> {
+        loop {
+            let handle = self.threads.lock().unwrap_or_else(|e| e.into_inner()).pop();
+            match handle {
+                Some(h) => {
+                    let _ = h.join(); // panics already routed through abort()
+                }
+                None => break,
+            }
+        }
+        if self.aborted.load(Ordering::SeqCst) {
+            let reason = self.abort_reason.lock().unwrap_or_else(|e| e.into_inner()).clone().unwrap_or_default();
+            return Err(SimError::Aborted(reason));
+        }
+        Ok(())
+    }
+
+    // ---- zombies ---------------------------------------------------------------
+
+    /// Deliver an order to a parked zombie process.
+    pub fn signal_zombie(&self, id: ProcId, order: ZombieOrder) {
+        let p = self.proc(id);
+        let mut z = p.zombie.lock().unwrap_or_else(|e| e.into_inner());
+        *z = Some(order);
+        p.zombie_cv.notify_all();
+    }
+
+    pub(crate) fn park_zombie(&self, p: &ProcState, what: &str) -> ZombieOrder {
+        p.parked.store(true, Ordering::SeqCst);
+        let mut z = p.zombie.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(order) = z.take() {
+                p.parked.store(false, Ordering::SeqCst);
+                return order;
+            }
+            let (guard, _) = p.zombie_cv.wait_timeout(z, Self::wait_tick()).unwrap_or_else(|e| e.into_inner());
+            z = guard;
+            drop(z);
+            self.check_abort(what);
+            z = p.zombie.lock().unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    // ---- cost helpers ------------------------------------------------------------
+
+    /// Link characteristics of the worst path among a set of processes:
+    /// used for collective cost estimates.
+    pub(crate) fn group_link(&self, procs: &[ProcId]) -> Link {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut nodes: Vec<NodeId> = procs
+            .iter()
+            .filter_map(|id| inner.procs.get(id).map(|p| p.node))
+            .collect();
+        drop(inner);
+        nodes.sort_unstable();
+        nodes.dedup();
+        match nodes.len() {
+            0 | 1 => self.cluster.path(nodes.first().copied().unwrap_or(0), nodes.first().copied().unwrap_or(0)),
+            _ => {
+                // Worst pairwise path: compare first node against the rest.
+                let mut worst = self.cluster.path(nodes[0], nodes[1]);
+                for &n in &nodes[2..] {
+                    let l = self.cluster.path(nodes[0], n);
+                    if l.latency > worst.latency {
+                        worst = l;
+                    }
+                }
+                worst
+            }
+        }
+    }
+
+    /// Cost of an `n`-participant collective moving `bytes` per stage over
+    /// `link`: `ceil(log2 n) * (alpha + bytes/beta) + entry`.
+    pub(crate) fn coll_cost(&self, n: usize, bytes: u64, link: Link) -> f64 {
+        let stages = if n <= 1 { 0.0 } else { (n as f64).log2().ceil() };
+        stages * (link.latency + bytes as f64 / link.bandwidth) + self.cfg.cost.c_coll_enter
+    }
+
+    // ---- spawn bookkeeping (called by spawn.rs) -----------------------------------
+
+    /// Charge one `MPI_Comm_spawn` call in the cost model and create the
+    /// child processes. Returns `(children, t_child)`.
+    ///
+    /// `initiator_node` pays RTE-service contention; each target node pays
+    /// daemon + serialized fork costs; the child world then pays the
+    /// `MPI_Init` synchronization. See DESIGN.md §3.
+    pub(crate) fn charge_and_create(
+        &self,
+        initiator_node: NodeId,
+        start_clock: f64,
+        placements: &[(NodeId, usize)],
+        jitter: f64,
+    ) -> (Vec<Arc<ProcState>>, f64) {
+        let cost = &self.cfg.cost;
+        let total: usize = placements.iter().map(|&(_, k)| k).sum();
+        let m = placements.len();
+
+        let (t0, per_node_ready) = {
+            let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            // Initiator-side RTE service (the contention term).
+            let arrive = start_clock + cost.c_spawn_call * jitter;
+            let service_start = arrive.max(inner.rte_busy[initiator_node]);
+            inner.rte_busy[initiator_node] = service_start + cost.c_rte_service;
+            let t0 = service_start + cost.c_rte_service;
+
+            let tree = cost.c_node_tree * ((m as f64 + 1.0).log2().ceil());
+            let mut ready = Vec::with_capacity(m);
+            for &(node, k) in placements {
+                let daemon = if inner.node_daemon[node] {
+                    cost.c_daemon_warm
+                } else {
+                    inner.node_daemon[node] = true;
+                    cost.c_daemon_cold
+                };
+                let occupancy = inner.node_running[node] as f64 + k as f64;
+                let cores = self.cluster.cores(node) as f64;
+                let oversub = if cost.oversub_penalty {
+                    (occupancy / cores).max(1.0)
+                } else {
+                    1.0
+                };
+                ready.push(t0 + tree + daemon + cost.c_fork_proc * k as f64 * oversub);
+            }
+            (t0, ready)
+        };
+        let _ = t0;
+        let slowest = per_node_ready.iter().cloned().fold(0.0f64, f64::max);
+        let init = cost.c_init_sync * ((total as f64).log2().ceil().max(1.0));
+        let t_child = slowest + init * jitter;
+
+        let mut children = Vec::with_capacity(total);
+        for &(node, k) in placements {
+            for _ in 0..k {
+                children.push(self.new_proc(node, t_child));
+            }
+        }
+        (children, t_child)
+    }
+
+    /// Register and start threads for freshly created child processes.
+    pub(crate) fn start_children(
+        self: &Arc<Self>,
+        children: &[Arc<ProcState>],
+        mcw: Arc<CommInner>,
+        parent_inter: Arc<CommInner>,
+        entry: ProcMain,
+    ) {
+        for (rank, child) in children.iter().enumerate() {
+            let ctx = self.make_ctx(child.clone());
+            let mcw_handle = Comm::new(mcw.clone(), Side::A, rank);
+            let parent_handle = Comm::new(parent_inter.clone(), Side::B, rank);
+            let entry = entry.clone();
+            self.spawn_thread(format!("spawned-{}", child.id), move || {
+                entry(ctx, mcw_handle, parent_handle)
+            });
+        }
+    }
+
+    /// Mark a process as finished (thread is returning).
+    pub(crate) fn finish_proc(&self, p: &ProcState) {
+        self.proc_exited(p);
+    }
+}

@@ -1,0 +1,178 @@
+//! Minimal property-based testing framework (offline stand-in for
+//! `proptest`, which is unavailable in this environment — see DESIGN.md §2).
+//!
+//! Usage:
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries bypass the workspace rpath flags and
+//! # // cannot load the xla_extension-provided libstdc++ in this image.
+//! use paraspawn::testing::{check, Gen};
+//!
+//! check("addition commutes", 256, |g: &mut Gen| {
+//!     let a = g.i64_in(-1000, 1000);
+//!     let b = g.i64_in(-1000, 1000);
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+//!
+//! On failure the runner panics with the property name, the failing case
+//! index and the replay seed; re-run a single case with
+//! `PARASPAWN_PROP_SEED=<seed> PARASPAWN_PROP_CASES=1`.
+
+use crate::util::rng::Rng;
+
+/// Case-local random generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Human-readable trace of the values drawn, included in failures.
+    trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), trace: Vec::new() }
+    }
+
+    fn note(&mut self, label: &str, v: impl std::fmt::Display) {
+        if self.trace.len() < 64 {
+            self.trace.push(format!("{label}={v}"));
+        }
+    }
+
+    pub fn u64_below(&mut self, n: u64) -> u64 {
+        let v = self.rng.below(n);
+        self.note("u64_below", v);
+        v
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let v = self.rng.usize_in(lo, hi);
+        self.note("usize_in", v);
+        v
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let v = lo + self.rng.below((hi - lo + 1) as u64) as i64;
+        self.note("i64_in", v);
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = lo + self.rng.f64() * (hi - lo);
+        self.note("f64_in", v);
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.below(2) == 1;
+        self.note("bool", v);
+        v
+    }
+
+    /// Vector of `len` values drawn by `f`.
+    pub fn vec_with<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one element of a slice (cloned).
+    pub fn pick<T: Clone + std::fmt::Debug>(&mut self, xs: &[T]) -> T {
+        let v = xs[self.rng.usize_in(0, xs.len())].clone();
+        self.note("pick", format!("{v:?}"));
+        v
+    }
+
+    /// Raw access for helpers that need an `Rng`.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+fn env_u64(name: &str) -> Option<u64> {
+    std::env::var(name).ok().and_then(|s| s.parse().ok())
+}
+
+/// Run `cases` random cases of a property. A property returns `Ok(())` to
+/// pass or `Err(description)` to fail; panics inside the property are also
+/// caught and reported with the replay seed.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String> + std::panic::RefUnwindSafe,
+{
+    let base_seed = env_u64("PARASPAWN_PROP_SEED").unwrap_or(0x5EED_CAFE);
+    let cases = env_u64("PARASPAWN_PROP_CASES").map(|c| c as usize).unwrap_or(cases);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        let failure = match outcome {
+            Ok(Ok(())) => None,
+            Ok(Err(msg)) => Some(msg),
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<panic>".to_string());
+                Some(format!("panicked: {msg}"))
+            }
+        };
+        if let Some(msg) = failure {
+            panic!(
+                "property '{name}' failed at case {case}/{cases}: {msg}\n  drawn: [{}]\n  replay: PARASPAWN_PROP_SEED={base_seed} (case seed {seed})",
+                g.trace.join(", "),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        // Count side effects through a cell since prop is Fn.
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        check("trivial", 17, |_g| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            Ok(())
+        });
+        count += counter.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing'")]
+    fn failing_property_panics_with_name() {
+        check("failing", 8, |g| {
+            let x = g.i64_in(0, 10);
+            if x < 100 {
+                Err(format!("x = {x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn panicking_property_is_caught() {
+        check("panics", 4, |_g| -> Result<(), String> { panic!("boom") });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 128, |g| {
+            let a = g.usize_in(3, 9);
+            let b = g.i64_in(-5, 5);
+            let c = g.f64_in(0.5, 1.5);
+            if (3..9).contains(&a) && (-5..=5).contains(&b) && (0.5..1.5).contains(&c) {
+                Ok(())
+            } else {
+                Err(format!("{a} {b} {c}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,227 @@
+//! Cluster topology: nodes, cores, switches and links.
+//!
+//! Two presets mirror the paper's testbeds (§5.1):
+//!
+//! * [`Cluster::mn5`] — MareNostrum 5 general queue slice: 32 nodes, each
+//!   with two 56-core Intel Xeon 8480 (112 cores/node, 3584 cores total),
+//!   one 100 Gbit/s InfiniBand fabric.
+//! * [`Cluster::nasp`] — NASP: 8 nodes with 2x10-core Xeon 4210 (20
+//!   cores/node) on 100 Gb InfiniBand EDR + 10 GbE, plus 8 nodes with
+//!   32-core Xeon 6346 (32 cores/node) on 10 GbE only; the two switches
+//!   share a 10 GbE uplink.
+
+/// Index of a node within a [`Cluster`].
+pub type NodeId = usize;
+
+/// Index of a switch within a [`Cluster`].
+pub type SwitchId = usize;
+
+/// Physical interconnect class; determines point-to-point latency and
+/// bandwidth in the virtual-time model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    /// Intra-node communication through shared memory.
+    SharedMem,
+    /// 100 Gbit/s InfiniBand (EDR-class).
+    InfiniBand100,
+    /// 10 Gbit/s Ethernet.
+    Ethernet10,
+}
+
+/// Latency/bandwidth pair for a path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    /// One-way base latency in seconds.
+    pub latency: f64,
+    /// Bandwidth in bytes/second.
+    pub bandwidth: f64,
+}
+
+impl LinkKind {
+    /// Canonical performance characteristics for each link class.
+    pub fn link(self) -> Link {
+        match self {
+            // ~0.3 µs, ~20 GB/s effective for shared memory.
+            LinkKind::SharedMem => Link { latency: 3.0e-7, bandwidth: 20.0e9 },
+            // ~1.5 µs, ~11 GB/s effective for 100 Gb IB.
+            LinkKind::InfiniBand100 => Link { latency: 1.5e-6, bandwidth: 11.0e9 },
+            // ~25 µs, ~1.1 GB/s effective for 10 GbE (TCP).
+            LinkKind::Ethernet10 => Link { latency: 2.5e-5, bandwidth: 1.1e9 },
+        }
+    }
+}
+
+/// A compute node.
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    /// Human-readable name, e.g. `"mn5-0007"`.
+    pub name: String,
+    /// Physical cores available to jobs.
+    pub cores: u32,
+    /// Switch this node hangs off.
+    pub switch: SwitchId,
+}
+
+/// A switch: every node attached to it talks through `fabric`.
+#[derive(Clone, Debug)]
+pub struct Switch {
+    pub name: String,
+    pub fabric: LinkKind,
+}
+
+/// A cluster: nodes, switches, and the shared inter-switch uplink.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub name: String,
+    pub nodes: Vec<NodeSpec>,
+    pub switches: Vec<Switch>,
+    /// Link used when two nodes sit on different switches.
+    pub inter_switch: LinkKind,
+}
+
+impl Cluster {
+    /// Homogeneous cluster builder: `n` nodes x `cores` cores on a single
+    /// switch with fabric `kind`.
+    pub fn homogeneous(name: &str, n: usize, cores: u32, kind: LinkKind) -> Cluster {
+        let switches = vec![Switch { name: format!("{name}-sw0"), fabric: kind }];
+        let nodes = (0..n)
+            .map(|i| NodeSpec { name: format!("{name}-{i:04}"), cores, switch: 0 })
+            .collect();
+        Cluster { name: name.to_string(), nodes, switches, inter_switch: kind }
+    }
+
+    /// MareNostrum 5 general-queue slice used in the paper: 32 nodes x 112
+    /// cores, 100 Gb InfiniBand.
+    pub fn mn5() -> Cluster {
+        Cluster::homogeneous("mn5", 32, 112, LinkKind::InfiniBand100)
+    }
+
+    /// A small MN5-like cluster for fast tests/examples (same fabric,
+    /// fewer/smaller nodes).
+    pub fn mini(n: usize, cores: u32) -> Cluster {
+        Cluster::homogeneous("mini", n, cores, LinkKind::InfiniBand100)
+    }
+
+    /// NASP: 8 x 20-core nodes (IB fabric) + 8 x 32-core nodes (10 GbE),
+    /// switches joined by a shared 10 GbE uplink. Matches the paper §5.1.
+    pub fn nasp() -> Cluster {
+        let switches = vec![
+            Switch { name: "nasp-ib".into(), fabric: LinkKind::InfiniBand100 },
+            Switch { name: "nasp-eth".into(), fabric: LinkKind::Ethernet10 },
+        ];
+        let mut nodes = Vec::new();
+        for i in 0..8 {
+            nodes.push(NodeSpec { name: format!("nasp-a{i:02}"), cores: 20, switch: 0 });
+        }
+        for i in 0..8 {
+            nodes.push(NodeSpec { name: format!("nasp-b{i:02}"), cores: 32, switch: 1 });
+        }
+        Cluster {
+            name: "nasp".into(),
+            nodes,
+            switches,
+            inter_switch: LinkKind::Ethernet10,
+        }
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Total cores across the cluster.
+    pub fn total_cores(&self) -> u64 {
+        self.nodes.iter().map(|n| n.cores as u64).sum()
+    }
+
+    /// Cores of node `id`.
+    pub fn cores(&self, id: NodeId) -> u32 {
+        self.nodes[id].cores
+    }
+
+    /// The link characteristics of the path between two nodes
+    /// (shared memory if `a == b`, the switch fabric if co-located, the
+    /// inter-switch uplink otherwise).
+    pub fn path(&self, a: NodeId, b: NodeId) -> Link {
+        if a == b {
+            return LinkKind::SharedMem.link();
+        }
+        let sa = self.nodes[a].switch;
+        let sb = self.nodes[b].switch;
+        if sa == sb {
+            self.switches[sa].fabric.link()
+        } else {
+            // Crossing switches: pay the slower of the two fabrics plus the
+            // shared uplink; modelled as the uplink with doubled latency.
+            let up = self.inter_switch.link();
+            Link { latency: 2.0 * up.latency, bandwidth: up.bandwidth }
+        }
+    }
+
+    /// True when every node has the same core count (the Hypercube
+    /// strategy's applicability condition, §4.1).
+    pub fn is_core_homogeneous(&self) -> bool {
+        self.nodes.windows(2).all(|w| w[0].cores == w[1].cores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mn5_shape() {
+        let c = Cluster::mn5();
+        assert_eq!(c.len(), 32);
+        assert!(c.nodes.iter().all(|n| n.cores == 112));
+        assert_eq!(c.total_cores(), 3584);
+        assert!(c.is_core_homogeneous());
+    }
+
+    #[test]
+    fn nasp_shape() {
+        let c = Cluster::nasp();
+        assert_eq!(c.len(), 16);
+        assert_eq!(c.nodes.iter().filter(|n| n.cores == 20).count(), 8);
+        assert_eq!(c.nodes.iter().filter(|n| n.cores == 32).count(), 8);
+        assert_eq!(c.total_cores(), 160 + 256);
+        assert!(!c.is_core_homogeneous());
+    }
+
+    #[test]
+    fn same_node_is_shared_mem() {
+        let c = Cluster::mn5();
+        let l = c.path(3, 3);
+        assert_eq!(l, LinkKind::SharedMem.link());
+    }
+
+    #[test]
+    fn same_switch_uses_fabric() {
+        let c = Cluster::mn5();
+        let l = c.path(0, 31);
+        assert_eq!(l, LinkKind::InfiniBand100.link());
+    }
+
+    #[test]
+    fn cross_switch_pays_uplink() {
+        let c = Cluster::nasp();
+        let intra = c.path(0, 7); // both on IB switch
+        let cross = c.path(0, 8); // IB node to Eth node
+        assert_eq!(intra, LinkKind::InfiniBand100.link());
+        assert!(cross.latency > LinkKind::Ethernet10.link().latency);
+        assert_eq!(cross.bandwidth, LinkKind::Ethernet10.link().bandwidth);
+    }
+
+    #[test]
+    fn link_ordering_sanity() {
+        let shm = LinkKind::SharedMem.link();
+        let ib = LinkKind::InfiniBand100.link();
+        let eth = LinkKind::Ethernet10.link();
+        assert!(shm.latency < ib.latency && ib.latency < eth.latency);
+        assert!(shm.bandwidth > ib.bandwidth && ib.bandwidth > eth.bandwidth);
+    }
+}

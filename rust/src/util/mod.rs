@@ -1,0 +1,12 @@
+//! Small self-contained utilities: PRNG, statistics, CSV output.
+//!
+//! This workspace builds fully offline, so the usual ecosystem crates
+//! (`rand`, `statrs`, `csv`) are replaced by the minimal implementations
+//! here. Everything is deterministic and seed-replayable.
+
+pub mod csvout;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;

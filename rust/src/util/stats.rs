@@ -1,0 +1,245 @@
+//! Statistics used by the evaluation harness: medians/quantiles/IQR and a
+//! two-sided Mann-Whitney U test (normal approximation with tie
+//! correction), the decision procedure behind the paper's Figure 5
+//! ("preferred methods"; methods whose distributions are statistically
+//! equivalent share a cell, ordered by ascending median).
+
+/// Five-number-ish summary of a sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub std: f64,
+}
+
+/// Linear-interpolated quantile of an unsorted sample (q in [0,1]).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty sample");
+    assert!((0.0..=1.0).contains(&q));
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = pos - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Median of an unsorted sample.
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Sample mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator; 0 for n < 2).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Compute a [`Summary`] of a sample.
+pub fn summarize(xs: &[f64]) -> Summary {
+    Summary {
+        n: xs.len(),
+        min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        q1: quantile(xs, 0.25),
+        median: median(xs),
+        q3: quantile(xs, 0.75),
+        max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        mean: mean(xs),
+        std: std_dev(xs),
+    }
+}
+
+/// Result of a two-sided Mann-Whitney U test.
+#[derive(Clone, Copy, Debug)]
+pub struct MannWhitney {
+    /// U statistic for the first sample.
+    pub u: f64,
+    /// Two-sided p-value (normal approximation with tie correction).
+    pub p_value: f64,
+}
+
+/// Two-sided Mann-Whitney U test via the normal approximation with tie
+/// correction. Adequate for the sample sizes the harness uses (>= 10 per
+/// cell, matching the paper's 20 repetitions).
+pub fn mann_whitney_u(a: &[f64], b: &[f64]) -> MannWhitney {
+    let n1 = a.len() as f64;
+    let n2 = b.len() as f64;
+    assert!(n1 > 0.0 && n2 > 0.0, "mann_whitney_u on empty sample");
+
+    // Rank the pooled sample with midranks for ties.
+    let mut pooled: Vec<(f64, usize)> = a
+        .iter()
+        .map(|&x| (x, 0usize))
+        .chain(b.iter().map(|&x| (x, 1usize)))
+        .collect();
+    pooled.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+
+    let n = pooled.len();
+    let mut ranks = vec![0.0f64; n];
+    let mut tie_term = 0.0f64; // sum of t^3 - t over tie groups
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && pooled[j + 1].0 == pooled[i].0 {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+        for r in ranks.iter_mut().take(j + 1).skip(i) {
+            *r = avg_rank;
+        }
+        let t = (j - i + 1) as f64;
+        if t > 1.0 {
+            tie_term += t * t * t - t;
+        }
+        i = j + 1;
+    }
+
+    let r1: f64 = pooled
+        .iter()
+        .zip(ranks.iter())
+        .filter(|((_, g), _)| *g == 0)
+        .map(|(_, &r)| r)
+        .sum();
+    let u1 = r1 - n1 * (n1 + 1.0) / 2.0;
+
+    let mu = n1 * n2 / 2.0;
+    let nn = n1 + n2;
+    let sigma2 = n1 * n2 / 12.0 * ((nn + 1.0) - tie_term / (nn * (nn - 1.0)));
+    if sigma2 <= 0.0 {
+        // All values identical: distributions indistinguishable.
+        return MannWhitney { u: u1, p_value: 1.0 };
+    }
+    let sigma = sigma2.sqrt();
+    // Continuity correction.
+    let z = (u1 - mu).abs().max(0.0) - 0.5;
+    let z = z.max(0.0) / sigma;
+    let p = 2.0 * (1.0 - phi(z));
+    MannWhitney { u: u1, p_value: p.clamp(0.0, 1.0) }
+}
+
+/// Standard normal CDF via Abramowitz-Stegun 7.1.26 erf approximation.
+fn phi(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// True when the two samples are statistically *equivalent* at level
+/// `alpha` under Mann-Whitney (i.e. we fail to reject H0).
+pub fn statistically_equivalent(a: &[f64], b: &[f64], alpha: f64) -> bool {
+    mann_whitney_u(a, b).p_value >= alpha
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn quantile_endpoints() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.mean, 3.0);
+    }
+
+    #[test]
+    fn std_dev_known_value() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        // population std is 2; sample std is ~2.138
+        assert!((std_dev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn erf_reference_points() {
+        // A&S 7.1.26 has |error| <= 1.5e-7; at 0 the coefficient sum leaves ~1e-9.
+        assert!(erf(0.0).abs() < 1e-6);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-4);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-4);
+    }
+
+    #[test]
+    fn mann_whitney_identical_samples_equivalent() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        let r = mann_whitney_u(&a, &a);
+        assert!(r.p_value > 0.9, "p = {}", r.p_value);
+        assert!(statistically_equivalent(&a, &a, 0.05));
+    }
+
+    #[test]
+    fn mann_whitney_detects_shift() {
+        let mut rng = Rng::new(5);
+        let a: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..30).map(|_| rng.normal() + 3.0).collect();
+        let r = mann_whitney_u(&a, &b);
+        assert!(r.p_value < 0.001, "p = {}", r.p_value);
+        assert!(!statistically_equivalent(&a, &b, 0.05));
+    }
+
+    #[test]
+    fn mann_whitney_same_distribution_usually_equivalent() {
+        let mut rng = Rng::new(6);
+        let mut rejections = 0;
+        let trials = 50;
+        for _ in 0..trials {
+            let a: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+            if !statistically_equivalent(&a, &b, 0.05) {
+                rejections += 1;
+            }
+        }
+        // Type-I error should be near alpha.
+        assert!(rejections <= 8, "rejections = {rejections}/{trials}");
+    }
+
+    #[test]
+    fn mann_whitney_constant_samples() {
+        let a = [1.0; 10];
+        let b = [1.0; 10];
+        assert_eq!(mann_whitney_u(&a, &b).p_value, 1.0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Failure injection: the simulator must fail *loudly and promptly* on
+//! protocol errors (panics, deadlocks, mismatched collectives), never
+//! hang, and RMS/plan validation must reject inconsistent inputs.
+
+use paraspawn::config::{CostModel, SimConfig};
+use paraspawn::coordinator::{run_reconfiguration, Scenario};
+use paraspawn::mam::{Method, SpawnStrategy};
+use paraspawn::rms::{AllocPolicy, Rms};
+use paraspawn::simmpi::{Comm, Ctx, Payload, World};
+use paraspawn::topology::Cluster;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn fast_watchdog() -> SimConfig {
+    SimConfig {
+        cost: CostModel::mn5().deterministic(),
+        watchdog_secs: Some(1.5),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn mid_protocol_panic_unblocks_collective_peers() {
+    let world = World::new(Cluster::mini(1, 4), fast_watchdog());
+    world.launch(
+        &[(0, 4)],
+        Arc::new(|ctx: Ctx, w: Comm| {
+            if w.rank() == 3 {
+                panic!("injected failure before barrier");
+            }
+            ctx.barrier(&w); // would deadlock without abort propagation
+        }),
+    );
+    let t0 = Instant::now();
+    let err = world.join_all().unwrap_err();
+    assert!(format!("{err}").contains("injected failure"));
+    assert!(t0.elapsed().as_secs_f64() < 5.0, "abort must release peers promptly");
+}
+
+#[test]
+fn connect_to_unpublished_service_hits_watchdog() {
+    let world = World::new(Cluster::mini(1, 1), fast_watchdog());
+    world.launch(
+        &[(0, 1)],
+        Arc::new(|ctx: Ctx, _w: Comm| {
+            let _ = ctx.lookup_name("service-that-never-exists");
+        }),
+    );
+    let err = world.join_all().unwrap_err();
+    assert!(format!("{err}").contains("watchdog"));
+}
+
+#[test]
+fn mismatched_collective_participation_aborts() {
+    // Rank 0 calls barrier twice, rank 1 once, on a 2-rank comm: the
+    // second instance can never complete -> watchdog.
+    let world = World::new(Cluster::mini(1, 2), fast_watchdog());
+    world.launch(
+        &[(0, 2)],
+        Arc::new(|ctx: Ctx, w: Comm| {
+            ctx.barrier(&w);
+            if w.rank() == 0 {
+                ctx.barrier(&w);
+            }
+        }),
+    );
+    assert!(world.join_all().is_err());
+}
+
+#[test]
+fn wrong_payload_type_panics_cleanly() {
+    let world = World::new(Cluster::mini(1, 2), fast_watchdog());
+    world.launch(
+        &[(0, 2)],
+        Arc::new(|ctx: Ctx, w: Comm| {
+            if w.rank() == 0 {
+                ctx.send(&w, 1, 1, Payload::Str("not ints".into()));
+            } else {
+                let (p, _, _) = ctx.recv(&w, 0, 1);
+                let _ = p.as_i64s(); // type confusion must panic -> abort
+            }
+        }),
+    );
+    let err = world.join_all().unwrap_err();
+    assert!(format!("{err}").contains("expected I64s"));
+}
+
+#[test]
+fn recv_from_out_of_range_rank_aborts() {
+    let world = World::new(Cluster::mini(1, 2), fast_watchdog());
+    world.launch(
+        &[(0, 2)],
+        Arc::new(|ctx: Ctx, w: Comm| {
+            if w.rank() == 0 {
+                ctx.send(&w, 99, 1, Payload::Token); // no rank 99
+            }
+        }),
+    );
+    assert!(world.join_all().is_err());
+}
+
+#[test]
+fn rms_rejects_overcommit_and_conflicts() {
+    let mut rms = Rms::new(Cluster::mini(2, 4));
+    assert!(rms.plan_allocation(3, AllocPolicy::WholeNodes).is_err());
+    let a = rms.plan_allocation(2, AllocPolicy::WholeNodes).unwrap();
+    rms.claim(&a).unwrap();
+    assert!(rms.claim(&a).is_err(), "double claim must conflict");
+}
+
+#[test]
+fn scenario_rejects_capacity_overflow() {
+    let s = Scenario {
+        cluster: Cluster::mini(4, 4),
+        initial_nodes: 1,
+        target_nodes: 9, // only 4 nodes exist
+        ..Default::default()
+    };
+    assert!(run_reconfiguration(&s).is_err());
+}
+
+#[test]
+fn hypercube_on_heterogeneous_cluster_fails_loudly() {
+    // The paper: "the Hypercube strategy is not included [on NASP] because
+    // it is unable to correctly spawn the processes". Our implementation
+    // turns that into a loud validation failure.
+    let s = Scenario {
+        prepare_parallel: false,
+        ..Scenario::nasp(1, 4).with(Method::Merge, SpawnStrategy::ParallelHypercube)
+    };
+    let err = run_reconfiguration(&s).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("homogeneous"),
+        "unexpected error: {err:#}"
+    );
+}
+
+#[test]
+fn zombie_terminate_order_drains_parked_rank() {
+    use paraspawn::simmpi::ZombieOrder;
+    let world = World::new(Cluster::mini(1, 2), fast_watchdog());
+    world.launch(
+        &[(0, 2)],
+        Arc::new(|ctx: Ctx, w: Comm| {
+            if w.rank() == 1 {
+                let order = ctx.park_zombie();
+                assert!(matches!(order, ZombieOrder::Terminate { .. }));
+            } else {
+                ctx.charge(0.5);
+                ctx.world()
+                    .clone()
+                    .signal_zombie(ctx.pid() + 1, ZombieOrder::Terminate { at: ctx.clock() });
+            }
+        }),
+    );
+    world.join_all().unwrap();
+}
+
+#[test]
+fn abort_is_idempotent_and_first_reason_wins() {
+    let world = World::new(Cluster::mini(1, 1), fast_watchdog());
+    world.abort("first");
+    world.abort("second");
+    world.launch(&[(0, 1)], Arc::new(|ctx: Ctx, w: Comm| {
+        // Any blocking op must observe the abort.
+        let _ = ctx.recv(&w, 0, 1);
+    }));
+    let err = world.join_all().unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("first"), "got: {msg}");
+}

@@ -1,0 +1,348 @@
+//! Integration tests over the `simmpi` substrate: these exercise the real
+//! threaded protocol paths (p2p, collectives, ports, spawn, zombies) and
+//! check both functional results and virtual-clock causality.
+
+use paraspawn::config::{CostModel, SimConfig};
+use paraspawn::simmpi::{Comm, Ctx, Payload, World, ZombieOrder, ANY_SOURCE};
+use paraspawn::topology::Cluster;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+fn test_cfg() -> SimConfig {
+    SimConfig {
+        cost: CostModel::mn5().deterministic(),
+        seed: 7,
+        thread_stack: 256 * 1024,
+        watchdog_secs: Some(30.0),
+    }
+}
+
+fn run_world<F>(cluster: Cluster, placements: &[(usize, usize)], f: F) -> Arc<World>
+where
+    F: Fn(Ctx, Comm) + Send + Sync + 'static,
+{
+    let world = World::new(cluster, test_cfg());
+    world.launch(placements, Arc::new(f));
+    world.join_all().expect("simulation failed");
+    world
+}
+
+#[test]
+fn send_recv_roundtrip_and_clock_advance() {
+    let final_clocks = Arc::new(Mutex::new(Vec::new()));
+    let fc = final_clocks.clone();
+    run_world(Cluster::mini(2, 2), &[(0, 1), (1, 1)], move |ctx, world| {
+        if world.rank() == 0 {
+            ctx.send(&world, 1, 42, Payload::f64s(vec![3.25]));
+        } else {
+            let (p, src, tag) = ctx.recv(&world, 0, 42);
+            assert_eq!(p.as_f64s(), &[3.25]);
+            assert_eq!(src, 0);
+            assert_eq!(tag, 42);
+            assert!(ctx.clock() > 0.0, "receive must advance the clock");
+        }
+        fc.lock().unwrap().push((world.rank(), ctx.clock()));
+    });
+    let clocks = final_clocks.lock().unwrap();
+    assert_eq!(clocks.len(), 2);
+    // Receiver's clock includes network latency: strictly after sender's.
+    let get = |r: usize| clocks.iter().find(|(rank, _)| *rank == r).unwrap().1;
+    assert!(get(1) > get(0));
+}
+
+#[test]
+fn recv_any_source_works() {
+    run_world(Cluster::mini(1, 4), &[(0, 4)], move |ctx, world| {
+        if world.rank() == 0 {
+            let mut seen = vec![];
+            for _ in 0..3 {
+                let (_, src, _) = ctx.recv(&world, ANY_SOURCE, 9);
+                seen.push(src);
+            }
+            seen.sort_unstable();
+            assert_eq!(seen, vec![1, 2, 3]);
+        } else {
+            ctx.send(&world, 0, 9, Payload::Token);
+        }
+    });
+}
+
+#[test]
+fn barrier_synchronizes_clocks() {
+    let clocks = Arc::new(Mutex::new(Vec::new()));
+    let c2 = clocks.clone();
+    run_world(Cluster::mini(2, 2), &[(0, 2), (1, 2)], move |ctx, world| {
+        // Desynchronize clocks deliberately.
+        ctx.charge(0.001 * (world.rank() as f64 + 1.0));
+        ctx.barrier(&world);
+        c2.lock().unwrap().push(ctx.clock());
+    });
+    let cs = clocks.lock().unwrap();
+    let max = cs.iter().cloned().fold(0.0f64, f64::max);
+    for &c in cs.iter() {
+        assert!((c - max).abs() < 1e-12, "barrier must equalize clocks: {cs:?}");
+    }
+    // Everyone is at least at the slowest rank's pre-barrier clock.
+    assert!(max >= 0.004);
+}
+
+#[test]
+fn bcast_delivers_root_payload() {
+    run_world(Cluster::mini(1, 3), &[(0, 3)], move |ctx, world| {
+        let payload =
+            if world.rank() == 1 { Some(Payload::i64s(vec![5, 6, 7])) } else { None };
+        let got = ctx.bcast(&world, 1, payload);
+        assert_eq!(got.as_i64s(), &[5, 6, 7]);
+    });
+}
+
+#[test]
+fn allgather_collects_in_rank_order() {
+    run_world(Cluster::mini(1, 4), &[(0, 4)], move |ctx, world| {
+        let all = ctx.allgather(&world, Payload::f64s(vec![world.rank() as f64 * 10.0]));
+        let values: Vec<f64> = all.as_slice().iter().map(|p| p.as_f64s()[0]).collect();
+        assert_eq!(values, vec![0.0, 10.0, 20.0, 30.0]);
+    });
+}
+
+#[test]
+fn allreduce_max_and_sum() {
+    run_world(Cluster::mini(1, 4), &[(0, 4)], move |ctx, world| {
+        let max = ctx.allreduce_f64(&world, world.rank() as f64, f64::max);
+        assert_eq!(max, 3.0);
+        let sum = ctx.allreduce_f64(&world, 1.0, |a, b| a + b);
+        assert_eq!(sum, 4.0);
+    });
+}
+
+#[test]
+fn comm_split_by_parity() {
+    run_world(Cluster::mini(1, 6), &[(0, 6)], move |ctx, world| {
+        let color = (world.rank() % 2) as i64;
+        let sub = ctx.comm_split(&world, Some(color), world.rank() as i64).unwrap();
+        assert_eq!(sub.size(), 3);
+        assert_eq!(sub.rank(), world.rank() / 2);
+        // The subcommunicator works for collectives.
+        let sum = ctx.allreduce_f64(&sub, world.rank() as f64, |a, b| a + b);
+        if color == 0 {
+            assert_eq!(sum, 0.0 + 2.0 + 4.0);
+        } else {
+            assert_eq!(sum, 1.0 + 3.0 + 5.0);
+        }
+    });
+}
+
+#[test]
+fn comm_split_undefined_excludes_rank() {
+    run_world(Cluster::mini(1, 4), &[(0, 4)], move |ctx, world| {
+        let color = if world.rank() == 0 { None } else { Some(1) };
+        let sub = ctx.comm_split(&world, color, world.rank() as i64);
+        if world.rank() == 0 {
+            assert!(sub.is_none());
+        } else {
+            assert_eq!(sub.unwrap().size(), 3);
+        }
+    });
+}
+
+#[test]
+fn spawn_self_creates_child_group_with_parent_intercomm() {
+    let spawned = Arc::new(AtomicU64::new(0));
+    let sp = spawned.clone();
+    run_world(Cluster::mini(2, 3), &[(0, 1)], move |ctx, world| {
+        assert_eq!(world.size(), 1);
+        let sp_inner = sp.clone();
+        let inter = ctx.spawn_self(
+            1,
+            3,
+            Arc::new(move |cctx: Ctx, mcw: Comm, parent: Comm| {
+                sp_inner.fetch_add(1, Ordering::SeqCst);
+                assert_eq!(mcw.size(), 3);
+                assert_eq!(parent.remote_size(), 1);
+                assert!(cctx.clock() > 0.0, "children start after spawn cost");
+                // Children answer a parent token.
+                if mcw.rank() == 0 {
+                    let (p, _, _) = cctx.recv(&parent, 0, 5);
+                    assert_eq!(p.as_i64s(), &[99]);
+                    cctx.send(&parent, 0, 6, Payload::Token);
+                }
+            }),
+        );
+        assert_eq!(inter.remote_size(), 3);
+        let t_after_spawn = ctx.clock();
+        assert!(t_after_spawn > 0.2, "spawn must charge the RTE costs");
+        ctx.send(&inter, 0, 5, Payload::i64s(vec![99]));
+        let _ = ctx.recv(&inter, 0, 6);
+    });
+    assert_eq!(spawned.load(Ordering::SeqCst), 3);
+}
+
+#[test]
+fn spawn_multi_places_children_across_nodes() {
+    let world = run_world(Cluster::mini(3, 2), &[(0, 2)], move |ctx, world| {
+        let inter = ctx.spawn_multi(
+            &world,
+            0,
+            &[(1, 2), (2, 2)],
+            Arc::new(move |cctx: Ctx, mcw: Comm, _parent: Comm| {
+                // Node-major ranking: ranks 0,1 on node 1; ranks 2,3 on node 2.
+                let expected_node = if mcw.rank() < 2 { 1 } else { 2 };
+                assert_eq!(cctx.node(), expected_node);
+            }),
+        );
+        assert_eq!(inter.remote_size(), 4);
+        // Non-root received the same intercomm through the internal bcast.
+        assert_eq!(inter.size(), 2);
+    });
+    assert_eq!(world.metrics.counter("spawn_calls"), 1);
+    assert_eq!(world.metrics.counter("spawned_procs"), 4);
+}
+
+#[test]
+fn ports_connect_accept_and_merge() {
+    // Two independent groups meet through a port and merge; low side first.
+    run_world(Cluster::mini(2, 4), &[(0, 2)], move |ctx, world| {
+        // Group A (the initial world) spawns group B, then they connect
+        // through a published port like §4.4 does.
+        if world.rank() == 0 {
+            let port = ctx.open_port();
+            ctx.publish_name("svc-test", &port);
+            let b = ctx.spawn_self(
+                1,
+                2,
+                Arc::new(|cctx: Ctx, mcw: Comm, _parent: Comm| {
+                    let port = cctx.lookup_name("svc-test");
+                    let inter = cctx.connect(&port, &mcw, 0);
+                    assert_eq!(inter.remote_size(), 1);
+                    let merged = cctx.intercomm_merge(&inter, true);
+                    // Acceptor (1 rank) low + connectors (2 ranks) high.
+                    assert_eq!(merged.size(), 3);
+                    assert_eq!(merged.rank(), 1 + mcw.rank());
+                    let sum = cctx.allreduce_f64(&merged, merged.rank() as f64, |a, b| a + b);
+                    assert_eq!(sum, 3.0);
+                }),
+            );
+            // Accept over a singleton comm: split self out of the world comm.
+            let selfc = ctx.comm_split(&world, Some(world.rank() as i64), 0).unwrap();
+            let inter = ctx.accept(&port, &selfc, 0);
+            assert_eq!(inter.remote_size(), 2);
+            let merged = ctx.intercomm_merge(&inter, false);
+            assert_eq!(merged.rank(), 0);
+            let sum = ctx.allreduce_f64(&merged, merged.rank() as f64, |a, b| a + b);
+            assert_eq!(sum, 3.0);
+            drop(b);
+        } else {
+            // Rank 1 only participates in the split.
+            let _ = ctx.comm_split(&world, Some(world.rank() as i64), 0).unwrap();
+        }
+    });
+}
+
+#[test]
+fn zombie_park_wake_and_terminate() {
+    run_world(Cluster::mini(1, 3), &[(0, 3)], move |ctx, world| {
+        match world.rank() {
+            0 => {
+                // Wake rank 1, terminate rank 2 (pids are rank+1 here since
+                // pids allocate from 1 in launch order).
+                ctx.charge(0.01);
+                let w = ctx.world().clone();
+                w.signal_zombie(ctx.pid() + 1, ZombieOrder::Wake { at: ctx.clock() });
+                w.signal_zombie(ctx.pid() + 2, ZombieOrder::Terminate { at: ctx.clock() });
+            }
+            1 => {
+                let order = ctx.park_zombie();
+                assert!(matches!(order, ZombieOrder::Wake { .. }));
+                assert!(ctx.clock() >= 0.01, "zombie wakes at the order time");
+            }
+            2 => {
+                let order = ctx.park_zombie();
+                assert!(matches!(order, ZombieOrder::Terminate { .. }));
+                ctx.finalize_exit();
+            }
+            _ => unreachable!(),
+        }
+    });
+}
+
+#[test]
+fn watchdog_catches_deadlock() {
+    let cfg = SimConfig { watchdog_secs: Some(1.0), ..test_cfg() };
+    let world = World::new(Cluster::mini(1, 2), cfg);
+    world.launch(
+        &[(0, 2)],
+        Arc::new(|ctx: Ctx, world: Comm| {
+            if world.rank() == 0 {
+                // Wait for a message nobody sends.
+                let _ = ctx.recv(&world, 1, 1234);
+            }
+        }),
+    );
+    let err = world.join_all().unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("watchdog"), "unexpected error: {msg}");
+}
+
+#[test]
+fn rank_panic_aborts_whole_simulation() {
+    let world = World::new(Cluster::mini(1, 2), test_cfg());
+    world.launch(
+        &[(0, 2)],
+        Arc::new(|ctx: Ctx, world: Comm| {
+            if world.rank() == 1 {
+                panic!("deliberate test panic");
+            }
+            // Rank 0 would block forever; the abort must release it.
+            let _ = ctx.recv(&world, 1, 1);
+        }),
+    );
+    let err = world.join_all().unwrap_err();
+    assert!(format!("{err}").contains("deliberate test panic"));
+}
+
+#[test]
+fn oversubscription_slows_compute() {
+    let times = Arc::new(Mutex::new(Vec::new()));
+    let t2 = times.clone();
+    // 4 ranks on a 2-core node: 2x oversubscribed.
+    run_world(Cluster::mini(1, 2), &[(0, 4)], move |ctx, world| {
+        ctx.compute(1000.0);
+        if world.rank() == 0 {
+            t2.lock().unwrap().push(ctx.clock());
+        }
+    });
+    let oversub_time = times.lock().unwrap()[0];
+
+    let times1 = Arc::new(Mutex::new(Vec::new()));
+    let t3 = times1.clone();
+    run_world(Cluster::mini(1, 2), &[(0, 2)], move |ctx, world| {
+        ctx.compute(1000.0);
+        if world.rank() == 0 {
+            t3.lock().unwrap().push(ctx.clock());
+        }
+    });
+    let normal_time = times1.lock().unwrap()[0];
+    assert!(
+        oversub_time > 1.9 * normal_time,
+        "oversubscribed {oversub_time} vs normal {normal_time}"
+    );
+}
+
+#[test]
+fn intercomm_send_crosses_groups() {
+    run_world(Cluster::mini(2, 2), &[(0, 2)], move |ctx, world| {
+        let entry: Arc<dyn Fn(Ctx, Comm, Comm) + Send + Sync> =
+            Arc::new(|cctx: Ctx, mcw: Comm, parent: Comm| {
+                // Child rank 1 messages parent rank 1 directly.
+                if mcw.rank() == 1 {
+                    cctx.send(&parent, 1, 77, Payload::i64s(vec![mcw.rank() as i64]));
+                }
+            });
+        let inter = ctx.spawn_multi(&world, 0, &[(1, 2)], entry);
+        if world.rank() == 1 {
+            let (p, src, _) = ctx.recv(&inter, 1, 77);
+            assert_eq!(p.as_i64s(), &[1]);
+            assert_eq!(src, 1);
+        }
+    });
+}

@@ -1,0 +1,357 @@
+//! Property-based tests over the coordinator invariants (planner math,
+//! shrink decisions, redistribution plans, and end-to-end rank layout),
+//! using the in-tree mini property-test framework.
+
+use paraspawn::mam::plan::{
+    diffusive_trace, hypercube_steps, plan_steps, Plan, SpawnTask,
+};
+use paraspawn::mam::shrink::decide;
+use paraspawn::mam::{Method, SpawnStrategy};
+use paraspawn::redistrib::block_plan;
+use paraspawn::testing::{check, Gen};
+use std::collections::BTreeMap;
+
+fn random_hypercube_plan(g: &mut Gen) -> Plan {
+    let c = g.usize_in(1, 9) as u32;
+    let total = g.usize_in(2, 40);
+    let i = g.usize_in(1, total);
+    let method = if g.bool() { Method::Merge } else { Method::Baseline };
+    let mut r = vec![0u32; total];
+    for ri in r.iter_mut().take(i) {
+        *ri = c;
+    }
+    Plan::new(0, method, SpawnStrategy::ParallelHypercube, (0..total).collect(), vec![c; total], r)
+}
+
+fn random_diffusive_plan(g: &mut Gen) -> Plan {
+    let total = g.usize_in(2, 30);
+    let i = g.usize_in(1, total);
+    let mut a = Vec::new();
+    let mut r = vec![0u32; total];
+    for idx in 0..total {
+        a.push(g.usize_in(1, 16) as u32);
+    }
+    for idx in 0..i {
+        // Sources partially or fully occupy their nodes.
+        r[idx] = g.usize_in(1, a[idx] as usize + 1) as u32;
+    }
+    let method = if g.bool() { Method::Merge } else { Method::Baseline };
+    Plan::new(0, method, SpawnStrategy::ParallelDiffusive, (0..total).collect(), a, r)
+}
+
+/// Flatten a plan's assignments to (slot, task) pairs.
+fn all_tasks(plan: &Plan) -> Vec<(usize, SpawnTask)> {
+    let mut out = Vec::new();
+    for (slot, tasks) in plan.assignments() {
+        for t in tasks {
+            out.push((slot, t));
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_every_group_spawned_exactly_once() {
+    check("every group spawned exactly once", 200, |g| {
+        let plan =
+            if g.bool() { random_hypercube_plan(g) } else { random_diffusive_plan(g) };
+        let mut gids: Vec<usize> = all_tasks(&plan).iter().map(|(_, t)| t.group.gid).collect();
+        gids.sort_unstable();
+        let expected: Vec<usize> = (0..plan.groups().len()).collect();
+        if gids == expected {
+            Ok(())
+        } else {
+            Err(format!("gids {gids:?} != 0..{}", plan.groups().len()))
+        }
+    });
+}
+
+#[test]
+fn prop_spawned_totals_match_s_vector() {
+    check("spawn totals match S", 200, |g| {
+        let plan =
+            if g.bool() { random_hypercube_plan(g) } else { random_diffusive_plan(g) };
+        let total: usize =
+            all_tasks(&plan).iter().map(|(_, t)| t.group.size as usize).sum();
+        if total == plan.spawn_total() {
+            Ok(())
+        } else {
+            Err(format!("{total} != {}", plan.spawn_total()))
+        }
+    });
+}
+
+#[test]
+fn prop_spawner_existed_before_its_step() {
+    // A slot can only spawn in step s if the process already exists:
+    // slot < t_{s-1} (sources + groups spawned in earlier steps).
+    check("spawners exist before their step", 200, |g| {
+        let plan =
+            if g.bool() { random_hypercube_plan(g) } else { random_diffusive_plan(g) };
+        // Existing processes after each step: start with sources.
+        let mut t_by_step = vec![plan.ns()];
+        let mut by_step: BTreeMap<usize, Vec<SpawnTask>> = BTreeMap::new();
+        for (_, t) in all_tasks(&plan) {
+            by_step.entry(t.step).or_default().push(t);
+        }
+        for (step, tasks) in &by_step {
+            let available = *t_by_step.last().unwrap();
+            let grown: usize = tasks.iter().map(|t| t.group.size as usize).sum();
+            while t_by_step.len() <= *step {
+                t_by_step.push(available);
+            }
+            t_by_step[*step] = available + grown;
+        }
+        for (slot, task) in all_tasks(&plan) {
+            let available = t_by_step[task.step - 1];
+            if slot >= available {
+                return Err(format!(
+                    "slot {slot} spawns in step {} but only {available} procs exist",
+                    task.step
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hypercube_steps_match_eq3() {
+    check("hypercube step count == Eq. 3", 200, |g| {
+        let c = g.usize_in(1, 9) as u32;
+        let total = g.usize_in(2, 60);
+        let i = g.usize_in(1, total);
+        let mut r = vec![0u32; total];
+        for ri in r.iter_mut().take(i) {
+            *ri = c;
+        }
+        let plan = Plan::new(
+            0,
+            Method::Merge,
+            SpawnStrategy::ParallelHypercube,
+            (0..total).collect(),
+            vec![c; total],
+            r,
+        );
+        let got = plan_steps(&plan);
+        let want = hypercube_steps(c, i, total);
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("C={c} I={i} N={total}: steps {got} != Eq3 {want}"))
+        }
+    });
+}
+
+#[test]
+fn prop_diffusive_trace_recurrences() {
+    check("diffusive trace satisfies Eq. 4-8", 200, |g| {
+        let plan = random_diffusive_plan(g);
+        let rows = diffusive_trace(&plan);
+        // Eq. 4: t_s = t_{s-1} + g_s; Eq. 6: lambda_s = lambda_{s-1} + t_{s-1};
+        // Eq. 7: T_s = T_{s-1} + G_s; final coverage: lambda >= N.
+        for w in rows.windows(2) {
+            let (p, c) = (w[0], w[1]);
+            if c.t != p.t + c.g {
+                return Err(format!("Eq4 violated at s={}", c.s));
+            }
+            if c.lambda != p.lambda + p.t {
+                return Err(format!("Eq6 violated at s={}", c.s));
+            }
+            if c.tt != p.tt + c.gg {
+                return Err(format!("Eq7 violated at s={}", c.s));
+            }
+        }
+        let last = rows.last().unwrap();
+        if last.lambda < plan.n_nodes() {
+            return Err("S not fully consumed".into());
+        }
+        if last.t != plan.ns() + plan.spawn_total() {
+            return Err(format!("final t {} != NS+spawned", last.t));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shrink_decision_partitions_ranks() {
+    check("shrink decision partitions ranks", 300, |g| {
+        let n_nodes = g.usize_in(1, 8);
+        let per_node = g.usize_in(1, 5);
+        let mut nodes = Vec::new();
+        let mut mcws = Vec::new();
+        // Random MCW structure: contiguous chunks across the rank space.
+        let mut mcw_id = 0u64;
+        for node in 0..n_nodes {
+            for k in 0..per_node {
+                nodes.push(node);
+                if k == 0 && g.bool() {
+                    mcw_id += 1;
+                }
+                mcws.push(mcw_id);
+            }
+        }
+        let mut target = BTreeMap::new();
+        for node in 0..n_nodes {
+            let keep = g.usize_in(0, per_node + 1) as u32;
+            if keep > 0 {
+                target.insert(node, keep);
+            }
+        }
+        let d = decide(&nodes, &mcws, &target);
+        let total = d.survivors.len() + d.terminate.len() + d.zombies.len();
+        if total != nodes.len() {
+            return Err(format!("partition broken: {total} != {}", nodes.len()));
+        }
+        // Quota respected per node.
+        for node in 0..n_nodes {
+            let kept = d.survivors.iter().filter(|&&r| nodes[r] == node).count() as u32;
+            let quota = target.get(&node).copied().unwrap_or(0);
+            let present = nodes.iter().filter(|&&x| x == node).count() as u32;
+            if kept != quota.min(present) {
+                return Err(format!("node {node}: kept {kept}, quota {quota}"));
+            }
+        }
+        // Released nodes host no survivors and no zombies.
+        for &node in &d.released_nodes {
+            if d.survivors.iter().chain(&d.zombies).any(|&r| nodes[r] == node) {
+                return Err(format!("released node {node} still occupied"));
+            }
+        }
+        // Zombies only in partially-surviving MCWs.
+        for &z in &d.zombies {
+            let members: Vec<usize> =
+                (0..nodes.len()).filter(|&r| mcws[r] == mcws[z]).collect();
+            if members.iter().all(|r| !d.survivors.contains(r)) {
+                // whole MCW is victim and within... then it should be TS
+                // unless some member is a zombie forced by another node?
+                return Err(format!("zombie {z} in fully-victim MCW"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_plan_conserves_and_covers() {
+    check("block plan conserves bytes and covers targets", 300, |g| {
+        let ns = g.usize_in(1, 33);
+        let nt = g.usize_in(1, 33);
+        let total = g.u64_below(1 << 30);
+        let plan = block_plan(ns, nt, total);
+        let sum: u64 = plan.iter().map(|t| t.bytes).sum();
+        if sum != total {
+            return Err(format!("bytes {sum} != {total}"));
+        }
+        let b = total as u128;
+        for j in 0..nt {
+            let need = (b * (j as u128 + 1) / nt as u128 - b * j as u128 / nt as u128) as u64;
+            let got: u64 = plan.iter().filter(|t| t.dst == j).map(|t| t.bytes).sum();
+            if got != need {
+                return Err(format!("target {j}: {got} != {need}"));
+            }
+        }
+        if plan.iter().any(|t| t.src >= ns || t.dst >= nt) {
+            return Err("rank out of range".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mann_whitney_orders_shifted_samples() {
+    check("mann-whitney detects large shifts", 60, |g| {
+        let mut rng = paraspawn::util::rng::Rng::new(g.u64_below(u64::MAX - 1));
+        let n = g.usize_in(15, 40);
+        let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal() + 5.0).collect();
+        let r = paraspawn::util::stats::mann_whitney_u(&a, &b);
+        if r.p_value < 0.01 {
+            Ok(())
+        } else {
+            Err(format!("p = {} for a 5-sigma shift", r.p_value))
+        }
+    });
+}
+
+/// End-to-end property: after a random expansion the final rank layout
+/// matches the plan (sources keep low ranks — Merge — then spawned groups
+/// in group-id order, each contiguous on its node) — the §4.5 reordering
+/// invariant, for every strategy and both methods.
+#[test]
+fn prop_end_to_end_rank_layout_matches_plan() {
+    use paraspawn::app::{run_malleable, AppSpec, ResizeEvent};
+    use paraspawn::config::{CostModel, SimConfig};
+    use paraspawn::rms::Allocation;
+    use paraspawn::simmpi::World;
+    use paraspawn::topology::Cluster;
+    use std::sync::Arc;
+
+    check("end-to-end rank layout matches the plan", 12, |g| {
+        let n_nodes = g.usize_in(2, 5);
+        let cores = g.usize_in(1, 4) as u32;
+        let i_nodes = g.usize_in(1, n_nodes);
+        let strategy = g.pick(&[
+            SpawnStrategy::ParallelHypercube,
+            SpawnStrategy::ParallelDiffusive,
+            SpawnStrategy::NodeByNode,
+            SpawnStrategy::Plain,
+            SpawnStrategy::Single,
+        ]);
+        let method = if g.bool() { Method::Merge } else { Method::Baseline };
+        if i_nodes == n_nodes {
+            return Ok(()); // nothing to expand
+        }
+        let cluster = Cluster::mini(n_nodes, cores);
+        let initial = Allocation::new((0..i_nodes).map(|n| (n, cores)).collect());
+        let target = Allocation::new((0..n_nodes).map(|n| (n, cores)).collect());
+
+        let world = World::new(
+            cluster,
+            SimConfig { cost: CostModel::mn5().deterministic(), ..Default::default() }
+                .seeded(g.u64_below(1 << 40)),
+        );
+        let spec = Arc::new(AppSpec {
+            iters_per_epoch: 1,
+            work_per_iter: 1.0,
+            points_per_iter: 0,
+            trace: vec![ResizeEvent::new(target, method, strategy)],
+            data_bytes: 0,
+            ..Default::default()
+        });
+        run_malleable(&world, &initial, spec).map_err(|e| e.to_string())?;
+
+        let recs = world.metrics.reconfigs();
+        if recs.len() != 1 {
+            return Err(format!("expected 1 record, got {}", recs.len()));
+        }
+        let rec = &recs[0];
+        if rec.ns != i_nodes * cores as usize || rec.nt != n_nodes * cores as usize {
+            return Err(format!("ns/nt mismatch: {}/{}", rec.ns, rec.nt));
+        }
+
+        // Expected layout: (Merge) sources node-major first, then spawned
+        // groups by gid; (Baseline) the whole new set node-major.
+        let mut expected: Vec<usize> = Vec::new();
+        if method == Method::Merge {
+            for node in 0..i_nodes {
+                expected.extend(std::iter::repeat(node).take(cores as usize));
+            }
+            for node in i_nodes..n_nodes {
+                expected.extend(std::iter::repeat(node).take(cores as usize));
+            }
+        } else {
+            for node in 0..n_nodes {
+                expected.extend(std::iter::repeat(node).take(cores as usize));
+            }
+        }
+        let layouts = world.metrics.layouts();
+        let (_, layout) = layouts.first().ok_or("no layout recorded")?;
+        if *layout != expected {
+            return Err(format!(
+                "{method:?}+{strategy:?} {i_nodes}->{n_nodes}x{cores}: layout {layout:?} != expected {expected:?}"
+            ));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,128 @@
+//! End-to-end PJRT tests: load the AOT artifacts produced by
+//! `make artifacts` and validate numerics from Rust.
+//!
+//! Skipped (with a message) when artifacts are absent so `cargo test`
+//! works before the python step; `make test` always builds them first.
+
+use paraspawn::app::PiEval;
+use paraspawn::runtime::{artifacts_dir, CostModelKernel, Engine, PiKernel, WorkloadKernel};
+
+fn engine() -> Option<Engine> {
+    if !artifacts_dir().join("meta.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::cpu().expect("PJRT engine"))
+}
+
+#[test]
+fn pi_kernel_counts_correctly() {
+    let Some(engine) = engine() else { return };
+    let k = PiKernel::load(&engine).unwrap();
+    let n = k.batch();
+    // All origin points are inside.
+    let pts = vec![0.0f32; n * 2];
+    assert_eq!(k.count_inside(&pts), n as u64);
+    // All (2,2) points are outside.
+    let pts = vec![2.0f32; n * 2];
+    assert_eq!(k.count_inside(&pts), 0);
+}
+
+#[test]
+fn pi_kernel_matches_host_eval() {
+    let Some(engine) = engine() else { return };
+    let k = PiKernel::load(&engine).unwrap();
+    let n = k.batch();
+    let mut rng = paraspawn::util::rng::Rng::new(77);
+    let pts: Vec<f32> = (0..n * 2).map(|_| (rng.f64() * 1.5) as f32).collect();
+    let host = paraspawn::app::HostPiEval.count_inside(&pts);
+    assert_eq!(k.count_inside(&pts), host);
+}
+
+#[test]
+fn pi_kernel_handles_partial_batches() {
+    let Some(engine) = engine() else { return };
+    let k = PiKernel::load(&engine).unwrap();
+    // Half a batch: padding must not contaminate the count.
+    let n = k.batch() / 2;
+    let pts = vec![0.1f32; n * 2];
+    assert_eq!(k.count_inside(&pts), n as u64);
+}
+
+#[test]
+fn pi_estimate_is_close() {
+    let Some(engine) = engine() else { return };
+    let k = PiKernel::load(&engine).unwrap();
+    let n = k.batch() * 8;
+    let mut rng = paraspawn::util::rng::Rng::new(3);
+    let pts: Vec<f32> = (0..n * 2).map(|_| rng.f64() as f32).collect();
+    let est = 4.0 * k.count_inside(&pts) as f64 / n as f64;
+    assert!((est - std::f64::consts::PI).abs() < 0.1, "estimate {est}");
+}
+
+#[test]
+fn workload_kernel_identity() {
+    let Some(engine) = engine() else { return };
+    let k = WorkloadKernel::load(&engine).unwrap();
+    let m = k.dim();
+    let mut a = vec![0.0f32; m * m];
+    for i in 0..m {
+        a[i * m + i] = 1.0; // identity
+    }
+    let mut b = vec![0.0f32; m * m];
+    for (i, v) in b.iter_mut().enumerate() {
+        *v = (i % 97) as f32 / 97.0;
+    }
+    let c = k.step(&a, &b).unwrap();
+    // I @ B then normalized by max(|B|) which is < 1 => unchanged.
+    for (x, y) in c.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn costmodel_kernel_matches_host() {
+    let Some(engine) = engine() else { return };
+    let k = CostModelKernel::load(&engine).unwrap();
+    assert_eq!(k.f, paraspawn::coordinator::select::N_FEATURES);
+    let rows = 3usize;
+    let mut features = vec![0.0f32; rows * k.f];
+    for (i, f) in features.iter_mut().enumerate() {
+        *f = i as f32 * 0.5;
+    }
+    let coeffs: Vec<f32> = (0..k.f).map(|i| 1.0 / (i + 1) as f32).collect();
+    let got = k.scores(&features, rows, &coeffs).unwrap();
+    let want = paraspawn::coordinator::select::host_scores(&features, rows, &coeffs);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+    }
+}
+
+#[test]
+fn select_via_pjrt_agrees_with_host() {
+    let Some(engine) = engine() else { return };
+    use paraspawn::config::CostModel;
+    use paraspawn::coordinator::select::{select, Candidate, SelectContext};
+    use paraspawn::mam::plan::Plan;
+    use paraspawn::mam::{Method, SpawnStrategy};
+    let kernel = CostModelKernel::load(&engine).unwrap();
+    let candidates = vec![
+        Candidate { method: Method::Merge, strategy: SpawnStrategy::Plain },
+        Candidate { method: Method::Merge, strategy: SpawnStrategy::NodeByNode },
+        Candidate { method: Method::Merge, strategy: SpawnStrategy::ParallelHypercube },
+    ];
+    let mk_plan = |c: &Candidate| {
+        let n = 8usize;
+        let mut r = vec![0u32; n];
+        r[0] = 4;
+        Plan::new(0, c.method, c.strategy, (0..n).collect(), vec![4; n], r)
+    };
+    let ctx = SelectContext { expected_shrinks: 4.0 };
+    let cost = CostModel::mn5();
+    let (best_pjrt, s1) = select(&candidates, mk_plan, &cost, &ctx, Some(&kernel));
+    let (best_host, s2) = select(&candidates, mk_plan, &cost, &ctx, None);
+    assert_eq!(best_pjrt, best_host);
+    for (a, b) in s1.iter().zip(&s2) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}
