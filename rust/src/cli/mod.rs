@@ -3,6 +3,7 @@
 //! Subcommands:
 //!
 //! * `run`      — one reconfiguration experiment, with a phase breakdown.
+//! * `sweep`    — a scenario matrix on the thread-pooled sweep engine.
 //! * `figures`  — regenerate the paper's tables/figures into CSV + ASCII.
 //! * `table2`   — print the diffusive worked example (paper Table 2).
 //! * `workload` — RMS makespan simulation (DRM on/off).
@@ -13,6 +14,7 @@
 
 use crate::config::CostModel;
 use crate::coordinator::figures::{self, FigureConfig};
+use crate::coordinator::sweep;
 use crate::coordinator::{run_reconfiguration, Scenario};
 use crate::mam::{Method, SpawnStrategy};
 use crate::rms::AllocPolicy;
@@ -122,7 +124,133 @@ fn figure_cfg(a: &Args) -> Result<FigureConfig> {
     let mut cfg = FigureConfig::default();
     cfg.reps = a.usize_or("reps", cfg.reps)?;
     cfg.max_nodes = a.usize_or("max-nodes", cfg.max_nodes)?;
+    cfg.threads = a.usize_or("threads", cfg.threads)?;
     Ok(cfg)
+}
+
+/// Parse `"1,2,4"` into node counts.
+fn parse_node_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| p.trim().parse::<usize>().with_context(|| format!("bad node count '{p}'")))
+        .collect()
+}
+
+/// Parse `"1:4,2:8"` into `(initial, target)` pairs.
+fn parse_pair_list(s: &str) -> Result<Vec<(usize, usize)>> {
+    s.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| {
+            let (i, n) = p
+                .trim()
+                .split_once(':')
+                .with_context(|| format!("pair '{p}' must look like I:N"))?;
+            Ok((
+                i.parse::<usize>().with_context(|| format!("bad initial nodes '{i}'"))?,
+                n.parse::<usize>().with_context(|| format!("bad target nodes '{n}'"))?,
+            ))
+        })
+        .collect()
+}
+
+/// Build a [`sweep::ScenarioMatrix`] from CLI arguments: either a figure
+/// preset (`--preset 4a|4b|6a|6b`) or a grid assembled from `--cluster`,
+/// `--direction` and `--nodes`/`--pairs`, then filtered.
+fn sweep_matrix(a: &Args) -> Result<sweep::ScenarioMatrix> {
+    use crate::coordinator::sweep::ClusterKind;
+    let mut matrix = if let Some(name) = a.get("preset") {
+        // A preset fixes the cluster/direction/grid; reject flags that
+        // would otherwise be silently ignored (--configs and --max-nodes
+        // still compose as filters).
+        for conflicting in ["cluster", "direction", "nodes", "pairs"] {
+            if a.get(conflicting).is_some() {
+                bail!("--preset conflicts with --{conflicting} (use --configs/--max-nodes to filter a preset)");
+            }
+        }
+        sweep::preset(name)
+            .with_context(|| format!("unknown preset '{name}' (4a | 4b | 6a | 6b)"))?
+    } else {
+        let cluster_name = a.get("cluster").unwrap_or("mn5");
+        let kind = ClusterKind::parse(cluster_name)
+            .with_context(|| format!("unknown cluster '{cluster_name}' (mn5 | nasp | mini)"))?;
+        let nodes = match a.get("nodes") {
+            Some(list) => parse_node_list(list)?,
+            None => kind.node_counts().to_vec(),
+        };
+        let direction = a.get("direction").unwrap_or("expand");
+        let pairs = match a.get("pairs") {
+            Some(list) => parse_pair_list(list)?,
+            None => match direction {
+                "expand" => sweep::expansion_pairs(&nodes),
+                "shrink" => sweep::shrink_pairs(&nodes),
+                "both" => {
+                    let mut p = sweep::expansion_pairs(&nodes);
+                    p.extend(sweep::shrink_pairs(&nodes));
+                    p
+                }
+                other => bail!("unknown direction '{other}' (expand | shrink | both)"),
+            },
+        };
+        let configs = match (kind, direction) {
+            (ClusterKind::Nasp, "shrink") => sweep::nasp_shrink_configs(),
+            (ClusterKind::Nasp, _) => sweep::nasp_expand_configs(),
+            (_, "shrink") => sweep::mn5_shrink_configs(),
+            (_, _) => sweep::mn5_expand_configs(),
+        };
+        sweep::ScenarioMatrix::new().clusters(vec![kind]).configs(configs).pairs(pairs)
+    };
+    let reps = a.usize_or("reps", matrix.reps)?;
+    let seed = a.usize_or("seed", matrix.seed as usize)? as u64;
+    let data_bytes = a.usize_or("data-bytes", matrix.data_bytes as usize)? as u64;
+    matrix = matrix.reps(reps).seed(seed).data_bytes(data_bytes);
+    if let Some(max) = a.get("max-nodes") {
+        matrix = matrix.max_nodes(max.parse().context("--max-nodes must be an integer")?);
+    }
+    if let Some(labels) = a.get("configs") {
+        let labels: Vec<String> =
+            labels.split(',').map(|l| l.trim().to_string()).filter(|l| !l.is_empty()).collect();
+        matrix = matrix.filter_configs(&labels);
+        if matrix.configs.is_empty() {
+            bail!("--configs '{labels:?}' matched no configuration label");
+        }
+    }
+    Ok(matrix)
+}
+
+fn cmd_sweep(a: &Args) -> Result<()> {
+    let matrix = sweep_matrix(a)?;
+    if matrix.is_empty() {
+        bail!("the requested matrix is empty (check --nodes/--pairs/--configs)");
+    }
+    if a.get("json").is_some() && a.get("out").is_none() {
+        bail!("--json needs --out DIR (JSON is written next to the CSVs)");
+    }
+    let threads = a.usize_or("threads", sweep::default_threads())?;
+    eprintln!(
+        "sweep: {} tasks ({} cluster(s) x {} pair(s) x {} config(s) x {} rep(s)) on {} thread(s)",
+        matrix.len(),
+        matrix.clusters.len(),
+        matrix.pairs.iter().filter(|&&(i, n)| i != n).count(),
+        matrix.configs.len(),
+        matrix.reps,
+        threads,
+    );
+    let t0 = std::time::Instant::now();
+    let results = sweep::run_matrix(&matrix, threads)?;
+    let wall = t0.elapsed().as_secs_f64();
+    print!("{}", results.summary_table().to_ascii());
+    println!(
+        "\n{} samples in {:.2}s wall-clock ({} threads)",
+        results.total_samples(),
+        wall,
+        threads
+    );
+    if let Some(dir) = a.get("out") {
+        let dir = PathBuf::from(dir);
+        results.write(&dir, a.get("json").is_some())?;
+        println!("[written {}/sweep_{{summary,samples,phases}}.csv]", dir.display());
+    }
+    Ok(())
 }
 
 fn cmd_figures(a: &Args) -> Result<()> {
@@ -265,8 +393,13 @@ USAGE:
                      [--strategy plain|single|nodebynode|hypercube|diffusive]
                      [--reps K] [--seed S] [--warmup W] [--data-bytes B]
                      [--config cost.conf]
+  paraspawn sweep    [--preset 4a|4b|6a|6b]
+                     [--cluster mn5|nasp|mini] [--direction expand|shrink|both]
+                     [--nodes 1,2,4,8] [--pairs 1:4,2:8] [--configs M,M+HC]
+                     [--threads T] [--reps K] [--seed S] [--max-nodes M]
+                     [--data-bytes B] [--out DIR] [--json]
   paraspawn figures  [--fig all|table2|4a|4b|5|6a|6b] [--out DIR]
-                     [--reps K] [--max-nodes M]
+                     [--reps K] [--max-nodes M] [--threads T]
   paraspawn table2
   paraspawn workload [--nodes N] [--jobs J] [--seed S]
   paraspawn select   [--i I] [--n N] [--cores C] [--expected-shrinks K]
@@ -283,6 +416,7 @@ pub fn main() -> Result<()> {
     let args = parse_args(argv)?;
     match cmd.as_str() {
         "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
         "figures" => cmd_figures(&args),
         "table2" => {
             print!("{}", figures::table2().to_ascii());
@@ -348,5 +482,63 @@ mod tests {
         let a = parse_args(["--i".into(), "4".into(), "--n".into(), "2".into()]).unwrap();
         let s = scenario_from_args(&a).unwrap();
         assert!(s.prepare_parallel);
+    }
+
+    #[test]
+    fn node_and_pair_lists_parse() {
+        assert_eq!(parse_node_list("1,2, 4").unwrap(), vec![1, 2, 4]);
+        assert!(parse_node_list("1,x").is_err());
+        assert_eq!(parse_pair_list("1:4, 2:8").unwrap(), vec![(1, 4), (2, 8)]);
+        assert!(parse_pair_list("1-4").is_err());
+    }
+
+    #[test]
+    fn sweep_matrix_from_preset_and_filters() {
+        let a = parse_args([
+            "--preset".into(),
+            "4a".into(),
+            "--max-nodes".into(),
+            "4".into(),
+            "--configs".into(),
+            "M,M+HC".into(),
+            "--reps".into(),
+            "2".into(),
+        ])
+        .unwrap();
+        let m = sweep_matrix(&a).unwrap();
+        assert_eq!(m.pairs, vec![(1, 2), (1, 4), (2, 4)]);
+        assert_eq!(m.configs.len(), 2);
+        assert_eq!(m.reps, 2);
+    }
+
+    #[test]
+    fn sweep_matrix_directions_and_errors() {
+        let a = parse_args([
+            "--cluster".into(),
+            "mini".into(),
+            "--direction".into(),
+            "shrink".into(),
+            "--nodes".into(),
+            "1,2".into(),
+        ])
+        .unwrap();
+        let m = sweep_matrix(&a).unwrap();
+        assert_eq!(m.pairs, vec![(2, 1)]);
+        // Shrink grids use the shrink configuration set (M+TS present).
+        assert!(m.configs.iter().any(|c| c.label == "M+TS"));
+
+        let bad = parse_args(["--preset".into(), "9z".into()]).unwrap();
+        assert!(sweep_matrix(&bad).is_err());
+        let bad = parse_args(["--direction".into(), "sideways".into()]).unwrap();
+        assert!(sweep_matrix(&bad).is_err());
+        // Grid flags conflict with a preset instead of being ignored.
+        let bad = parse_args([
+            "--preset".into(),
+            "4a".into(),
+            "--nodes".into(),
+            "1,2".into(),
+        ])
+        .unwrap();
+        assert!(sweep_matrix(&bad).is_err());
     }
 }

@@ -5,15 +5,27 @@
 //! This replaces serde/toml, which are unavailable offline (DESIGN.md §2).
 
 use std::collections::BTreeMap;
-use thiserror::Error;
 
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum ParseError {
-    #[error("line {line}: expected 'key = value', got '{text}'")]
     Malformed { line: usize, text: String },
-    #[error("line {line}: duplicate key '{key}'")]
     Duplicate { line: usize, key: String },
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::Malformed { line, text } => {
+                write!(f, "line {line}: expected 'key = value', got '{text}'")
+            }
+            ParseError::Duplicate { line, key } => {
+                write!(f, "line {line}: duplicate key '{key}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// Parse `key = value` text into an ordered map.
 pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>, ParseError> {

@@ -4,17 +4,18 @@
 //! the headline ratios (expansion overhead, shrink speedups, Merge-win
 //! percentages).
 
-use super::{run_samples, Scenario};
-use crate::mam::{Method, SpawnStrategy};
+use super::sweep::{run_matrix, ClusterKind, ScenarioMatrix};
 use crate::util::csvout::{fmt_time, Table};
 use crate::util::stats::{median, statistically_equivalent};
 use anyhow::Result;
 use std::collections::BTreeMap;
 
-/// Node counts of the MN5 sweep (§5.2).
-pub const MN5_NODES: [usize; 7] = [1, 2, 4, 8, 16, 24, 32];
-/// Node counts of the NASP sweep (§5.3).
-pub const NASP_NODES: [usize; 9] = [1, 2, 4, 6, 8, 10, 12, 14, 16];
+// The matrix vocabulary lives in the sweep engine; re-exported here so
+// the long-standing `figures::` paths keep working.
+pub use super::sweep::{
+    expansion_pairs, mn5_expand_configs, mn5_shrink_configs, nasp_expand_configs,
+    nasp_shrink_configs, shrink_pairs, CellSamples, MethodConfig, MN5_NODES, NASP_NODES,
+};
 
 /// Significance level for the Figure 5 equivalence groups.
 pub const ALPHA: f64 = 0.05;
@@ -28,21 +29,24 @@ pub struct FigureConfig {
     /// the full sweeps run thousands of simulated ranks per cell).
     pub max_nodes: usize,
     pub seed: u64,
+    /// Sweep-executor worker threads (`$PARASPAWN_THREADS` or the
+    /// machine's parallelism). Results are identical for any value.
+    pub threads: usize,
 }
 
 impl Default for FigureConfig {
     fn default() -> Self {
-        let reps = std::env::var("PARASPAWN_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+        let reps = super::sweep::default_reps();
         let max_nodes =
             std::env::var("PARASPAWN_MAX_NODES").ok().and_then(|v| v.parse().ok()).unwrap_or(32);
-        FigureConfig { reps, max_nodes, seed: 0xF16 }
+        FigureConfig { reps, max_nodes, seed: 0xF16, threads: super::sweep::default_threads() }
     }
 }
 
 impl FigureConfig {
     /// Small preset for CI / cargo-bench runs.
     pub fn quick() -> Self {
-        FigureConfig { reps: 3, max_nodes: 8, seed: 0xF16 }
+        FigureConfig { reps: 3, max_nodes: 8, seed: 0xF16, threads: super::sweep::default_threads() }
     }
 
     fn mn5_nodes(&self) -> Vec<usize> {
@@ -54,109 +58,21 @@ impl FigureConfig {
     }
 }
 
-/// A method x strategy configuration with its figure label.
-#[derive(Clone, Copy, Debug)]
-pub struct MethodConfig {
-    pub label: &'static str,
-    pub method: Method,
-    pub strategy: SpawnStrategy,
-}
-
-/// Expansion configurations of Figure 4a.
-pub fn mn5_expand_configs() -> Vec<MethodConfig> {
-    use SpawnStrategy::*;
-    vec![
-        MethodConfig { label: "M", method: Method::Merge, strategy: Plain },
-        MethodConfig { label: "B+HC", method: Method::Baseline, strategy: ParallelHypercube },
-        MethodConfig { label: "M+HC", method: Method::Merge, strategy: ParallelHypercube },
-        MethodConfig { label: "B+ID", method: Method::Baseline, strategy: ParallelDiffusive },
-        MethodConfig { label: "M+ID", method: Method::Merge, strategy: ParallelDiffusive },
-    ]
-}
-
-/// Shrink configurations of Figure 4b. The Merge shrink is the TS method
-/// (no spawning; per-node MCWs created by a prior parallel expansion).
-pub fn mn5_shrink_configs() -> Vec<MethodConfig> {
-    use SpawnStrategy::*;
-    vec![
-        MethodConfig { label: "M+TS", method: Method::Merge, strategy: Plain },
-        MethodConfig { label: "B+HC", method: Method::Baseline, strategy: ParallelHypercube },
-        MethodConfig { label: "B+ID", method: Method::Baseline, strategy: ParallelDiffusive },
-    ]
-}
-
-/// Expansion configurations of Figure 6a (the Hypercube strategy cannot
-/// spawn correctly on heterogeneous allocations, §5.3).
-pub fn nasp_expand_configs() -> Vec<MethodConfig> {
-    use SpawnStrategy::*;
-    vec![
-        MethodConfig { label: "M", method: Method::Merge, strategy: Plain },
-        MethodConfig { label: "B+ID", method: Method::Baseline, strategy: ParallelDiffusive },
-        MethodConfig { label: "M+ID", method: Method::Merge, strategy: ParallelDiffusive },
-    ]
-}
-
-/// Shrink configurations of Figure 6b.
-pub fn nasp_shrink_configs() -> Vec<MethodConfig> {
-    use SpawnStrategy::*;
-    vec![
-        MethodConfig { label: "M+TS", method: Method::Merge, strategy: Plain },
-        MethodConfig { label: "B+ID", method: Method::Baseline, strategy: ParallelDiffusive },
-    ]
-}
-
-fn scenario(nasp: bool, i: usize, n: usize, mc: &MethodConfig, seed: u64) -> Scenario {
-    let mut s = if nasp { Scenario::nasp(i, n) } else { Scenario::mn5(i, n) };
-    s = s.with(mc.method, mc.strategy).seeded(seed);
-    // Shrinks start from a state prepared by a parallel expansion (per
-    // §4.6 a job that never expanded cannot TS; the paper's TS shrinks
-    // rely on the parallel spawning of previous resizes).
-    s.prepare_parallel = n < i;
-    s
-}
-
-/// Samples for every (I, N, config) cell of a sweep.
-pub type CellSamples = BTreeMap<(usize, usize, &'static str), Vec<f64>>;
-
+/// Run one figure's cells through the sweep engine: a thin declarative
+/// matrix (this used to be a hand-rolled serial double loop).
 fn run_sweep(
     cfg: &FigureConfig,
-    nasp: bool,
+    kind: ClusterKind,
     pairs: &[(usize, usize)],
     configs: &[MethodConfig],
 ) -> Result<CellSamples> {
-    let mut out = CellSamples::new();
-    for &(i, n) in pairs {
-        for mc in configs {
-            let s = scenario(nasp, i, n, mc, cfg.seed);
-            let samples = run_samples(&s, cfg.reps)?;
-            out.insert((i, n, mc.label), samples);
-        }
-    }
-    Ok(out)
-}
-
-fn expansion_pairs(nodes: &[usize]) -> Vec<(usize, usize)> {
-    let mut v = Vec::new();
-    for &i in nodes {
-        for &n in nodes {
-            if i < n {
-                v.push((i, n));
-            }
-        }
-    }
-    v
-}
-
-fn shrink_pairs(nodes: &[usize]) -> Vec<(usize, usize)> {
-    let mut v = Vec::new();
-    for &i in nodes {
-        for &n in nodes {
-            if i > n {
-                v.push((i, n));
-            }
-        }
-    }
-    v
+    let matrix = ScenarioMatrix::new()
+        .clusters(vec![kind])
+        .configs(configs.to_vec())
+        .pairs(pairs.to_vec())
+        .reps(cfg.reps)
+        .seed(cfg.seed);
+    Ok(run_matrix(&matrix, cfg.threads)?.cell_samples(configs))
 }
 
 fn sweep_table(
@@ -183,7 +99,7 @@ pub fn fig4a(cfg: &FigureConfig) -> Result<(Table, CellSamples)> {
     let nodes = cfg.mn5_nodes();
     let pairs = expansion_pairs(&nodes);
     let configs = mn5_expand_configs();
-    let samples = run_sweep(cfg, false, &pairs, &configs)?;
+    let samples = run_sweep(cfg, ClusterKind::Mn5, &pairs, &configs)?;
     Ok((sweep_table(&samples, &pairs, &configs), samples))
 }
 
@@ -192,7 +108,7 @@ pub fn fig4b(cfg: &FigureConfig) -> Result<(Table, CellSamples)> {
     let nodes = cfg.mn5_nodes();
     let pairs = shrink_pairs(&nodes);
     let configs = mn5_shrink_configs();
-    let samples = run_sweep(cfg, false, &pairs, &configs)?;
+    let samples = run_sweep(cfg, ClusterKind::Mn5, &pairs, &configs)?;
     Ok((sweep_table(&samples, &pairs, &configs), samples))
 }
 
@@ -201,7 +117,7 @@ pub fn fig6a(cfg: &FigureConfig) -> Result<(Table, CellSamples)> {
     let nodes = cfg.nasp_nodes();
     let pairs = expansion_pairs(&nodes);
     let configs = nasp_expand_configs();
-    let samples = run_sweep(cfg, true, &pairs, &configs)?;
+    let samples = run_sweep(cfg, ClusterKind::Nasp, &pairs, &configs)?;
     Ok((sweep_table(&samples, &pairs, &configs), samples))
 }
 
@@ -210,7 +126,7 @@ pub fn fig6b(cfg: &FigureConfig) -> Result<(Table, CellSamples)> {
     let nodes = cfg.nasp_nodes();
     let pairs = shrink_pairs(&nodes);
     let configs = nasp_shrink_configs();
-    let samples = run_sweep(cfg, true, &pairs, &configs)?;
+    let samples = run_sweep(cfg, ClusterKind::Nasp, &pairs, &configs)?;
     Ok((sweep_table(&samples, &pairs, &configs), samples))
 }
 
@@ -348,6 +264,7 @@ pub fn headline_summary(name: &str, h: &Headline, paper_overhead: f64, paper_spe
 /// Table 2 of the paper: the diffusive step trace for the worked example.
 pub fn table2() -> Table {
     use crate::mam::plan::{diffusive_trace, Plan};
+    use crate::mam::{Method, SpawnStrategy};
     let plan = Plan::new(
         0,
         Method::Merge,

@@ -1,10 +1,11 @@
 //! The coordinator: wires the RMS, the MaM library and the application
 //! driver into single-reconfiguration experiments (the unit of the
-//! paper's evaluation), repeated sampling for the statistical analysis,
-//! and the figure-regeneration harness.
+//! paper's evaluation), the thread-pooled sweep engine that runs whole
+//! scenario matrices ([`sweep`]), and the figure-regeneration harness.
 
 pub mod figures;
 pub mod select;
+pub mod sweep;
 
 use crate::app::{self, AppSpec, ResizeEvent};
 use crate::config::{CostModel, SimConfig};
@@ -18,7 +19,7 @@ use std::sync::Arc;
 /// One reconfiguration experiment: resize a job from `initial_nodes` to
 /// `target_nodes` with the given method/strategy, after a short
 /// Monte-Carlo warm-up (the paper's 5 iterations).
-#[derive(Clone)]
+#[derive(Clone, Debug)]
 pub struct Scenario {
     pub cluster: Cluster,
     pub cost: CostModel,
@@ -177,11 +178,11 @@ pub fn run_reconfiguration(s: &Scenario) -> Result<ReconfigReport> {
 
 /// Run `reps` independent repetitions (different seeds) and return the
 /// resize times — the sampling behind the paper's 20-repetition medians.
+///
+/// A thin declarative wrapper over the [`sweep`] engine: repetitions run
+/// concurrently on the default thread pool, and because each repetition
+/// is bit-reproducible for its derived seed, the returned (rep-ordered)
+/// samples are identical for any thread count.
 pub fn run_samples(s: &Scenario, reps: usize) -> Result<Vec<f64>> {
-    let mut out = Vec::with_capacity(reps);
-    for rep in 0..reps {
-        let scenario = s.clone().seeded(s.seed.wrapping_add(rep as u64 * 7919));
-        out.push(run_reconfiguration(&scenario)?.total_time);
-    }
-    Ok(out)
+    sweep::run_scenario_samples(s, reps, sweep::default_threads().min(reps.max(1)))
 }

@@ -1,0 +1,783 @@
+//! The sweep engine: declarative scenario matrices executed by a thread
+//! pool — the paper's evaluation is a large matrix of reconfiguration
+//! experiments (cluster × method × strategy × initial/target node pair ×
+//! repetition), and this module turns such matrices into flat task lists
+//! and runs them wall-clock-parallel.
+//!
+//! * [`ScenarioMatrix`] — a builder expanding cartesian products into
+//!   [`SweepTask`]s (one task = one repetition of one cell).
+//! * [`run_tasks`] / [`run_matrix`] — the thread-pooled executor. Every
+//!   task owns an independent simulated [`crate::simmpi::World`], so
+//!   parallelism is embarrassingly safe; since the simulator itself is
+//!   bit-reproducible for a fixed seed, the assembled results are
+//!   **identical for any `--threads` value** (repetitions are reassembled
+//!   in task order, not completion order).
+//! * [`SweepResults`] — the unified sink: rep-ordered samples per cell,
+//!   mean per-phase breakdowns, summary/long-form [`Table`]s with medians
+//!   and order-statistic CIs ([`crate::util::stats::median_ci95`]), and
+//!   CSV/JSON writers.
+//!
+//! The figure harness ([`super::figures`]) and [`super::run_samples`] are
+//! thin declarative layers over this engine, and the `paraspawn sweep`
+//! CLI subcommand exposes arbitrary user-defined grids.
+
+use super::{run_reconfiguration, ReconfigReport, Scenario};
+use crate::config::CostModel;
+use crate::mam::{Method, SpawnStrategy};
+use crate::metrics::Phase;
+use crate::topology::Cluster;
+use crate::util::csvout::Table;
+use crate::util::stats::{mean, median, median_ci95, std_dev};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// Node counts of the MN5 sweep (§5.2).
+pub const MN5_NODES: [usize; 7] = [1, 2, 4, 8, 16, 24, 32];
+/// Node counts of the NASP sweep (§5.3).
+pub const NASP_NODES: [usize; 9] = [1, 2, 4, 6, 8, 10, 12, 14, 16];
+/// Node counts of the mini test cluster (8 × 4-core nodes).
+pub const MINI_NODES: [usize; 4] = [1, 2, 4, 8];
+
+/// A method × strategy configuration with its figure label.
+#[derive(Clone, Copy, Debug)]
+pub struct MethodConfig {
+    pub label: &'static str,
+    pub method: Method,
+    pub strategy: SpawnStrategy,
+}
+
+/// Expansion configurations of Figure 4a.
+pub fn mn5_expand_configs() -> Vec<MethodConfig> {
+    use SpawnStrategy::*;
+    vec![
+        MethodConfig { label: "M", method: Method::Merge, strategy: Plain },
+        MethodConfig { label: "B+HC", method: Method::Baseline, strategy: ParallelHypercube },
+        MethodConfig { label: "M+HC", method: Method::Merge, strategy: ParallelHypercube },
+        MethodConfig { label: "B+ID", method: Method::Baseline, strategy: ParallelDiffusive },
+        MethodConfig { label: "M+ID", method: Method::Merge, strategy: ParallelDiffusive },
+    ]
+}
+
+/// Shrink configurations of Figure 4b. The Merge shrink is the TS method
+/// (no spawning; per-node MCWs created by a prior parallel expansion).
+pub fn mn5_shrink_configs() -> Vec<MethodConfig> {
+    use SpawnStrategy::*;
+    vec![
+        MethodConfig { label: "M+TS", method: Method::Merge, strategy: Plain },
+        MethodConfig { label: "B+HC", method: Method::Baseline, strategy: ParallelHypercube },
+        MethodConfig { label: "B+ID", method: Method::Baseline, strategy: ParallelDiffusive },
+    ]
+}
+
+/// Expansion configurations of Figure 6a (the Hypercube strategy cannot
+/// spawn correctly on heterogeneous allocations, §5.3).
+pub fn nasp_expand_configs() -> Vec<MethodConfig> {
+    use SpawnStrategy::*;
+    vec![
+        MethodConfig { label: "M", method: Method::Merge, strategy: Plain },
+        MethodConfig { label: "B+ID", method: Method::Baseline, strategy: ParallelDiffusive },
+        MethodConfig { label: "M+ID", method: Method::Merge, strategy: ParallelDiffusive },
+    ]
+}
+
+/// Shrink configurations of Figure 6b.
+pub fn nasp_shrink_configs() -> Vec<MethodConfig> {
+    use SpawnStrategy::*;
+    vec![
+        MethodConfig { label: "M+TS", method: Method::Merge, strategy: Plain },
+        MethodConfig { label: "B+ID", method: Method::Baseline, strategy: ParallelDiffusive },
+    ]
+}
+
+/// All `(I, N)` pairs with `I < N` over a node list.
+pub fn expansion_pairs(nodes: &[usize]) -> Vec<(usize, usize)> {
+    let mut v = Vec::new();
+    for &i in nodes {
+        for &n in nodes {
+            if i < n {
+                v.push((i, n));
+            }
+        }
+    }
+    v
+}
+
+/// All `(I, N)` pairs with `I > N` over a node list.
+pub fn shrink_pairs(nodes: &[usize]) -> Vec<(usize, usize)> {
+    let mut v = Vec::new();
+    for &i in nodes {
+        for &n in nodes {
+            if i > n {
+                v.push((i, n));
+            }
+        }
+    }
+    v
+}
+
+/// The clusters a matrix can sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ClusterKind {
+    /// MareNostrum 5 slice: 32 × 112-core nodes (homogeneous).
+    Mn5,
+    /// NASP: 8 × 20-core + 8 × 32-core nodes (heterogeneous).
+    Nasp,
+    /// Small homogeneous test cluster: 8 × 4-core nodes.
+    Mini,
+}
+
+impl ClusterKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ClusterKind::Mn5 => "mn5",
+            ClusterKind::Nasp => "nasp",
+            ClusterKind::Mini => "mini",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ClusterKind> {
+        match s {
+            "mn5" => Some(ClusterKind::Mn5),
+            "nasp" => Some(ClusterKind::Nasp),
+            "mini" => Some(ClusterKind::Mini),
+            _ => None,
+        }
+    }
+
+    /// The node counts the paper sweeps on this cluster.
+    pub fn node_counts(self) -> &'static [usize] {
+        match self {
+            ClusterKind::Mn5 => &MN5_NODES,
+            ClusterKind::Nasp => &NASP_NODES,
+            ClusterKind::Mini => &MINI_NODES,
+        }
+    }
+
+    fn base_scenario(self, initial_nodes: usize, target_nodes: usize) -> Scenario {
+        match self {
+            ClusterKind::Mn5 => Scenario::mn5(initial_nodes, target_nodes),
+            ClusterKind::Nasp => Scenario::nasp(initial_nodes, target_nodes),
+            ClusterKind::Mini => Scenario {
+                cluster: Cluster::mini(8, 4),
+                cost: CostModel::mn5(),
+                initial_nodes,
+                target_nodes,
+                ..Scenario::default()
+            },
+        }
+    }
+}
+
+/// Build the scenario of one matrix cell. Shrinks (`n < i`) prepare the
+/// job state with a parallel expansion first (§4.6: a job that never
+/// expanded has a single multi-node MCW and cannot TS).
+pub fn cell_scenario(
+    kind: ClusterKind,
+    initial_nodes: usize,
+    target_nodes: usize,
+    mc: &MethodConfig,
+    seed: u64,
+) -> Scenario {
+    let mut s = kind.base_scenario(initial_nodes, target_nodes);
+    s = s.with(mc.method, mc.strategy).seeded(seed);
+    s.prepare_parallel = target_nodes < initial_nodes;
+    s
+}
+
+/// Identity of one matrix cell (everything but the repetition index).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CellKey {
+    pub cluster: String,
+    pub initial_nodes: usize,
+    pub target_nodes: usize,
+    /// Configuration label (`"M+HC"`, `"merge+hypercube"`, ...).
+    pub config: String,
+}
+
+/// One unit of sweep work: a single repetition of a single cell.
+#[derive(Clone, Debug)]
+pub struct SweepTask {
+    pub cell: CellKey,
+    pub rep: usize,
+    pub scenario: Scenario,
+}
+
+/// Samples for every `(I, N, config)` cell of a single-cluster sweep —
+/// the shape the figure harness consumes.
+pub type CellSamples = BTreeMap<(usize, usize, &'static str), Vec<f64>>;
+
+/// A declarative cartesian scenario matrix.
+#[derive(Clone, Debug)]
+pub struct ScenarioMatrix {
+    pub clusters: Vec<ClusterKind>,
+    pub configs: Vec<MethodConfig>,
+    /// `(initial_nodes, target_nodes)` pairs; `i == n` entries are
+    /// skipped (nothing to reconfigure).
+    pub pairs: Vec<(usize, usize)>,
+    /// Repetitions per cell (paper: 20).
+    pub reps: usize,
+    /// Base seed; repetition `r` of every cell runs with
+    /// `seed + r * 7919`.
+    pub seed: u64,
+    /// Application payload to redistribute per resize (0 = process
+    /// management only, matching the paper's resize-time measurements).
+    pub data_bytes: u64,
+}
+
+impl Default for ScenarioMatrix {
+    fn default() -> Self {
+        ScenarioMatrix {
+            clusters: vec![ClusterKind::Mn5],
+            configs: mn5_expand_configs(),
+            pairs: Vec::new(),
+            reps: default_reps(),
+            seed: 0xF16,
+            data_bytes: 0,
+        }
+    }
+}
+
+impl ScenarioMatrix {
+    pub fn new() -> ScenarioMatrix {
+        ScenarioMatrix::default()
+    }
+
+    pub fn clusters(mut self, clusters: Vec<ClusterKind>) -> Self {
+        self.clusters = clusters;
+        self
+    }
+
+    /// Set the configurations, deduplicated by label (duplicates would
+    /// collapse into one [`CellKey`] and corrupt the per-cell rep counts).
+    pub fn configs(mut self, configs: Vec<MethodConfig>) -> Self {
+        let mut seen = std::collections::BTreeSet::new();
+        self.configs = configs.into_iter().filter(|mc| seen.insert(mc.label)).collect();
+        self
+    }
+
+    /// Set the `(initial, target)` pairs, deduplicated (duplicates would
+    /// collapse into one [`CellKey`] and corrupt the per-cell rep counts).
+    pub fn pairs(mut self, pairs: Vec<(usize, usize)>) -> Self {
+        let mut seen = std::collections::BTreeSet::new();
+        self.pairs = pairs.into_iter().filter(|p| seen.insert(*p)).collect();
+        self
+    }
+
+    /// All expansion pairs over a node list.
+    pub fn expansions(self, nodes: &[usize]) -> Self {
+        let pairs = expansion_pairs(nodes);
+        self.pairs(pairs)
+    }
+
+    /// All shrink pairs over a node list.
+    pub fn shrinks(self, nodes: &[usize]) -> Self {
+        let pairs = shrink_pairs(nodes);
+        self.pairs(pairs)
+    }
+
+    pub fn reps(mut self, reps: usize) -> Self {
+        self.reps = reps;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn data_bytes(mut self, data_bytes: u64) -> Self {
+        self.data_bytes = data_bytes;
+        self
+    }
+
+    /// Keep only pairs whose node counts stay within `max_nodes`.
+    pub fn max_nodes(mut self, max_nodes: usize) -> Self {
+        self.pairs.retain(|&(i, n)| i <= max_nodes && n <= max_nodes);
+        self
+    }
+
+    /// Keep only configurations whose label is in `labels`.
+    pub fn filter_configs(mut self, labels: &[String]) -> Self {
+        self.configs.retain(|mc| labels.iter().any(|l| l == mc.label));
+        self
+    }
+
+    /// Expand the matrix into its flat task list (cluster-major, then
+    /// pair, then configuration, repetitions innermost — so each cell's
+    /// repetitions are contiguous and rep-ordered).
+    pub fn tasks(&self) -> Vec<SweepTask> {
+        let mut out = Vec::new();
+        for &kind in &self.clusters {
+            for &(i, n) in &self.pairs {
+                if i == n {
+                    continue;
+                }
+                for mc in &self.configs {
+                    for rep in 0..self.reps {
+                        let seed = self.seed.wrapping_add(rep as u64 * 7919);
+                        let mut scenario = cell_scenario(kind, i, n, mc, seed);
+                        scenario.data_bytes = self.data_bytes;
+                        out.push(SweepTask {
+                            cell: CellKey {
+                                cluster: kind.name().to_string(),
+                                initial_nodes: i,
+                                target_nodes: n,
+                                config: mc.label.to_string(),
+                            },
+                            rep,
+                            scenario,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of tasks the matrix expands to.
+    pub fn len(&self) -> usize {
+        let pairs = self.pairs.iter().filter(|&&(i, n)| i != n).count();
+        self.clusters.len() * pairs * self.configs.len() * self.reps
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The paper-figure preset matrices (full node sets, default reps/seed).
+pub fn preset(name: &str) -> Option<ScenarioMatrix> {
+    let m = ScenarioMatrix::new();
+    Some(match name {
+        "4a" => m
+            .clusters(vec![ClusterKind::Mn5])
+            .configs(mn5_expand_configs())
+            .expansions(&MN5_NODES),
+        "4b" => m
+            .clusters(vec![ClusterKind::Mn5])
+            .configs(mn5_shrink_configs())
+            .shrinks(&MN5_NODES),
+        "6a" => m
+            .clusters(vec![ClusterKind::Nasp])
+            .configs(nasp_expand_configs())
+            .expansions(&NASP_NODES),
+        "6b" => m
+            .clusters(vec![ClusterKind::Nasp])
+            .configs(nasp_shrink_configs())
+            .shrinks(&NASP_NODES),
+        _ => return None,
+    })
+}
+
+/// Worker-thread count: `$PARASPAWN_THREADS` or the machine's available
+/// parallelism.
+pub fn default_threads() -> usize {
+    std::env::var("PARASPAWN_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Repetitions per cell: `$PARASPAWN_REPS` or 5 (paper: 20).
+pub fn default_reps() -> usize {
+    std::env::var("PARASPAWN_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5)
+}
+
+/// The unified result sink of a sweep.
+#[derive(Clone, Debug, Default)]
+pub struct SweepResults {
+    /// Resize-time samples per cell, in repetition order (NOT completion
+    /// order — identical for any thread count).
+    pub samples: BTreeMap<CellKey, Vec<f64>>,
+    /// Mean per-phase durations per cell, in [`Phase::ALL`] order.
+    pub phase_means: BTreeMap<CellKey, Vec<(Phase, f64)>>,
+}
+
+impl SweepResults {
+    /// Total number of samples across all cells.
+    pub fn total_samples(&self) -> usize {
+        self.samples.values().map(Vec::len).sum()
+    }
+
+    /// Project a single-cluster sweep into the figure harness's
+    /// [`CellSamples`] shape, matching configurations by label.
+    pub fn cell_samples(&self, configs: &[MethodConfig]) -> CellSamples {
+        let mut out = CellSamples::new();
+        for (cell, xs) in &self.samples {
+            if let Some(mc) = configs.iter().find(|mc| mc.label == cell.config) {
+                out.insert((cell.initial_nodes, cell.target_nodes, mc.label), xs.clone());
+            }
+        }
+        out
+    }
+
+    /// One row per cell: median with an order-statistic 95% CI, mean and
+    /// standard deviation.
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "cluster",
+            "initial_nodes",
+            "target_nodes",
+            "config",
+            "reps",
+            "median_s",
+            "ci95_lo_s",
+            "ci95_hi_s",
+            "mean_s",
+            "std_s",
+        ]);
+        for (cell, xs) in &self.samples {
+            let (lo, hi) = median_ci95(xs);
+            t.push_row(vec![
+                cell.cluster.clone(),
+                cell.initial_nodes.to_string(),
+                cell.target_nodes.to_string(),
+                cell.config.clone(),
+                xs.len().to_string(),
+                format!("{:.6}", median(xs)),
+                format!("{lo:.6}"),
+                format!("{hi:.6}"),
+                format!("{:.6}", mean(xs)),
+                format!("{:.6}", std_dev(xs)),
+            ]);
+        }
+        t
+    }
+
+    /// Long-form table: one row per (cell, repetition) sample.
+    pub fn samples_table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "cluster",
+            "initial_nodes",
+            "target_nodes",
+            "config",
+            "rep",
+            "time_s",
+        ]);
+        for (cell, xs) in &self.samples {
+            for (rep, x) in xs.iter().enumerate() {
+                t.push_row(vec![
+                    cell.cluster.clone(),
+                    cell.initial_nodes.to_string(),
+                    cell.target_nodes.to_string(),
+                    cell.config.clone(),
+                    rep.to_string(),
+                    format!("{x:.9}"),
+                ]);
+            }
+        }
+        t
+    }
+
+    /// Mean per-phase breakdown per cell (columns in [`Phase::ALL`]
+    /// order; empty cells print 0).
+    pub fn phase_table(&self) -> Table {
+        let mut header = vec![
+            "cluster".to_string(),
+            "initial_nodes".to_string(),
+            "target_nodes".to_string(),
+            "config".to_string(),
+        ];
+        header.extend(Phase::ALL.iter().map(|p| format!("{}_s", p.name())));
+        let mut t = Table::new(header);
+        for (cell, means) in &self.phase_means {
+            let mut row = vec![
+                cell.cluster.clone(),
+                cell.initial_nodes.to_string(),
+                cell.target_nodes.to_string(),
+                cell.config.clone(),
+            ];
+            for p in Phase::ALL.iter() {
+                let v = means.iter().find(|(q, _)| q == p).map(|&(_, d)| d).unwrap_or(0.0);
+                row.push(format!("{v:.6}"));
+            }
+            t.push_row(row);
+        }
+        t
+    }
+
+    /// Write `sweep_summary`, `sweep_samples` and `sweep_phases` into
+    /// `dir` as CSV (plus JSON when `json` is set).
+    pub fn write(&self, dir: &Path, json: bool) -> Result<()> {
+        self.summary_table().write_csv(dir.join("sweep_summary.csv"))?;
+        self.samples_table().write_csv(dir.join("sweep_samples.csv"))?;
+        self.phase_table().write_csv(dir.join("sweep_phases.csv"))?;
+        if json {
+            self.summary_table().write_json(dir.join("sweep_summary.json"))?;
+            self.samples_table().write_json(dir.join("sweep_samples.json"))?;
+            self.phase_table().write_json(dir.join("sweep_phases.json"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Run a matrix on a pool of `threads` worker threads.
+pub fn run_matrix(matrix: &ScenarioMatrix, threads: usize) -> Result<SweepResults> {
+    run_tasks(matrix.tasks(), threads)
+}
+
+/// Run an explicit task list on a pool of `threads` worker threads.
+///
+/// Tasks are claimed from a shared queue; results stream back over a
+/// channel and are reassembled in task order, so the output is a pure
+/// function of the task list (the thread count only changes wall-clock
+/// time). The first failing task aborts the sweep with its cell identity
+/// attached: in-flight tasks drain, queued tasks are cancelled.
+pub fn run_tasks(tasks: Vec<SweepTask>, threads: usize) -> Result<SweepResults> {
+    if tasks.is_empty() {
+        return Ok(SweepResults::default());
+    }
+    let threads = threads.clamp(1, tasks.len());
+    let tasks = Arc::new(tasks);
+    let next = Arc::new(AtomicUsize::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = mpsc::channel::<(usize, Result<ReconfigReport>)>();
+    let mut workers = Vec::with_capacity(threads);
+    for _ in 0..threads {
+        let tasks = Arc::clone(&tasks);
+        let next = Arc::clone(&next);
+        let stop = Arc::clone(&stop);
+        let tx = tx.clone();
+        workers.push(std::thread::spawn(move || loop {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            let idx = next.fetch_add(1, Ordering::Relaxed);
+            if idx >= tasks.len() {
+                break;
+            }
+            let result = run_reconfiguration(&tasks[idx].scenario);
+            if result.is_err() {
+                // Cancel queued tasks: a multi-hour sweep should not run
+                // to completion just to report a first-minute failure.
+                stop.store(true, Ordering::Relaxed);
+            }
+            if tx.send((idx, result)).is_err() {
+                break;
+            }
+        }));
+    }
+    drop(tx);
+
+    let mut reports: Vec<Option<ReconfigReport>> = vec![None; tasks.len()];
+    let mut failure: Option<(usize, anyhow::Error)> = None;
+    for (idx, result) in rx {
+        match result {
+            Ok(r) => reports[idx] = Some(r),
+            Err(e) => {
+                if failure.is_none() {
+                    failure = Some((idx, e));
+                }
+            }
+        }
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+    if let Some((idx, e)) = failure {
+        let c = &tasks[idx].cell;
+        bail!(
+            "sweep task failed ({} {} -> {} nodes, {}, rep {}): {:#}",
+            c.cluster,
+            c.initial_nodes,
+            c.target_nodes,
+            c.config,
+            tasks[idx].rep,
+            e
+        );
+    }
+
+    let mut out = SweepResults::default();
+    let mut phase_sums: BTreeMap<CellKey, BTreeMap<Phase, f64>> = BTreeMap::new();
+    for (task, report) in tasks.iter().zip(reports) {
+        let report = report.expect("every task completed without error");
+        out.samples.entry(task.cell.clone()).or_default().push(report.total_time);
+        let sums = phase_sums.entry(task.cell.clone()).or_default();
+        for (phase, d) in &report.phases {
+            *sums.entry(*phase).or_insert(0.0) += *d;
+        }
+    }
+    for (cell, sums) in phase_sums {
+        let n = out.samples[&cell].len() as f64;
+        let means: Vec<(Phase, f64)> = Phase::ALL
+            .iter()
+            .filter_map(|p| sums.get(p).map(|&s| (*p, s / n)))
+            .collect();
+        out.phase_means.insert(cell, means);
+    }
+    Ok(out)
+}
+
+/// The task list behind [`super::run_samples`]: `reps` repetitions of one
+/// scenario, seeded `seed + rep * 7919`, under a single cell key.
+pub fn sample_tasks(s: &Scenario, reps: usize) -> Vec<SweepTask> {
+    (0..reps)
+        .map(|rep| SweepTask {
+            cell: CellKey {
+                cluster: s.cluster.name.clone(),
+                initial_nodes: s.initial_nodes,
+                target_nodes: s.target_nodes,
+                config: format!("{}+{}", s.method.name(), s.strategy.name()),
+            },
+            rep,
+            scenario: s.clone().seeded(s.seed.wrapping_add(rep as u64 * 7919)),
+        })
+        .collect()
+}
+
+/// Run one scenario's repetitions through the executor and return the
+/// rep-ordered resize times.
+pub fn run_scenario_samples(s: &Scenario, reps: usize, threads: usize) -> Result<Vec<f64>> {
+    let results = run_tasks(sample_tasks(s, reps), threads)?;
+    Ok(results.samples.into_values().next().unwrap_or_default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_matrix() -> ScenarioMatrix {
+        ScenarioMatrix::new()
+            .clusters(vec![ClusterKind::Mini])
+            .configs(vec![
+                MethodConfig {
+                    label: "M",
+                    method: Method::Merge,
+                    strategy: SpawnStrategy::Plain,
+                },
+                MethodConfig {
+                    label: "M+HC",
+                    method: Method::Merge,
+                    strategy: SpawnStrategy::ParallelHypercube,
+                },
+            ])
+            .pairs(vec![(1, 2), (2, 2), (2, 4)])
+            .reps(2)
+            .seed(7)
+    }
+
+    #[test]
+    fn tasks_expand_the_cartesian_product() {
+        let m = mini_matrix();
+        let tasks = m.tasks();
+        // (2 usable pairs) x (2 configs) x (2 reps); (2, 2) is skipped.
+        assert_eq!(tasks.len(), 8);
+        assert_eq!(m.len(), tasks.len());
+        // Repetitions are contiguous and rep-ordered within each cell.
+        for pair in tasks.chunks(2) {
+            assert_eq!(pair[0].cell, pair[1].cell);
+            assert_eq!((pair[0].rep, pair[1].rep), (0, 1));
+            assert_eq!(pair[0].scenario.seed, 7);
+            assert_eq!(pair[1].scenario.seed, 7 + 7919);
+        }
+        // Shrink cells prepare with a parallel expansion.
+        let shrink = ScenarioMatrix::new()
+            .clusters(vec![ClusterKind::Mini])
+            .configs(mn5_shrink_configs())
+            .pairs(vec![(4, 2)])
+            .reps(1)
+            .tasks();
+        assert!(shrink.iter().all(|t| t.scenario.prepare_parallel));
+    }
+
+    #[test]
+    fn duplicate_pairs_and_configs_are_deduplicated() {
+        let m = ScenarioMatrix::new()
+            .clusters(vec![ClusterKind::Mini])
+            .configs(vec![
+                MethodConfig { label: "M", method: Method::Merge, strategy: SpawnStrategy::Plain },
+                MethodConfig { label: "M", method: Method::Merge, strategy: SpawnStrategy::Plain },
+            ])
+            .pairs(vec![(1, 4), (1, 4), (2, 4)])
+            .reps(3);
+        assert_eq!(m.pairs, vec![(1, 4), (2, 4)]);
+        assert_eq!(m.configs.len(), 1);
+        assert_eq!(m.len(), 6);
+    }
+
+    #[test]
+    fn filters_trim_pairs_and_configs() {
+        let m = mini_matrix().max_nodes(2).filter_configs(&["M".to_string()]);
+        assert_eq!(m.pairs, vec![(1, 2), (2, 2)]);
+        assert_eq!(m.configs.len(), 1);
+        assert_eq!(m.len(), 2); // 1 usable pair x 1 config x 2 reps
+    }
+
+    #[test]
+    fn presets_match_the_figure_matrices() {
+        let p = preset("4a").unwrap();
+        assert_eq!(p.clusters, vec![ClusterKind::Mn5]);
+        assert_eq!(p.pairs, expansion_pairs(&MN5_NODES));
+        assert_eq!(p.configs.len(), mn5_expand_configs().len());
+        let p = preset("6b").unwrap();
+        assert_eq!(p.clusters, vec![ClusterKind::Nasp]);
+        assert_eq!(p.pairs, shrink_pairs(&NASP_NODES));
+        assert!(preset("7z").is_none());
+    }
+
+    #[test]
+    fn executor_is_thread_count_invariant() {
+        let m = mini_matrix().pairs(vec![(1, 2)]);
+        let serial = run_matrix(&m, 1).unwrap();
+        let parallel = run_matrix(&m, 3).unwrap();
+        assert_eq!(serial.total_samples(), 4);
+        assert_eq!(serial.samples, parallel.samples);
+        assert_eq!(serial.phase_means, parallel.phase_means);
+    }
+
+    #[test]
+    fn executor_reports_failing_cell() {
+        // 9 target nodes on an 8-node mini cluster: capacity error.
+        let m = ScenarioMatrix::new()
+            .clusters(vec![ClusterKind::Mini])
+            .configs(vec![MethodConfig {
+                label: "M",
+                method: Method::Merge,
+                strategy: SpawnStrategy::Plain,
+            }])
+            .pairs(vec![(1, 9)])
+            .reps(1);
+        let err = run_matrix(&m, 2).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("mini 1 -> 9"), "unexpected: {msg}");
+    }
+
+    #[test]
+    fn scenario_samples_match_cell_reps() {
+        let s = cell_scenario(
+            ClusterKind::Mini,
+            1,
+            2,
+            &MethodConfig {
+                label: "M",
+                method: Method::Merge,
+                strategy: SpawnStrategy::Plain,
+            },
+            7,
+        );
+        let a = run_scenario_samples(&s, 2, 1).unwrap();
+        let b = run_scenario_samples(&s, 2, 2).unwrap();
+        assert_eq!(a.len(), 2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn summary_tables_have_one_row_per_cell() {
+        let m = mini_matrix().pairs(vec![(1, 2)]);
+        let r = run_matrix(&m, 2).unwrap();
+        let summary = r.summary_table();
+        assert_eq!(summary.rows.len(), 2); // two configs, one pair
+        let samples = r.samples_table();
+        assert_eq!(samples.rows.len(), 4);
+        let phases = r.phase_table();
+        assert_eq!(phases.rows.len(), 2);
+        // CellSamples projection keys by (i, n, label).
+        let cs = r.cell_samples(&m.configs);
+        assert_eq!(cs.len(), 2);
+        assert!(cs.contains_key(&(1, 2, "M")));
+    }
+}

@@ -20,6 +20,24 @@
 //!   (§4.5) and TS/ZS/SS shrinkage (§4.7); a resource-manager simulator
 //!   ([`rms`]); data redistribution ([`redistrib`]); a Proteo-like
 //!   application driver ([`app`]); and the coordinator ([`coordinator`]).
+//!
+//! ## The sweep engine
+//!
+//! The paper's evaluation is a matrix of reconfiguration experiments
+//! (cluster × method × strategy × node pair × 20 repetitions).
+//! [`coordinator::sweep`] runs such matrices wall-clock-parallel: a
+//! [`coordinator::sweep::ScenarioMatrix`] expands cartesian products into
+//! a flat task list, a thread-pooled executor runs each task in its own
+//! simulated [`simmpi::World`], and a unified
+//! [`coordinator::sweep::SweepResults`] sink provides rep-ordered
+//! samples, medians with order-statistic CIs, per-phase breakdowns and
+//! CSV/JSON output. The simulator is bit-reproducible for a fixed seed
+//! (RNG streams derive by lineage; RTE spawn contention is charged by
+//! plan-derived queue positions), so sweep results are **identical for
+//! any thread count** — `--threads 8` only changes how long you wait.
+//! The figure harness ([`coordinator::figures`]) and the
+//! `paraspawn sweep` / `paraspawn figures` subcommands are thin
+//! declarative layers over this engine.
 //! * **L2/L1 (build-time Python)** — the application compute (Monte-Carlo
 //!   π, a tiled-matmul workload) and a batched strategy-cost model,
 //!   written in JAX + Pallas, AOT-lowered to HLO text and executed from

@@ -335,7 +335,9 @@ fn single_child_entry(spec: Arc<ReconfigSpec>) -> ProcMain {
 // ---------------------------------------------------------------------------
 
 /// Execute this rank's spawn tasks (one `MPI_Comm_spawn` over self per
-/// task, in step order), returning the child inter-communicators.
+/// task, in step order), returning the child inter-communicators. Each
+/// call carries its plan-derived RTE queue position so initiator-side
+/// contention charges are deterministic.
 fn run_spawn_tasks(ctx: &Ctx, plan: &Arc<Plan>, slot: usize, spec: &Arc<ReconfigSpec>) -> Vec<Comm> {
     let asg = plan.assignments();
     let mut children = Vec::new();
@@ -345,7 +347,13 @@ fn run_spawn_tasks(ctx: &Ctx, plan: &Arc<Plan>, slot: usize, spec: &Arc<Reconfig
         for task in tasks {
             let entry = parallel_child_entry(spec.clone(), task.group.gid);
             let node = plan.nodes[task.group.node_idx];
-            children.push(ctx.spawn_self(node, task.group.size as usize, entry));
+            let queue_pos = plan.rte_queue_pos_in(&asg, slot, task.step);
+            children.push(ctx.spawn_self_queued(
+                node,
+                task.group.size as usize,
+                queue_pos,
+                entry,
+            ));
         }
     }
     children

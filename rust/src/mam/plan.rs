@@ -182,13 +182,27 @@ pub fn hypercube_total_procs(c: u32, i: usize, s: usize, method: Method) -> usiz
 
 /// Eq. 3: steps required to reach `n` target nodes from `i` initial nodes
 /// with `c` cores per node (Merge accounting).
+///
+/// Computed with an exact integer multiply-until-covered loop. The
+/// closed-form `ceil(ln(n/i) / ln(c+1))` is fragile in floating point
+/// when `n/i` is exactly `(c+1)^s`: e.g. `ln(125)/ln(5)` evaluates to
+/// `3.0000000000000004`, so the f64 version answered 4 steps for
+/// `c = 4, i = 1, n = 125` where Eq. 3 gives 3.
 pub fn hypercube_steps(c: u32, i: usize, n: usize) -> usize {
     if n <= i {
         return 0;
     }
-    let ratio = n as f64 / i as f64;
-    let growth = (c as f64 + 1.0).ln();
-    (ratio.ln() / growth).ceil() as usize
+    // With c == 0 the job cannot grow at all; the loop below would never
+    // terminate (growth factor 1).
+    assert!(c > 0, "hypercube_steps requires at least one core per node");
+    let growth = c as usize + 1;
+    let mut steps = 0usize;
+    let mut reach = i;
+    while reach < n {
+        reach = reach.saturating_mul(growth);
+        steps += 1;
+    }
+    steps
 }
 
 /// Hypercube spawn assignment: in each step every existing process (by
@@ -313,6 +327,65 @@ pub fn diffusive_assignments(plan: &Plan) -> HashMap<usize, Vec<SpawnTask>> {
         step += 1;
     }
     map
+}
+
+impl Plan {
+    /// Node index (into [`Plan::nodes`]) hosting an enumeration slot:
+    /// source slots resolve through the prefix sums of `R` (sources are
+    /// node-major in app-rank order — the §4.5 invariant the end-to-end
+    /// layout test pins down), spawned slots through their group's node.
+    pub fn node_idx_of_slot(&self, slot: usize) -> usize {
+        let ns = self.ns();
+        if slot < ns {
+            let mut acc = 0usize;
+            for (i, &ri) in self.r.iter().enumerate() {
+                acc += ri as usize;
+                if slot < acc {
+                    return i;
+                }
+            }
+            unreachable!("slot {slot} < NS {ns} but R prefix never covered it");
+        }
+        let mut rem = slot - ns;
+        for g in self.groups() {
+            let size = g.size as usize;
+            if rem < size {
+                return g.node_idx;
+            }
+            rem -= size;
+        }
+        panic!("enumeration slot {slot} out of range for plan");
+    }
+
+    /// Deterministic RTE queue position of `slot`'s spawn call during
+    /// `step`: its index among the same-step spawn tasks whose initiator
+    /// slots live on the same node, ordered by slot. Replaces the
+    /// wall-clock FCFS ordering at the simulated RTE, which made repeated
+    /// runs drift (the initiator-contention charge depended on OS thread
+    /// scheduling).
+    pub fn rte_queue_pos(&self, slot: usize, step: usize) -> usize {
+        self.rte_queue_pos_in(&self.assignments(), slot, step)
+    }
+
+    /// [`Plan::rte_queue_pos`] against an already-computed assignment map
+    /// — the driver holds one per reconfiguration and calls this once per
+    /// spawn task, avoiding a full assignment recomputation per call.
+    pub fn rte_queue_pos_in(
+        &self,
+        assignments: &HashMap<usize, Vec<SpawnTask>>,
+        slot: usize,
+        step: usize,
+    ) -> usize {
+        let my_node = self.node_idx_of_slot(slot);
+        let mut peers: Vec<usize> = assignments
+            .iter()
+            .filter(|(_, tasks)| tasks.iter().any(|t| t.step == step))
+            .map(|(&s, _)| s)
+            .filter(|&s| self.node_idx_of_slot(s) == my_node)
+            .collect();
+        peers.sort_unstable();
+        peers.iter().position(|&s| s == slot).unwrap_or(0)
+    }
 }
 
 /// Total steps a plan's strategy needs (max task step; 0 if no spawning).
@@ -466,6 +539,84 @@ mod tests {
                 "steps mismatch for C={c}, I={i}, N={n}"
             );
         }
+    }
+
+    #[test]
+    fn hypercube_steps_exact_powers() {
+        // Exact powers of (c+1): the former ln-based closed form returned
+        // s+1 for some of these (ln(125)/ln(5) = 3.0000000000000004).
+        assert_eq!(hypercube_steps(1, 1, 8), 3);
+        assert_eq!(hypercube_steps(2, 1, 27), 3);
+        assert_eq!(hypercube_steps(4, 1, 125), 3);
+        assert_eq!(hypercube_steps(4, 1, 625), 4);
+        assert_eq!(hypercube_steps(6, 1, 343), 3);
+        assert_eq!(hypercube_steps(1, 2, 16), 3);
+        assert_eq!(hypercube_steps(112, 1, 113), 1);
+        // One past an exact power needs one more step.
+        assert_eq!(hypercube_steps(1, 1, 9), 4);
+        assert_eq!(hypercube_steps(4, 1, 126), 4);
+        // Degenerate cases.
+        assert_eq!(hypercube_steps(3, 5, 5), 0);
+        assert_eq!(hypercube_steps(3, 5, 4), 0);
+        // No growth needed -> no panic even with c == 0.
+        assert_eq!(hypercube_steps(0, 2, 2), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one core")]
+    fn hypercube_steps_rejects_zero_cores() {
+        hypercube_steps(0, 1, 2);
+    }
+
+    #[test]
+    fn node_of_slot_resolves_sources_and_groups() {
+        let p = table2_plan();
+        // Sources: R = [2, 0, ...] -> slots 0 and 1 on node index 0.
+        assert_eq!(p.node_idx_of_slot(0), 0);
+        assert_eq!(p.node_idx_of_slot(1), 0);
+        // Spawned: group 0 (node 0, size 2) occupies slots 2-3, group 1
+        // (node 1, size 2) slots 4-5, group 2 (node 2, size 8) slots 6-13.
+        assert_eq!(p.node_idx_of_slot(2), 0);
+        assert_eq!(p.node_idx_of_slot(3), 0);
+        assert_eq!(p.node_idx_of_slot(4), 1);
+        assert_eq!(p.node_idx_of_slot(6), 2);
+        assert_eq!(p.node_idx_of_slot(13), 2);
+    }
+
+    #[test]
+    fn rte_queue_positions_are_per_node_and_per_step() {
+        // Figure 1 cube (C=1, I=1, N=8): step 3 has spawners at slots
+        // 0..4; slot 0 is the source on node 0, slots 1-3 are the roots of
+        // groups on nodes 1-3 — all on distinct nodes, so every queue
+        // position is 0.
+        let plan = Plan::new(
+            0,
+            Method::Merge,
+            SpawnStrategy::ParallelHypercube,
+            (0..8).collect(),
+            vec![1; 8],
+            {
+                let mut r = vec![0; 8];
+                r[0] = 1;
+                r
+            },
+        );
+        for slot in 0..4 {
+            assert_eq!(plan.rte_queue_pos(slot, 3), 0, "slot {slot}");
+        }
+        // Two sources on one node both spawning in step 1 queue in slot
+        // order at their shared RTE.
+        let p2 = Plan::new(
+            0,
+            Method::Merge,
+            SpawnStrategy::ParallelHypercube,
+            (0..3).collect(),
+            vec![2; 3],
+            vec![2, 0, 0],
+        );
+        // Groups: node 1 and node 2 -> spawned by slots 0 and 1 in step 1.
+        assert_eq!(p2.rte_queue_pos(0, 1), 0);
+        assert_eq!(p2.rte_queue_pos(1, 1), 1);
     }
 
     #[test]

@@ -25,6 +25,18 @@ pub enum Phase {
 }
 
 impl Phase {
+    /// Every phase in canonical reporting order (aggregation tables, the
+    /// sweep sink's per-phase breakdown).
+    pub const ALL: [Phase; 7] = [
+        Phase::Plan,
+        Phase::Spawn,
+        Phase::Sync,
+        Phase::Connect,
+        Phase::Reorder,
+        Phase::Redistrib,
+        Phase::Shrink,
+    ];
+
     pub fn name(self) -> &'static str {
         match self {
             Phase::Plan => "plan",
@@ -182,11 +194,9 @@ mod tests {
 
     #[test]
     fn phase_names_unique() {
-        use Phase::*;
-        let all = [Plan, Spawn, Sync, Connect, Reorder, Redistrib, Shrink];
-        let mut names: Vec<_> = all.iter().map(|p| p.name()).collect();
+        let mut names: Vec<_> = Phase::ALL.iter().map(|p| p.name()).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), all.len());
+        assert_eq!(names.len(), Phase::ALL.len());
     }
 }

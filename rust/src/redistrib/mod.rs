@@ -77,9 +77,11 @@ pub fn execute_intercomm(
             ctx.send(inter, t.dst, tags::REDISTRIB, Payload::Bytes(t.bytes));
         }
     } else {
-        let expected = plan.iter().filter(|t| t.dst == me).count();
-        for _ in 0..expected {
-            let _ = ctx.recv(inter, crate::simmpi::ANY_SOURCE, tags::REDISTRIB);
+        // Receive from each source in plan order (ascending src). The plan
+        // names every peer, so wildcard receives — whose clock bookkeeping
+        // would depend on real-time arrival order — are unnecessary.
+        for t in plan.iter().filter(|t| t.dst == me) {
+            let _ = ctx.recv(inter, t.src, tags::REDISTRIB);
         }
     }
 }
@@ -97,9 +99,9 @@ pub fn execute_intracomm(ctx: &Ctx, comm: &Comm, ns: usize, nt: usize, total_byt
         }
     }
     if me < nt {
-        let expected = plan.iter().filter(|t| t.dst == me && t.src != t.dst).count();
-        for _ in 0..expected {
-            let _ = ctx.recv(comm, crate::simmpi::ANY_SOURCE, tags::REDISTRIB);
+        // Plan-ordered receives (see execute_intercomm).
+        for t in plan.iter().filter(|t| t.dst == me && t.src != t.dst) {
+            let _ = ctx.recv(comm, t.src, tags::REDISTRIB);
         }
     }
 }

@@ -64,13 +64,27 @@ pub struct Rms {
     free: Vec<u32>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RmsError {
-    #[error("not enough capacity: requested {requested} nodes, available {available}")]
     Capacity { requested: usize, available: usize },
-    #[error("allocation conflicts with current occupancy on node {0}")]
     Conflict(NodeId),
 }
+
+impl std::fmt::Display for RmsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RmsError::Capacity { requested, available } => write!(
+                f,
+                "not enough capacity: requested {requested} nodes, available {available}"
+            ),
+            RmsError::Conflict(node) => {
+                write!(f, "allocation conflicts with current occupancy on node {node}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RmsError {}
 
 impl Rms {
     pub fn new(cluster: Cluster) -> Self {

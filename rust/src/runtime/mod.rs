@@ -6,12 +6,27 @@
 //!
 //! Python never runs at simulation time: the [`Engine`] is self-contained
 //! once `artifacts/` exists.
+//!
+//! The PJRT backend needs the external `xla` crate, which the offline
+//! build image cannot fetch; it is therefore gated behind the `pjrt`
+//! cargo feature. Without the feature a stub with the identical public
+//! API reports the runtime as unavailable, and every caller falls back
+//! to its host implementation ([`crate::app::HostPiEval`],
+//! [`crate::coordinator::select::host_scores`]).
 
-use crate::app::PiEval;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{CostModelKernel, Engine, Kernel, KernelSet, PiKernel, SharedKernel, WorkloadKernel};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{CostModelKernel, Engine, Kernel, KernelSet, PiKernel, SharedKernel, WorkloadKernel};
 
 /// Artifact directory resolution: `$PARASPAWN_ARTIFACTS` or `./artifacts`.
 pub fn artifacts_dir() -> PathBuf {
@@ -40,208 +55,5 @@ impl ArtifactMeta {
             .with_context(|| format!("meta key '{key}' missing"))?
             .parse()
             .with_context(|| format!("meta key '{key}' not an integer"))
-    }
-}
-
-/// A compiled HLO module ready to execute. Not `Send`: wrap in
-/// [`SharedKernel`] to call from simulated-rank threads.
-pub struct Kernel {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-impl Kernel {
-    /// Execute with f32 inputs of the given shapes; returns each element
-    /// of the (single-level) output tuple as a f32 vector.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| {
-                let lit = xla::Literal::vec1(data);
-                if dims.len() == 1 && dims[0] as usize == data.len() {
-                    Ok(lit)
-                } else {
-                    lit.reshape(dims).map_err(anyhow::Error::from)
-                }
-            })
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        // jax's `compiler_ir(dialect="hlo")` path returns the raw entry
-        // result: a bare array for single outputs, a tuple otherwise.
-        let mut lit = result[0][0].to_literal_sync()?;
-        let elems = if lit.shape()?.is_tuple() {
-            lit.decompose_tuple()?
-        } else {
-            vec![lit]
-        };
-        elems
-            .into_iter()
-            .map(|e| e.to_vec::<f32>().map_err(anyhow::Error::from))
-            .collect()
-    }
-}
-
-/// The PJRT engine: a CPU client plus the loaded artifact set.
-pub struct Engine {
-    client: xla::PjRtClient,
-    pub meta: ArtifactMeta,
-    dir: PathBuf,
-}
-
-impl Engine {
-    /// Create a CPU engine over the default artifacts directory.
-    pub fn cpu() -> Result<Engine> {
-        Self::with_dir(&artifacts_dir())
-    }
-
-    pub fn with_dir(dir: &Path) -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let meta = ArtifactMeta::load(dir)?;
-        Ok(Engine { client, meta, dir: dir.to_path_buf() })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile one HLO-text artifact.
-    pub fn load(&self, name: &str) -> Result<Kernel> {
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("loading {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
-        Ok(Kernel { exe, name: name.to_string() })
-    }
-}
-
-/// Thread-shareable kernel: the PJRT objects hold raw pointers without
-/// `Send`/`Sync` auto-impls; execution is serialized through a mutex and
-/// the PJRT CPU client has no thread affinity, so sharing is sound.
-pub struct SharedKernel {
-    inner: Mutex<Kernel>,
-}
-
-// SAFETY: all access to the underlying PJRT objects goes through the
-// Mutex (one thread at a time); PJRT CPU clients are documented to be
-// usable from any thread.
-unsafe impl Send for SharedKernel {}
-unsafe impl Sync for SharedKernel {}
-
-impl SharedKernel {
-    pub fn new(kernel: Kernel) -> Self {
-        SharedKernel { inner: Mutex::new(kernel) }
-    }
-
-    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        self.inner.lock().unwrap().run_f32(inputs)
-    }
-}
-
-/// The L1 Monte-Carlo π kernel: counts points inside the unit circle.
-/// Fixed batch shape `(n, 2)`; shorter inputs are padded with points
-/// outside the circle.
-pub struct PiKernel {
-    kernel: SharedKernel,
-    batch: usize,
-}
-
-impl PiKernel {
-    pub fn load(engine: &Engine) -> Result<PiKernel> {
-        let batch = engine.meta.usize("pi_points")?;
-        Ok(PiKernel { kernel: SharedKernel::new(engine.load("pi")?), batch })
-    }
-
-    pub fn batch(&self) -> usize {
-        self.batch
-    }
-}
-
-impl PiEval for PiKernel {
-    fn count_inside(&self, points_xy: &[f32]) -> u64 {
-        let n = points_xy.len() / 2;
-        let mut total = 0u64;
-        for chunk in points_xy.chunks(self.batch * 2) {
-            let mut buf = vec![2.0f32; self.batch * 2]; // pad outside circle
-            buf[..chunk.len()].copy_from_slice(chunk);
-            let out = self
-                .kernel
-                .run_f32(&[(&buf, &[self.batch as i64, 2])])
-                .expect("pi kernel execution failed");
-            total += out[0][0] as u64;
-        }
-        debug_assert!(total <= n as u64);
-        total
-    }
-}
-
-/// The L2 workload kernel: one tiled-matmul "application iteration"
-/// (`C = A @ B + bias-free residual`), shape `(m, m)` f32.
-pub struct WorkloadKernel {
-    kernel: SharedKernel,
-    m: usize,
-}
-
-impl WorkloadKernel {
-    pub fn load(engine: &Engine) -> Result<WorkloadKernel> {
-        let m = engine.meta.usize("workload_m")?;
-        Ok(WorkloadKernel { kernel: SharedKernel::new(engine.load("workload")?), m })
-    }
-
-    pub fn dim(&self) -> usize {
-        self.m
-    }
-
-    /// Run one iteration step on `(m*m)`-element row-major inputs.
-    pub fn step(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
-        let d = self.m as i64;
-        let out = self.kernel.run_f32(&[(a, &[d, d]), (b, &[d, d])])?;
-        Ok(out.into_iter().next().unwrap())
-    }
-}
-
-/// The L2 strategy-cost model: scores `k` candidate configurations in one
-/// batched PJRT call (`features (k, f) x coeffs (f,) -> scores (k,)`).
-pub struct CostModelKernel {
-    kernel: SharedKernel,
-    pub k: usize,
-    pub f: usize,
-}
-
-impl CostModelKernel {
-    pub fn load(engine: &Engine) -> Result<CostModelKernel> {
-        let k = engine.meta.usize("cost_k")?;
-        let f = engine.meta.usize("cost_f")?;
-        Ok(CostModelKernel { kernel: SharedKernel::new(engine.load("costmodel")?), k, f })
-    }
-
-    /// Score up to `self.k` candidates; rows beyond `rows` are padding.
-    pub fn scores(&self, features: &[f32], rows: usize, coeffs: &[f32]) -> Result<Vec<f32>> {
-        assert_eq!(coeffs.len(), self.f, "coefficient vector length");
-        assert!(rows <= self.k, "too many candidates for the compiled batch");
-        let mut padded = vec![0.0f32; self.k * self.f];
-        padded[..features.len()].copy_from_slice(features);
-        let out = self
-            .kernel
-            .run_f32(&[(&padded, &[self.k as i64, self.f as i64]), (coeffs, &[self.f as i64])])?;
-        Ok(out[0][..rows].to_vec())
-    }
-}
-
-/// Convenience bundle of all artifacts.
-pub struct KernelSet {
-    pub pi: PiKernel,
-    pub workload: WorkloadKernel,
-    pub costmodel: CostModelKernel,
-}
-
-impl KernelSet {
-    pub fn load() -> Result<KernelSet> {
-        let engine = Engine::cpu()?;
-        Ok(KernelSet {
-            pi: PiKernel::load(&engine)?,
-            workload: WorkloadKernel::load(&engine)?,
-            costmodel: CostModelKernel::load(&engine)?,
-        })
     }
 }

@@ -1,0 +1,148 @@
+//! Offline stub for the PJRT backend (default build, no `pjrt` feature).
+//!
+//! Exposes the same public API as [`super::pjrt`], but every constructor
+//! returns an error and the types are uninhabited — callers take their
+//! host-fallback paths exactly as they would with missing artifacts.
+
+use super::ArtifactMeta;
+use crate::app::PiEval;
+use anyhow::{bail, Result};
+use std::convert::Infallible;
+use std::path::Path;
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: built without the `pjrt` cargo feature (host fallbacks apply)";
+
+/// Stub for the compiled-HLO kernel handle (never constructed).
+pub struct Kernel {
+    never: Infallible,
+}
+
+impl Kernel {
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        match self.never {}
+    }
+}
+
+/// Stub for the PJRT engine (never constructed). The `meta` field
+/// mirrors the real engine's public field so both builds expose an
+/// identical API.
+pub struct Engine {
+    pub meta: ArtifactMeta,
+    never: Infallible,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn with_dir(_dir: &Path) -> Result<Engine> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn load(&self, _name: &str) -> Result<Kernel> {
+        match self.never {}
+    }
+}
+
+/// Stub for the mutex-shared kernel (never constructed).
+pub struct SharedKernel {
+    never: Infallible,
+}
+
+impl SharedKernel {
+    pub fn new(kernel: Kernel) -> Self {
+        match kernel.never {}
+    }
+
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        match self.never {}
+    }
+}
+
+/// Stub for the L1 Monte-Carlo π kernel (never constructed).
+pub struct PiKernel {
+    never: Infallible,
+}
+
+impl PiKernel {
+    pub fn load(_engine: &Engine) -> Result<PiKernel> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn batch(&self) -> usize {
+        match self.never {}
+    }
+}
+
+impl PiEval for PiKernel {
+    fn count_inside(&self, _points_xy: &[f32]) -> u64 {
+        match self.never {}
+    }
+}
+
+/// Stub for the L2 workload kernel (never constructed).
+pub struct WorkloadKernel {
+    never: Infallible,
+}
+
+impl WorkloadKernel {
+    pub fn load(_engine: &Engine) -> Result<WorkloadKernel> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn dim(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn step(&self, _a: &[f32], _b: &[f32]) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+}
+
+/// Stub for the L2 strategy-cost-model kernel (never constructed).
+pub struct CostModelKernel {
+    pub k: usize,
+    pub f: usize,
+    never: Infallible,
+}
+
+impl CostModelKernel {
+    pub fn load(_engine: &Engine) -> Result<CostModelKernel> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn scores(&self, _features: &[f32], _rows: usize, _coeffs: &[f32]) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+}
+
+/// Stub for the artifact bundle (never constructed).
+pub struct KernelSet {
+    pub pi: PiKernel,
+    pub workload: WorkloadKernel,
+    pub costmodel: CostModelKernel,
+}
+
+impl KernelSet {
+    pub fn load() -> Result<KernelSet> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_constructors_report_unavailable() {
+        let e = Engine::cpu().unwrap_err();
+        assert!(format!("{e}").contains("pjrt"));
+        assert!(KernelSet::load().is_err());
+    }
+}

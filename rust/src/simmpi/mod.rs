@@ -17,10 +17,13 @@
 //!   `disconnect`;
 //! * zombie parking / waking / termination (for ZS and TS shrinkage).
 //!
-//! Determinism: message matching and collective results are deterministic;
-//! virtual *timing* carries controlled jitter (and RTE-contention ordering
-//! effects) so that repeated runs form a distribution, like the paper's 20
-//! repetitions per configuration.
+//! Determinism: message matching, collective results *and* virtual timing
+//! are a pure function of the configured seed. Per-rank RNG streams derive
+//! by lineage (launch rank index; spawned ranks from a value their
+//! initiator drew), and RTE spawn contention is charged by plan-derived
+//! queue positions rather than wall-clock arrival order, so repeated runs
+//! are bit-identical and the distribution behind the paper's 20
+//! repetitions comes from varying the seed per repetition.
 
 mod collectives;
 mod comm;

@@ -2,7 +2,8 @@
 //!
 //! The cost model (DESIGN.md §3) charges: a fixed initiator call cost,
 //! serialized service time at the initiator node's RTE (the contention
-//! term that penalises many concurrent spawns from one node), an RTE tree
+//! term that penalises many concurrent spawns from one node, charged by
+//! a deterministic queue position the caller supplies), an RTE tree
 //! rollout across the target nodes of the call, per-node daemon
 //! (cold/warm) costs, serialized per-process fork costs scaled by
 //! oversubscription, and the child world's `MPI_Init` synchronization.
@@ -30,7 +31,7 @@ impl Ctx {
         assert!(placements.iter().all(|&(_, k)| k > 0), "zero-process placement");
         let inter: Arc<CommInner>;
         if comm.rank() == root {
-            inter = self.do_spawn(comm.local_group().to_vec(), placements, entry);
+            inter = self.do_spawn(comm.local_group().to_vec(), placements, 0, entry);
             if comm.size() > 1 {
                 self.bcast(comm, root, Some(Payload::CommRef(inter.clone())));
             }
@@ -45,7 +46,22 @@ impl Ctx {
     /// strategies issue once per group (§4.1/§4.2): only the calling rank
     /// is the parent.
     pub fn spawn_self(&self, node: NodeId, nprocs: usize, entry: ProcMain) -> Comm {
-        let inter = self.do_spawn(vec![self.pid()], &[(node, nprocs)], entry);
+        self.spawn_self_queued(node, nprocs, 0, entry)
+    }
+
+    /// [`Ctx::spawn_self`] with an explicit RTE queue position: among the
+    /// spawn calls issued concurrently from this rank's node, this call
+    /// is served `queue_pos`-th (0-based). The MaM driver derives the
+    /// position from the reconfiguration plan so that contention charges
+    /// are deterministic (see [`crate::mam::plan::Plan::rte_queue_pos`]).
+    pub fn spawn_self_queued(
+        &self,
+        node: NodeId,
+        nprocs: usize,
+        queue_pos: usize,
+        entry: ProcMain,
+    ) -> Comm {
+        let inter = self.do_spawn(vec![self.pid()], &[(node, nprocs)], queue_pos, entry);
         Comm::new(inter, Side::A, 0)
     }
 
@@ -53,12 +69,16 @@ impl Ctx {
         &self,
         parent_group: Vec<super::ProcId>,
         placements: &[(NodeId, usize)],
+        queue_pos: usize,
         entry: ProcMain,
     ) -> Arc<CommInner> {
         let jitter = self.jitter();
+        // Drawn from the initiator's stream so child streams are a pure
+        // function of lineage (bit-reproducible runs).
+        let stream_base = self.rng.borrow_mut().next_u64();
         let (children, t_child) =
             self.world
-                .charge_and_create(self.node(), self.clock(), placements, jitter);
+                .charge_and_create(self.clock(), queue_pos, placements, jitter);
         self.world.metrics.count("spawn_calls", 1);
         self.world
             .metrics
@@ -74,7 +94,7 @@ impl Ctx {
             group_a: parent_group,
             group_b: Some(children.iter().map(|c| c.id).collect()),
         });
-        self.world.start_children(&children, mcw, inter.clone(), entry);
+        self.world.start_children(&children, mcw, inter.clone(), stream_base, entry);
         // MPI_Comm_spawn returns when the intercommunicator exists, i.e.
         // after the children completed MPI_Init.
         self.sync_to(t_child);

@@ -25,13 +25,22 @@ pub type ProcMain = Arc<dyn Fn(super::Ctx, Comm, Comm) + Send + Sync + 'static>;
 pub type RootMain = Arc<dyn Fn(super::Ctx, Comm) + Send + Sync + 'static>;
 
 /// Simulation-level failure (protocol deadlock watchdog, rank panic).
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SimError {
-    #[error("simulated rank panicked: {0}")]
     RankPanic(String),
-    #[error("simulation aborted: {0}")]
     Aborted(String),
 }
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::RankPanic(msg) => write!(f, "simulated rank panicked: {msg}"),
+            SimError::Aborted(msg) => write!(f, "simulation aborted: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// Orders deliverable to a parked (zombie) process.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -81,9 +90,6 @@ struct Inner {
     procs: HashMap<ProcId, Arc<ProcState>>,
     /// Live (non-exited) processes per node, zombies included.
     node_running: Vec<u32>,
-    /// Virtual time until which each node's RTE proxy is busy serving
-    /// spawn requests (initiator-side contention).
-    rte_busy: Vec<f64>,
     /// Whether a node already has a warm RTE daemon.
     node_daemon: Vec<bool>,
 }
@@ -159,7 +165,6 @@ pub struct World {
     aborted: AtomicBool,
     abort_reason: Mutex<Option<String>>,
     deadline: Mutex<Option<Instant>>,
-    seed_ctr: AtomicU64,
 }
 
 impl World {
@@ -172,7 +177,6 @@ impl World {
             inner: Mutex::new(Inner {
                 procs: HashMap::new(),
                 node_running: vec![0; n],
-                rte_busy: vec![0.0; n],
                 node_daemon: vec![false; n],
             }),
             rendezvous: Mutex::new(HashMap::new()),
@@ -187,7 +191,6 @@ impl World {
             aborted: AtomicBool::new(false),
             abort_reason: Mutex::new(None),
             deadline: Mutex::new(None),
-            seed_ctr: AtomicU64::new(0),
         })
     }
 
@@ -306,9 +309,15 @@ impl World {
         inner.procs.remove(&p.id);
     }
 
-    fn make_ctx(self: &Arc<Self>, p: Arc<ProcState>) -> super::Ctx {
-        let stream = self.seed_ctr.fetch_add(1, Ordering::Relaxed);
-        let rng = Rng::new(self.cfg.seed ^ (p.id.wrapping_mul(0x9E37_79B9_7F4A_7C15)) ^ stream);
+    /// Build a rank context with an explicit RNG `stream`.
+    ///
+    /// Streams are derived by *lineage* — launch ranks use their rank
+    /// index, spawned ranks derive from a value their initiator drew from
+    /// its own stream — never from wall-clock allocation order. This is
+    /// what makes whole simulations bit-reproducible for a fixed seed
+    /// (and safe to run many of in parallel, e.g. the sweep engine).
+    fn make_ctx(self: &Arc<Self>, p: Arc<ProcState>, stream: u64) -> super::Ctx {
+        let rng = Rng::new(self.cfg.seed ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15));
         super::Ctx::new(self.clone(), p, rng)
     }
 
@@ -362,7 +371,7 @@ impl World {
             group_b: None,
         });
         for (rank, p) in procs.into_iter().enumerate() {
-            let ctx = self.make_ctx(p);
+            let ctx = self.make_ctx(p, rank as u64);
             let comm = Comm::new(inner_comm.clone(), Side::A, rank);
             let main = main.clone();
             self.spawn_thread(format!("rank{rank}"), move || main(ctx, comm));
@@ -455,13 +464,19 @@ impl World {
     /// Charge one `MPI_Comm_spawn` call in the cost model and create the
     /// child processes. Returns `(children, t_child)`.
     ///
-    /// `initiator_node` pays RTE-service contention; each target node pays
+    /// `queue_pos` is the call's position in its initiator node's RTE
+    /// service queue (0 = served first). Concurrent spawn calls issued
+    /// from one node serialize at that node's RTE; the caller derives the
+    /// position deterministically from the reconfiguration plan (see
+    /// [`crate::mam::plan::Plan::rte_queue_pos`]) instead of the wall
+    /// clock FCFS ordering an earlier version used, which made repeated
+    /// runs drift by up to a few service times. Each target node pays
     /// daemon + serialized fork costs; the child world then pays the
     /// `MPI_Init` synchronization. See DESIGN.md §3.
     pub(crate) fn charge_and_create(
         &self,
-        initiator_node: NodeId,
         start_clock: f64,
+        queue_pos: usize,
         placements: &[(NodeId, usize)],
         jitter: f64,
     ) -> (Vec<Arc<ProcState>>, f64) {
@@ -469,13 +484,12 @@ impl World {
         let total: usize = placements.iter().map(|&(_, k)| k).sum();
         let m = placements.len();
 
-        let (t0, per_node_ready) = {
+        let per_node_ready = {
             let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
-            // Initiator-side RTE service (the contention term).
+            // Initiator-side RTE service: the contention term, charged by
+            // deterministic queue position.
             let arrive = start_clock + cost.c_spawn_call * jitter;
-            let service_start = arrive.max(inner.rte_busy[initiator_node]);
-            inner.rte_busy[initiator_node] = service_start + cost.c_rte_service;
-            let t0 = service_start + cost.c_rte_service;
+            let t0 = arrive + cost.c_rte_service * (queue_pos as f64 + 1.0);
 
             let tree = cost.c_node_tree * ((m as f64 + 1.0).log2().ceil());
             let mut ready = Vec::with_capacity(m);
@@ -495,9 +509,8 @@ impl World {
                 };
                 ready.push(t0 + tree + daemon + cost.c_fork_proc * k as f64 * oversub);
             }
-            (t0, ready)
+            ready
         };
-        let _ = t0;
         let slowest = per_node_ready.iter().cloned().fold(0.0f64, f64::max);
         let init = cost.c_init_sync * ((total as f64).log2().ceil().max(1.0));
         let t_child = slowest + init * jitter;
@@ -512,15 +525,20 @@ impl World {
     }
 
     /// Register and start threads for freshly created child processes.
+    /// `stream_base` seeds the children's RNG streams; the initiator draws
+    /// it from its own stream so lineage keeps runs reproducible.
     pub(crate) fn start_children(
         self: &Arc<Self>,
         children: &[Arc<ProcState>],
         mcw: Arc<CommInner>,
         parent_inter: Arc<CommInner>,
+        stream_base: u64,
         entry: ProcMain,
     ) {
         for (rank, child) in children.iter().enumerate() {
-            let ctx = self.make_ctx(child.clone());
+            let stream =
+                stream_base ^ (rank as u64 + 1).wrapping_mul(0xA24B_AED4_963E_E407);
+            let ctx = self.make_ctx(child.clone(), stream);
             let mcw_handle = Comm::new(mcw.clone(), Side::A, rank);
             let parent_handle = Comm::new(parent_inter.clone(), Side::B, rank);
             let entry = entry.clone();

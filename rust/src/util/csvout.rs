@@ -77,6 +77,109 @@ impl Table {
         }
         fs::write(path, self.to_csv())
     }
+
+    /// Render as a JSON array of row objects keyed by the header. Cells
+    /// that parse as finite numbers are emitted as JSON numbers, the rest
+    /// as escaped strings.
+    pub fn to_json(&self) -> String {
+        let esc = |s: &str| -> String {
+            let mut out = String::with_capacity(s.len() + 2);
+            out.push('"');
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\r' => out.push_str("\\r"),
+                    '\t' => out.push_str("\\t"),
+                    c if (c as u32) < 0x20 => {
+                        let _ = write!(out, "\\u{:04x}", c as u32);
+                    }
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+            out
+        };
+        let cell = |s: &str| -> String {
+            // Verbatim only for strings JSON itself accepts as numbers
+            // (Rust's f64 parser is laxer: '+1.5', '1.', '.5', '007',
+            // 'inf' would all produce invalid JSON).
+            if is_json_number(s) {
+                s.to_string()
+            } else {
+                esc(s)
+            }
+        };
+        let mut out = String::from("[");
+        for (ri, row) in self.rows.iter().enumerate() {
+            if ri > 0 {
+                out.push(',');
+            }
+            out.push_str("\n  {");
+            for (ci, (h, v)) in self.header.iter().zip(row).enumerate() {
+                if ci > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&esc(h));
+                out.push_str(": ");
+                out.push_str(&cell(v));
+            }
+            out.push('}');
+        }
+        out.push_str("\n]\n");
+        out
+    }
+
+    /// Write the JSON rendering to `path`, creating parent directories.
+    pub fn write_json<P: AsRef<Path>>(&self, path: P) -> io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_json())
+    }
+}
+
+/// Strict JSON number grammar: `-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][+-]?[0-9]+)?`.
+fn is_json_number(s: &str) -> bool {
+    let b = s.as_bytes();
+    let mut i = 0;
+    if b.get(i) == Some(&b'-') {
+        i += 1;
+    }
+    match b.get(i) {
+        Some(b'0') => i += 1,
+        Some(c) if c.is_ascii_digit() => {
+            while i < b.len() && b[i].is_ascii_digit() {
+                i += 1;
+            }
+        }
+        _ => return false,
+    }
+    if b.get(i) == Some(&b'.') {
+        i += 1;
+        let frac_start = i;
+        while i < b.len() && b[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i == frac_start {
+            return false;
+        }
+    }
+    if matches!(b.get(i), Some(&b'e') | Some(&b'E')) {
+        i += 1;
+        if matches!(b.get(i), Some(&b'+') | Some(&b'-')) {
+            i += 1;
+        }
+        let exp_start = i;
+        while i < b.len() && b[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i == exp_start {
+            return false;
+        }
+    }
+    i == b.len()
 }
 
 /// Format seconds with an adaptive unit (s / ms / µs).
@@ -126,5 +229,37 @@ mod tests {
         assert_eq!(fmt_time(2.5), "2.500s");
         assert_eq!(fmt_time(0.0025), "2.500ms");
         assert_eq!(fmt_time(0.0000025), "2.5us");
+    }
+
+    #[test]
+    fn json_numbers_and_strings() {
+        let mut t = Table::new(vec!["name", "v"]);
+        t.push_row(vec!["plain", "1.5"]);
+        t.push_row(vec!["quo\"te", "x"]);
+        let j = t.to_json();
+        assert!(j.contains("\"v\": 1.5"), "{j}");
+        assert!(j.contains("\"quo\\\"te\""), "{j}");
+        assert!(j.trim_start().starts_with('['));
+        assert!(j.trim_end().ends_with(']'));
+    }
+
+    #[test]
+    fn json_number_grammar_is_strict() {
+        for ok in ["0", "-0", "1.5", "-12.25", "0.000001", "3e8", "1.5E-7", "42"] {
+            assert!(is_json_number(ok), "{ok} should pass");
+        }
+        // Accepted by Rust's f64 parser but invalid as JSON numbers.
+        for bad in ["+1.5", "1.", ".5", "007", "inf", "NaN", "1e", "1.5.2", "", "-"] {
+            assert!(!is_json_number(bad), "{bad} should fail");
+        }
+        let mut t = Table::new(vec!["v"]);
+        t.push_row(vec!["+1.5"]);
+        assert!(t.to_json().contains("\"+1.5\""));
+    }
+
+    #[test]
+    fn json_empty_table_is_empty_array() {
+        let t = Table::new(vec!["a"]);
+        assert_eq!(t.to_json().trim(), "[\n]");
     }
 }

@@ -68,6 +68,22 @@ pub fn summarize(xs: &[f64]) -> Summary {
     }
 }
 
+/// Distribution-free ~95% confidence interval for the median, from the
+/// binomial order-statistic bounds (normal approximation of the rank of
+/// the median, clamped to the sample extremes). For tiny samples the
+/// interval degenerates to `[min, max]`, which is the honest answer.
+pub fn median_ci95(xs: &[f64]) -> (f64, f64) {
+    assert!(!xs.is_empty(), "median_ci95 of empty sample");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len() as f64;
+    let z = 1.959964;
+    // 1-based order-statistic ranks, clamped to the sample.
+    let lo_rank = (((n - z * n.sqrt()) / 2.0).floor()).max(1.0) as usize;
+    let hi_rank = ((1.0 + (n + z * n.sqrt()) / 2.0).ceil()).min(n) as usize;
+    (v[lo_rank - 1], v[hi_rank - 1])
+}
+
 /// Result of a two-sided Mann-Whitney U test.
 #[derive(Clone, Copy, Debug)]
 pub struct MannWhitney {
@@ -185,6 +201,20 @@ mod tests {
         assert_eq!(s.max, 5.0);
         assert_eq!(s.median, 3.0);
         assert_eq!(s.mean, 3.0);
+    }
+
+    #[test]
+    fn median_ci_contains_median_and_degenerates() {
+        let xs: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        let (lo, hi) = median_ci95(&xs);
+        let m = median(&xs);
+        assert!(lo <= m && m <= hi, "[{lo}, {hi}] must contain {m}");
+        assert!(lo >= 1.0 && hi <= 20.0);
+        assert!(lo < hi);
+        // Single observation: the interval is just that value.
+        assert_eq!(median_ci95(&[3.25]), (3.25, 3.25));
+        // Two observations: spans the sample.
+        assert_eq!(median_ci95(&[1.0, 2.0]), (1.0, 2.0));
     }
 
     #[test]

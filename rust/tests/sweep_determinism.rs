@@ -1,0 +1,135 @@
+//! Determinism guarantees of the sweep engine and the simulator:
+//!
+//! * a sweep's results are byte-identical for `--threads 1` vs
+//!   `--threads 8` (same seeds; repetitions are order-normalized by the
+//!   executor);
+//! * `run_reconfiguration` with a fixed seed is bit-reproducible across
+//!   runs, jitter included (RNG streams derive by lineage, RTE
+//!   contention by plan-derived queue positions — not wall-clock order).
+
+use paraspawn::coordinator::sweep::{
+    cell_scenario, mn5_shrink_configs, run_matrix, ClusterKind, MethodConfig, ScenarioMatrix,
+};
+use paraspawn::coordinator::{run_reconfiguration, run_samples};
+use paraspawn::mam::{Method, SpawnStrategy};
+use paraspawn::testing::{check, Gen};
+
+fn mini_configs() -> Vec<MethodConfig> {
+    use SpawnStrategy::*;
+    vec![
+        MethodConfig { label: "M", method: Method::Merge, strategy: Plain },
+        MethodConfig { label: "M+HC", method: Method::Merge, strategy: ParallelHypercube },
+        MethodConfig { label: "M+ID", method: Method::Merge, strategy: ParallelDiffusive },
+        MethodConfig { label: "B+HC", method: Method::Baseline, strategy: ParallelHypercube },
+    ]
+}
+
+/// Bit-level equality for sample maps (plain `==` would accept -0.0/0.0
+/// confusion; the acceptance bar is *byte* identity).
+fn assert_bit_identical(
+    a: &paraspawn::coordinator::sweep::SweepResults,
+    b: &paraspawn::coordinator::sweep::SweepResults,
+) {
+    assert_eq!(a.samples.len(), b.samples.len());
+    for ((ka, xs), (kb, ys)) in a.samples.iter().zip(b.samples.iter()) {
+        assert_eq!(ka, kb);
+        assert_eq!(xs.len(), ys.len(), "{ka:?}");
+        for (x, y) in xs.iter().zip(ys) {
+            assert_eq!(x.to_bits(), y.to_bits(), "cell {ka:?}: {x} vs {y}");
+        }
+    }
+    assert_eq!(a.phase_means, b.phase_means);
+}
+
+#[test]
+fn sweep_results_identical_for_1_and_8_threads() {
+    // Expansion cells across every strategy family on the mini cluster,
+    // jitter ON (the MN5 cost model's 3%): determinism must not depend on
+    // the deterministic() escape hatch.
+    let matrix = ScenarioMatrix::new()
+        .clusters(vec![ClusterKind::Mini])
+        .configs(mini_configs())
+        .pairs(vec![(1, 4), (2, 8), (1, 8)])
+        .reps(3)
+        .seed(0xDE7E);
+    let serial = run_matrix(&matrix, 1).expect("serial sweep");
+    let parallel = run_matrix(&matrix, 8).expect("parallel sweep");
+    assert_eq!(serial.total_samples(), 3 * 4 * 3);
+    assert_bit_identical(&serial, &parallel);
+}
+
+#[test]
+fn shrink_sweep_identical_for_1_and_8_threads() {
+    // Shrinks run the prepare-expansion + TS/SS paths.
+    let matrix = ScenarioMatrix::new()
+        .clusters(vec![ClusterKind::Mini])
+        .configs(mn5_shrink_configs())
+        .pairs(vec![(4, 1), (8, 2)])
+        .reps(2)
+        .seed(0x5EED);
+    let serial = run_matrix(&matrix, 1).expect("serial sweep");
+    let parallel = run_matrix(&matrix, 8).expect("parallel sweep");
+    assert_bit_identical(&serial, &parallel);
+}
+
+#[test]
+fn run_reconfiguration_is_reproducible_per_seed() {
+    // Property: for random mini-cluster cells (any config, both
+    // directions), two runs of the same seeded scenario agree bit-for-bit
+    // on time, phases and side-effect counts — and a different seed with
+    // jitter on produces a different total.
+    check("run_reconfiguration reproducible", 8, |g: &mut Gen| {
+        let configs = mini_configs();
+        let mc = configs[g.usize_in(0, configs.len())];
+        let (i, n) = g.pick(&[(1usize, 4usize), (2, 6), (4, 2), (8, 3)]);
+        if n < i && mc.method == Method::Merge && mc.strategy != SpawnStrategy::Plain {
+            // Merge shrinks ignore the strategy; normalize like fig4b.
+            return Ok(());
+        }
+        let seed = g.u64_below(1 << 48);
+        let s = cell_scenario(ClusterKind::Mini, i, n, &mc, seed);
+        let a = run_reconfiguration(&s).map_err(|e| format!("{e:#}"))?;
+        let b = run_reconfiguration(&s).map_err(|e| format!("{e:#}"))?;
+        if a.total_time.to_bits() != b.total_time.to_bits() {
+            return Err(format!("total {} vs {}", a.total_time, b.total_time));
+        }
+        if a.phases != b.phases {
+            return Err(format!("phases {:?} vs {:?}", a.phases, b.phases));
+        }
+        if (a.ns, a.nt, a.nodes_returned, a.zombies) != (b.ns, b.nt, b.nodes_returned, b.zombies)
+        {
+            return Err("side-effect counters differ".into());
+        }
+        let c = run_reconfiguration(&s.clone().seeded(seed ^ 0xFFFF)).map_err(|e| e.to_string())?;
+        if c.total_time.to_bits() == a.total_time.to_bits() {
+            return Err("different seeds produced identical totals (jitter dead?)".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn run_samples_is_rep_ordered_and_thread_invariant() {
+    use paraspawn::coordinator::sweep::run_scenario_samples;
+    let s = cell_scenario(
+        ClusterKind::Mini,
+        1,
+        4,
+        &MethodConfig {
+            label: "M+HC",
+            method: Method::Merge,
+            strategy: SpawnStrategy::ParallelHypercube,
+        },
+        42,
+    );
+    let via_api = run_samples(&s, 4).unwrap();
+    let serial = run_scenario_samples(&s, 4, 1).unwrap();
+    let wide = run_scenario_samples(&s, 4, 8).unwrap();
+    assert_eq!(via_api.len(), 4);
+    for ((a, b), c) in via_api.iter().zip(&serial).zip(&wide) {
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert_eq!(a.to_bits(), c.to_bits());
+    }
+    // Different reps use different derived seeds, so samples differ.
+    assert!(via_api.windows(2).any(|w| w[0] != w[1]));
+}

@@ -1,0 +1,217 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! This workspace builds fully offline (DESIGN.md §2), so the real
+//! `anyhow` cannot be fetched from crates.io. This vendored crate
+//! implements the exact subset the codebase uses with identical
+//! semantics:
+//!
+//! * [`Error`] — an error value holding a message and a cause chain;
+//!   `{}` prints the outermost message, `{:#}` the whole chain joined
+//!   with `": "`, and `{:?}` an anyhow-style "Caused by" listing.
+//! * [`Result<T>`] — alias with `Error` as the default error type.
+//! * [`anyhow!`] / [`bail!`] — ad-hoc error construction.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   (for any `std::error::Error`) and on `Option`.
+//! * A blanket `From<E: std::error::Error>` so `?` converts library
+//!   errors (including `std::io::Error`) into [`Error`].
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An error with a message and an optional cause chain.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string(), cause: None }
+    }
+
+    /// Internal hook for the `anyhow!` single-expression form.
+    #[doc(hidden)]
+    pub fn from_display<M: fmt::Display>(msg: M) -> Error {
+        Error::msg(msg)
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = self.cause.as_deref();
+            while let Some(c) = cur {
+                write!(f, ": {}", c.msg)?;
+                cur = c.cause.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if self.cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = self.cause.as_deref();
+            while let Some(c) = cur {
+                write!(f, "\n    {}", c.msg)?;
+                cur = c.cause.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that is what makes the blanket `From` below coherent (same trick the
+// real anyhow uses).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Flatten the source chain into owned messages.
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            err = Some(Error { msg, cause: err.map(Box::new) });
+        }
+        err.expect("at least one message")
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::from_display(&$err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e = Error::from(io_err()).context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing thing");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert!(format!("{e:#}").contains("missing thing"));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("no {}", "value")).unwrap_err();
+        assert_eq!(format!("{e}"), "no value");
+        assert_eq!(Some(3u32).context("never used").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails(flag: bool) -> Result<()> {
+            if flag {
+                bail!("flag was {}", flag);
+            }
+            Err(anyhow!("fell through"))
+        }
+        assert_eq!(format!("{}", fails(true).unwrap_err()), "flag was true");
+        assert_eq!(format!("{}", fails(false).unwrap_err()), "fell through");
+        let s = String::from("stringly");
+        let e: Error = anyhow!(s);
+        assert_eq!(format!("{e}"), "stringly");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(format!("{:#}", inner().unwrap_err()).contains("missing thing"));
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::from(io_err()).context("mid").context("top");
+        let d = format!("{e:?}");
+        assert!(d.starts_with("top"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("missing thing"));
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_bounds<T: Send + Sync>() {}
+        assert_bounds::<Error>();
+    }
+}
