@@ -1,0 +1,55 @@
+//! Batch-scheduler demo: the system-level payoff of cheap TS shrinks.
+//!
+//! Calibrates TS/SS reconfiguration-cost models from the sweep engine
+//! (spawn-strategy medians, the paper's microbenchmarks), then runs a
+//! policy × cost-model grid — FCFS, EASY backfilling and the
+//! malleability-aware policy — over a synthetic workload on the MN5
+//! cluster, printing makespan/mean-wait per cell.
+//!
+//! ```bash
+//! cargo run --release --example batch_sched
+//! ```
+
+use paraspawn::coordinator::sweep::ClusterKind;
+use paraspawn::coordinator::wsweep::{
+    calibrated_costs, run_workload_matrix, WorkloadMatrix, WorkloadSpec,
+};
+use paraspawn::rms::workload::synthetic_workload;
+
+fn main() -> anyhow::Result<()> {
+    let kind = ClusterKind::Mn5;
+    let total_nodes = kind.cluster().len();
+
+    // Microbenchmark -> cost model: medians measured on the sweep pool.
+    let costs = calibrated_costs(kind, 5, 0xF16, 4)?;
+    for c in &costs {
+        println!(
+            "calibrated {}: expand {:.4}s, shrink {:.6}s",
+            c.label, c.model.expand_cost, c.model.shrink_cost
+        );
+    }
+
+    let matrix = WorkloadMatrix {
+        costs,
+        workloads: vec![WorkloadSpec {
+            label: "synthetic".to_string(),
+            jobs: synthetic_workload(50, total_nodes, 0.6, 2025),
+        }],
+        ..WorkloadMatrix::for_kind(kind)
+    };
+    let results = run_workload_matrix(&matrix, 4)?;
+    print!("{}", results.summary_table().to_ascii());
+
+    let get = |p: &str, c: &str| {
+        results.cells[&("synthetic".to_string(), p.to_string(), c.to_string())].clone()
+    };
+    let fcfs = get("fcfs", "TS");
+    let drm_ts = get("malleable", "TS");
+    let drm_ss = get("malleable", "SS");
+    println!(
+        "\nmalleable+TS improves makespan by {:.1}% over FCFS ({:.1}% for malleable+SS)",
+        100.0 * (1.0 - drm_ts.makespan / fcfs.makespan),
+        100.0 * (1.0 - drm_ss.makespan / fcfs.makespan),
+    );
+    Ok(())
+}

@@ -36,19 +36,19 @@ fn main() -> anyhow::Result<()> {
 
     let nodes = 32;
     let jobs = synthetic_workload(60, nodes, 0.6, 2024);
-    let rigid = simulate(nodes, &jobs, false, ReconfigCostModel::ts(expand));
+    let rigid = simulate(nodes, &jobs, false, ReconfigCostModel::ts(expand))?;
     let drm_ts = simulate(
         nodes,
         &jobs,
         true,
         ReconfigCostModel { expand_cost: expand, shrink_cost: ts_shrink },
-    );
+    )?;
     let drm_ss = simulate(
         nodes,
         &jobs,
         true,
         ReconfigCostModel { expand_cost: expand, shrink_cost: ss_shrink },
-    );
+    )?;
 
     let mut t = Table::new(vec!["policy", "makespan_s", "mean_wait_s", "turnaround_s", "reconfigs"]);
     for (name, r) in [("rigid", &rigid), ("DRM + TS (this paper)", &drm_ts), ("DRM + SS", &drm_ss)] {

@@ -309,35 +309,124 @@ fn cmd_figures(a: &Args) -> Result<()> {
         let h = figures::headline(e, s);
         emit("headline_nasp", &figures::headline_summary("NASP", &h, 1.25, 20.0))?;
     }
+    if all || which == "workload" {
+        // Workload-level payoff: policy x cost-model makespans with
+        // sweep-calibrated TS/SS reconfiguration costs.
+        let (t, _) = crate::coordinator::wsweep::fig_workload(&cfg)?;
+        emit("fig_workload", &t)?;
+    }
     Ok(())
 }
 
+/// `paraspawn workload`: run the batch-scheduler subsystem over a
+/// synthetic or trace-file workload, sweeping scheduling policies and
+/// TS/SS reconfiguration-cost models on the thread pool.
 fn cmd_workload(a: &Args) -> Result<()> {
-    use crate::rms::workload::{simulate, synthetic_workload, ReconfigCostModel};
-    let nodes = a.usize_or("nodes", 16)?;
-    let jobs_n = a.usize_or("jobs", 40)?;
+    use crate::coordinator::sweep::ClusterKind;
+    use crate::coordinator::wsweep::{self, WorkloadMatrix, WorkloadSpec};
+    use crate::rms::sched::{self, SchedPolicy};
+    use crate::rms::workload::synthetic_workload;
+    use crate::topology::LinkKind;
+
+    let cluster_name = a.get("cluster").unwrap_or("mn5");
+    let kind = ClusterKind::parse(cluster_name)
+        .with_context(|| format!("unknown cluster '{cluster_name}' (mn5 | nasp | mini)"))?;
+    // --nodes N overrides the topology with an N-node MN5-like cluster;
+    // cost calibration still runs on the named cluster kind.
+    let (cluster, alloc) = match a.get("nodes") {
+        Some(_) => {
+            let n = a.usize_or("nodes", 16)?;
+            (
+                crate::topology::Cluster::homogeneous("custom", n, 112, LinkKind::InfiniBand100),
+                crate::rms::AllocPolicy::WholeNodes,
+            )
+        }
+        None => (kind.cluster(), kind.alloc_policy()),
+    };
+    let total_nodes = cluster.len();
     let seed = a.usize_or("seed", 42)? as u64;
-    let jobs = synthetic_workload(jobs_n, nodes, 0.6, seed);
-    let rigid = simulate(nodes, &jobs, false, ReconfigCostModel::ts(1.0));
-    let ts = simulate(nodes, &jobs, true, ReconfigCostModel::ts(1.0));
-    let ss = simulate(nodes, &jobs, true, ReconfigCostModel::ss(1.0));
-    let mut t = crate::util::csvout::Table::new(vec![
-        "policy",
-        "makespan_s",
-        "mean_wait_s",
-        "mean_turnaround_s",
-        "reconfigs",
-    ]);
-    for (name, r) in [("rigid", &rigid), ("DRM+TS", &ts), ("DRM+SS", &ss)] {
-        t.push_row(vec![
-            name.to_string(),
-            format!("{:.1}", r.makespan),
-            format!("{:.1}", r.mean_wait),
-            format!("{:.1}", r.mean_turnaround),
-            r.reconfigurations.to_string(),
-        ]);
+    let frac: f64 = match a.get("malleable-frac") {
+        Some(v) => v.parse().context("--malleable-frac must be a number in [0, 1]")?,
+        None => 0.6,
+    };
+    if !(0.0..=1.0).contains(&frac) {
+        bail!("--malleable-frac must be in [0, 1], got {frac}");
     }
-    print!("{}", t.to_ascii());
+    let cores_per_node = cluster.nodes.iter().map(|n| n.cores).min().unwrap_or(1);
+
+    let (label, jobs) = if let Some(path) = a.get("trace") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let mut jobs = sched::read_swf(&text, cores_per_node, total_nodes)
+            .map_err(|e| anyhow::anyhow!("parsing SWF trace {path}: {e}"))?;
+        // Traces are rigid; overlay malleability deterministically.
+        sched::mark_malleable(&mut jobs, frac, 4, total_nodes, seed);
+        let label = std::path::Path::new(path)
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "trace".to_string());
+        (label, jobs)
+    } else {
+        let jobs_n = a.usize_or("jobs", 40)?;
+        ("synthetic".to_string(), synthetic_workload(jobs_n, total_nodes, frac, seed))
+    };
+    if jobs.is_empty() {
+        bail!("the workload is empty (all trace entries skipped?)");
+    }
+    if let Some(path) = a.get("save-trace") {
+        std::fs::write(path, sched::write_swf(&jobs, cores_per_node))
+            .with_context(|| format!("writing {path}"))?;
+        println!("[written {path}]");
+    }
+
+    let policies = match a.get("policy").unwrap_or("all") {
+        "all" => SchedPolicy::ALL.to_vec(),
+        s => vec![SchedPolicy::parse(s)
+            .with_context(|| format!("unknown policy '{s}' (fcfs | easy | malleable | all)"))?],
+    };
+    if a.get("json").is_some() && a.get("out").is_none() {
+        bail!("--json needs --out DIR (JSON is written next to the CSVs)");
+    }
+    let threads = a.usize_or("threads", sweep::default_threads())?;
+    let costs = if a.get("cost-from-sweep").is_some() {
+        let reps = a.usize_or("calib-reps", 3)?;
+        eprintln!(
+            "calibrating TS/SS cost models on '{}' via the sweep engine ({} reps)...",
+            kind.name(),
+            reps
+        );
+        wsweep::calibrated_costs(kind, reps, seed, threads)?
+    } else {
+        wsweep::default_costs()
+    };
+    for c in &costs {
+        eprintln!(
+            "cost model {}: expand {:.6}s, shrink {:.6}s",
+            c.label, c.model.expand_cost, c.model.shrink_cost
+        );
+    }
+
+    let matrix = WorkloadMatrix {
+        cluster,
+        alloc,
+        policies,
+        costs,
+        workloads: vec![WorkloadSpec { label, jobs }],
+    };
+    eprintln!(
+        "workload: {} jobs x {} polic{} x {} cost model(s) on {} nodes, {} thread(s)",
+        matrix.workloads[0].jobs.len(),
+        matrix.policies.len(),
+        if matrix.policies.len() == 1 { "y" } else { "ies" },
+        matrix.costs.len(),
+        total_nodes,
+        threads,
+    );
+    let results = wsweep::run_workload_matrix(&matrix, threads)?;
+    print!("{}", results.summary_table().to_ascii());
+    if let Some(dir) = a.get("out") {
+        results.write(std::path::Path::new(dir), a.get("json").is_some())?;
+        println!("[written {dir}/workload_{{summary,jobs}}.csv]");
+    }
     Ok(())
 }
 
@@ -398,10 +487,15 @@ USAGE:
                      [--nodes 1,2,4,8] [--pairs 1:4,2:8] [--configs M,M+HC]
                      [--threads T] [--reps K] [--seed S] [--max-nodes M]
                      [--data-bytes B] [--out DIR] [--json]
-  paraspawn figures  [--fig all|table2|4a|4b|5|6a|6b] [--out DIR]
+  paraspawn figures  [--fig all|table2|4a|4b|5|6a|6b|workload] [--out DIR]
                      [--reps K] [--max-nodes M] [--threads T]
   paraspawn table2
-  paraspawn workload [--nodes N] [--jobs J] [--seed S]
+  paraspawn workload [--cluster mn5|nasp|mini] [--nodes N] [--jobs J]
+                     [--seed S] [--malleable-frac F]
+                     [--policy fcfs|easy|malleable|all]
+                     [--trace FILE.swf] [--save-trace FILE.swf]
+                     [--cost-from-sweep] [--calib-reps K]
+                     [--threads T] [--out DIR] [--json]
   paraspawn select   [--i I] [--n N] [--cores C] [--expected-shrinks K]
 ";
 

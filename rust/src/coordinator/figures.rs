@@ -136,7 +136,11 @@ pub fn fig6b(cfg: &FigureConfig) -> Result<(Table, CellSamples)> {
 pub fn preferred_methods(cell: &BTreeMap<&'static str, Vec<f64>>) -> Vec<&'static str> {
     let mut meds: Vec<(&'static str, f64)> =
         cell.iter().map(|(&l, xs)| (l, median(xs))).collect();
-    meds.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    // NaN-safe sort: a NaN median (poisoned samples) must not panic the
+    // figure harness; it sorts last (regardless of its sign bit, which
+    // total_cmp alone would order below -inf) and never becomes the
+    // "best" cell.
+    meds.sort_by(|a, b| crate::util::stats::cmp_nan_last(&a.1, &b.1));
     let (best_label, _) = meds[0];
     let best = &cell[best_label];
     meds.iter()

@@ -1,11 +1,14 @@
 //! The coordinator: wires the RMS, the MaM library and the application
 //! driver into single-reconfiguration experiments (the unit of the
 //! paper's evaluation), the thread-pooled sweep engine that runs whole
-//! scenario matrices ([`sweep`]), and the figure-regeneration harness.
+//! scenario matrices ([`sweep`]), workload-level scheduler sweeps with
+//! sweep-calibrated reconfiguration costs ([`wsweep`]), and the
+//! figure-regeneration harness.
 
 pub mod figures;
 pub mod select;
 pub mod sweep;
+pub mod wsweep;
 
 use crate::app::{self, AppSpec, ResizeEvent};
 use crate::config::{CostModel, SimConfig};

@@ -124,10 +124,18 @@ pub fn select(
             .expect("cost-model kernel execution failed"),
         None => host_scores(&rows, candidates.len(), &coeffs),
     };
+    // NaN-safe minimum: a poisoned score must neither panic the harness
+    // nor win the selection (NaNs compare greater than every finite
+    // score, whatever their sign bit).
     let best = scores
         .iter()
         .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .min_by(|a, b| match (a.1.is_nan(), b.1.is_nan()) {
+            (true, true) => std::cmp::Ordering::Equal,
+            (true, false) => std::cmp::Ordering::Greater,
+            (false, true) => std::cmp::Ordering::Less,
+            (false, false) => a.1.partial_cmp(b.1).expect("both scores are non-NaN"),
+        })
         .map(|(i, _)| i)
         .unwrap();
     (best, scores)

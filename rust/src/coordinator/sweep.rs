@@ -21,18 +21,18 @@
 //! thin declarative layers over this engine, and the `paraspawn sweep`
 //! CLI subcommand exposes arbitrary user-defined grids.
 
-use super::{run_reconfiguration, ReconfigReport, Scenario};
+use super::{run_reconfiguration, Scenario};
 use crate::config::CostModel;
 use crate::mam::{Method, SpawnStrategy};
 use crate::metrics::Phase;
 use crate::topology::Cluster;
 use crate::util::csvout::Table;
 use crate::util::stats::{mean, median, median_ci95, std_dev};
-use anyhow::{bail, Result};
+use anyhow::Result;
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::mpsc;
 
 /// Node counts of the MN5 sweep (§5.2).
 pub const MN5_NODES: [usize; 7] = [1, 2, 4, 8, 16, 24, 32];
@@ -156,12 +156,29 @@ impl ClusterKind {
         }
     }
 
+    /// The concrete cluster this kind names.
+    pub fn cluster(self) -> Cluster {
+        match self {
+            ClusterKind::Mn5 => Cluster::mn5(),
+            ClusterKind::Nasp => Cluster::nasp(),
+            ClusterKind::Mini => Cluster::mini(8, 4),
+        }
+    }
+
+    /// The allocation policy the paper uses on this cluster.
+    pub fn alloc_policy(self) -> crate::rms::AllocPolicy {
+        match self {
+            ClusterKind::Nasp => crate::rms::AllocPolicy::BalancedTypes,
+            _ => crate::rms::AllocPolicy::WholeNodes,
+        }
+    }
+
     fn base_scenario(self, initial_nodes: usize, target_nodes: usize) -> Scenario {
         match self {
             ClusterKind::Mn5 => Scenario::mn5(initial_nodes, target_nodes),
             ClusterKind::Nasp => Scenario::nasp(initial_nodes, target_nodes),
             ClusterKind::Mini => Scenario {
-                cluster: Cluster::mini(8, 4),
+                cluster: self.cluster(),
                 cost: CostModel::mn5(),
                 initial_nodes,
                 target_nodes,
@@ -520,81 +537,103 @@ pub fn run_matrix(matrix: &ScenarioMatrix, threads: usize) -> Result<SweepResult
     run_tasks(matrix.tasks(), threads)
 }
 
-/// Run an explicit task list on a pool of `threads` worker threads.
+/// Generic thread-pooled map: run `f` over `items`, return the results
+/// in item order.
 ///
-/// Tasks are claimed from a shared queue; results stream back over a
-/// channel and are reassembled in task order, so the output is a pure
-/// function of the task list (the thread count only changes wall-clock
-/// time). The first failing task aborts the sweep with its cell identity
-/// attached: in-flight tasks drain, queued tasks are cancelled.
-pub fn run_tasks(tasks: Vec<SweepTask>, threads: usize) -> Result<SweepResults> {
-    if tasks.is_empty() {
-        return Ok(SweepResults::default());
+/// Items are claimed from a shared queue; results stream back over a
+/// channel and are reassembled in item order, so the output is a pure
+/// function of the item list (the thread count only changes wall-clock
+/// time). The first failing item cancels queued items (in-flight items
+/// drain) and its index is reported so callers can attach item identity
+/// to the error. Both the reconfiguration sweep ([`run_tasks`]) and the
+/// workload-scheduler sweep ([`crate::coordinator::wsweep`]) execute on
+/// this pool.
+pub fn parallel_map<T, R, F>(
+    items: &[T],
+    threads: usize,
+    f: F,
+) -> std::result::Result<Vec<R>, (usize, anyhow::Error)>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> Result<R> + Sync,
+{
+    if items.is_empty() {
+        return Ok(Vec::new());
     }
-    let threads = threads.clamp(1, tasks.len());
-    let tasks = Arc::new(tasks);
-    let next = Arc::new(AtomicUsize::new(0));
-    let stop = Arc::new(AtomicBool::new(false));
-    let (tx, rx) = mpsc::channel::<(usize, Result<ReconfigReport>)>();
-    let mut workers = Vec::with_capacity(threads);
-    for _ in 0..threads {
-        let tasks = Arc::clone(&tasks);
-        let next = Arc::clone(&next);
-        let stop = Arc::clone(&stop);
-        let tx = tx.clone();
-        workers.push(std::thread::spawn(move || loop {
-            if stop.load(Ordering::Relaxed) {
-                break;
-            }
-            let idx = next.fetch_add(1, Ordering::Relaxed);
-            if idx >= tasks.len() {
-                break;
-            }
-            let result = run_reconfiguration(&tasks[idx].scenario);
-            if result.is_err() {
-                // Cancel queued tasks: a multi-hour sweep should not run
-                // to completion just to report a first-minute failure.
-                stop.store(true, Ordering::Relaxed);
-            }
-            if tx.send((idx, result)).is_err() {
-                break;
-            }
-        }));
-    }
-    drop(tx);
+    let threads = threads.clamp(1, items.len());
+    let next = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    let (tx, rx) = mpsc::channel::<(usize, Result<R>)>();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let (next, stop, f) = (&next, &stop, &f);
+            scope.spawn(move || loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let idx = next.fetch_add(1, Ordering::Relaxed);
+                if idx >= items.len() {
+                    break;
+                }
+                let result = f(&items[idx]);
+                if result.is_err() {
+                    // Cancel queued items: a multi-hour sweep should not
+                    // run to completion just to report a first-minute
+                    // failure.
+                    stop.store(true, Ordering::Relaxed);
+                }
+                if tx.send((idx, result)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
 
-    let mut reports: Vec<Option<ReconfigReport>> = vec![None; tasks.len()];
-    let mut failure: Option<(usize, anyhow::Error)> = None;
-    for (idx, result) in rx {
-        match result {
-            Ok(r) => reports[idx] = Some(r),
-            Err(e) => {
-                if failure.is_none() {
-                    failure = Some((idx, e));
+        let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+        let mut failure: Option<(usize, anyhow::Error)> = None;
+        for (idx, result) in rx {
+            match result {
+                Ok(r) => out[idx] = Some(r),
+                Err(e) => {
+                    if failure.is_none() {
+                        failure = Some((idx, e));
+                    }
                 }
             }
         }
-    }
-    for w in workers {
-        let _ = w.join();
-    }
-    if let Some((idx, e)) = failure {
-        let c = &tasks[idx].cell;
-        bail!(
-            "sweep task failed ({} {} -> {} nodes, {}, rep {}): {:#}",
-            c.cluster,
-            c.initial_nodes,
-            c.target_nodes,
-            c.config,
-            tasks[idx].rep,
-            e
-        );
-    }
+        match failure {
+            Some(fe) => Err(fe),
+            None => Ok(out
+                .into_iter()
+                .map(|r| r.expect("every item completed without error"))
+                .collect()),
+        }
+    })
+}
+
+/// Run an explicit task list on a pool of `threads` worker threads (see
+/// [`parallel_map`] for the execution model; results are identical for
+/// any thread count).
+pub fn run_tasks(tasks: Vec<SweepTask>, threads: usize) -> Result<SweepResults> {
+    let reports = parallel_map(&tasks, threads, |t| run_reconfiguration(&t.scenario))
+        .map_err(|(idx, e)| {
+            let c = &tasks[idx].cell;
+            anyhow::anyhow!(
+                "sweep task failed ({} {} -> {} nodes, {}, rep {}): {:#}",
+                c.cluster,
+                c.initial_nodes,
+                c.target_nodes,
+                c.config,
+                tasks[idx].rep,
+                e
+            )
+        })?;
 
     let mut out = SweepResults::default();
     let mut phase_sums: BTreeMap<CellKey, BTreeMap<Phase, f64>> = BTreeMap::new();
     for (task, report) in tasks.iter().zip(reports) {
-        let report = report.expect("every task completed without error");
         out.samples.entry(task.cell.clone()).or_default().push(report.total_time);
         let sums = phase_sums.entry(task.cell.clone()).or_default();
         for (phase, d) in &report.phases {

@@ -1,0 +1,372 @@
+//! Workload-level sweeps: policy × cost-model × workload grids over the
+//! batch scheduler ([`crate::rms::sched`]), executed on the same thread
+//! pool as the reconfiguration sweeps ([`super::sweep::parallel_map`]).
+//!
+//! This closes the loop from microbenchmark to makespan: the spawn-
+//! strategy medians the sweep engine measures (Merge/TS vs the
+//! spawn-based SS baseline) become [`ReconfigCostModel`]s
+//! ([`calibrated_costs`]), and the scheduler turns the 1387×/20× cheaper
+//! TS shrinks into workload-level makespan and mean-wait wins — the
+//! paper's §1 motivation, measured instead of asserted.
+//!
+//! Because every scheduler cell is a deterministic simulation and
+//! results are reassembled in task order, a workload sweep is
+//! **bit-identical for any thread count** (covered by
+//! `rust/tests/sched.rs`).
+
+use super::figures::FigureConfig;
+use super::sweep::{parallel_map, ClusterKind, ScenarioMatrix};
+use crate::rms::sched::{schedule, SchedPolicy, SchedResult};
+use crate::rms::workload::{synthetic_workload, JobSpec, ReconfigCostModel};
+use crate::rms::AllocPolicy;
+use crate::topology::Cluster;
+use crate::util::csvout::Table;
+use crate::util::stats::median;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A labelled reconfiguration cost model (e.g. `"TS"`, `"SS"`).
+#[derive(Clone, Debug)]
+pub struct CostSpec {
+    pub label: String,
+    pub model: ReconfigCostModel,
+}
+
+/// A labelled job list.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub label: String,
+    pub jobs: Vec<JobSpec>,
+}
+
+/// A declarative workload sweep: every policy × cost × workload cell
+/// runs the batch scheduler once on `cluster`.
+#[derive(Clone, Debug)]
+pub struct WorkloadMatrix {
+    pub cluster: Cluster,
+    pub alloc: AllocPolicy,
+    pub policies: Vec<SchedPolicy>,
+    pub costs: Vec<CostSpec>,
+    pub workloads: Vec<WorkloadSpec>,
+}
+
+impl WorkloadMatrix {
+    /// An empty matrix (all three policies, no costs/workloads yet) on
+    /// the named cluster kind.
+    pub fn for_kind(kind: ClusterKind) -> WorkloadMatrix {
+        WorkloadMatrix {
+            cluster: kind.cluster(),
+            alloc: kind.alloc_policy(),
+            policies: SchedPolicy::ALL.to_vec(),
+            costs: Vec::new(),
+            workloads: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.policies.len() * self.costs.len() * self.workloads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Cell identity: `(workload, policy, cost)` labels.
+pub type WorkloadKey = (String, String, String);
+
+/// Results of a workload sweep, keyed deterministically.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkloadResults {
+    pub cells: BTreeMap<WorkloadKey, SchedResult>,
+}
+
+impl WorkloadResults {
+    /// One row per cell: makespan/wait/turnaround plus the reconfig and
+    /// node-second accounting, and makespan relative to the same
+    /// workload's FCFS cell under the same cost model (when present).
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "workload",
+            "policy",
+            "cost_model",
+            "makespan_s",
+            "mean_wait_s",
+            "max_wait_s",
+            "mean_turnaround_s",
+            "expands",
+            "shrinks",
+            "reconfig_node_s",
+            "idle_node_s",
+            "utilization",
+            "makespan_vs_fcfs",
+        ]);
+        for ((w, p, c), r) in &self.cells {
+            let fcfs = self.cells.get(&(w.clone(), "fcfs".to_string(), c.clone()));
+            let rel = fcfs
+                .filter(|f| f.makespan > 0.0)
+                .map(|f| format!("{:.4}", r.makespan / f.makespan))
+                .unwrap_or_else(|| "-".to_string());
+            t.push_row(vec![
+                w.clone(),
+                p.clone(),
+                c.clone(),
+                format!("{:.3}", r.makespan),
+                format!("{:.3}", r.mean_wait),
+                format!("{:.3}", r.max_wait),
+                format!("{:.3}", r.mean_turnaround),
+                r.expands.to_string(),
+                r.shrinks.to_string(),
+                format!("{:.3}", r.reconfig_node_seconds),
+                format!("{:.3}", r.idle_node_seconds),
+                format!("{:.4}", r.utilization()),
+                rel,
+            ]);
+        }
+        t
+    }
+
+    /// Long-form per-job table (one row per job per cell).
+    pub fn jobs_table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "workload",
+            "policy",
+            "cost_model",
+            "job",
+            "start_s",
+            "finish_s",
+            "wait_s",
+            "reconfigs",
+        ]);
+        for ((w, p, c), r) in &self.cells {
+            for (j, o) in r.jobs.iter().enumerate() {
+                t.push_row(vec![
+                    w.clone(),
+                    p.clone(),
+                    c.clone(),
+                    j.to_string(),
+                    format!("{:.3}", o.start),
+                    format!("{:.3}", o.finish),
+                    format!("{:.3}", o.wait),
+                    o.reconfigs.to_string(),
+                ]);
+            }
+        }
+        t
+    }
+
+    /// Write `workload_summary` and `workload_jobs` into `dir` as CSV
+    /// (plus JSON when `json` is set).
+    pub fn write(&self, dir: &Path, json: bool) -> Result<()> {
+        self.summary_table().write_csv(dir.join("workload_summary.csv"))?;
+        self.jobs_table().write_csv(dir.join("workload_jobs.csv"))?;
+        if json {
+            self.summary_table().write_json(dir.join("workload_summary.json"))?;
+            self.jobs_table().write_json(dir.join("workload_jobs.json"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Run a workload matrix on `threads` worker threads. Cells are
+/// reassembled in task order, so the result is identical for any thread
+/// count.
+pub fn run_workload_matrix(matrix: &WorkloadMatrix, threads: usize) -> Result<WorkloadResults> {
+    let cluster = &matrix.cluster;
+    let alloc = matrix.alloc;
+    let mut tasks: Vec<(WorkloadKey, &WorkloadSpec, SchedPolicy, ReconfigCostModel)> = Vec::new();
+    for w in &matrix.workloads {
+        for &p in &matrix.policies {
+            for c in &matrix.costs {
+                tasks.push((
+                    (w.label.clone(), p.name().to_string(), c.label.clone()),
+                    w,
+                    p,
+                    c.model,
+                ));
+            }
+        }
+    }
+    let results = parallel_map(&tasks, threads, |(_, w, p, c)| {
+        schedule(cluster, alloc, *p, *c, &w.jobs).map_err(|e| anyhow!("{e}"))
+    })
+    .map_err(|(idx, e)| {
+        let (w, p, c) = &tasks[idx].0;
+        anyhow!("workload cell failed (workload {w}, policy {p}, costs {c}): {e:#}")
+    })?;
+    let mut out = WorkloadResults::default();
+    for ((key, ..), r) in tasks.iter().zip(results) {
+        out.cells.insert(key.clone(), r);
+    }
+    Ok(out)
+}
+
+/// Measure spawn-strategy medians on the sweep engine and derive the
+/// TS and SS cost models from them:
+///
+/// * `expand` — median parallel-Merge expansion (`M+HC` on homogeneous
+///   clusters, `M+ID` on NASP) over the calibration pair.
+/// * `TS` shrink — median `M+TS` shrink (the paper's contribution:
+///   terminate per-node worlds, no spawning).
+/// * `SS` shrink — median spawn-based baseline shrink (`B+HC` / `B+ID`),
+///   i.e. a shrink as expensive as a respawn.
+pub fn calibrated_costs(
+    kind: ClusterKind,
+    reps: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<Vec<CostSpec>> {
+    let (expand_label, ss_label) = match kind {
+        ClusterKind::Nasp => ("M+ID", "B+ID"),
+        _ => ("M+HC", "B+HC"),
+    };
+    let expand_cfgs = match kind {
+        ClusterKind::Nasp => super::sweep::nasp_expand_configs(),
+        _ => super::sweep::mn5_expand_configs(),
+    };
+    let shrink_cfgs = match kind {
+        ClusterKind::Nasp => super::sweep::nasp_shrink_configs(),
+        _ => super::sweep::mn5_shrink_configs(),
+    };
+
+    let cell_median = |configs: Vec<super::sweep::MethodConfig>,
+                       pairs: Vec<(usize, usize)>,
+                       label: &str|
+     -> Result<f64> {
+        let matrix = ScenarioMatrix::new()
+            .clusters(vec![kind])
+            .configs(configs)
+            .pairs(pairs)
+            .reps(reps.max(1))
+            .seed(seed)
+            .filter_configs(&[label.to_string()]);
+        let results = super::sweep::run_matrix(&matrix, threads)
+            .map_err(|e| e.context(format!("calibrating '{label}'")))?;
+        let xs: Vec<f64> = results.samples.values().flatten().copied().collect();
+        if xs.is_empty() {
+            anyhow::bail!("calibration produced no samples for '{label}'");
+        }
+        Ok(median(&xs))
+    };
+
+    // One representative resize each way: a doubling expansion and the
+    // matching halving shrink.
+    let expand = cell_median(expand_cfgs, vec![(1, 2)], expand_label)?;
+    let ts_shrink = cell_median(shrink_cfgs.clone(), vec![(2, 1)], "M+TS")?;
+    let ss_shrink = cell_median(shrink_cfgs, vec![(2, 1)], ss_label)?;
+    Ok(vec![
+        CostSpec {
+            label: "TS".to_string(),
+            model: ReconfigCostModel { expand_cost: expand, shrink_cost: ts_shrink },
+        },
+        CostSpec {
+            label: "SS".to_string(),
+            model: ReconfigCostModel { expand_cost: expand, shrink_cost: ss_shrink },
+        },
+    ])
+}
+
+/// Uncalibrated fallback cost models (paper-shaped magnitudes): TS
+/// shrinks are ~three orders of magnitude cheaper than SS shrinks.
+pub fn default_costs() -> Vec<CostSpec> {
+    vec![
+        CostSpec { label: "TS".to_string(), model: ReconfigCostModel::ts(1.0) },
+        CostSpec { label: "SS".to_string(), model: ReconfigCostModel::ss(1.0) },
+    ]
+}
+
+/// The workload figure: makespan / mean-wait across the three policies
+/// and the TS/SS cost models on synthetic workloads, with costs
+/// calibrated from the sweep engine. The malleability-aware policy with
+/// TS costs is the paper's pitch; FCFS is the rigid baseline.
+pub fn fig_workload(cfg: &FigureConfig) -> Result<(Table, WorkloadResults)> {
+    let kind = ClusterKind::Mn5;
+    let total_nodes = kind.cluster().len();
+    let costs = calibrated_costs(kind, cfg.reps, cfg.seed, cfg.threads)?;
+    let workloads = vec![
+        WorkloadSpec {
+            label: "synthetic-a".to_string(),
+            jobs: synthetic_workload(40, total_nodes, 0.6, cfg.seed),
+        },
+        WorkloadSpec {
+            label: "synthetic-b".to_string(),
+            jobs: synthetic_workload(40, total_nodes, 0.6, cfg.seed.wrapping_add(7919)),
+        },
+    ];
+    let matrix = WorkloadMatrix { costs, workloads, ..WorkloadMatrix::for_kind(kind) };
+    let results = run_workload_matrix(&matrix, cfg.threads)?;
+    Ok((results.summary_table(), results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_matrix() -> WorkloadMatrix {
+        WorkloadMatrix {
+            costs: default_costs(),
+            workloads: vec![WorkloadSpec {
+                label: "w".to_string(),
+                jobs: synthetic_workload(15, 8, 0.6, 3),
+            }],
+            ..WorkloadMatrix::for_kind(ClusterKind::Mini)
+        }
+    }
+
+    #[test]
+    fn matrix_runs_every_cell() {
+        let m = tiny_matrix();
+        let r = run_workload_matrix(&m, 2).unwrap();
+        assert_eq!(r.cells.len(), m.len());
+        let t = r.summary_table();
+        assert_eq!(t.rows.len(), m.len());
+        // FCFS-relative column: FCFS rows are exactly 1.0.
+        for row in &t.rows {
+            if row[1] == "fcfs" {
+                assert_eq!(row[12], "1.0000");
+            }
+        }
+    }
+
+    #[test]
+    fn jobs_table_has_one_row_per_job_per_cell() {
+        let m = tiny_matrix();
+        let r = run_workload_matrix(&m, 1).unwrap();
+        let t = r.jobs_table();
+        assert_eq!(t.rows.len(), m.len() * 15);
+    }
+
+    #[test]
+    fn unschedulable_workload_reports_cell_identity() {
+        let mut m = tiny_matrix();
+        m.workloads[0].jobs.push(JobSpec {
+            arrival: 1e6,
+            work: 10.0,
+            min_nodes: 99,
+            max_nodes: 99,
+            malleable: false,
+        });
+        let err = run_workload_matrix(&m, 2).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("workload w"), "unexpected: {msg}");
+        assert!(msg.contains("unschedulable"), "unexpected: {msg}");
+    }
+
+    #[test]
+    fn calibrated_costs_reproduce_the_ts_gap() {
+        let costs = calibrated_costs(ClusterKind::Mini, 2, 0xF16, 2).unwrap();
+        assert_eq!(costs.len(), 2);
+        let ts = &costs[0];
+        let ss = &costs[1];
+        assert_eq!((ts.label.as_str(), ss.label.as_str()), ("TS", "SS"));
+        assert_eq!(ts.model.expand_cost, ss.model.expand_cost);
+        // The TS shrink must be much cheaper than the spawn-based one.
+        assert!(
+            ts.model.shrink_cost * 5.0 < ss.model.shrink_cost,
+            "TS {} vs SS {}",
+            ts.model.shrink_cost,
+            ss.model.shrink_cost
+        );
+    }
+}

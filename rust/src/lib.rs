@@ -38,6 +38,26 @@
 //! The figure harness ([`coordinator::figures`]) and the
 //! `paraspawn sweep` / `paraspawn figures` subcommands are thin
 //! declarative layers over this engine.
+//!
+//! ## The batch-scheduler subsystem
+//!
+//! The paper's headline claim is system-level: malleability "can reduce
+//! workload makespan, substantially decreasing job waiting times" (§1).
+//! [`rms::sched`] reproduces that loop end to end: an event-driven batch
+//! scheduler allocates real [`rms::Allocation`]s from the [`rms::Rms`]
+//! node pool (node-type balance and fragmentation are modeled, not just
+//! counts) under three pluggable policies — FCFS, EASY backfilling, and
+//! a malleability-aware policy that shrinks malleable jobs to admit
+//! queued work and expands them into idle nodes. Per-reconfiguration
+//! costs come from [`rms::workload::ReconfigCostModel`]s that
+//! [`coordinator::wsweep::calibrated_costs`] derives from the sweep
+//! engine's spawn-strategy medians (Merge/TS vs SS), so the 1387×/20×
+//! cheaper TS shrinks are *measured* into workload-level makespan and
+//! mean-wait wins. [`coordinator::wsweep`] runs policy × cost-model ×
+//! workload grids on the sweep thread pool (bit-identical for any thread
+//! count) with CSV/JSON output; `paraspawn workload` exposes it with
+//! synthetic workloads or SWF-style trace files
+//! ([`rms::sched::read_swf`]).
 //! * **L2/L1 (build-time Python)** — the application compute (Monte-Carlo
 //!   π, a tiled-matmul workload) and a batched strategy-cost model,
 //!   written in JAX + Pallas, AOT-lowered to HLO text and executed from

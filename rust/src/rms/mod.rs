@@ -1,8 +1,11 @@
 //! Resource-manager (RMS) simulation: node pool accounting, allocation
-//! policies for the two testbeds, and a makespan/workload simulator that
+//! policies for the two testbeds, a makespan/workload simulator that
 //! demonstrates the DRM benefit malleability exists for (§1-2 of the
-//! paper).
+//! paper), and the batch-scheduler subsystem ([`sched`]) that exercises
+//! FCFS / EASY-backfill / malleability-aware policies over real
+//! allocations from the node pool.
 
+pub mod sched;
 pub mod workload;
 
 use crate::topology::{Cluster, NodeId};
@@ -211,18 +214,23 @@ impl Rms {
                     let have_big = current.n_nodes() - have_small;
                     let want_small = n_nodes - n_nodes / 2;
                     let want_big = n_nodes / 2;
-                    let need_small = want_small.saturating_sub(have_small);
-                    let need_big = want_big.saturating_sub(have_big);
-                    // If the current composition is skewed, fill the rest
-                    // from whatever remains.
-                    let mut remainder =
-                        (n_nodes - current.n_nodes()).saturating_sub(need_small + need_big);
-                    if small.len() < need_small || big.len() < need_big {
-                        return Err(RmsError::Capacity {
-                            requested: n_nodes,
-                            available: current.n_nodes() + small.len() + big.len(),
-                        });
+                    let deficit = n_nodes - current.n_nodes();
+                    let mut need_small = want_small.saturating_sub(have_small);
+                    let mut need_big = want_big.saturating_sub(have_big);
+                    // A skewed starting composition can already overshoot
+                    // one type's balanced share; the whole deficit then
+                    // comes from the other type. Without this cap the
+                    // extra allocation could exceed `deficit` and the
+                    // grown job would hold more than `n_nodes` nodes.
+                    if need_small + need_big > deficit {
+                        need_small = need_small.min(deficit);
+                        need_big = deficit - need_small;
                     }
+                    // Balance when possible; if one pool runs short, fill
+                    // the shortfall from whatever remains.
+                    need_small = need_small.min(small.len());
+                    need_big = need_big.min(big.len());
+                    let mut remainder = deficit - (need_small + need_big);
                     let mut slots = Vec::new();
                     for &n in small.iter().take(need_small) {
                         slots.push((n, small_cores));
@@ -325,6 +333,57 @@ mod tests {
         let grown = rms.grow(&a, 3, AllocPolicy::WholeNodes).unwrap();
         assert_eq!(grown.nodes(), vec![0, 1, 2]);
         assert_eq!(rms.idle_nodes(), vec![3]);
+    }
+
+    #[test]
+    fn grow_balanced_from_skewed_small_heavy_composition() {
+        // Start with 3 small-type (20-core) nodes — more than the
+        // balanced target for 4 total (2 small + 2 big). Growing to 4
+        // must add exactly ONE node (regression: the uncapped balanced
+        // ask used to claim two big nodes, returning a 5-node
+        // allocation for a 4-node request).
+        let mut rms = Rms::new(Cluster::nasp());
+        let skewed = Allocation::new(vec![(0, 20), (1, 20), (2, 20)]);
+        rms.claim(&skewed).unwrap();
+        let grown = rms.grow(&skewed, 4, AllocPolicy::BalancedTypes).unwrap();
+        assert_eq!(grown.n_nodes(), 4, "grow(_, 4) must yield 4 nodes, got {:?}", grown.slots);
+        // The single added node comes from the big type (the deficit is
+        // entirely on the under-represented side).
+        let big = grown.slots.iter().filter(|&&(_, c)| c == 32).count();
+        assert_eq!(big, 1);
+        // RMS accounting matches: exactly 4 nodes are busy.
+        assert_eq!(rms.idle_nodes().len(), 12);
+    }
+
+    #[test]
+    fn grow_balanced_from_skewed_reaches_balanced_total() {
+        // 3 small nodes growing to 6: balanced total is 3 + 3, so all
+        // three additions must be big-type nodes.
+        let mut rms = Rms::new(Cluster::nasp());
+        let skewed = Allocation::new(vec![(0, 20), (1, 20), (2, 20)]);
+        rms.claim(&skewed).unwrap();
+        let grown = rms.grow(&skewed, 6, AllocPolicy::BalancedTypes).unwrap();
+        assert_eq!(grown.n_nodes(), 6);
+        let small = grown.slots.iter().filter(|&&(_, c)| c == 20).count();
+        let big = grown.slots.iter().filter(|&&(_, c)| c == 32).count();
+        assert_eq!((small, big), (3, 3));
+    }
+
+    #[test]
+    fn grow_balanced_fills_from_leftovers_when_one_pool_is_short() {
+        // A hog occupies 6 big nodes, leaving one idle: growing 2 -> 6
+        // wants 2 small + 2 big, but only 1 big remains, so the
+        // shortfall comes from the small pool instead of erroring.
+        let mut rms = Rms::new(Cluster::nasp());
+        let current = rms.plan_allocation(2, AllocPolicy::BalancedTypes).unwrap();
+        rms.claim(&current).unwrap();
+        let hog = Allocation::new((9..15).map(|n| (n, 32)).collect());
+        rms.claim(&hog).unwrap();
+        let grown = rms.grow(&current, 6, AllocPolicy::BalancedTypes).unwrap();
+        assert_eq!(grown.n_nodes(), 6);
+        rms.release(&grown);
+        rms.release(&hog);
+        assert_eq!(rms.idle_nodes().len(), 16);
     }
 
     #[test]

@@ -1,0 +1,804 @@
+//! The batch-scheduler subsystem: an event-driven scheduler that
+//! allocates real [`Allocation`]s from the [`Rms`] node pool (so
+//! node-type balance and fragmentation are modeled, not just counts) and
+//! supports pluggable policies:
+//!
+//! * [`SchedPolicy::Fcfs`] — strict first-come-first-served: the queue
+//!   head blocks everything behind it until it fits.
+//! * [`SchedPolicy::EasyBackfill`] — EASY backfilling: the head gets a
+//!   reservation at the earliest time enough nodes free up (the *shadow
+//!   time*), and queued jobs may jump ahead if they finish before the
+//!   shadow time or fit into nodes the reservation does not need.
+//! * [`SchedPolicy::Malleable`] — malleability-aware: EASY plus dynamic
+//!   reconfiguration (the paper's DRM motivation, §1). Malleable running
+//!   jobs are shrunk toward `min_nodes` to admit queued work and expanded
+//!   into idle nodes when the queue drains, paying per-reconfiguration
+//!   costs from a [`ReconfigCostModel`] — typically calibrated with the
+//!   spawn-strategy medians the sweep engine measures
+//!   ([`crate::coordinator::wsweep::calibrated_costs`]), closing the loop
+//!   from the paper's microbenchmarks to workload-level makespan.
+//!
+//! Reconfiguration charging: a resize between `a` and `b` nodes stalls
+//! every participating process for the cost duration, adding
+//! `cost * max(a, b)` node-seconds to the job's remaining work — the same
+//! resize is priced identically in both directions (see
+//! [`ReconfigCostModel`]).
+//!
+//! The scheduler is deterministic: same cluster, policy, costs and job
+//! list in, bit-identical [`SchedResult`] out. Node-seconds are conserved:
+//! `work + reconfig + idle == total_nodes * makespan` (tested in
+//! `rust/tests/sched.rs`).
+//!
+//! SWF-style traces: [`read_swf`] parses the Standard Workload Format
+//! (one job per whitespace-separated line, `;` comments) and
+//! [`write_swf`] emits it, so synthetic workloads round-trip through
+//! files and real traces can be replayed.
+
+use super::workload::{validate_jobs, JobSpec, ReconfigCostModel, WorkloadError};
+use super::{AllocPolicy, Allocation, Rms};
+use crate::topology::Cluster;
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+
+/// Work considered zero (simulation epsilon, matches `rms::workload`).
+const EPS_WORK: f64 = 1e-9;
+/// Time comparison epsilon for arrival batching.
+const EPS_TIME: f64 = 1e-12;
+
+/// Scheduling policy of the batch scheduler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SchedPolicy {
+    /// Strict first-come-first-served (no backfilling, no resizing).
+    Fcfs,
+    /// EASY backfilling: reservation for the head, conservative backfill.
+    EasyBackfill,
+    /// EASY plus malleability: shrink to admit, expand into idle nodes.
+    Malleable,
+}
+
+impl SchedPolicy {
+    pub const ALL: [SchedPolicy; 3] =
+        [SchedPolicy::Fcfs, SchedPolicy::EasyBackfill, SchedPolicy::Malleable];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedPolicy::Fcfs => "fcfs",
+            SchedPolicy::EasyBackfill => "easy",
+            SchedPolicy::Malleable => "malleable",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SchedPolicy> {
+        match s {
+            "fcfs" => Some(SchedPolicy::Fcfs),
+            "easy" | "backfill" => Some(SchedPolicy::EasyBackfill),
+            "malleable" | "drm" => Some(SchedPolicy::Malleable),
+            _ => None,
+        }
+    }
+}
+
+/// Per-job outcome of a scheduled workload (input order).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobOutcome {
+    pub start: f64,
+    pub finish: f64,
+    pub wait: f64,
+    /// Reconfigurations (expands + shrinks) this job went through.
+    pub reconfigs: usize,
+}
+
+/// Result of scheduling one workload under one policy and cost model.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct SchedResult {
+    pub makespan: f64,
+    pub mean_wait: f64,
+    pub max_wait: f64,
+    pub mean_turnaround: f64,
+    pub expands: usize,
+    pub shrinks: usize,
+    /// Node-seconds charged for reconfigurations (stall time × nodes).
+    pub reconfig_node_seconds: f64,
+    /// Node-seconds of useful work (== sum of job `work` on completion).
+    pub work_node_seconds: f64,
+    /// Node-seconds no job occupied, integrated to the makespan.
+    pub idle_node_seconds: f64,
+    /// `total_nodes * makespan` — the conservation budget.
+    pub total_node_seconds: f64,
+    pub jobs: Vec<JobOutcome>,
+}
+
+impl SchedResult {
+    pub fn reconfigurations(&self) -> usize {
+        self.expands + self.shrinks
+    }
+
+    /// Fraction of the node-second budget spent on useful work.
+    pub fn utilization(&self) -> f64 {
+        if self.total_node_seconds > 0.0 {
+            self.work_node_seconds / self.total_node_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One running job: its live allocation plus work-depletion state. Work
+/// depletes at `alloc.n_nodes()` node-seconds per second (node-count
+/// scaling, matching the workload simulator's work units).
+#[derive(Clone, Debug)]
+struct Run {
+    job: usize,
+    alloc: Allocation,
+    remaining: f64,
+    last_update: f64,
+}
+
+impl Run {
+    fn progress_to(&mut self, to: f64) {
+        self.remaining -= (to - self.last_update) * self.alloc.n_nodes() as f64;
+        self.last_update = to;
+    }
+
+    fn projected_finish(&self) -> f64 {
+        self.last_update + self.remaining.max(0.0) / self.alloc.n_nodes() as f64
+    }
+}
+
+/// The batch scheduler: event-driven simulation over a real [`Rms`].
+struct Scheduler<'a> {
+    jobs: &'a [JobSpec],
+    rms: Rms,
+    alloc_policy: AllocPolicy,
+    policy: SchedPolicy,
+    costs: ReconfigCostModel,
+    now: f64,
+    queue: VecDeque<usize>,
+    running: Vec<Run>,
+    starts: Vec<f64>,
+    finishes: Vec<f64>,
+    job_reconfigs: Vec<usize>,
+    expands: usize,
+    shrinks: usize,
+    reconfig_node_seconds: f64,
+    busy_node_seconds: f64,
+}
+
+/// Schedule `jobs` on `cluster` under `policy`, charging `costs` per
+/// reconfiguration. Jobs are taken in arrival order (ties broken by input
+/// index); the returned [`SchedResult::jobs`] is in input order.
+///
+/// Errors up front ([`WorkloadError`]) if any job can never run — an
+/// unschedulable job must surface as an error, not silently deflate the
+/// makespan accounting.
+pub fn schedule(
+    cluster: &Cluster,
+    alloc_policy: AllocPolicy,
+    policy: SchedPolicy,
+    costs: ReconfigCostModel,
+    jobs: &[JobSpec],
+) -> Result<SchedResult, WorkloadError> {
+    let total_nodes = cluster.len();
+    validate_jobs(total_nodes, jobs)?;
+    if jobs.is_empty() {
+        return Ok(SchedResult::default());
+    }
+
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by(|&a, &b| jobs[a].arrival.total_cmp(&jobs[b].arrival).then(a.cmp(&b)));
+
+    let mut s = Scheduler {
+        jobs,
+        rms: Rms::new(cluster.clone()),
+        alloc_policy,
+        policy,
+        costs,
+        now: 0.0,
+        queue: VecDeque::new(),
+        running: Vec::new(),
+        starts: vec![0.0; jobs.len()],
+        finishes: vec![0.0; jobs.len()],
+        job_reconfigs: vec![0; jobs.len()],
+        expands: 0,
+        shrinks: 0,
+        reconfig_node_seconds: 0.0,
+        busy_node_seconds: 0.0,
+    };
+
+    let mut next_arrival = 0usize;
+    loop {
+        // Move due arrivals into the queue, then let the policy act.
+        while next_arrival < order.len()
+            && s.jobs[order[next_arrival]].arrival <= s.now + EPS_TIME
+        {
+            s.queue.push_back(order[next_arrival]);
+            next_arrival += 1;
+        }
+        s.scheduling_pass();
+
+        // Next event: earliest projected finish or next arrival.
+        let next_finish =
+            s.running.iter().map(Run::projected_finish).fold(f64::INFINITY, f64::min);
+        let arrival = if next_arrival < order.len() {
+            s.jobs[order[next_arrival]].arrival
+        } else {
+            f64::INFINITY
+        };
+        let t = next_finish.min(arrival);
+        if !t.is_finite() {
+            if let Some(&head) = s.queue.front() {
+                // No running jobs, no arrivals, yet the head cannot be
+                // placed (e.g. BalancedTypes type-imbalance on an
+                // otherwise idle cluster): surface instead of spinning.
+                return Err(WorkloadError::Unschedulable {
+                    job: head,
+                    min_nodes: s.jobs[head].min_nodes,
+                    total_nodes,
+                });
+            }
+            break;
+        }
+        let t = t.max(s.now);
+
+        // Integrate busy node-seconds across the interval, advance work.
+        let busy: usize = s.running.iter().map(|r| r.alloc.n_nodes()).sum();
+        s.busy_node_seconds += busy as f64 * (t - s.now);
+        s.now = t;
+        for r in s.running.iter_mut() {
+            r.progress_to(t);
+        }
+
+        // Complete jobs that ran dry, releasing their nodes to the pool.
+        let mut i = 0;
+        while i < s.running.len() {
+            if s.running[i].remaining <= EPS_WORK {
+                let r = s.running.remove(i);
+                s.rms.release(&r.alloc);
+                s.finishes[r.job] = s.now;
+            } else {
+                i += 1;
+            }
+        }
+
+        if s.running.is_empty() && s.queue.is_empty() && next_arrival >= order.len() {
+            break;
+        }
+    }
+
+    let makespan = s.finishes.iter().cloned().fold(0.0, f64::max);
+    let waits: Vec<f64> = (0..jobs.len()).map(|j| s.starts[j] - jobs[j].arrival).collect();
+    let n = jobs.len() as f64;
+    let work_node_seconds: f64 = jobs.iter().map(|j| j.work).sum();
+    let total_node_seconds = total_nodes as f64 * makespan;
+    Ok(SchedResult {
+        makespan,
+        mean_wait: waits.iter().sum::<f64>() / n,
+        max_wait: waits.iter().cloned().fold(0.0, f64::max),
+        mean_turnaround: s
+            .finishes
+            .iter()
+            .zip(jobs)
+            .map(|(f, j)| f - j.arrival)
+            .sum::<f64>()
+            / n,
+        expands: s.expands,
+        shrinks: s.shrinks,
+        reconfig_node_seconds: s.reconfig_node_seconds,
+        work_node_seconds,
+        idle_node_seconds: total_node_seconds - s.busy_node_seconds,
+        total_node_seconds,
+        jobs: (0..jobs.len())
+            .map(|j| JobOutcome {
+                start: s.starts[j],
+                finish: s.finishes[j],
+                wait: waits[j],
+                reconfigs: s.job_reconfigs[j],
+            })
+            .collect(),
+    })
+}
+
+impl Scheduler<'_> {
+    /// Try to start `jid` at its minimum width from the idle pool.
+    fn try_start(&mut self, jid: usize) -> bool {
+        let spec = &self.jobs[jid];
+        match self.rms.plan_allocation(spec.min_nodes, self.alloc_policy) {
+            Ok(alloc) => {
+                self.rms.claim(&alloc).expect("planned allocation claims cleanly");
+                self.starts[jid] = self.now;
+                self.running.push(Run {
+                    job: jid,
+                    alloc,
+                    remaining: spec.work,
+                    last_update: self.now,
+                });
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Admit queue heads in order while they fit (the FCFS core).
+    fn admit_fifo(&mut self) {
+        while let Some(&head) = self.queue.front() {
+            if self.try_start(head) {
+                self.queue.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn idle_count(&self) -> usize {
+        self.rms.idle_nodes().len()
+    }
+
+    /// One policy step at the current time. Called whenever the world
+    /// changes (arrival, completion) — must be idempotent at fixed state.
+    fn scheduling_pass(&mut self) {
+        match self.policy {
+            SchedPolicy::Fcfs => self.admit_fifo(),
+            SchedPolicy::EasyBackfill => {
+                self.admit_fifo();
+                if !self.queue.is_empty() {
+                    self.backfill();
+                }
+            }
+            SchedPolicy::Malleable => {
+                self.admit_fifo();
+                // Shrink malleable runners to make room for the head;
+                // repeat while admissions keep succeeding.
+                while let Some(&head) = self.queue.front() {
+                    if !self.shrink_to_fit(self.jobs[head].min_nodes) {
+                        break;
+                    }
+                    if self.try_start(head) {
+                        self.queue.pop_front();
+                        self.admit_fifo();
+                    } else {
+                        break;
+                    }
+                }
+                if !self.queue.is_empty() {
+                    self.backfill();
+                }
+                if self.queue.is_empty() {
+                    self.expand_into_idle();
+                }
+            }
+        }
+    }
+
+    /// EASY backfill: compute the head's shadow time (earliest instant
+    /// enough nodes free up, using projected completions) and the spare
+    /// node count at that instant, then start queued jobs (in order) that
+    /// either complete before the shadow time or fit into the spare
+    /// nodes. Every start still allocates through the RMS, so node-type
+    /// fragmentation can veto a count-feasible backfill.
+    fn backfill(&mut self) {
+        let head = *self.queue.front().expect("backfill requires a blocked head");
+        let head_need = self.jobs[head].min_nodes;
+
+        let mut frees: Vec<(f64, usize)> =
+            self.running.iter().map(|r| (r.projected_finish(), r.alloc.n_nodes())).collect();
+        frees.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut avail = self.idle_count();
+        let mut shadow = f64::INFINITY;
+        let mut spare = 0usize;
+        for (t, n) in frees {
+            avail += n;
+            if avail >= head_need {
+                shadow = t;
+                spare = avail - head_need;
+                break;
+            }
+        }
+
+        let mut i = 1;
+        while i < self.queue.len() {
+            let jid = self.queue[i];
+            let spec = &self.jobs[jid];
+            // Runtime estimate at minimum width (the scheduler's
+            // "requested walltime").
+            let est = spec.work / spec.min_nodes as f64;
+            let ends_before_shadow = self.now + est <= shadow + EPS_TIME;
+            let fits_spare = spec.min_nodes <= spare;
+            if (ends_before_shadow || fits_spare) && self.try_start(jid) {
+                if !ends_before_shadow {
+                    // Holds nodes past the reservation: they must come
+                    // out of the spare pool.
+                    spare -= spec.min_nodes;
+                }
+                let _ = self.queue.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Whether a `need`-node allocation can actually be built from the
+    /// idle pool right now (counting is not enough: `BalancedTypes` can
+    /// veto a count-sufficient but type-fragmented pool).
+    fn can_place(&self, need: usize) -> bool {
+        self.rms.plan_allocation(need, self.alloc_policy).is_ok()
+    }
+
+    /// Shrink malleable running jobs toward `min_nodes` until a
+    /// `need`-node allocation becomes *placeable* (largest surplus first,
+    /// ties by job id — deterministic). Placement is checked against the
+    /// RMS after every shrink rather than by node counting, so on
+    /// heterogeneous pools we keep releasing until the right node types
+    /// are free (at least one node per step) and stop the moment the head
+    /// fits — a successful return guarantees the subsequent allocation
+    /// succeeds. Charges `shrink_cost * pre_nodes` node-seconds per
+    /// shrink (every terminating process participates).
+    fn shrink_to_fit(&mut self, need: usize) -> bool {
+        if self.can_place(need) {
+            return true;
+        }
+        let mut order: Vec<usize> = (0..self.running.len())
+            .filter(|&i| {
+                let r = &self.running[i];
+                self.jobs[r.job].malleable && r.alloc.n_nodes() > self.jobs[r.job].min_nodes
+            })
+            .collect();
+        order.sort_by_key(|&i| {
+            let r = &self.running[i];
+            (
+                std::cmp::Reverse(r.alloc.n_nodes() - self.jobs[r.job].min_nodes),
+                r.job,
+            )
+        });
+        for i in order {
+            let idle = self.idle_count();
+            let r = &mut self.running[i];
+            let pre = r.alloc.n_nodes();
+            let surplus = pre - self.jobs[r.job].min_nodes;
+            // Count-sufficient but type-fragmented pools still need more
+            // releases — free at least one node per step.
+            let give = surplus.min(need.saturating_sub(idle).max(1));
+            r.progress_to(self.now);
+            r.alloc = self.rms.shrink(&r.alloc, pre - give);
+            let charge = self.costs.shrink_cost * pre as f64;
+            r.remaining += charge;
+            self.reconfig_node_seconds += charge;
+            self.shrinks += 1;
+            self.job_reconfigs[r.job] += 1;
+            if self.can_place(need) {
+                return true;
+            }
+        }
+        self.can_place(need)
+    }
+
+    /// Expand malleable running jobs into idle nodes (start order, i.e.
+    /// oldest first — deterministic), up to `max_nodes`, charging
+    /// `expand_cost * post_nodes` node-seconds per expansion (existing
+    /// plus spawned processes all participate).
+    fn expand_into_idle(&mut self) {
+        // Indexed loop: the body needs `&mut self.rms` alongside the
+        // current `Run`, which an `iter_mut` borrow would forbid.
+        #[allow(clippy::needless_range_loop)]
+        for i in 0..self.running.len() {
+            let idle = self.idle_count();
+            if idle == 0 {
+                break;
+            }
+            let (job, cur) = {
+                let r = &self.running[i];
+                (r.job, r.alloc.n_nodes())
+            };
+            if !self.jobs[job].malleable {
+                continue;
+            }
+            let want = self.jobs[job].max_nodes.min(cur + idle);
+            if want <= cur {
+                continue;
+            }
+            let r = &mut self.running[i];
+            match self.rms.grow(&r.alloc, want, self.alloc_policy) {
+                Ok(alloc) => {
+                    r.progress_to(self.now);
+                    r.alloc = alloc;
+                    let post = r.alloc.n_nodes();
+                    let charge = self.costs.expand_cost * post as f64;
+                    r.remaining += charge;
+                    self.reconfig_node_seconds += charge;
+                    self.expands += 1;
+                    self.job_reconfigs[job] += 1;
+                }
+                Err(_) => {
+                    // Type-imbalanced remainder (heterogeneous pools):
+                    // skip — the nodes stay idle for the next pass.
+                }
+            }
+        }
+    }
+}
+
+/// Mark a deterministic fraction of `jobs` malleable (seeded), giving
+/// each an expansion headroom of `growth × min_nodes` capped at
+/// `total_nodes`. Used to overlay malleability onto rigid SWF traces.
+pub fn mark_malleable(
+    jobs: &mut [JobSpec],
+    frac: f64,
+    growth: usize,
+    total_nodes: usize,
+    seed: u64,
+) {
+    let mut rng = Rng::new(seed);
+    for j in jobs.iter_mut() {
+        if rng.f64() < frac {
+            j.malleable = true;
+            j.max_nodes = (j.min_nodes * growth.max(1)).min(total_nodes).max(j.min_nodes);
+        }
+    }
+}
+
+/// Parse an SWF-style (Standard Workload Format) trace. Each
+/// non-comment line holds whitespace-separated fields; the reader uses
+/// field 2 (submit time), field 4 (run time), field 5 (allocated
+/// processors), field 8 (requested processors, preferred over field 5
+/// when positive). Lines with non-positive runtime or processor counts
+/// (failed/cancelled jobs) are skipped. Processor counts convert to
+/// whole nodes of `cores_per_node`, clamped to `total_nodes`; jobs are
+/// rigid (`malleable: false`) — overlay with [`mark_malleable`].
+pub fn read_swf(
+    text: &str,
+    cores_per_node: u32,
+    total_nodes: usize,
+) -> Result<Vec<JobSpec>, String> {
+    let mut out: Vec<JobSpec> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with(';') || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() < 5 {
+            return Err(format!("line {}: expected >= 5 SWF fields, got {}", lineno + 1, f.len()));
+        }
+        let num = |idx: usize| -> Result<f64, String> {
+            f.get(idx)
+                .map(|s| {
+                    s.parse::<f64>()
+                        .map_err(|_| format!("line {}: bad numeric field {}", lineno + 1, idx + 1))
+                })
+                .unwrap_or(Ok(-1.0))
+        };
+        let submit = num(1)?;
+        let run_time = num(3)?;
+        let used_procs = num(4)?;
+        let req_procs = num(7).unwrap_or(-1.0);
+        let procs = if req_procs > 0.0 { req_procs } else { used_procs };
+        if run_time <= 0.0 || procs <= 0.0 || submit < 0.0 {
+            continue; // failed/cancelled entries carry -1 markers
+        }
+        let nodes =
+            (((procs / cores_per_node as f64).ceil()) as usize).clamp(1, total_nodes.max(1));
+        out.push(JobSpec {
+            arrival: submit,
+            work: run_time * nodes as f64,
+            min_nodes: nodes,
+            max_nodes: nodes,
+            malleable: false,
+        });
+    }
+    out.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    Ok(out)
+}
+
+/// Render jobs as an SWF-style trace (18 fields per line, unknown fields
+/// as `-1`). Runtime is the job's runtime at minimum width
+/// (`work / min_nodes`); processors are `min_nodes * cores_per_node`.
+/// Round-trips through [`read_swf`].
+pub fn write_swf(jobs: &[JobSpec], cores_per_node: u32) -> String {
+    let mut out = String::new();
+    out.push_str("; SWF-style trace written by paraspawn (rms::sched)\n");
+    out.push_str(&format!("; cores_per_node: {cores_per_node}\n"));
+    for (i, j) in jobs.iter().enumerate() {
+        let runtime = j.work / j.min_nodes as f64;
+        let procs = j.min_nodes as u64 * cores_per_node as u64;
+        out.push_str(&format!(
+            "{} {:.6} -1 {:.6} {} -1 -1 {} {:.6} -1 1 -1 -1 -1 -1 -1 -1 -1\n",
+            i + 1,
+            j.arrival,
+            runtime,
+            procs,
+            procs,
+            runtime,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ts() -> ReconfigCostModel {
+        ReconfigCostModel { expand_cost: 0.5, shrink_cost: 0.002 }
+    }
+
+    fn rigid(arrival: f64, work: f64, nodes: usize) -> JobSpec {
+        JobSpec { arrival, work, min_nodes: nodes, max_nodes: nodes, malleable: false }
+    }
+
+    #[test]
+    fn fcfs_sequential_makespan_is_exact() {
+        // Two 4-node jobs on a 4-node cluster: strictly sequential.
+        let jobs = vec![rigid(0.0, 80.0, 4), rigid(0.0, 80.0, 4)];
+        let cluster = Cluster::mini(4, 4);
+        let r =
+            schedule(&cluster, AllocPolicy::WholeNodes, SchedPolicy::Fcfs, ts(), &jobs).unwrap();
+        assert!((r.makespan - 40.0).abs() < 1e-9, "makespan = {}", r.makespan);
+        assert_eq!(r.jobs[1].wait, 20.0);
+        assert_eq!(r.reconfigurations(), 0);
+    }
+
+    #[test]
+    fn fcfs_head_blocks_narrow_job_easy_backfills_it() {
+        // job0: 4 nodes for 10s; job1 (head at t=1): needs all 8;
+        // job2 (t=2): 2 nodes for 8s — fits the idle 4 nodes and ends
+        // exactly at job1's shadow time (t=10).
+        let jobs = vec![rigid(0.0, 40.0, 4), rigid(1.0, 80.0, 8), rigid(2.0, 16.0, 2)];
+        let cluster = Cluster::mini(8, 4);
+        let fcfs =
+            schedule(&cluster, AllocPolicy::WholeNodes, SchedPolicy::Fcfs, ts(), &jobs).unwrap();
+        let easy =
+            schedule(&cluster, AllocPolicy::WholeNodes, SchedPolicy::EasyBackfill, ts(), &jobs)
+                .unwrap();
+        assert!((fcfs.makespan - 28.0).abs() < 1e-9, "fcfs = {}", fcfs.makespan);
+        assert!((easy.makespan - 20.0).abs() < 1e-9, "easy = {}", easy.makespan);
+        // The backfilled job must not delay the head's reservation.
+        assert!((easy.jobs[1].start - 10.0).abs() < 1e-9);
+        assert!((easy.jobs[2].start - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backfill_never_delays_the_reserved_head() {
+        // job2 would fit node-wise but runs past the shadow time and
+        // exceeds the spare pool -> must NOT backfill.
+        let jobs = vec![rigid(0.0, 40.0, 4), rigid(1.0, 80.0, 8), rigid(2.0, 400.0, 4)];
+        let easy = schedule(
+            &Cluster::mini(8, 4),
+            AllocPolicy::WholeNodes,
+            SchedPolicy::EasyBackfill,
+            ts(),
+            &jobs,
+        )
+        .unwrap();
+        assert!((easy.jobs[1].start - 10.0).abs() < 1e-9, "head delayed: {:?}", easy.jobs);
+        assert!(easy.jobs[2].start >= easy.jobs[1].start);
+    }
+
+    #[test]
+    fn malleable_policy_shrinks_to_admit_and_expands_when_idle() {
+        // A malleable job expands 2 -> 8 into the idle cluster, then
+        // shrinks back to admit a rigid arrival.
+        let jobs = vec![
+            JobSpec { arrival: 0.0, work: 160.0, min_nodes: 2, max_nodes: 8, malleable: true },
+            rigid(5.0, 60.0, 6),
+        ];
+        let r = schedule(
+            &Cluster::mini(8, 4),
+            AllocPolicy::WholeNodes,
+            SchedPolicy::Malleable,
+            ReconfigCostModel { expand_cost: 1.0, shrink_cost: 1.0 },
+            &jobs,
+        )
+        .unwrap();
+        assert!(r.expands >= 2 && r.shrinks == 1, "expands {} shrinks {}", r.expands, r.shrinks);
+        // Rigid job admitted promptly via the shrink.
+        assert!((r.jobs[1].start - 5.0).abs() < 1e-9, "start = {}", r.jobs[1].start);
+        // Direction-symmetric pricing: expand 2->8 and shrink 8->2 both
+        // charge cost * 8 node-seconds.
+        assert!(r.reconfig_node_seconds >= 16.0 - 1e-9);
+    }
+
+    #[test]
+    fn unschedulable_job_errors_up_front() {
+        let jobs = vec![rigid(0.0, 10.0, 1), rigid(1.0, 10.0, 9)];
+        let err = schedule(
+            &Cluster::mini(8, 4),
+            AllocPolicy::WholeNodes,
+            SchedPolicy::Fcfs,
+            ts(),
+            &jobs,
+        )
+        .unwrap_err();
+        assert_eq!(err, WorkloadError::Unschedulable { job: 1, min_nodes: 9, total_nodes: 8 });
+    }
+
+    #[test]
+    fn unsorted_arrivals_are_handled() {
+        let jobs = vec![rigid(10.0, 8.0, 2), rigid(0.0, 8.0, 2)];
+        let r = schedule(
+            &Cluster::mini(4, 4),
+            AllocPolicy::WholeNodes,
+            SchedPolicy::Fcfs,
+            ts(),
+            &jobs,
+        )
+        .unwrap();
+        assert!((r.jobs[1].start - 0.0).abs() < 1e-9);
+        assert!((r.jobs[0].start - 10.0).abs() < 1e-9);
+        assert!((r.makespan - 14.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heterogeneous_allocations_come_from_the_real_pool() {
+        // NASP balanced allocations: a 4-node job takes 2x20 + 2x32.
+        let jobs = vec![rigid(0.0, 40.0, 4)];
+        let r = schedule(
+            &Cluster::nasp(),
+            AllocPolicy::BalancedTypes,
+            SchedPolicy::Fcfs,
+            ts(),
+            &jobs,
+        )
+        .unwrap();
+        assert!((r.makespan - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn swf_round_trip() {
+        let jobs = vec![
+            rigid(0.0, 40.0, 4),
+            rigid(12.5, 16.0, 2),
+            JobSpec { arrival: 30.0, work: 60.0, min_nodes: 3, max_nodes: 6, malleable: true },
+        ];
+        let text = write_swf(&jobs, 4);
+        let back = read_swf(&text, 4, 8).unwrap();
+        assert_eq!(back.len(), jobs.len());
+        for (a, b) in jobs.iter().zip(&back) {
+            assert!((a.arrival - b.arrival).abs() < 1e-6);
+            assert_eq!(a.min_nodes, b.min_nodes);
+            assert!((a.work - b.work).abs() < 1e-6);
+            assert!(!b.malleable); // traces are rigid until overlaid
+        }
+    }
+
+    #[test]
+    fn swf_reader_skips_comments_and_failed_jobs() {
+        let text = "; comment\n\
+                    # another\n\
+                    1 0.0 -1 100.0 8 -1 -1 8 100.0 -1 1 -1 -1 -1 -1 -1 -1 -1\n\
+                    2 5.0 -1 -1 8 -1 -1 8 -1 -1 0 -1 -1 -1 -1 -1 -1 -1\n";
+        let jobs = read_swf(text, 4, 8).unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].min_nodes, 2);
+        assert!((jobs[0].work - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mark_malleable_is_deterministic_and_bounded() {
+        let mk = || vec![rigid(0.0, 8.0, 2); 50];
+        let mut a = mk();
+        let mut b = mk();
+        mark_malleable(&mut a, 0.5, 4, 8, 99);
+        mark_malleable(&mut b, 0.5, 4, 8, 99);
+        let count = a.iter().filter(|j| j.malleable).count();
+        assert!(count > 10 && count < 40, "count = {count}");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.malleable, y.malleable);
+            assert!(x.max_nodes <= 8 && x.max_nodes >= x.min_nodes);
+        }
+    }
+
+    #[test]
+    fn deterministic_repeat_runs_bit_identical() {
+        let jobs = super::super::workload::synthetic_workload(30, 8, 0.6, 11);
+        let run = || {
+            schedule(
+                &Cluster::mini(8, 4),
+                AllocPolicy::WholeNodes,
+                SchedPolicy::Malleable,
+                ts(),
+                &jobs,
+            )
+            .unwrap()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -17,12 +17,30 @@ pub struct Summary {
     pub std: f64,
 }
 
+/// Total order over `f64` with **all** NaNs (either sign bit) greater
+/// than every finite value. `f64::total_cmp` alone is not enough for
+/// NaN-poisoned samples: quiet NaNs produced at run time (e.g. `0.0/0.0`
+/// on x86-64) carry a set sign bit and would sort *below* `-inf`,
+/// silently becoming a minimum/"best" value.
+pub fn cmp_nan_last(a: &f64, b: &f64) -> std::cmp::Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => std::cmp::Ordering::Equal,
+        (true, false) => std::cmp::Ordering::Greater,
+        (false, true) => std::cmp::Ordering::Less,
+        (false, false) => a.partial_cmp(b).expect("both values are non-NaN"),
+    }
+}
+
 /// Linear-interpolated quantile of an unsorted sample (q in [0,1]).
+/// NaN-poisoned samples do not panic: NaNs sort last regardless of sign
+/// bit ([`cmp_nan_last`]), so low quantiles of mostly-finite samples
+/// stay meaningful and a NaN result (rather than a crash) flags a
+/// poisoned upper tail.
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty(), "quantile of empty sample");
     assert!((0.0..=1.0).contains(&q));
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(cmp_nan_last);
     let pos = q * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -75,7 +93,7 @@ pub fn summarize(xs: &[f64]) -> Summary {
 pub fn median_ci95(xs: &[f64]) -> (f64, f64) {
     assert!(!xs.is_empty(), "median_ci95 of empty sample");
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(cmp_nan_last);
     let n = v.len() as f64;
     let z = 1.959964;
     // 1-based order-statistic ranks, clamped to the sample.
@@ -107,7 +125,9 @@ pub fn mann_whitney_u(a: &[f64], b: &[f64]) -> MannWhitney {
         .map(|&x| (x, 0usize))
         .chain(b.iter().map(|&x| (x, 1usize)))
         .collect();
-    pooled.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+    // NaN-safe sort keeps poisoned samples from panicking the harness:
+    // NaNs sort last (either sign bit) and never tie with finite values.
+    pooled.sort_by(|x, y| cmp_nan_last(&x.0, &y.0));
 
     let n = pooled.len();
     let mut ranks = vec![0.0f64; n];
@@ -271,5 +291,38 @@ mod tests {
         let a = [1.0; 10];
         let b = [1.0; 10];
         assert_eq!(mann_whitney_u(&a, &b).p_value, 1.0);
+    }
+
+    #[test]
+    fn quantile_survives_nan_poisoned_samples() {
+        // Regression: sort_by(partial_cmp().unwrap()) used to panic on
+        // NaN. NaNs now sort last instead.
+        let xs = [2.0, f64::NAN, 1.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 0.5), 2.0);
+        assert!(quantile(&xs, 1.0).is_nan());
+        // median/summary paths reuse quantile; no panic either.
+        assert_eq!(median(&xs), 2.0);
+        let (lo, _hi) = median_ci95(&xs);
+        assert_eq!(lo, 1.0);
+        // Runtime quiet NaNs (e.g. 0.0/0.0) carry a set sign bit;
+        // total_cmp alone would sort them *below* -inf and make them the
+        // minimum. cmp_nan_last must still push them to the top end.
+        let neg_nan = -f64::NAN; // sign bit deterministically set
+        let ys = [2.0, neg_nan, 1.0];
+        assert_eq!(quantile(&ys, 0.0), 1.0);
+        assert!(quantile(&ys, 1.0).is_nan());
+    }
+
+    #[test]
+    fn mann_whitney_survives_nan_poisoned_samples() {
+        let a = [1.0, 2.0, f64::NAN, 3.0];
+        let b = [2.5, 3.5, 4.5, 5.5];
+        // Must not panic; the statistic stays finite (ranks are finite
+        // even when a sample value is NaN) and p stays a probability.
+        let r = mann_whitney_u(&a, &b);
+        assert!(r.u.is_finite());
+        assert!((0.0..=1.0).contains(&r.p_value), "p = {}", r.p_value);
+        let _ = statistically_equivalent(&a, &b, 0.05);
     }
 }

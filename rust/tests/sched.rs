@@ -1,0 +1,201 @@
+//! Acceptance tests for the batch-scheduler subsystem (`rms::sched` +
+//! `coordinator::wsweep`):
+//!
+//! (a) EASY backfilling strictly improves makespan over FCFS on a
+//!     blocking workload;
+//! (b) the TS-vs-SS shrink-cost gap measured by the sweep engine
+//!     reproduces as a workload-level makespan/mean-wait win;
+//! (c) scheduler sweep results are bit-identical across thread counts;
+//! plus the node-seconds conservation invariant
+//!     (work + reconfig + idle == nodes × makespan).
+
+use paraspawn::coordinator::sweep::ClusterKind;
+use paraspawn::coordinator::wsweep::{
+    calibrated_costs, default_costs, run_workload_matrix, WorkloadMatrix, WorkloadSpec,
+};
+use paraspawn::rms::sched::{schedule, SchedPolicy, SchedResult};
+use paraspawn::rms::workload::{synthetic_workload, JobSpec, ReconfigCostModel};
+use paraspawn::rms::AllocPolicy;
+use paraspawn::topology::Cluster;
+
+fn rigid(arrival: f64, work: f64, nodes: usize) -> JobSpec {
+    JobSpec { arrival, work, min_nodes: nodes, max_nodes: nodes, malleable: false }
+}
+
+fn mini() -> Cluster {
+    Cluster::mini(8, 4)
+}
+
+/// A workload whose head blocks FCFS while narrow short jobs could run.
+fn blocking_workload() -> Vec<JobSpec> {
+    vec![
+        rigid(0.0, 40.0, 4),  // 4 nodes, 10s
+        rigid(1.0, 80.0, 8),  // the blocker: needs the whole cluster
+        rigid(2.0, 16.0, 2),  // 2 nodes, 8s: finishes before the shadow time
+        rigid(3.0, 8.0, 2),   // 2 nodes, 4s: also backfillable
+    ]
+}
+
+#[test]
+fn a_backfilling_strictly_improves_makespan_over_fcfs() {
+    let jobs = blocking_workload();
+    let costs = ReconfigCostModel::ts(1.0);
+    let fcfs =
+        schedule(&mini(), AllocPolicy::WholeNodes, SchedPolicy::Fcfs, costs, &jobs).unwrap();
+    let easy =
+        schedule(&mini(), AllocPolicy::WholeNodes, SchedPolicy::EasyBackfill, costs, &jobs)
+            .unwrap();
+    assert!(
+        easy.makespan < fcfs.makespan - 1e-9,
+        "EASY {} must strictly beat FCFS {}",
+        easy.makespan,
+        fcfs.makespan
+    );
+    assert!(easy.mean_wait < fcfs.mean_wait);
+    // The backfill must not delay the reserved head.
+    assert!((easy.jobs[1].start - fcfs.jobs[1].start).abs() < 1e-9);
+}
+
+/// A malleable job that keeps getting shrunk by rigid arrivals: every
+/// cycle pays one expansion and one shrink, so the shrink cost gap
+/// (TS ~ms vs SS ~respawn) accumulates into the makespan. The rigid
+/// cadence (10s jobs every 15s) keeps the malleable job the last
+/// finisher, so the accumulated charge lands in the makespan.
+fn shrink_heavy_workload() -> Vec<JobSpec> {
+    let mut jobs =
+        vec![JobSpec { arrival: 0.0, work: 600.0, min_nodes: 2, max_nodes: 8, malleable: true }];
+    for k in 0..6 {
+        jobs.push(rigid(10.0 + 15.0 * k as f64, 60.0, 6)); // 6 nodes, 10s each
+    }
+    jobs
+}
+
+#[test]
+fn b_ts_shrink_gap_reproduces_as_workload_level_win() {
+    // Calibrate both cost models from the sweep engine's spawn-strategy
+    // medians (microbenchmark -> makespan, the paper's §1 claim).
+    let costs = calibrated_costs(ClusterKind::Mini, 3, 0xF16, 2).unwrap();
+    assert_eq!(costs[0].label, "TS");
+    assert_eq!(costs[1].label, "SS");
+    assert!(
+        costs[0].model.shrink_cost < costs[1].model.shrink_cost,
+        "calibration must reproduce the cheap-TS-shrink gap"
+    );
+    let jobs = shrink_heavy_workload();
+    let run = |m: ReconfigCostModel| {
+        schedule(&mini(), AllocPolicy::WholeNodes, SchedPolicy::Malleable, m, &jobs).unwrap()
+    };
+    // Amplify the per-shrink gap to workload scale: the calibrated gap is
+    // in *relative* cost; scale both models so one shrink of the SS kind
+    // costs seconds (a respawn of a wide job), keeping the ratio.
+    let scale = 5.0 / costs[1].model.shrink_cost;
+    let ts = run(ReconfigCostModel {
+        expand_cost: costs[0].model.expand_cost * scale,
+        shrink_cost: costs[0].model.shrink_cost * scale,
+    });
+    let ss = run(ReconfigCostModel {
+        expand_cost: costs[1].model.expand_cost * scale,
+        shrink_cost: costs[1].model.shrink_cost * scale,
+    });
+    assert!(ts.shrinks > 0, "the workload must force shrinks");
+    assert!(
+        ts.makespan < ss.makespan - 1e-9,
+        "TS makespan {} must beat SS {}",
+        ts.makespan,
+        ss.makespan
+    );
+    assert!(ts.mean_wait <= ss.mean_wait + 1e-9, "TS wait {} vs SS {}", ts.mean_wait, ss.mean_wait);
+}
+
+#[test]
+fn c_workload_sweep_is_bit_identical_across_thread_counts() {
+    let matrix = WorkloadMatrix {
+        costs: default_costs(),
+        workloads: vec![
+            WorkloadSpec { label: "w0".into(), jobs: synthetic_workload(25, 8, 0.6, 5) },
+            WorkloadSpec { label: "w1".into(), jobs: synthetic_workload(25, 8, 0.3, 6) },
+        ],
+        ..WorkloadMatrix::for_kind(ClusterKind::Mini)
+    };
+    let serial = run_workload_matrix(&matrix, 1).unwrap();
+    let parallel = run_workload_matrix(&matrix, 4).unwrap();
+    assert_eq!(serial.cells.len(), matrix.len());
+    // Bit-identical: SchedResult derives PartialEq over raw f64s.
+    assert_eq!(serial, parallel);
+}
+
+fn assert_conserved(r: &SchedResult, total_nodes: usize) {
+    let lhs = r.work_node_seconds + r.reconfig_node_seconds + r.idle_node_seconds;
+    let rhs = total_nodes as f64 * r.makespan;
+    let tol = 1e-6 * rhs.max(1.0);
+    assert!(
+        (lhs - rhs).abs() < tol,
+        "node-seconds not conserved: work {} + reconfig {} + idle {} != {}",
+        r.work_node_seconds,
+        r.reconfig_node_seconds,
+        r.idle_node_seconds,
+        rhs
+    );
+}
+
+#[test]
+fn node_seconds_are_conserved_under_every_policy() {
+    let jobs = synthetic_workload(30, 8, 0.7, 17);
+    for policy in SchedPolicy::ALL {
+        let r = schedule(
+            &mini(),
+            AllocPolicy::WholeNodes,
+            policy,
+            ReconfigCostModel { expand_cost: 0.8, shrink_cost: 0.3 },
+            &jobs,
+        )
+        .unwrap();
+        assert_conserved(&r, 8);
+        // Every job finished after it started, after it arrived.
+        for (o, j) in r.jobs.iter().zip(&jobs) {
+            assert!(o.start + 1e-12 >= j.arrival);
+            assert!(o.finish > o.start - 1e-12);
+        }
+    }
+}
+
+#[test]
+fn node_seconds_are_conserved_on_heterogeneous_clusters() {
+    let jobs = synthetic_workload(20, 16, 0.5, 23);
+    let r = schedule(
+        &Cluster::nasp(),
+        AllocPolicy::BalancedTypes,
+        SchedPolicy::Malleable,
+        ReconfigCostModel::ts(0.5),
+        &jobs,
+    )
+    .unwrap();
+    assert_conserved(&r, 16);
+}
+
+#[test]
+fn malleable_policy_improves_a_drm_shaped_workload() {
+    // The §1 motivation on a workload built for it: a wide malleable job
+    // soaking idle nodes plus narrow rigid arrivals. With cheap (TS)
+    // reconfigurations, the malleability-aware policy beats FCFS on
+    // makespan.
+    let jobs = vec![
+        JobSpec { arrival: 0.0, work: 400.0, min_nodes: 2, max_nodes: 8, malleable: true },
+        rigid(10.0, 100.0, 2),
+        rigid(20.0, 100.0, 2),
+    ];
+    let costs = ReconfigCostModel::ts(0.1);
+    let fcfs =
+        schedule(&mini(), AllocPolicy::WholeNodes, SchedPolicy::Fcfs, costs, &jobs).unwrap();
+    let drm =
+        schedule(&mini(), AllocPolicy::WholeNodes, SchedPolicy::Malleable, costs, &jobs).unwrap();
+    assert!(
+        drm.makespan < fcfs.makespan - 1e-9,
+        "DRM {} vs FCFS {}",
+        drm.makespan,
+        fcfs.makespan
+    );
+    assert!(drm.reconfigurations() > 0);
+    assert_conserved(&drm, 8);
+    assert_conserved(&fcfs, 8);
+}
