@@ -1,0 +1,57 @@
+//! Analytic-engine benchmarks: closed-form evaluation of paper-scale
+//! grids, with one simulated cell alongside for scale contrast.
+//!
+//! Run with `cargo bench --bench analytic_engine`.
+
+use paraspawn::bench::Runner;
+use paraspawn::config::CostModel;
+use paraspawn::coordinator::sweep::{preset_group, run_tasks_engine, Engine, SweepTask};
+use paraspawn::coordinator::{run_reconfiguration_analytic, Scenario};
+use paraspawn::mam::{Method, SpawnStrategy};
+
+fn paper_tasks(reps: usize) -> Vec<SweepTask> {
+    preset_group("paper")
+        .expect("paper preset group exists")
+        .into_iter()
+        .flat_map(|m| m.reps(reps).tasks())
+        .collect()
+}
+
+fn main() {
+    let mut r = Runner::from_args();
+
+    // One paper-scale cell: MN5 1 -> 32 nodes at 112 cores/node.
+    r.bench("analytic/mn5-1to32-M+HC", 20, || {
+        let s = Scenario::mn5(1, 32).with(Method::Merge, SpawnStrategy::ParallelHypercube);
+        let report = run_reconfiguration_analytic(&s).expect("analytic cell");
+        assert!(report.total_time > 0.0);
+    });
+
+    // The biggest shrink cell (prepared by a parallel expansion).
+    r.bench("analytic/mn5-32to1-M+TS", 20, || {
+        let mut s = Scenario::mn5(32, 1).with(Method::Merge, SpawnStrategy::Plain);
+        s.prepare_parallel = true;
+        let report = run_reconfiguration_analytic(&s).expect("analytic shrink cell");
+        assert!(report.total_time > 0.0);
+    });
+
+    // The acceptance-bar workload: the full 4a/4b/6a/6b matrices,
+    // single-threaded (the example asserts < 1 s; here we measure it).
+    r.bench("analytic/full-paper-presets-1thread", 3, || {
+        let results = run_tasks_engine(paper_tasks(5), 1, Engine::Analytic).expect("paper sweep");
+        assert!(results.total_samples() > 1000);
+    });
+
+    // Contrast: one *simulated* mid-size cell (threads + protocol), so
+    // the report shows the gap the analytic engine closes.
+    r.bench("simulated/mn5-1to4-M+HC", 3, || {
+        let s = Scenario {
+            cost: CostModel::mn5().deterministic(),
+            ..Scenario::mn5(1, 4).with(Method::Merge, SpawnStrategy::ParallelHypercube)
+        };
+        let report = paraspawn::coordinator::run_reconfiguration(&s).expect("simulated cell");
+        assert!(report.total_time > 0.0);
+    });
+
+    r.finish();
+}

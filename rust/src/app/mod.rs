@@ -196,17 +196,31 @@ fn mc_iteration(ctx: &Ctx, job: &JobCtx, spec: &AppSpec, _iter: usize) {
 /// `A = 0` entry so `NS` stays consistent.
 pub fn build_plan(ctx: &Ctx, job: &JobCtx, ev: &ResizeEvent) -> Plan {
     let world = ctx.world();
+    let rank_nodes: Vec<NodeId> =
+        job.app.local_pids().iter().map(|&pid| world.node_of(pid)).collect();
+    plan_from_layout(job.epoch, ev.method, ev.strategy, &rank_nodes, &ev.target)
+}
+
+/// [`build_plan`] as a pure function of the rank→node layout — shared by
+/// the simulated driver above and the analytic engine
+/// ([`crate::mam::model`]), so both derive the identical plan.
+pub fn plan_from_layout(
+    epoch: u64,
+    method: Method,
+    strategy: mam::SpawnStrategy,
+    rank_nodes: &[NodeId],
+    target_alloc: &Allocation,
+) -> Plan {
     // Current per-node process counts, in first-seen (rank) order.
     let mut cur_order: Vec<NodeId> = Vec::new();
     let mut cur_count: BTreeMap<NodeId, u32> = BTreeMap::new();
-    for &pid in job.app.local_pids() {
-        let node = world.node_of(pid);
+    for &node in rank_nodes {
         if !cur_count.contains_key(&node) {
             cur_order.push(node);
         }
         *cur_count.entry(node).or_insert(0) += 1;
     }
-    let target: BTreeMap<NodeId, u32> = ev.target.slots.iter().copied().collect();
+    let target: BTreeMap<NodeId, u32> = target_alloc.slots.iter().copied().collect();
 
     let mut nodes = Vec::new();
     let mut a = Vec::new();
@@ -216,12 +230,12 @@ pub fn build_plan(ctx: &Ctx, job: &JobCtx, ev: &ResizeEvent) -> Plan {
         a.push(target.get(&node).copied().unwrap_or(0));
         r.push(cur_count[&node]);
     }
-    for &(node, cores) in &ev.target.slots {
+    for &(node, cores) in &target_alloc.slots {
         if !cur_count.contains_key(&node) {
             nodes.push(node);
             a.push(cores);
             r.push(0);
         }
     }
-    Plan::new(job.epoch, ev.method, ev.strategy, nodes, a, r)
+    Plan::new(epoch, method, strategy, nodes, a, r)
 }

@@ -14,8 +14,8 @@
 
 use crate::config::CostModel;
 use crate::coordinator::figures::{self, FigureConfig};
-use crate::coordinator::sweep;
-use crate::coordinator::{run_reconfiguration, Scenario};
+use crate::coordinator::sweep::{self, Engine};
+use crate::coordinator::Scenario;
 use crate::mam::{Method, SpawnStrategy};
 use crate::rms::AllocPolicy;
 use crate::topology::Cluster;
@@ -96,11 +96,29 @@ fn scenario_from_args(a: &Args) -> Result<Scenario> {
     })
 }
 
+/// Parse `--engine simulated|analytic` (default simulated).
+fn engine_from_args(a: &Args) -> Result<Engine> {
+    match a.get("engine") {
+        None => Ok(Engine::default()),
+        Some(name) => {
+            Engine::parse(name).with_context(|| format!("unknown engine '{name}' (simulated | analytic)"))
+        }
+    }
+}
+
 fn cmd_run(a: &Args) -> Result<()> {
     let s = scenario_from_args(a)?;
+    let engine = engine_from_args(a)?;
     let reps = a.usize_or("reps", 1)?;
-    if reps <= 1 {
-        let report = run_reconfiguration(&s)?;
+    if reps <= 1 || engine == Engine::Analytic {
+        // Analytic repetitions are identical by construction; one run is
+        // the distribution's location parameter.
+        if reps > 1 && engine == Engine::Analytic {
+            eprintln!(
+                "analytic engine: repetitions are identical by construction; running once"
+            );
+        }
+        let report = engine.run(&s)?;
         println!("{}", figures::describe_report(&report));
     } else {
         let samples = crate::coordinator::run_samples(&s, reps)?;
@@ -125,6 +143,7 @@ fn figure_cfg(a: &Args) -> Result<FigureConfig> {
     cfg.reps = a.usize_or("reps", cfg.reps)?;
     cfg.max_nodes = a.usize_or("max-nodes", cfg.max_nodes)?;
     cfg.threads = a.usize_or("threads", cfg.threads)?;
+    cfg.engine = engine_from_args(a)?;
     Ok(cfg)
 }
 
@@ -153,12 +172,13 @@ fn parse_pair_list(s: &str) -> Result<Vec<(usize, usize)>> {
         .collect()
 }
 
-/// Build a [`sweep::ScenarioMatrix`] from CLI arguments: either a figure
-/// preset (`--preset 4a|4b|6a|6b`) or a grid assembled from `--cluster`,
-/// `--direction` and `--nodes`/`--pairs`, then filtered.
-fn sweep_matrix(a: &Args) -> Result<sweep::ScenarioMatrix> {
-    use crate::coordinator::sweep::ClusterKind;
-    let mut matrix = if let Some(name) = a.get("preset") {
+/// Build the [`sweep::ScenarioMatrix`] list from CLI arguments: either a
+/// figure preset (`--preset 4a|4b|6a|6b`), a paper-scale preset group
+/// (`--preset mn5|nasp|paper`, several matrices run as one sweep), or a
+/// grid assembled from `--cluster`, `--direction` and
+/// `--nodes`/`--pairs`, then filtered.
+fn sweep_matrices(a: &Args) -> Result<Vec<sweep::ScenarioMatrix>> {
+    let mut matrices = if let Some(name) = a.get("preset") {
         // A preset fixes the cluster/direction/grid; reject flags that
         // would otherwise be silently ignored (--configs and --max-nodes
         // still compose as filters).
@@ -167,83 +187,108 @@ fn sweep_matrix(a: &Args) -> Result<sweep::ScenarioMatrix> {
                 bail!("--preset conflicts with --{conflicting} (use --configs/--max-nodes to filter a preset)");
             }
         }
-        sweep::preset(name)
-            .with_context(|| format!("unknown preset '{name}' (4a | 4b | 6a | 6b)"))?
+        sweep::preset_group(name).with_context(|| {
+            format!("unknown preset '{name}' (4a | 4b | 6a | 6b | mn5 | nasp | paper)")
+        })?
     } else {
-        let cluster_name = a.get("cluster").unwrap_or("mn5");
-        let kind = ClusterKind::parse(cluster_name)
-            .with_context(|| format!("unknown cluster '{cluster_name}' (mn5 | nasp | mini)"))?;
-        let nodes = match a.get("nodes") {
-            Some(list) => parse_node_list(list)?,
-            None => kind.node_counts().to_vec(),
-        };
-        let direction = a.get("direction").unwrap_or("expand");
-        let pairs = match a.get("pairs") {
-            Some(list) => parse_pair_list(list)?,
-            None => match direction {
-                "expand" => sweep::expansion_pairs(&nodes),
-                "shrink" => sweep::shrink_pairs(&nodes),
-                "both" => {
-                    let mut p = sweep::expansion_pairs(&nodes);
-                    p.extend(sweep::shrink_pairs(&nodes));
-                    p
-                }
-                other => bail!("unknown direction '{other}' (expand | shrink | both)"),
-            },
-        };
-        let configs = match (kind, direction) {
-            (ClusterKind::Nasp, "shrink") => sweep::nasp_shrink_configs(),
-            (ClusterKind::Nasp, _) => sweep::nasp_expand_configs(),
-            (_, "shrink") => sweep::mn5_shrink_configs(),
-            (_, _) => sweep::mn5_expand_configs(),
-        };
-        sweep::ScenarioMatrix::new().clusters(vec![kind]).configs(configs).pairs(pairs)
+        vec![sweep_grid_matrix(a)?]
     };
-    let reps = a.usize_or("reps", matrix.reps)?;
-    let seed = a.usize_or("seed", matrix.seed as usize)? as u64;
-    let data_bytes = a.usize_or("data-bytes", matrix.data_bytes as usize)? as u64;
-    matrix = matrix.reps(reps).seed(seed).data_bytes(data_bytes);
-    if let Some(max) = a.get("max-nodes") {
-        matrix = matrix.max_nodes(max.parse().context("--max-nodes must be an integer")?);
+    let reps = a.usize_or("reps", matrices[0].reps)?;
+    let seed = a.usize_or("seed", matrices[0].seed as usize)? as u64;
+    let data_bytes = a.usize_or("data-bytes", matrices[0].data_bytes as usize)? as u64;
+    let max_nodes = match a.get("max-nodes") {
+        Some(v) => Some(v.parse::<usize>().context("--max-nodes must be an integer")?),
+        None => None,
+    };
+    let labels: Option<Vec<String>> = a.get("configs").map(|ls| {
+        ls.split(',').map(|l| l.trim().to_string()).filter(|l| !l.is_empty()).collect()
+    });
+    for matrix in matrices.iter_mut() {
+        let mut m = std::mem::take(matrix).reps(reps).seed(seed).data_bytes(data_bytes);
+        if let Some(max) = max_nodes {
+            m = m.max_nodes(max);
+        }
+        if let Some(labels) = &labels {
+            // A label may exist in only some matrices of a group (e.g.
+            // "M+TS" only in the shrink half); bail only if it matches
+            // nowhere (checked after the loop).
+            m = m.filter_configs(labels);
+        }
+        *matrix = m;
     }
-    if let Some(labels) = a.get("configs") {
-        let labels: Vec<String> =
-            labels.split(',').map(|l| l.trim().to_string()).filter(|l| !l.is_empty()).collect();
-        matrix = matrix.filter_configs(&labels);
-        if matrix.configs.is_empty() {
+    if let Some(labels) = &labels {
+        if matrices.iter().all(|m| m.configs.is_empty()) {
             bail!("--configs '{labels:?}' matched no configuration label");
         }
+        matrices.retain(|m| !m.configs.is_empty());
     }
-    Ok(matrix)
+    Ok(matrices)
+}
+
+/// The non-preset branch of [`sweep_matrices`]: a grid from
+/// `--cluster`/`--direction`/`--nodes`/`--pairs`.
+fn sweep_grid_matrix(a: &Args) -> Result<sweep::ScenarioMatrix> {
+    use crate::coordinator::sweep::ClusterKind;
+    let cluster_name = a.get("cluster").unwrap_or("mn5");
+    let kind = ClusterKind::parse(cluster_name)
+        .with_context(|| format!("unknown cluster '{cluster_name}' (mn5 | nasp | mini)"))?;
+    let nodes = match a.get("nodes") {
+        Some(list) => parse_node_list(list)?,
+        None => kind.node_counts().to_vec(),
+    };
+    let direction = a.get("direction").unwrap_or("expand");
+    let pairs = match a.get("pairs") {
+        Some(list) => parse_pair_list(list)?,
+        None => match direction {
+            "expand" => sweep::expansion_pairs(&nodes),
+            "shrink" => sweep::shrink_pairs(&nodes),
+            "both" => {
+                let mut p = sweep::expansion_pairs(&nodes);
+                p.extend(sweep::shrink_pairs(&nodes));
+                p
+            }
+            other => bail!("unknown direction '{other}' (expand | shrink | both)"),
+        },
+    };
+    let configs = match (kind, direction) {
+        (ClusterKind::Nasp, "shrink") => sweep::nasp_shrink_configs(),
+        (ClusterKind::Nasp, _) => sweep::nasp_expand_configs(),
+        (_, "shrink") => sweep::mn5_shrink_configs(),
+        (_, _) => sweep::mn5_expand_configs(),
+    };
+    Ok(sweep::ScenarioMatrix::new().clusters(vec![kind]).configs(configs).pairs(pairs))
 }
 
 fn cmd_sweep(a: &Args) -> Result<()> {
-    let matrix = sweep_matrix(a)?;
-    if matrix.is_empty() {
+    let matrices = sweep_matrices(a)?;
+    let tasks: Vec<sweep::SweepTask> = matrices.iter().flat_map(|m| m.tasks()).collect();
+    if tasks.is_empty() {
         bail!("the requested matrix is empty (check --nodes/--pairs/--configs)");
     }
     if a.get("json").is_some() && a.get("out").is_none() {
         bail!("--json needs --out DIR (JSON is written next to the CSVs)");
     }
+    let engine = engine_from_args(a)?;
     let threads = a.usize_or("threads", sweep::default_threads())?;
     eprintln!(
-        "sweep: {} tasks ({} cluster(s) x {} pair(s) x {} config(s) x {} rep(s)) on {} thread(s)",
-        matrix.len(),
-        matrix.clusters.len(),
-        matrix.pairs.iter().filter(|&&(i, n)| i != n).count(),
-        matrix.configs.len(),
-        matrix.reps,
+        "sweep: {} tasks across {} matri{} ({} rep(s) each) on {} thread(s), {} engine",
+        tasks.len(),
+        matrices.len(),
+        if matrices.len() == 1 { "x" } else { "ces" },
+        matrices[0].reps,
         threads,
+        engine.name(),
     );
     let t0 = std::time::Instant::now();
-    let results = sweep::run_matrix(&matrix, threads)?;
+    let results = sweep::run_tasks_engine(tasks, threads, engine)?;
     let wall = t0.elapsed().as_secs_f64();
     print!("{}", results.summary_table().to_ascii());
     println!(
-        "\n{} samples in {:.2}s wall-clock ({} threads)",
+        "\n{} samples in {:.2}s wall-clock ({} threads, {} engine)",
         results.total_samples(),
         wall,
-        threads
+        threads,
+        engine.name(),
     );
     if let Some(dir) = a.get("out") {
         let dir = PathBuf::from(dir);
@@ -431,7 +476,7 @@ fn cmd_workload(a: &Args) -> Result<()> {
 }
 
 fn cmd_select(a: &Args) -> Result<()> {
-    use crate::coordinator::select::{select, Candidate, SelectContext};
+    use crate::coordinator::select::{select, select_exact, Candidate, SelectContext};
     use crate::mam::plan::Plan;
     let i = a.usize_or("i", 1)?;
     let n = a.usize_or("n", 8)?;
@@ -450,18 +495,22 @@ fn cmd_select(a: &Args) -> Result<()> {
         }
         Plan::new(0, cand.method, cand.strategy, (0..n).collect(), vec![c; n], r)
     };
-    // Prefer the PJRT kernel when artifacts exist.
-    let kernel = crate::runtime::Engine::cpu()
-        .and_then(|e| crate::runtime::CostModelKernel::load(&e))
-        .ok();
-    let backend = if kernel.is_some() { "pjrt" } else { "host" };
-    let (best, scores) = select(
-        &candidates,
-        mk_plan,
-        &CostModel::mn5(),
-        &SelectContext { expected_shrinks: shrinks },
-        kernel.as_ref(),
-    );
+    let ctx = SelectContext { expected_shrinks: shrinks };
+    let (backend, best, scores): (&str, usize, Vec<f64>) = if a.get("exact").is_some() {
+        // Exact closed-form scores from the analytic engine.
+        let cluster =
+            crate::topology::Cluster::homogeneous("select", n, c, crate::topology::LinkKind::InfiniBand100);
+        let (best, scores) = select_exact(&candidates, mk_plan, &cluster, &CostModel::mn5(), &ctx)?;
+        ("analytic", best, scores)
+    } else {
+        // Linear feature proxy via the PJRT kernel when artifacts exist.
+        let kernel = crate::runtime::Engine::cpu()
+            .and_then(|e| crate::runtime::CostModelKernel::load(&e))
+            .ok();
+        let backend = if kernel.is_some() { "pjrt" } else { "host" };
+        let (best, scores) = select(&candidates, mk_plan, &CostModel::mn5(), &ctx, kernel.as_ref());
+        (backend, best, scores.into_iter().map(|s| s as f64).collect())
+    };
     println!("scoring backend: {backend}");
     for (idx, (cand, score)) in candidates.iter().zip(&scores).enumerate() {
         let marker = if idx == best { " <= selected" } else { "" };
@@ -480,14 +529,17 @@ const USAGE: &str = "paraspawn — parallel spawning strategies for malleable MP
 USAGE:
   paraspawn run      [--cluster mn5|nasp] [--i I] [--n N] [--method m|b]
                      [--strategy plain|single|nodebynode|hypercube|diffusive]
+                     [--engine simulated|analytic]
                      [--reps K] [--seed S] [--warmup W] [--data-bytes B]
                      [--config cost.conf]
-  paraspawn sweep    [--preset 4a|4b|6a|6b]
+  paraspawn sweep    [--preset 4a|4b|6a|6b|mn5|nasp|paper]
+                     [--engine simulated|analytic]
                      [--cluster mn5|nasp|mini] [--direction expand|shrink|both]
                      [--nodes 1,2,4,8] [--pairs 1:4,2:8] [--configs M,M+HC]
                      [--threads T] [--reps K] [--seed S] [--max-nodes M]
                      [--data-bytes B] [--out DIR] [--json]
   paraspawn figures  [--fig all|table2|4a|4b|5|6a|6b|workload] [--out DIR]
+                     [--engine simulated|analytic]
                      [--reps K] [--max-nodes M] [--threads T]
   paraspawn table2
   paraspawn workload [--cluster mn5|nasp|mini] [--nodes N] [--jobs J]
@@ -497,6 +549,11 @@ USAGE:
                      [--cost-from-sweep] [--calib-reps K]
                      [--threads T] [--out DIR] [--json]
   paraspawn select   [--i I] [--n N] [--cores C] [--expected-shrinks K]
+                     [--exact]
+
+The analytic engine (--engine analytic) evaluates the closed-form model
+(mam::model): bit-identical to the simulator under deterministic cost
+models, and fast enough for full 112-core paper grids in milliseconds.
 ";
 
 /// Binary entry point.
@@ -599,7 +656,9 @@ mod tests {
             "2".into(),
         ])
         .unwrap();
-        let m = sweep_matrix(&a).unwrap();
+        let ms = sweep_matrices(&a).unwrap();
+        assert_eq!(ms.len(), 1);
+        let m = &ms[0];
         assert_eq!(m.pairs, vec![(1, 2), (1, 4), (2, 4)]);
         assert_eq!(m.configs.len(), 2);
         assert_eq!(m.reps, 2);
@@ -616,15 +675,16 @@ mod tests {
             "1,2".into(),
         ])
         .unwrap();
-        let m = sweep_matrix(&a).unwrap();
-        assert_eq!(m.pairs, vec![(2, 1)]);
+        let ms = sweep_matrices(&a).unwrap();
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].pairs, vec![(2, 1)]);
         // Shrink grids use the shrink configuration set (M+TS present).
-        assert!(m.configs.iter().any(|c| c.label == "M+TS"));
+        assert!(ms[0].configs.iter().any(|c| c.label == "M+TS"));
 
         let bad = parse_args(["--preset".into(), "9z".into()]).unwrap();
-        assert!(sweep_matrix(&bad).is_err());
+        assert!(sweep_matrices(&bad).is_err());
         let bad = parse_args(["--direction".into(), "sideways".into()]).unwrap();
-        assert!(sweep_matrix(&bad).is_err());
+        assert!(sweep_matrices(&bad).is_err());
         // Grid flags conflict with a preset instead of being ignored.
         let bad = parse_args([
             "--preset".into(),
@@ -633,6 +693,33 @@ mod tests {
             "1,2".into(),
         ])
         .unwrap();
-        assert!(sweep_matrix(&bad).is_err());
+        assert!(sweep_matrices(&bad).is_err());
+    }
+
+    #[test]
+    fn paper_scale_preset_groups_and_engine_flag() {
+        // --preset mn5 expands to the 4a + 4b matrices, config filters
+        // composing per-matrix (M+TS only exists in the shrink half).
+        let a = parse_args([
+            "--preset".into(),
+            "mn5".into(),
+            "--reps".into(),
+            "2".into(),
+            "--configs".into(),
+            "M,M+TS".into(),
+        ])
+        .unwrap();
+        let ms = sweep_matrices(&a).unwrap();
+        assert_eq!(ms.len(), 2);
+        assert!(ms[0].configs.iter().all(|c| c.label == "M"));
+        assert!(ms[1].configs.iter().all(|c| c.label == "M+TS"));
+        assert!(ms.iter().all(|m| m.reps == 2));
+
+        let a = parse_args(["--engine".into(), "analytic".into()]).unwrap();
+        assert_eq!(engine_from_args(&a).unwrap(), Engine::Analytic);
+        let a = parse_args([]).unwrap();
+        assert_eq!(engine_from_args(&a).unwrap(), Engine::Simulated);
+        let a = parse_args(["--engine".into(), "warp".into()]).unwrap();
+        assert!(engine_from_args(&a).is_err());
     }
 }

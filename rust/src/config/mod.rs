@@ -241,6 +241,22 @@ impl SimConfig {
         self.seed = seed;
         self
     }
+
+    /// Wall-clock watchdog budget scaled with world size: `base_secs`
+    /// plus 10 ms per simulated rank. A fixed budget that is ample for a
+    /// 4-rank protocol test flakes on slow CI runners once a test spawns
+    /// hundreds of rank threads; deadlock detection should measure
+    /// *stalls*, not machine speed, so the allowance grows with the
+    /// thread count the test legitimately schedules.
+    pub fn watchdog_for(base_secs: f64, total_ranks: usize) -> f64 {
+        base_secs + total_ranks as f64 * 0.01
+    }
+
+    /// Set the watchdog from [`SimConfig::watchdog_for`].
+    pub fn with_scaled_watchdog(mut self, base_secs: f64, total_ranks: usize) -> Self {
+        self.watchdog_secs = Some(Self::watchdog_for(base_secs, total_ranks));
+        self
+    }
 }
 
 #[cfg(test)]
@@ -294,5 +310,13 @@ mod tests {
     #[test]
     fn deterministic_strips_jitter() {
         assert_eq!(CostModel::mn5().deterministic().jitter_frac, 0.0);
+    }
+
+    #[test]
+    fn watchdog_scales_with_world_size() {
+        assert_eq!(SimConfig::watchdog_for(1.5, 0), 1.5);
+        assert!(SimConfig::watchdog_for(1.5, 1000) >= 11.0);
+        let cfg = SimConfig::default().with_scaled_watchdog(2.0, 500);
+        assert_eq!(cfg.watchdog_secs, Some(SimConfig::watchdog_for(2.0, 500)));
     }
 }

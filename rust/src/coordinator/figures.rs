@@ -4,7 +4,7 @@
 //! the headline ratios (expansion overhead, shrink speedups, Merge-win
 //! percentages).
 
-use super::sweep::{run_matrix, ClusterKind, ScenarioMatrix};
+use super::sweep::{run_matrix_engine, ClusterKind, Engine, ScenarioMatrix};
 use crate::util::csvout::{fmt_time, Table};
 use crate::util::stats::{median, statistically_equivalent};
 use anyhow::Result;
@@ -32,6 +32,10 @@ pub struct FigureConfig {
     /// Sweep-executor worker threads (`$PARASPAWN_THREADS` or the
     /// machine's parallelism). Results are identical for any value.
     pub threads: usize,
+    /// Which engine evaluates each cell: the thread simulator (sampled
+    /// medians, the default) or the closed-form analytic engine
+    /// (location timings; full 112-core grids in milliseconds).
+    pub engine: Engine,
 }
 
 impl Default for FigureConfig {
@@ -39,14 +43,20 @@ impl Default for FigureConfig {
         let reps = super::sweep::default_reps();
         let max_nodes =
             std::env::var("PARASPAWN_MAX_NODES").ok().and_then(|v| v.parse().ok()).unwrap_or(32);
-        FigureConfig { reps, max_nodes, seed: 0xF16, threads: super::sweep::default_threads() }
+        FigureConfig {
+            reps,
+            max_nodes,
+            seed: 0xF16,
+            threads: super::sweep::default_threads(),
+            engine: Engine::Simulated,
+        }
     }
 }
 
 impl FigureConfig {
     /// Small preset for CI / cargo-bench runs.
     pub fn quick() -> Self {
-        FigureConfig { reps: 3, max_nodes: 8, seed: 0xF16, threads: super::sweep::default_threads() }
+        FigureConfig { reps: 3, max_nodes: 8, ..FigureConfig::default() }
     }
 
     fn mn5_nodes(&self) -> Vec<usize> {
@@ -72,7 +82,7 @@ fn run_sweep(
         .pairs(pairs.to_vec())
         .reps(cfg.reps)
         .seed(cfg.seed);
-    Ok(run_matrix(&matrix, cfg.threads)?.cell_samples(configs))
+    Ok(run_matrix_engine(&matrix, cfg.threads, cfg.engine)?.cell_samples(configs))
 }
 
 fn sweep_table(

@@ -117,8 +117,11 @@ pub struct ReconfigReport {
     pub zombies: u64,
 }
 
-/// Run a single reconfiguration experiment and report the resize time.
-pub fn run_reconfiguration(s: &Scenario) -> Result<ReconfigReport> {
+/// Resolve a scenario's launch allocation and scripted resize trace
+/// through the RMS — shared by the simulated ([`run_reconfiguration`])
+/// and analytic ([`run_reconfiguration_analytic`]) drivers so both
+/// resolve identical node layouts.
+fn scenario_trace(s: &Scenario) -> Result<(crate::rms::Allocation, Vec<ResizeEvent>)> {
     let mut rms = Rms::new(s.cluster.clone());
     let prepare = s.prepare_parallel && s.initial_nodes > 1;
     let launch_nodes = if prepare { 1 } else { s.initial_nodes };
@@ -147,6 +150,12 @@ pub fn run_reconfiguration(s: &Scenario) -> Result<ReconfigReport> {
         rms.shrink(&initial, s.target_nodes)
     };
     trace.push(ResizeEvent::new(target, s.method, s.strategy));
+    Ok((launch, trace))
+}
+
+/// Run a single reconfiguration experiment and report the resize time.
+pub fn run_reconfiguration(s: &Scenario) -> Result<ReconfigReport> {
+    let (launch, trace) = scenario_trace(s)?;
     let expected_records = trace.len();
 
     let world = crate::simmpi::World::new(
@@ -176,6 +185,51 @@ pub fn run_reconfiguration(s: &Scenario) -> Result<ReconfigReport> {
         strategy_label: rec.strategy.clone(),
         nodes_returned: world.metrics.node_returns().len(),
         zombies: world.metrics.zombies_created(),
+    })
+}
+
+/// Run the same experiment through the closed-form analytic engine
+/// ([`crate::mam::model`]): no simulated-rank threads are launched, so
+/// paper-scale scenarios (112-core nodes, thousands of ranks) evaluate
+/// in microseconds. Under a deterministic cost model
+/// ([`crate::config::CostModel::deterministic`]) the result is
+/// bit-identical to [`run_reconfiguration`]; under a stochastic model it
+/// is the jitter-free location timing of the distribution the simulator
+/// samples from (the seed is unused).
+pub fn run_reconfiguration_analytic(s: &Scenario) -> Result<ReconfigReport> {
+    use crate::mam::model::{ModelRecord, ModelWorld};
+
+    let (launch, trace) = scenario_trace(s)?;
+    let mut world = ModelWorld::new(s.cluster.clone(), s.cost.clone());
+    let mut job = world.launch(&launch.placements());
+    let mut last: Option<ModelRecord> = None;
+    for ev in &trace {
+        // The warm-up epoch before every malleability checkpoint.
+        for _ in 0..s.warmup_iters {
+            world.iteration(&mut job, 50.0);
+        }
+        let rank_nodes: Vec<crate::topology::NodeId> =
+            job.ranks.iter().map(|r| r.node).collect();
+        let plan =
+            app::plan_from_layout(job.epoch, ev.method, ev.strategy, &rank_nodes, &ev.target);
+        let shrinking = ev.target.total_procs() < job.size();
+        let (next, rec) = if ev.method == Method::Merge && shrinking {
+            world.shrink(&job, &plan).map_err(|e| e.context("analytic shrink"))?
+        } else {
+            world.expand(&job, &plan, s.data_bytes).map_err(|e| e.context("analytic expand"))?
+        };
+        job = next;
+        last = Some(rec);
+    }
+    let rec = last.context("no reconfiguration was evaluated")?;
+    Ok(ReconfigReport {
+        total_time: rec.total(),
+        phases: rec.phases.clone(),
+        ns: rec.ns,
+        nt: rec.nt,
+        strategy_label: rec.strategy.clone(),
+        nodes_returned: world.nodes_returned,
+        zombies: world.zombies_created,
     })
 }
 

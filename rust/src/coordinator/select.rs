@@ -9,9 +9,11 @@
 
 use crate::config::CostModel;
 use crate::mam::connect::connection_rounds;
+use crate::mam::model::predict_resize_time;
 use crate::mam::plan::{plan_steps, Plan};
 use crate::mam::{Method, SpawnStrategy};
 use crate::runtime::CostModelKernel;
+use crate::topology::Cluster;
 
 /// Number of features per candidate (must match `python/compile`'s
 /// `cost_f`).
@@ -141,6 +143,62 @@ pub fn select(
     (best, scores)
 }
 
+/// Exact analytic score of one candidate: the closed-form resize time of
+/// the reconfiguration ([`crate::mam::model`]) plus `expected_shrinks`
+/// future shrinks of the expanded job — TS (Merge, per-node MCWs) for
+/// TS-enabling strategies, a Baseline respawn (SS) otherwise. This is
+/// the model-exact replacement for the linear feature proxy above.
+pub fn exact_score(
+    cluster: &Cluster,
+    cost: &CostModel,
+    plan: &Plan,
+    ctx: &SelectContext,
+) -> anyhow::Result<f64> {
+    let expand_t = predict_resize_time(cluster, cost, plan, 0)?;
+    let shrink_t = if ctx.expected_shrinks > 0.0 {
+        let (method, strategy) = if plan.strategy.enables_ts() {
+            (Method::Merge, SpawnStrategy::Plain)
+        } else {
+            (Method::Baseline, plan.strategy)
+        };
+        let back = Plan::new(
+            plan.epoch + 1,
+            method,
+            strategy,
+            plan.nodes.clone(),
+            plan.r.clone(),
+            plan.a.clone(),
+        );
+        predict_resize_time(cluster, cost, &back, 0)?
+    } else {
+        0.0
+    };
+    Ok(expand_t + ctx.expected_shrinks * shrink_t)
+}
+
+/// [`select`] on the exact analytic scorer: score every candidate with
+/// [`exact_score`] and return `(best_index, scores)`.
+pub fn select_exact(
+    candidates: &[Candidate],
+    mk_plan: impl Fn(&Candidate) -> Plan,
+    cluster: &Cluster,
+    cost: &CostModel,
+    ctx: &SelectContext,
+) -> anyhow::Result<(usize, Vec<f64>)> {
+    assert!(!candidates.is_empty());
+    let mut scores = Vec::with_capacity(candidates.len());
+    for c in candidates {
+        scores.push(exact_score(cluster, cost, &mk_plan(c), ctx)?);
+    }
+    let best = scores
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap();
+    Ok((best, scores))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,6 +257,36 @@ mod tests {
                 select(&candidates(), mk_plan, &cost, &SelectContext { expected_shrinks: shrinks }, None);
             assert!(scores[2] < scores[1], "hypercube {} vs nodebynode {}", scores[2], scores[1]);
         }
+    }
+
+    #[test]
+    fn exact_scorer_reproduces_the_paper_tradeoff() {
+        // Same shape as the proxy tests: with no future shrinks plain
+        // Merge wins; with many, the TS-enabling hypercube wins.
+        let cluster = crate::topology::Cluster::mini(8, 4);
+        let cost = CostModel::mn5();
+        let (best, scores) = select_exact(
+            &candidates(),
+            mk_plan,
+            &cluster,
+            &cost,
+            &SelectContext { expected_shrinks: 0.0 },
+        )
+        .unwrap();
+        assert_eq!(candidates()[best].strategy, SpawnStrategy::Plain, "scores: {scores:?}");
+        let (best, scores) = select_exact(
+            &candidates(),
+            mk_plan,
+            &cluster,
+            &cost,
+            &SelectContext { expected_shrinks: 10.0 },
+        )
+        .unwrap();
+        assert_eq!(
+            candidates()[best].strategy,
+            SpawnStrategy::ParallelHypercube,
+            "scores: {scores:?}"
+        );
     }
 
     #[test]

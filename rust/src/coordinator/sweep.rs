@@ -21,7 +21,7 @@
 //! thin declarative layers over this engine, and the `paraspawn sweep`
 //! CLI subcommand exposes arbitrary user-defined grids.
 
-use super::{run_reconfiguration, Scenario};
+use super::{run_reconfiguration, run_reconfiguration_analytic, Scenario};
 use crate::config::CostModel;
 use crate::mam::{Method, SpawnStrategy};
 use crate::metrics::Phase;
@@ -33,6 +33,48 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
+
+/// Which engine executes a sweep task.
+///
+/// * [`Engine::Simulated`] — the thread-per-rank virtual-time simulator
+///   ([`crate::simmpi`]): every repetition samples the stochastic cost
+///   model with its own seed (the paper's measurement distribution).
+/// * [`Engine::Analytic`] — the closed-form engine
+///   ([`crate::mam::model`]): no threads, microseconds per scenario at
+///   paper scale. Bit-identical to the simulator under deterministic
+///   cost models; under stochastic models every repetition returns the
+///   same jitter-free location timing (zero-width CIs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Engine {
+    #[default]
+    Simulated,
+    Analytic,
+}
+
+impl Engine {
+    pub fn name(self) -> &'static str {
+        match self {
+            Engine::Simulated => "simulated",
+            Engine::Analytic => "analytic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s {
+            "simulated" | "sim" => Some(Engine::Simulated),
+            "analytic" | "model" => Some(Engine::Analytic),
+            _ => None,
+        }
+    }
+
+    /// Run one scenario on this engine.
+    pub fn run(self, s: &Scenario) -> Result<super::ReconfigReport> {
+        match self {
+            Engine::Simulated => run_reconfiguration(s),
+            Engine::Analytic => run_reconfiguration_analytic(s),
+        }
+    }
+}
 
 /// Node counts of the MN5 sweep (§5.2).
 pub const MN5_NODES: [usize; 7] = [1, 2, 4, 8, 16, 24, 32];
@@ -389,6 +431,26 @@ pub fn preset(name: &str) -> Option<ScenarioMatrix> {
     })
 }
 
+/// Paper-scale preset *groups*: whole-testbed sweeps spanning several
+/// figure matrices (expansions need the expand config set, shrinks the
+/// shrink set, so one [`ScenarioMatrix`] cannot express both).
+///
+/// * `"mn5"` — the full MN5 testbed (112-core nodes): figures 4a + 4b.
+/// * `"nasp"` — the full heterogeneous NASP testbed: figures 6a + 6b.
+/// * `"paper"` — the paper's entire evaluation: 4a + 4b + 6a + 6b.
+///
+/// Single-figure names resolve to one-element groups, so this is a
+/// superset of [`preset`].
+pub fn preset_group(name: &str) -> Option<Vec<ScenarioMatrix>> {
+    let figs: &[&str] = match name {
+        "mn5" => &["4a", "4b"],
+        "nasp" => &["6a", "6b"],
+        "paper" => &["4a", "4b", "6a", "6b"],
+        other => return preset(other).map(|m| vec![m]),
+    };
+    Some(figs.iter().map(|f| preset(f).expect("known figure preset")).collect())
+}
+
 /// Worker-thread count: `$PARASPAWN_THREADS` or the machine's available
 /// parallelism.
 pub fn default_threads() -> usize {
@@ -537,6 +599,15 @@ pub fn run_matrix(matrix: &ScenarioMatrix, threads: usize) -> Result<SweepResult
     run_tasks(matrix.tasks(), threads)
 }
 
+/// [`run_matrix`] with an explicit [`Engine`].
+pub fn run_matrix_engine(
+    matrix: &ScenarioMatrix,
+    threads: usize,
+    engine: Engine,
+) -> Result<SweepResults> {
+    run_tasks_engine(matrix.tasks(), threads, engine)
+}
+
 /// Generic thread-pooled map: run `f` over `items`, return the results
 /// in item order.
 ///
@@ -617,7 +688,19 @@ where
 /// [`parallel_map`] for the execution model; results are identical for
 /// any thread count).
 pub fn run_tasks(tasks: Vec<SweepTask>, threads: usize) -> Result<SweepResults> {
-    let reports = parallel_map(&tasks, threads, |t| run_reconfiguration(&t.scenario))
+    run_tasks_engine(tasks, threads, Engine::Simulated)
+}
+
+/// [`run_tasks`] with an explicit [`Engine`]: `Engine::Analytic` runs
+/// the same task list through the closed-form engine — the full
+/// 4a/4b/6a/6b preset matrices at 112 cores/node evaluate in well under
+/// a second single-threaded (vs minutes simulated).
+pub fn run_tasks_engine(
+    tasks: Vec<SweepTask>,
+    threads: usize,
+    engine: Engine,
+) -> Result<SweepResults> {
+    let reports = parallel_map(&tasks, threads, |t| engine.run(&t.scenario))
         .map_err(|(idx, e)| {
             let c = &tasks[idx].cell;
             anyhow::anyhow!(
@@ -802,6 +885,51 @@ mod tests {
         let b = run_scenario_samples(&s, 2, 2).unwrap();
         assert_eq!(a.len(), 2);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn engine_parse_roundtrip() {
+        for e in [Engine::Simulated, Engine::Analytic] {
+            assert_eq!(Engine::parse(e.name()), Some(e));
+        }
+        assert_eq!(Engine::parse("sim"), Some(Engine::Simulated));
+        assert_eq!(Engine::parse("model"), Some(Engine::Analytic));
+        assert_eq!(Engine::parse("quantum"), None);
+        assert_eq!(Engine::default(), Engine::Simulated);
+    }
+
+    #[test]
+    fn preset_groups_cover_the_paper_matrices() {
+        assert_eq!(preset_group("mn5").unwrap().len(), 2);
+        assert_eq!(preset_group("nasp").unwrap().len(), 2);
+        assert_eq!(preset_group("paper").unwrap().len(), 4);
+        // Single figures resolve through the same entry point.
+        assert_eq!(preset_group("4a").unwrap().len(), 1);
+        assert!(preset_group("9z").is_none());
+        // The mn5 group contains both the expand and the shrink configs.
+        let g = preset_group("mn5").unwrap();
+        assert!(g[0].configs.iter().any(|c| c.label == "M+HC"));
+        assert!(g[1].configs.iter().any(|c| c.label == "M+TS"));
+    }
+
+    #[test]
+    fn analytic_engine_runs_matrices() {
+        let m = mini_matrix().pairs(vec![(1, 2), (4, 2)]).configs(vec![
+            MethodConfig { label: "M", method: Method::Merge, strategy: SpawnStrategy::Plain },
+            MethodConfig {
+                label: "M+HC",
+                method: Method::Merge,
+                strategy: SpawnStrategy::ParallelHypercube,
+            },
+        ]);
+        let r = run_matrix_engine(&m, 2, Engine::Analytic).unwrap();
+        assert_eq!(r.total_samples(), 2 * 2 * 2);
+        // Analytic repetitions are the distribution's location parameter:
+        // identical for every rep of a cell.
+        for xs in r.samples.values() {
+            assert!(xs.windows(2).all(|w| w[0] == w[1]), "reps must be identical: {xs:?}");
+            assert!(xs[0] > 0.0);
+        }
     }
 
     #[test]

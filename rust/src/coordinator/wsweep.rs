@@ -15,7 +15,7 @@
 //! `rust/tests/sched.rs`).
 
 use super::figures::FigureConfig;
-use super::sweep::{parallel_map, ClusterKind, ScenarioMatrix};
+use super::sweep::{parallel_map, ClusterKind, Engine, ScenarioMatrix};
 use crate::rms::sched::{schedule, SchedPolicy, SchedResult};
 use crate::rms::workload::{synthetic_workload, JobSpec, ReconfigCostModel};
 use crate::rms::AllocPolicy;
@@ -217,6 +217,19 @@ pub fn calibrated_costs(
     seed: u64,
     threads: usize,
 ) -> Result<Vec<CostSpec>> {
+    calibrated_costs_engine(kind, reps, seed, threads, Engine::Simulated)
+}
+
+/// [`calibrated_costs`] with an explicit sweep [`Engine`]: the analytic
+/// engine calibrates from closed-form location medians in milliseconds —
+/// useful when the workload sweep itself is the expensive part.
+pub fn calibrated_costs_engine(
+    kind: ClusterKind,
+    reps: usize,
+    seed: u64,
+    threads: usize,
+    engine: Engine,
+) -> Result<Vec<CostSpec>> {
     let (expand_label, ss_label) = match kind {
         ClusterKind::Nasp => ("M+ID", "B+ID"),
         _ => ("M+HC", "B+HC"),
@@ -241,7 +254,7 @@ pub fn calibrated_costs(
             .reps(reps.max(1))
             .seed(seed)
             .filter_configs(&[label.to_string()]);
-        let results = super::sweep::run_matrix(&matrix, threads)
+        let results = super::sweep::run_matrix_engine(&matrix, threads, engine)
             .map_err(|e| e.context(format!("calibrating '{label}'")))?;
         let xs: Vec<f64> = results.samples.values().flatten().copied().collect();
         if xs.is_empty() {
@@ -283,7 +296,7 @@ pub fn default_costs() -> Vec<CostSpec> {
 pub fn fig_workload(cfg: &FigureConfig) -> Result<(Table, WorkloadResults)> {
     let kind = ClusterKind::Mn5;
     let total_nodes = kind.cluster().len();
-    let costs = calibrated_costs(kind, cfg.reps, cfg.seed, cfg.threads)?;
+    let costs = calibrated_costs_engine(kind, cfg.reps, cfg.seed, cfg.threads, cfg.engine)?;
     let workloads = vec![
         WorkloadSpec {
             label: "synthetic-a".to_string(),

@@ -21,6 +21,22 @@
 //!   ([`rms`]); data redistribution ([`redistrib`]); a Proteo-like
 //!   application driver ([`app`]); and the coordinator ([`coordinator`]).
 //!
+//! ## The analytic engine
+//!
+//! [`mam::model`] is a closed-form counterpart to the thread simulator:
+//! reconfiguration timings computed directly from
+//! [`config::CostModel`] + [`mam::Plan`] as straight-line arithmetic
+//! over per-rank logical clocks, with no threads. Under a deterministic
+//! cost model it reproduces the simulator **bit-exactly** (totals and
+//! per-phase breakdowns; enforced by the differential conformance suite
+//! `rust/tests/engine_conformance.rs`); under stochastic models it
+//! returns the jitter-free location parameters plus the dispersion the
+//! simulator samples with. The sweep engine, the figure harness, the
+//! CLI (`--engine analytic`) and the workload cost calibration all
+//! accept an [`coordinator::sweep::Engine`] axis, which makes
+//! paper-scale scenario spaces (hundreds of nodes × 112 cores) explorable
+//! in milliseconds — see `examples/analytic_sweep.rs`.
+//!
 //! ## The sweep engine
 //!
 //! The paper's evaluation is a matrix of reconfiguration experiments
@@ -100,8 +116,11 @@ pub mod util;
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::config::{CostModel, SimConfig};
-    pub use crate::coordinator::{run_reconfiguration, ReconfigReport, Scenario};
-    pub use crate::mam::{Method, ShrinkKind, SpawnStrategy};
+    pub use crate::coordinator::sweep::Engine;
+    pub use crate::coordinator::{
+        run_reconfiguration, run_reconfiguration_analytic, ReconfigReport, Scenario,
+    };
+    pub use crate::mam::{Method, ModelWorld, ShrinkKind, SpawnStrategy};
     pub use crate::metrics::{Metrics, Phase};
     pub use crate::rms::Allocation;
     pub use crate::simmpi::{Comm, Ctx, World};

@@ -19,11 +19,13 @@
 
 pub mod connect;
 pub mod driver;
+pub mod model;
 pub mod plan;
 pub mod shrink;
 pub mod sync;
 
 pub use driver::{expand, AppCont, ReconfigSpec};
+pub use model::{ModelJob, ModelRank, ModelRecord, ModelWorld};
 pub use plan::{Plan, SpawnTask};
 pub use shrink::shrink;
 

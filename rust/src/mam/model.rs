@@ -1,0 +1,1259 @@
+//! `mam::model` — the closed-form analytic reconfiguration engine.
+//!
+//! The thread simulator ([`crate::simmpi`]) executes the MaM protocol with
+//! one OS thread per simulated rank, which makes paper-scale sweeps
+//! (hundreds of nodes × 112 cores ≈ tens of thousands of ranks) slow.
+//! This module computes the *same* reconfiguration timings directly from
+//! [`CostModel`] + [`Plan`] with no threads: every rank is a scalar
+//! logical clock, and the protocol's deterministic structure (the spawn
+//! tree, §4.3 synchronization, §4.4 binary connection, §4.5 reordering,
+//! the final source connect and the redistribution plan) is evaluated as
+//! straight-line arithmetic in dependency order.
+//!
+//! ## Exactness contract
+//!
+//! Under a deterministic cost model ([`CostModel::deterministic`], i.e.
+//! `jitter_frac == 0`) the analytic engine reproduces the thread
+//! simulator's virtual times **bit-exactly** — same totals, same
+//! per-phase breakdowns. This holds because every charge the simulator
+//! makes is replicated here with the identical floating-point expression
+//! and in the identical per-rank order; synchronization points are pure
+//! `max` reductions, which are order-independent. The differential
+//! conformance suite (`rust/tests/engine_conformance.rs`) pins this down
+//! across strategy × method × direction × cluster-shape property sweeps.
+//!
+//! Under a *stochastic* model (`jitter_frac > 0`) the simulator
+//! multiplies every charge by an independent `LogNormal(0, jitter_frac)`
+//! factor. The analytic engine then returns the jitter-free *location*
+//! timings plus the dispersion parameter ([`ModelRecord::jitter_frac`])
+//! — the parameters of the distribution the simulator samples from —
+//! instead of sampling itself.
+
+use super::plan::{Plan, SpawnTask};
+use super::shrink::decide;
+use super::{Method, SpawnStrategy};
+use crate::config::CostModel;
+use crate::metrics::Phase;
+use crate::redistrib;
+use crate::simmpi::EAGER_LIMIT;
+use crate::topology::{Cluster, Link, NodeId};
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+/// One rank of an analytic job: placement, logical clock, and the
+/// identity of its `MPI_COMM_WORLD` (the spawn group it was created in —
+/// what TS shrinkage can terminate wholesale).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelRank {
+    pub node: NodeId,
+    pub clock: f64,
+    pub mcw: u64,
+}
+
+/// The analytic counterpart of [`crate::mam::JobCtx`]: the application
+/// communicator as a rank-ordered vector of [`ModelRank`]s.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelJob {
+    pub epoch: u64,
+    pub ranks: Vec<ModelRank>,
+}
+
+impl ModelJob {
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    fn nodes(&self) -> Vec<NodeId> {
+        self.ranks.iter().map(|r| r.node).collect()
+    }
+}
+
+/// The analytic counterpart of [`crate::metrics::ReconfigRecord`].
+#[derive(Clone, Debug)]
+pub struct ModelRecord {
+    pub epoch: u64,
+    pub method: String,
+    pub strategy: String,
+    pub ns: usize,
+    pub nt: usize,
+    pub t_start: f64,
+    pub t_end: f64,
+    pub phases: Vec<(Phase, f64)>,
+    /// Dispersion parameter of the source cost model: the simulator
+    /// multiplies every charge by `LogNormal(0, jitter_frac)`; the
+    /// timings above are the jitter-free location parameters.
+    pub jitter_frac: f64,
+}
+
+impl ModelRecord {
+    pub fn total(&self) -> f64 {
+        self.t_end - self.t_start
+    }
+}
+
+/// The analytic world: per-node RTE state (daemon warmth, occupancy)
+/// mirroring [`crate::simmpi::World`], plus the counters the
+/// reconfiguration reports surface.
+pub struct ModelWorld {
+    pub cluster: Cluster,
+    /// Jitter-free copy of the source model (all charges evaluate at the
+    /// location parameter).
+    cost: CostModel,
+    /// Dispersion of the source model (0 for deterministic models).
+    pub jitter_frac: f64,
+    node_daemon: Vec<bool>,
+    node_running: Vec<u32>,
+    next_mcw: u64,
+    /// Nodes returned to the RMS so far (TS shrinks, Baseline drops).
+    pub nodes_returned: usize,
+    /// Zombie processes created so far (ZS fallback paths).
+    pub zombies_created: u64,
+}
+
+impl ModelWorld {
+    pub fn new(cluster: Cluster, cost: CostModel) -> ModelWorld {
+        let n = cluster.len();
+        let jitter_frac = cost.jitter_frac;
+        ModelWorld {
+            cluster,
+            cost: cost.deterministic(),
+            jitter_frac,
+            node_daemon: vec![false; n],
+            node_running: vec![0; n],
+            next_mcw: 0,
+            nodes_returned: 0,
+            zombies_created: 0,
+        }
+    }
+
+    fn alloc_mcw(&mut self) -> u64 {
+        self.next_mcw += 1;
+        self.next_mcw
+    }
+
+    /// Launch the initial process group (mirrors
+    /// [`crate::simmpi::World::launch`]: node-major ranks at clock 0,
+    /// warm daemons on the launch nodes).
+    pub fn launch(&mut self, placements: &[(NodeId, usize)]) -> ModelJob {
+        let mcw = self.alloc_mcw();
+        let mut ranks = Vec::new();
+        for &(node, count) in placements {
+            for _ in 0..count {
+                ranks.push(ModelRank { node, clock: 0.0, mcw });
+            }
+            self.node_running[node] += count as u32;
+            self.node_daemon[node] = true;
+        }
+        ModelJob { epoch: 0, ranks }
+    }
+
+    // -- shared cost arithmetic (bit-identical to the simulator) ----------
+
+    /// [`crate::simmpi::World::coll_cost`].
+    fn coll_cost(&self, n: usize, bytes: u64, link: Link) -> f64 {
+        let stages = if n <= 1 { 0.0 } else { (n as f64).log2().ceil() };
+        stages * (link.latency + bytes as f64 / link.bandwidth) + self.cost.c_coll_enter
+    }
+
+    /// [`crate::simmpi::World::group_link`]: worst path among a node set,
+    /// comparing the (sorted, deduplicated) first node against the rest.
+    fn group_link(&self, mut nodes: Vec<NodeId>) -> Link {
+        nodes.sort_unstable();
+        nodes.dedup();
+        match nodes.len() {
+            0 | 1 => {
+                let n = nodes.first().copied().unwrap_or(0);
+                self.cluster.path(n, n)
+            }
+            _ => {
+                let mut worst = self.cluster.path(nodes[0], nodes[1]);
+                for &n in &nodes[2..] {
+                    let l = self.cluster.path(nodes[0], n);
+                    if l.latency > worst.latency {
+                        worst = l;
+                    }
+                }
+                worst
+            }
+        }
+    }
+
+    /// One `MPI_Comm_spawn` call ([`crate::simmpi`]'s `charge_and_create`):
+    /// returns `t_child` and registers the children on their nodes.
+    fn spawn_call(
+        &mut self,
+        start_clock: f64,
+        queue_pos: usize,
+        placements: &[(NodeId, usize)],
+    ) -> f64 {
+        let cost = &self.cost;
+        let total: usize = placements.iter().map(|&(_, k)| k).sum();
+        let m = placements.len();
+        let arrive = start_clock + cost.c_spawn_call;
+        let t0 = arrive + cost.c_rte_service * (queue_pos as f64 + 1.0);
+        let tree = cost.c_node_tree * ((m as f64 + 1.0).log2().ceil());
+        let mut slowest = 0.0f64;
+        for &(node, k) in placements {
+            let daemon = if self.node_daemon[node] {
+                cost.c_daemon_warm
+            } else {
+                self.node_daemon[node] = true;
+                cost.c_daemon_cold
+            };
+            let occupancy = self.node_running[node] as f64 + k as f64;
+            let cores = self.cluster.cores(node) as f64;
+            let oversub = if cost.oversub_penalty { (occupancy / cores).max(1.0) } else { 1.0 };
+            slowest = slowest.max(t0 + tree + daemon + cost.c_fork_proc * k as f64 * oversub);
+        }
+        let init = cost.c_init_sync * ((total as f64).log2().ceil().max(1.0));
+        let t_child = slowest + init;
+        for &(node, k) in placements {
+            self.node_running[node] += k as u32;
+        }
+        t_child
+    }
+
+    // -- application layer -------------------------------------------------
+
+    /// One Monte-Carlo iteration of the Proteo-like driver
+    /// ([`crate::app`]): synthetic compute (oversubscription-scaled) plus
+    /// the tally `MPI_Allgather` (24-byte payload per rank).
+    pub fn iteration(&mut self, job: &mut ModelJob, work_units: f64) {
+        for r in job.ranks.iter_mut() {
+            let running = self.node_running[r.node] as f64;
+            let cores = self.cluster.cores(r.node) as f64;
+            let slowdown = (running / cores).max(1.0);
+            r.clock += work_units * self.cost.c_work_unit * slowdown;
+        }
+        // Allgather: each rank contributes an F64s(len 2) payload = 24 B.
+        let bytes: u64 = job.ranks.iter().map(|_| 24u64).sum();
+        let link = self.group_link(job.nodes());
+        let cost = self.coll_cost(job.size(), bytes, link);
+        let t = job.ranks.iter().map(|r| r.clock).fold(f64::NEG_INFINITY, f64::max) + cost;
+        for r in job.ranks.iter_mut() {
+            r.clock = t;
+        }
+    }
+
+    // -- reconfigurations --------------------------------------------------
+
+    /// Analytic counterpart of [`crate::mam::expand`]: evaluate an
+    /// expansion (or Baseline spawn-shrink) and return the continuing job
+    /// plus the reconfiguration record.
+    pub fn expand(
+        &mut self,
+        job: &ModelJob,
+        plan: &Plan,
+        data_bytes: u64,
+    ) -> Result<(ModelJob, ModelRecord)> {
+        if plan.strategy == SpawnStrategy::ParallelHypercube && !plan.is_homogeneous() {
+            bail!("hypercube strategy requires a homogeneous allocation (use diffusive)");
+        }
+        if plan.groups().is_empty() {
+            bail!("expand with nothing to spawn");
+        }
+        if plan.ns() != job.size() {
+            bail!("plan NS {} does not match the app size {}", plan.ns(), job.size());
+        }
+        let mut ev = Expansion::new(self, job, plan, data_bytes);
+        match plan.strategy {
+            SpawnStrategy::Plain => ev.run_collective(),
+            SpawnStrategy::Single => ev.run_single(),
+            SpawnStrategy::NodeByNode
+            | SpawnStrategy::ParallelHypercube
+            | SpawnStrategy::ParallelDiffusive => ev.run_parallel(),
+        }
+    }
+
+    /// Analytic counterpart of [`crate::mam::shrink`] (Merge TS/ZS).
+    pub fn shrink(&mut self, job: &ModelJob, plan: &Plan) -> Result<(ModelJob, ModelRecord)> {
+        let n = job.size();
+        let mut clocks: Vec<f64> = job.ranks.iter().map(|r| r.clock).collect();
+        let nodes: Vec<NodeId> = job.nodes();
+
+        // Membership tables + the MCW-id allgather (I64s(len 1) = 16 B each).
+        let bytes: u64 = clocks.iter().map(|_| 16u64).sum();
+        let link = self.group_link(nodes.clone());
+        let cost = self.coll_cost(n, bytes, link);
+        let t_ag = clocks.iter().copied().fold(f64::NEG_INFINITY, f64::max) + cost;
+        for c in clocks.iter_mut() {
+            *c = t_ag;
+        }
+
+        let mcw_of_rank: Vec<u64> = job.ranks.iter().map(|r| r.mcw).collect();
+        let mut target: BTreeMap<NodeId, u32> = BTreeMap::new();
+        for (i, &node) in plan.nodes.iter().enumerate() {
+            target.insert(node, plan.a[i]);
+        }
+        let decision = decide(&nodes, &mcw_of_rank, &target);
+        if decision.survivors.len() != plan.nt() {
+            bail!(
+                "shrink target mismatch: {} survivors for NT={}",
+                decision.survivors.len(),
+                plan.nt()
+            );
+        }
+
+        // The survivor/victim comm_split (16 B) covers every rank.
+        let link = self.group_link(nodes.clone());
+        let cost = self.coll_cost(n, 16, link);
+        let t_split = clocks.iter().copied().fold(f64::NEG_INFINITY, f64::max) + cost;
+        for c in clocks.iter_mut() {
+            *c = t_split;
+        }
+        let phase_shrink = t_split - t_ag;
+
+        // Victims: TS ranks exit (cores free), ZS ranks park (cores pinned).
+        for &r in &decision.terminate {
+            let node = job.ranks[r].node;
+            self.node_running[node] = self.node_running[node].saturating_sub(1);
+        }
+        self.nodes_returned += decision.released_nodes.len();
+        self.zombies_created += decision.zombies.len() as u64;
+
+        // Survivor root signals victim group roots and records.
+        let victim_groups: BTreeSet<u64> = decision
+            .terminate
+            .iter()
+            .map(|&r| mcw_of_rank[r])
+            .collect();
+        let root = decision.survivors[0];
+        clocks[root] += self.cost.c_term_signal * victim_groups.len().max(1) as f64;
+        let t_end = clocks[root];
+        // The recording rank (survivor root) measures phases against its
+        // own entry clock, exactly like the per-rank PhaseClock.
+        let t_start = job.ranks[root].clock;
+        let phase_plan = t_ag - t_start;
+
+        let next = ModelJob {
+            epoch: plan.epoch + 1,
+            ranks: decision
+                .survivors
+                .iter()
+                .map(|&r| ModelRank { node: job.ranks[r].node, clock: clocks[r], mcw: job.ranks[r].mcw })
+                .collect(),
+        };
+        let record = ModelRecord {
+            epoch: plan.epoch,
+            method: plan.method.name().to_string(),
+            strategy: format!("shrink-{}", decision.kind().name().to_lowercase()),
+            ns: plan.ns(),
+            nt: plan.nt(),
+            t_start,
+            t_end,
+            phases: vec![(Phase::Plan, phase_plan), (Phase::Shrink, phase_shrink)],
+            jitter_frac: self.jitter_frac,
+        };
+        Ok((next, record))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Expansion evaluation
+// ---------------------------------------------------------------------------
+
+/// Per-group bookkeeping during an expansion evaluation.
+struct GroupInfo {
+    /// Enumeration slot of the group's rank 0.
+    root_slot: usize,
+    size: usize,
+    node: NodeId,
+    /// Strategy step the group is spawned in.
+    step: usize,
+    /// Slot that issues the group's `MPI_Comm_spawn`.
+    parent_slot: usize,
+    /// `t_child`: the group's creation instant.
+    t_child: f64,
+}
+
+/// Phase stopwatch mirroring the driver's `PhaseClock`.
+struct Laps {
+    last: f64,
+    phases: Vec<(Phase, f64)>,
+}
+
+impl Laps {
+    fn start(at: f64) -> Laps {
+        Laps { last: at, phases: Vec::new() }
+    }
+    fn push(&mut self, phase: Phase, d: f64) {
+        self.phases.push((phase, d));
+    }
+    fn lap(&mut self, phase: Phase, now: f64) {
+        self.phases.push((phase, now - self.last));
+        self.last = now;
+    }
+}
+
+struct Expansion<'w> {
+    w: &'w mut ModelWorld,
+    plan: &'w Plan,
+    data_bytes: u64,
+    t_start: f64,
+    ns: usize,
+    /// Per-enumeration-slot logical clocks (sources 0..NS, then spawned).
+    clock: Vec<f64>,
+    /// Per-slot placement. Source slots use the job's actual layout.
+    node: Vec<NodeId>,
+    /// Source ranks' MCW ids (carried into the merged job).
+    src_mcw: Vec<u64>,
+    /// Per-slot `spec.t_start`: a spawned group inherits the spec (and
+    /// thus the reconfiguration start stamp) of the source rank at the
+    /// bottom of its spawn-ancestry chain. Uniform checkpoints make all
+    /// entries equal, but a zero-warmup epoch after a redistribution
+    /// leaves per-rank clocks distinct and the simulator's records use
+    /// the inherited stamp.
+    origin: Vec<f64>,
+    groups: Vec<GroupInfo>,
+    /// Child groups spawned by each slot, in task (step) order.
+    children_of: HashMap<usize, Vec<usize>>,
+}
+
+impl<'w> Expansion<'w> {
+    fn new(w: &'w mut ModelWorld, job: &ModelJob, plan: &'w Plan, data_bytes: u64) -> Expansion<'w> {
+        let ns = plan.ns();
+        let total = ns + plan.spawn_total();
+        let mut clock = vec![0.0f64; total];
+        let mut node = vec![0usize; total];
+        let mut origin = vec![0.0f64; total];
+        for (i, r) in job.ranks.iter().enumerate() {
+            clock[i] = r.clock;
+            node[i] = r.node;
+            origin[i] = r.clock;
+        }
+        let mut groups = Vec::new();
+        let mut next = ns;
+        for g in plan.groups() {
+            groups.push(GroupInfo {
+                root_slot: next,
+                size: g.size as usize,
+                node: plan.nodes[g.node_idx],
+                step: 0,
+                parent_slot: usize::MAX,
+                t_child: 0.0,
+            });
+            for k in 0..g.size as usize {
+                node[next + k] = plan.nodes[g.node_idx];
+            }
+            next += g.size as usize;
+        }
+        Expansion {
+            t_start: job.ranks[0].clock,
+            ns,
+            clock,
+            node,
+            src_mcw: job.ranks.iter().map(|r| r.mcw).collect(),
+            origin,
+            groups,
+            children_of: HashMap::new(),
+            w,
+            plan,
+            data_bytes,
+        }
+    }
+
+    // -- primitives mirroring Ctx operations ------------------------------
+
+    /// A collective over `slots`: reconcile to `max + coll_cost`.
+    fn coll(&mut self, slots: &[usize], bytes: u64) -> f64 {
+        let nodes: Vec<NodeId> = slots.iter().map(|&s| self.node[s]).collect();
+        let link = self.w.group_link(nodes);
+        let cost = self.w.coll_cost(slots.len(), bytes, link);
+        let t = slots.iter().map(|&s| self.clock[s]).fold(f64::NEG_INFINITY, f64::max) + cost;
+        for &s in slots {
+            self.clock[s] = t;
+        }
+        t
+    }
+
+    /// `Ctx::send`: charge the sender, return the arrival instant.
+    fn send(&mut self, from: usize, to_node: NodeId, bytes: u64) -> f64 {
+        self.clock[from] += self.w.cost.o_send;
+        let link = self.w.cluster.path(self.node[from], to_node);
+        let arrive = self.clock[from] + link.latency + bytes as f64 / link.bandwidth;
+        if bytes > EAGER_LIMIT {
+            // Rendezvous: the sender also pays the wire time.
+            if arrive > self.clock[from] {
+                self.clock[from] = arrive;
+            }
+        }
+        arrive
+    }
+
+    /// `Ctx::recv`: wait for the arrival, pay the receive overhead.
+    fn recv(&mut self, slot: usize, arrive: f64) {
+        if arrive > self.clock[slot] {
+            self.clock[slot] = arrive;
+        }
+        self.clock[slot] += self.w.cost.o_recv;
+    }
+
+    /// The root half of an accept/connect pairing: both roots charge
+    /// `c_connect` before posting; the pairing then costs another
+    /// `c_connect` plus a round trip on the roots' path.
+    fn pair_roots(&mut self, acc: usize, conn: usize) {
+        self.clock[acc] += self.w.cost.c_connect;
+        self.clock[conn] += self.w.cost.c_connect;
+        let link = self.w.cluster.path(self.node[acc], self.node[conn]);
+        let t = self.clock[acc].max(self.clock[conn]) + self.w.cost.c_connect + 2.0 * link.latency;
+        self.clock[acc] = t;
+        self.clock[conn] = t;
+    }
+
+    /// The local-group broadcast of a fresh communicator handle (64-byte
+    /// `CommRef`), skipped for singleton groups as the simulator does.
+    fn bcast_commref(&mut self, slots: &[usize]) {
+        if slots.len() > 1 {
+            self.coll(slots, 64);
+        }
+    }
+
+    // -- shared sub-protocols ---------------------------------------------
+
+    /// Evaluate the strategy spawn tree: every slot executes its
+    /// assignment tasks in step order; spawned groups apply their entry
+    /// charges (Spawn-phase stamp, acceptor port) immediately.
+    ///
+    /// The parallel/source entry charges (`open_port` + `publish` on the
+    /// source root) must be applied by the caller *before* this runs.
+    fn run_spawn_tree(&mut self, asg: &HashMap<usize, Vec<SpawnTask>>) {
+        let gcount = self.groups.len();
+        // (step, initiator slot, gid) in ascending step order.
+        let mut tasks: Vec<(usize, usize, usize)> = Vec::new();
+        for (&slot, ts) in asg {
+            let mut ts = ts.clone();
+            ts.sort_by_key(|t| t.step);
+            for t in &ts {
+                tasks.push((t.step, slot, t.group.gid));
+            }
+            self.children_of.insert(slot, ts.iter().map(|t| t.group.gid).collect());
+        }
+        tasks.sort_unstable();
+        for (step, slot, gid) in tasks {
+            let queue_pos = self.plan.rte_queue_pos_in(asg, slot, step);
+            let (g_node, g_size) = (self.groups[gid].node, self.groups[gid].size);
+            let t_child = self.w.spawn_call(self.clock[slot], queue_pos, &[(g_node, g_size)]);
+            self.clock[slot] = t_child;
+            let root = self.groups[gid].root_slot;
+            let origin = self.origin[slot];
+            for k in 0..g_size {
+                self.clock[root + k] = t_child;
+                self.origin[root + k] = origin;
+            }
+            self.groups[gid].step = step;
+            self.groups[gid].parent_slot = slot;
+            self.groups[gid].t_child = t_child;
+            // Child entry: acceptor roots open + publish their port.
+            if gid < gcount / 2 {
+                self.clock[root] += self.w.cost.c_open_port;
+                self.clock[root] += self.w.cost.c_publish;
+            }
+        }
+    }
+
+    fn group_members(&self, gid: usize) -> Vec<usize> {
+        let g = &self.groups[gid];
+        (g.root_slot..g.root_slot + g.size).collect()
+    }
+
+    /// §4.3 `common_synch` over the whole epoch (all groups + sources),
+    /// including the trailing child/parent intercomm disconnects.
+    fn run_common_synch(&mut self) {
+        let source_members: Vec<usize> = (0..self.ns).collect();
+        // Sync units: (members, step, parent_slot: Option, gid: Option).
+        struct Unit {
+            members: Vec<usize>,
+            step: usize,
+            parent_slot: Option<usize>,
+            gid: Option<usize>,
+        }
+        let mut units = vec![Unit { members: source_members, step: 0, parent_slot: None, gid: None }];
+        for (gid, g) in self.groups.iter().enumerate() {
+            units.push(Unit {
+                members: self.group_members(gid),
+                step: g.step,
+                parent_slot: Some(g.parent_slot),
+                gid: Some(gid),
+            });
+        }
+        let mut order: Vec<usize> = (0..units.len()).collect();
+        order.sort_by_key(|&i| units[i].step);
+
+        let mut arrive_up: HashMap<usize, f64> = HashMap::new(); // gid -> arrival at parent
+        let mut arrive_down: HashMap<usize, f64> = HashMap::new(); // gid -> arrival at group root
+
+        // Upside pass: leaves (largest step) first.
+        for &ui in order.iter().rev() {
+            let members = units[ui].members.clone();
+            let root = members[0];
+            // Stage 1: synchronization-subcommunicator split (16 B).
+            self.coll(&members, 16);
+            // Stage 2: readiness tokens from every child group, in task order.
+            for &m in &members {
+                if let Some(children) = self.children_of.get(&m).cloned() {
+                    for gid in children {
+                        let a = arrive_up[&gid];
+                        self.recv(m, a);
+                    }
+                }
+            }
+            let subcomm: Vec<usize> = members
+                .iter()
+                .copied()
+                .filter(|&m| m == root || self.children_of.get(&m).map_or(false, |c| !c.is_empty()))
+                .collect();
+            if subcomm.len() > 1 {
+                self.coll(&subcomm, 8);
+            }
+            // Group root notifies its parent (8-byte token).
+            if let Some(parent_slot) = units[ui].parent_slot {
+                let gid = units[ui].gid.unwrap();
+                let a = self.send(root, self.node[parent_slot], 8);
+                arrive_up.insert(gid, a);
+            }
+        }
+
+        // Downside pass: sources first.
+        for &ui in order.iter() {
+            let members = units[ui].members.clone();
+            let root = members[0];
+            let is_child = units[ui].parent_slot.is_some();
+            if is_child {
+                let gid = units[ui].gid.unwrap();
+                let a = arrive_down[&gid];
+                self.recv(root, a);
+            }
+            let subcomm: Vec<usize> = members
+                .iter()
+                .copied()
+                .filter(|&m| m == root || self.children_of.get(&m).map_or(false, |c| !c.is_empty()))
+                .collect();
+            if is_child && subcomm.len() > 1 {
+                self.coll(&subcomm, 8);
+            }
+            // Go-ahead tokens to own children, in task order.
+            for &m in &members {
+                if let Some(children) = self.children_of.get(&m).cloned() {
+                    for gid in children {
+                        let child_root = self.groups[gid].root_slot;
+                        let a = self.send(m, self.node[child_root], 8);
+                        arrive_down.insert(gid, a);
+                    }
+                }
+            }
+            // Subcommunicator members disconnect it.
+            for &m in &subcomm {
+                self.clock[m] += self.w.cost.c_coll_enter;
+            }
+            // Caller epilogue: disconnect each child intercomm, then (child
+            // groups) the parent intercomm.
+            for &m in &members {
+                let n_children =
+                    self.children_of.get(&m).map_or(0, |c| c.len());
+                for _ in 0..n_children {
+                    self.clock[m] += self.w.cost.c_coll_enter;
+                }
+            }
+            if is_child {
+                for &m in &members {
+                    self.clock[m] += self.w.cost.c_coll_enter;
+                }
+            }
+        }
+    }
+
+    /// §4.4 binary connection over all spawned groups; returns nothing —
+    /// the per-slot clocks carry the result. The merged member order is
+    /// "acceptor first", so merged rank 0 is always the port owner.
+    fn run_binary_connection(&mut self) {
+        let gcount = self.groups.len();
+        let mut active: HashMap<usize, Vec<usize>> = (0..gcount)
+            .map(|gid| (gid, self.group_members(gid)))
+            .collect();
+        let mut groups = gcount;
+        while groups > 1 {
+            let middle = groups / 2;
+            let new_groups = groups - middle;
+            for x in new_groups..groups {
+                let target = groups - x - 1;
+                let acc = active.remove(&target).expect("acceptor group active");
+                let conn = active.remove(&x).expect("connector group active");
+                let (acc_root, conn_root) = (acc[0], conn[0]);
+                // Connector root resolves the acceptor's service name.
+                self.clock[conn_root] += self.w.cost.c_lookup;
+                self.pair_roots(acc_root, conn_root);
+                self.bcast_commref(&acc);
+                self.bcast_commref(&conn);
+                // Intercommunicator merge over the union (16 B).
+                let mut merged = acc;
+                merged.extend_from_slice(&conn);
+                self.coll(&merged, 16);
+                for &m in &merged {
+                    self.clock[m] += self.w.cost.c_coll_enter; // disconnect inter
+                }
+                active.insert(target, merged);
+            }
+            groups = new_groups;
+        }
+    }
+
+    /// All spawned enumeration slots (`ns..ns+spawn_total`).
+    fn spawned_slots(&self) -> Vec<usize> {
+        (self.ns..self.clock.len()).collect()
+    }
+
+    /// The final connect of the (ordered) spawned side to the sources'
+    /// port, with both sides' handle broadcasts.
+    fn connect_spawned_to_sources(&mut self) {
+        let spawned = self.spawned_slots();
+        let sources: Vec<usize> = (0..self.ns).collect();
+        // Spawned root resolves the sources' service.
+        self.clock[self.ns] += self.w.cost.c_lookup;
+        self.pair_roots(0, self.ns);
+        self.bcast_commref(&sources);
+        self.bcast_commref(&spawned);
+    }
+
+    /// Merge-shaped redistribution inside the merged communicator
+    /// (ranks `0..ns` hold the data; every rank receives its new block).
+    fn redistrib_intracomm(&mut self, rank_slot: &[usize]) {
+        let (ns, nt) = (self.plan.ns(), self.plan.nt());
+        let plan = redistrib::block_plan(ns, nt, self.data_bytes);
+        let mut arrivals: HashMap<(usize, usize), f64> = HashMap::new();
+        for t in plan.iter().filter(|t| t.src != t.dst) {
+            let from = rank_slot[t.src];
+            let to_node = self.node[rank_slot[t.dst]];
+            arrivals.insert((t.src, t.dst), self.send(from, to_node, t.bytes));
+        }
+        for t in plan.iter().filter(|t| t.src != t.dst) {
+            let slot = rank_slot[t.dst];
+            let a = arrivals[&(t.src, t.dst)];
+            self.recv(slot, a);
+        }
+    }
+
+    /// Baseline-shaped redistribution across the parent/child
+    /// inter-communicator: `src_slots` send, `dst_slots` receive.
+    fn redistrib_intercomm(&mut self, src_slots: &[usize], dst_slots: &[usize]) {
+        let (ns, nt) = (self.plan.ns(), self.plan.nt());
+        let plan = redistrib::block_plan(ns, nt, self.data_bytes);
+        let mut arrivals: HashMap<(usize, usize), f64> = HashMap::new();
+        for t in &plan {
+            let from = src_slots[t.src];
+            let to_node = self.node[dst_slots[t.dst]];
+            arrivals.insert((t.src, t.dst), self.send(from, to_node, t.bytes));
+        }
+        for t in &plan {
+            let slot = dst_slots[t.dst];
+            self.recv(slot, arrivals[&(t.src, t.dst)]);
+        }
+    }
+
+    /// Nodes the plan drops entirely (`A_i == 0`) — returned to the RMS
+    /// by Baseline reconfigurations.
+    fn released_nodes(&self) -> Vec<NodeId> {
+        self.plan
+            .nodes
+            .iter()
+            .zip(&self.plan.a)
+            .filter(|&(_, &a)| a == 0)
+            .map(|(&n, _)| n)
+            .collect()
+    }
+
+    /// Baseline epilogue on the source side: sources terminate, freeing
+    /// their cores and returning dropped nodes.
+    fn retire_sources(&mut self) {
+        let released = self.released_nodes().len();
+        self.w.nodes_returned += released;
+        for &node in self.node.iter().take(self.ns) {
+            self.w.node_running[node] = self.w.node_running[node].saturating_sub(1);
+        }
+    }
+
+    fn record(&self, strategy_label: &str, t_end: f64, phases: Vec<(Phase, f64)>) -> ModelRecord {
+        self.record_from(strategy_label, self.t_start, t_end, phases)
+    }
+
+    fn record_from(
+        &self,
+        strategy_label: &str,
+        t_start: f64,
+        t_end: f64,
+        phases: Vec<(Phase, f64)>,
+    ) -> ModelRecord {
+        ModelRecord {
+            epoch: self.plan.epoch,
+            method: self.plan.method.name().to_string(),
+            strategy: strategy_label.to_string(),
+            ns: self.plan.ns(),
+            nt: self.plan.nt(),
+            t_start,
+            t_end,
+            phases,
+            jitter_frac: self.w.jitter_frac,
+        }
+    }
+
+    /// Append the spawned slots in enumeration order: each group with
+    /// its own MCW for the parallel strategies, one shared MCW for
+    /// Plain/Single (whose child world spans nodes).
+    fn push_spawned_ranks(&mut self, per_group_mcw: bool, ranks: &mut Vec<ModelRank>) {
+        if per_group_mcw {
+            for gid in 0..self.groups.len() {
+                let mcw = self.w.alloc_mcw();
+                for s in self.group_members(gid) {
+                    ranks.push(ModelRank { node: self.node[s], clock: self.clock[s], mcw });
+                }
+            }
+        } else {
+            let mcw = self.w.alloc_mcw();
+            for s in self.spawned_slots() {
+                ranks.push(ModelRank { node: self.node[s], clock: self.clock[s], mcw });
+            }
+        }
+    }
+
+    /// The continuing job after a Merge expansion: sources (old order,
+    /// old MCWs) then the spawned slots.
+    fn merge_job(&mut self, per_group_mcw: bool) -> ModelJob {
+        let mut ranks = Vec::with_capacity(self.clock.len());
+        for i in 0..self.ns {
+            ranks.push(ModelRank { node: self.node[i], clock: self.clock[i], mcw: self.src_mcw[i] });
+        }
+        self.push_spawned_ranks(per_group_mcw, &mut ranks);
+        ModelJob { epoch: self.plan.epoch + 1, ranks }
+    }
+
+    /// The continuing job after a Baseline reconfiguration: only the
+    /// spawned slots survive.
+    fn baseline_job(&mut self, per_group_mcw: bool) -> ModelJob {
+        let mut ranks = Vec::new();
+        self.push_spawned_ranks(per_group_mcw, &mut ranks);
+        ModelJob { epoch: self.plan.epoch + 1, ranks }
+    }
+
+    // -- strategy drivers ---------------------------------------------------
+
+    /// Plain strategy (`expand_collective`): one collective
+    /// `MPI_Comm_spawn` covering every target node.
+    fn run_collective(&mut self) -> Result<(ModelJob, ModelRecord)> {
+        let placements: Vec<(NodeId, usize)> = self
+            .plan
+            .s
+            .iter()
+            .enumerate()
+            .filter(|&(_, &s)| s > 0)
+            .map(|(i, &s)| (self.plan.nodes[i], s as usize))
+            .collect();
+        let mut src_laps = Laps::start(self.t_start);
+        let t_child = self.w.spawn_call(self.clock[0], 0, &placements);
+        self.clock[0] = t_child;
+        for s in self.spawned_slots() {
+            self.clock[s] = t_child;
+        }
+        let sources: Vec<usize> = (0..self.ns).collect();
+        self.bcast_commref(&sources);
+        src_laps.lap(Phase::Spawn, self.clock[0]);
+
+        match self.plan.method {
+            Method::Merge => {
+                let mut union: Vec<usize> = sources.clone();
+                union.extend(self.spawned_slots());
+                self.coll(&union, 16);
+                for &s in &union {
+                    self.clock[s] += self.w.cost.c_coll_enter; // disconnect inter
+                }
+                src_laps.lap(Phase::Connect, self.clock[0]);
+                if self.data_bytes > 0 {
+                    let rank_slot = union.clone();
+                    self.redistrib_intracomm(&rank_slot);
+                    src_laps.lap(Phase::Redistrib, self.clock[0]);
+                }
+                let rec = self.record(self.plan.strategy.name(), self.clock[0], src_laps.phases);
+                Ok((self.merge_job(false), rec))
+            }
+            Method::Baseline => {
+                // Child-side record: mcw rank 0 is the first spawned slot.
+                let croot = self.ns;
+                let mut laps = Laps::start(t_child);
+                laps.push(Phase::Spawn, t_child - self.t_start);
+                if self.data_bytes > 0 {
+                    let srcs = sources.clone();
+                    let dsts = self.spawned_slots();
+                    self.redistrib_intercomm(&srcs, &dsts);
+                    laps.lap(Phase::Redistrib, self.clock[croot]);
+                }
+                self.retire_sources();
+                self.clock[croot] += self.w.cost.c_coll_enter; // disconnect parent
+                let rec = self.record(self.plan.strategy.name(), self.clock[croot], laps.phases);
+                // Non-root children also pay their parent disconnect.
+                for s in self.spawned_slots() {
+                    if s != croot {
+                        self.clock[s] += self.w.cost.c_coll_enter;
+                    }
+                }
+                Ok((self.baseline_job(false), rec))
+            }
+        }
+    }
+
+    /// Single strategy (`expand_single`): only the root spawns; the
+    /// spawned world then connects back through the sources' port.
+    fn run_single(&mut self) -> Result<(ModelJob, ModelRecord)> {
+        let placements: Vec<(NodeId, usize)> = self
+            .plan
+            .s
+            .iter()
+            .enumerate()
+            .filter(|&(_, &s)| s > 0)
+            .map(|(i, &s)| (self.plan.nodes[i], s as usize))
+            .collect();
+        let mut src_laps = Laps::start(self.t_start);
+        let sources: Vec<usize> = (0..self.ns).collect();
+        self.clock[0] += self.w.cost.c_open_port;
+        self.clock[0] += self.w.cost.c_publish;
+        self.coll(&sources, 16); // the per-rank self-communicator split
+        let t_child = self.w.spawn_call(self.clock[0], 0, &placements);
+        self.clock[0] = t_child;
+        for s in self.spawned_slots() {
+            self.clock[s] = t_child;
+        }
+        self.clock[0] += self.w.cost.c_coll_enter; // root disconnects the spawn inter
+        src_laps.lap(Phase::Spawn, self.clock[0]);
+
+        // Children: disconnect parent, then connect to the sources' port.
+        let spawned = self.spawned_slots();
+        let croot = self.ns;
+        let mut claps = Laps::start(t_child);
+        claps.push(Phase::Spawn, t_child - self.t_start);
+        for &s in &spawned {
+            self.clock[s] += self.w.cost.c_coll_enter; // disconnect parent
+        }
+        self.clock[croot] += self.w.cost.c_lookup;
+        self.pair_roots(0, croot);
+        self.bcast_commref(&sources);
+        self.bcast_commref(&spawned);
+
+        match self.plan.method {
+            Method::Merge => {
+                let mut union = sources.clone();
+                union.extend(spawned.iter().copied());
+                self.coll(&union, 16);
+                for &s in &union {
+                    self.clock[s] += self.w.cost.c_coll_enter; // disconnect inter
+                }
+                src_laps.lap(Phase::Connect, self.clock[0]);
+                if self.data_bytes > 0 {
+                    let rank_slot = union.clone();
+                    self.redistrib_intracomm(&rank_slot);
+                    src_laps.lap(Phase::Redistrib, self.clock[0]);
+                }
+                let rec = self.record(self.plan.strategy.name(), self.clock[0], src_laps.phases);
+                Ok((self.merge_job(false), rec))
+            }
+            Method::Baseline => {
+                if self.data_bytes > 0 {
+                    let dsts = spawned.clone();
+                    self.redistrib_intercomm(&sources, &dsts);
+                    claps.lap(Phase::Redistrib, self.clock[croot]);
+                }
+                self.retire_sources();
+                for &s in &spawned {
+                    self.clock[s] += self.w.cost.c_coll_enter; // disconnect inter
+                }
+                let rec = self.record(self.plan.strategy.name(), self.clock[croot], claps.phases);
+                Ok((self.baseline_job(false), rec))
+            }
+        }
+    }
+
+    /// Parallel strategies + NodeByNode (`expand_parallel` / Listing 3-4).
+    fn run_parallel(&mut self) -> Result<(ModelJob, ModelRecord)> {
+        let asg = self.plan.assignments();
+        let mut src_laps = Laps::start(self.t_start);
+
+        // Source root opens + publishes the epoch's source service.
+        self.clock[0] += self.w.cost.c_open_port;
+        self.clock[0] += self.w.cost.c_publish;
+        self.run_spawn_tree(&asg);
+        src_laps.lap(Phase::Spawn, self.clock[0]);
+
+        // Child-root stopwatch (group 0's rank 0 records for Baseline);
+        // its Spawn stamp and record t_start come from the spec it
+        // inherited down the spawn-ancestry chain.
+        let croot = self.ns;
+        let croot_start = self.origin[croot];
+        let mut claps = Laps::start(self.groups[0].t_child);
+        claps.push(Phase::Spawn, self.groups[0].t_child - croot_start);
+
+        self.run_common_synch();
+        src_laps.lap(Phase::Sync, self.clock[0]);
+        claps.lap(Phase::Sync, self.clock[croot]);
+
+        self.run_binary_connection();
+        claps.lap(Phase::Connect, self.clock[croot]);
+
+        // §4.5 rank reordering over the merged spawned communicator.
+        let spawned = self.spawned_slots();
+        self.coll(&spawned, 16);
+        claps.lap(Phase::Reorder, self.clock[croot]);
+
+        self.connect_spawned_to_sources();
+
+        match self.plan.method {
+            Method::Merge => {
+                let sources: Vec<usize> = (0..self.ns).collect();
+                let mut union = sources;
+                union.extend(spawned.iter().copied());
+                self.coll(&union, 16);
+                for &s in &union {
+                    self.clock[s] += self.w.cost.c_coll_enter; // disconnect inter
+                }
+                src_laps.lap(Phase::Connect, self.clock[0]);
+                if self.data_bytes > 0 {
+                    let rank_slot = union.clone();
+                    self.redistrib_intracomm(&rank_slot);
+                    src_laps.lap(Phase::Redistrib, self.clock[0]);
+                }
+                let rec = self.record(self.plan.strategy.name(), self.clock[0], src_laps.phases);
+                Ok((self.merge_job(true), rec))
+            }
+            Method::Baseline => {
+                claps.lap(Phase::Connect, self.clock[croot]);
+                if self.data_bytes > 0 {
+                    let sources: Vec<usize> = (0..self.ns).collect();
+                    let dsts = spawned.clone();
+                    self.redistrib_intercomm(&sources, &dsts);
+                    claps.lap(Phase::Redistrib, self.clock[croot]);
+                }
+                self.retire_sources();
+                for &s in &spawned {
+                    self.clock[s] += self.w.cost.c_coll_enter; // disconnect inter
+                }
+                let rec = self.record_from(
+                    self.plan.strategy.name(),
+                    croot_start,
+                    self.clock[croot],
+                    claps.phases,
+                );
+                Ok((self.baseline_job(true), rec))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Standalone prediction entry point
+// ---------------------------------------------------------------------------
+
+/// Predict the resize time of a single reconfiguration directly from a
+/// [`CostModel`] and a [`Plan`], with no scenario scaffolding: sources
+/// start at clock 0 on the plan's `R` layout with per-node MCWs (the
+/// state a prior parallel expansion establishes). Used by the exact
+/// strategy-selection scorer ([`crate::coordinator::select`]).
+pub fn predict_resize_time(
+    cluster: &Cluster,
+    cost: &CostModel,
+    plan: &Plan,
+    data_bytes: u64,
+) -> Result<f64> {
+    let mut world = ModelWorld::new(cluster.clone(), cost.clone());
+    let mut ranks = Vec::new();
+    for (i, &ri) in plan.r.iter().enumerate() {
+        let node = plan.nodes[i];
+        for _ in 0..ri {
+            ranks.push(ModelRank { node, clock: 0.0, mcw: i as u64 + 1 });
+        }
+        if ri > 0 {
+            world.node_running[node] += ri;
+            world.node_daemon[node] = true;
+        }
+    }
+    if ranks.is_empty() {
+        bail!("plan has no source processes");
+    }
+    let job = ModelJob { epoch: plan.epoch, ranks };
+    let shrinking = plan.nt() < plan.ns();
+    let (_, rec) = if plan.method == Method::Merge && shrinking {
+        world.shrink(&job, plan)?
+    } else {
+        world.expand(&job, plan, data_bytes)?
+    };
+    Ok(rec.total())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mam::{Method, SpawnStrategy};
+
+    fn expansion_plan(c: u32, i: usize, n: usize, method: Method, strategy: SpawnStrategy) -> Plan {
+        let mut r = vec![0u32; n];
+        for ri in r.iter_mut().take(i) {
+            *ri = c;
+        }
+        Plan::new(0, method, strategy, (0..n).collect(), vec![c; n], r)
+    }
+
+    fn mini_world(nodes: usize, cores: u32) -> ModelWorld {
+        ModelWorld::new(Cluster::mini(nodes, cores), CostModel::mn5().deterministic())
+    }
+
+    #[test]
+    fn expansion_produces_positive_phase_partition() {
+        let mut w = mini_world(8, 4);
+        let mut job = w.launch(&[(0, 4)]);
+        w.iteration(&mut job, 50.0);
+        let plan = expansion_plan(4, 1, 8, Method::Merge, SpawnStrategy::ParallelHypercube);
+        let (next, rec) = w.expand(&job, &plan, 0).unwrap();
+        assert_eq!(next.size(), 32);
+        assert!(rec.total() > 0.0);
+        for (_, d) in &rec.phases {
+            assert!(*d >= 0.0, "negative phase in {:?}", rec.phases);
+        }
+        let sum: f64 = rec.phases.iter().map(|(_, d)| d).sum();
+        assert!(sum <= rec.total() + 1e-12);
+    }
+
+    #[test]
+    fn merge_keeps_sources_low_and_groups_get_own_mcw() {
+        let mut w = mini_world(4, 2);
+        let job = w.launch(&[(0, 2)]);
+        let src_mcw = job.ranks[0].mcw;
+        let plan = expansion_plan(2, 1, 4, Method::Merge, SpawnStrategy::ParallelHypercube);
+        let (next, _) = w.expand(&job, &plan, 0).unwrap();
+        assert_eq!(next.ranks[0].mcw, src_mcw);
+        assert_eq!(next.ranks[1].mcw, src_mcw);
+        let spawned_mcws: BTreeSet<u64> = next.ranks[2..].iter().map(|r| r.mcw).collect();
+        assert_eq!(spawned_mcws.len(), 3, "one MCW per spawned group");
+    }
+
+    #[test]
+    fn baseline_retires_sources() {
+        let mut w = mini_world(4, 2);
+        let job = w.launch(&[(0, 2)]);
+        let plan = expansion_plan(2, 1, 4, Method::Baseline, SpawnStrategy::ParallelDiffusive);
+        let (next, rec) = w.expand(&job, &plan, 0).unwrap();
+        assert_eq!(next.size(), 8);
+        assert_eq!(rec.method, "baseline");
+        // Sources freed their cores; node 0 now hosts only its new group.
+        assert_eq!(w.node_running[0], 2);
+    }
+
+    #[test]
+    fn ts_shrink_is_orders_of_magnitude_cheaper_than_ss() {
+        let mut w = mini_world(8, 4);
+        let mut job = w.launch(&[(0, 4)]);
+        w.iteration(&mut job, 50.0);
+        let grow = expansion_plan(4, 1, 4, Method::Merge, SpawnStrategy::ParallelHypercube);
+        let (job, _) = w.expand(&job, &grow, 0).unwrap();
+
+        // Merge/TS shrink back to one node.
+        let mut a = vec![0u32; 4];
+        a[0] = 4;
+        let shrink_plan = Plan::new(
+            1,
+            Method::Merge,
+            SpawnStrategy::Plain,
+            (0..4).collect(),
+            a.clone(),
+            vec![4; 4],
+        );
+        let mut w2_job = job.clone();
+        // Uniform clocks before the shrink (checkpoint).
+        w.iteration(&mut w2_job, 50.0);
+        let (_, ts_rec) = w.shrink(&w2_job, &shrink_plan).unwrap();
+        assert_eq!(ts_rec.strategy, "shrink-ts");
+        assert!(ts_rec.total() > 0.0);
+
+        // SS shrink (Baseline respawn) of the same resize.
+        let ss = predict_resize_time(
+            &Cluster::mini(8, 4),
+            &CostModel::mn5(),
+            &Plan::new(
+                1,
+                Method::Baseline,
+                SpawnStrategy::ParallelHypercube,
+                (0..4).collect(),
+                a,
+                vec![4; 4],
+            ),
+            0,
+        )
+        .unwrap();
+        assert!(
+            ss / ts_rec.total() > 50.0,
+            "SS {} vs TS {} not orders apart",
+            ss,
+            ts_rec.total()
+        );
+    }
+
+    #[test]
+    fn shrink_records_zombies_and_node_returns() {
+        let mut w = mini_world(4, 2);
+        let job = w.launch(&[(0, 2)]);
+        let grow = expansion_plan(2, 1, 4, Method::Merge, SpawnStrategy::ParallelHypercube);
+        let (mut job2, _) = w.expand(&job, &grow, 0).unwrap();
+        w.iteration(&mut job2, 50.0);
+        // Target: 1 process on node 0 (partial release -> zombies) and
+        // nothing elsewhere (whole-MCW releases -> TS + node returns).
+        let shrink_plan = Plan::new(
+            1,
+            Method::Merge,
+            SpawnStrategy::Plain,
+            (0..4).collect(),
+            vec![1, 0, 0, 0],
+            vec![2; 4],
+        );
+        let (survivors, rec) = w.shrink(&job2, &shrink_plan).unwrap();
+        assert_eq!(survivors.size(), 1);
+        assert_eq!(rec.strategy, "shrink-zs");
+        assert!(w.zombies_created > 0);
+        assert!(w.nodes_returned > 0);
+        assert_eq!(survivors.ranks[0].node, 0);
+    }
+
+    #[test]
+    fn hypercube_rejects_heterogeneous_plans() {
+        let mut w = ModelWorld::new(Cluster::nasp(), CostModel::nasp().deterministic());
+        let job = w.launch(&[(0, 20)]);
+        let plan = Plan::new(
+            0,
+            Method::Merge,
+            SpawnStrategy::ParallelHypercube,
+            vec![0, 8],
+            vec![20, 32],
+            vec![20, 0],
+        );
+        let err = w.expand(&job, &plan, 0).unwrap_err();
+        assert!(format!("{err}").contains("homogeneous"));
+    }
+
+    #[test]
+    fn stochastic_models_report_dispersion_not_samples() {
+        let stochastic = CostModel::mn5(); // jitter_frac 0.03
+        let mut w1 = ModelWorld::new(Cluster::mini(4, 2), stochastic.clone());
+        let mut w2 = ModelWorld::new(Cluster::mini(4, 2), stochastic.deterministic());
+        let plan = expansion_plan(2, 1, 4, Method::Merge, SpawnStrategy::ParallelHypercube);
+        let j1 = w1.launch(&[(0, 2)]);
+        let j2 = w2.launch(&[(0, 2)]);
+        let (_, r1) = w1.expand(&j1, &plan, 0).unwrap();
+        let (_, r2) = w2.expand(&j2, &plan, 0).unwrap();
+        // Same location parameters; only the reported dispersion differs.
+        assert_eq!(r1.total(), r2.total());
+        assert_eq!(r1.jitter_frac, 0.03);
+        assert_eq!(r2.jitter_frac, 0.0);
+    }
+
+    #[test]
+    fn data_bytes_monotonicity() {
+        let plan = expansion_plan(4, 1, 4, Method::Merge, SpawnStrategy::ParallelHypercube);
+        let c = Cluster::mini(4, 4);
+        let t0 = predict_resize_time(&c, &CostModel::mn5(), &plan, 0).unwrap();
+        let t1 = predict_resize_time(&c, &CostModel::mn5(), &plan, 1 << 20).unwrap();
+        let t2 = predict_resize_time(&c, &CostModel::mn5(), &plan, 1 << 24).unwrap();
+        assert!(t0 < t1 && t1 < t2, "{t0} {t1} {t2}");
+    }
+}

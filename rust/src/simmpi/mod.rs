@@ -36,6 +36,7 @@ mod world;
 pub use collectives::AllgatherResult;
 pub use comm::{Comm, CommId, Side};
 pub use ctx::Ctx;
+pub use p2p::EAGER_LIMIT;
 pub use world::{ProcId, ProcMain, RootMain, SimError, World, ZombieOrder};
 
 use std::sync::Arc;

@@ -8,8 +8,9 @@ use super::{Payload, ANY_SOURCE, ANY_TAG};
 
 /// Messages above this size use the rendezvous protocol: the sender's
 /// clock advances with the wire time, like MPI's eager/rendezvous switch
-/// (MPICH default eager limits are in the tens of KiB).
-const EAGER_LIMIT: u64 = 64 * 1024;
+/// (MPICH default eager limits are in the tens of KiB). Public so the
+/// analytic engine ([`crate::mam::model`]) charges the identical switch.
+pub const EAGER_LIMIT: u64 = 64 * 1024;
 
 impl Ctx {
     /// Send (covers `MPI_Send` and `MPI_Isend` in the protocol code).

@@ -1,0 +1,299 @@
+//! Differential conformance: the closed-form analytic engine
+//! (`mam::model`) vs the thread-per-rank simulator.
+//!
+//! Under a deterministic cost model every charge in the simulator is a
+//! fixed f64 expression, so the analytic engine must reproduce totals
+//! AND per-phase breakdowns **bit-exactly** (`f64::to_bits` equality,
+//! not epsilon closeness). The property sweeps below generate random
+//! scenarios across strategy × method × direction × cluster shape and
+//! compare the two engines end to end — well over 256 cases per run.
+//!
+//! Under stochastic cost models the analytic engine returns the
+//! jitter-free location parameters; the invariant checks pin down the
+//! structural properties that must hold regardless of dispersion.
+
+use paraspawn::config::CostModel;
+use paraspawn::coordinator::{
+    run_reconfiguration, run_reconfiguration_analytic, ReconfigReport, Scenario,
+};
+use paraspawn::mam::{Method, SpawnStrategy};
+use paraspawn::rms::AllocPolicy;
+use paraspawn::testing::{check, Gen};
+use paraspawn::topology::{Cluster, LinkKind, NodeSpec, Switch};
+
+/// A small two-type, two-switch cluster in the NASP shape (IB small
+/// nodes + Ethernet big nodes sharing an uplink), sized for fast
+/// thread-simulated property cases.
+fn mini_hetero(small: usize, small_cores: u32, big: usize, big_cores: u32) -> Cluster {
+    let switches = vec![
+        Switch { name: "mh-ib".into(), fabric: LinkKind::InfiniBand100 },
+        Switch { name: "mh-eth".into(), fabric: LinkKind::Ethernet10 },
+    ];
+    let mut nodes = Vec::new();
+    for i in 0..small {
+        nodes.push(NodeSpec { name: format!("mh-a{i}"), cores: small_cores, switch: 0 });
+    }
+    for i in 0..big {
+        nodes.push(NodeSpec { name: format!("mh-b{i}"), cores: big_cores, switch: 1 });
+    }
+    Cluster { name: "mini-hetero".into(), nodes, switches, inter_switch: LinkKind::Ethernet10 }
+}
+
+/// Bit-exact comparison of two reports; returns a description of the
+/// first divergence.
+fn compare(sim: &ReconfigReport, ana: &ReconfigReport) -> Result<(), String> {
+    if sim.total_time.to_bits() != ana.total_time.to_bits() {
+        return Err(format!(
+            "total mismatch: simulated {} ({:#x}) vs analytic {} ({:#x})",
+            sim.total_time,
+            sim.total_time.to_bits(),
+            ana.total_time,
+            ana.total_time.to_bits()
+        ));
+    }
+    if sim.strategy_label != ana.strategy_label {
+        return Err(format!("label mismatch: {} vs {}", sim.strategy_label, ana.strategy_label));
+    }
+    if (sim.ns, sim.nt) != (ana.ns, ana.nt) {
+        return Err(format!(
+            "NS/NT mismatch: ({}, {}) vs ({}, {})",
+            sim.ns, sim.nt, ana.ns, ana.nt
+        ));
+    }
+    if sim.phases.len() != ana.phases.len() {
+        return Err(format!(
+            "phase count mismatch: {:?} vs {:?}",
+            sim.phases, ana.phases
+        ));
+    }
+    for ((ps, ds), (pa, da)) in sim.phases.iter().zip(&ana.phases) {
+        if ps != pa || ds.to_bits() != da.to_bits() {
+            return Err(format!(
+                "phase mismatch at {}: simulated ({}, {}) vs analytic ({}, {})\n  sim: {:?}\n  ana: {:?}",
+                ps.name(),
+                ps.name(),
+                ds,
+                pa.name(),
+                da,
+                sim.phases,
+                ana.phases
+            ));
+        }
+    }
+    if sim.nodes_returned != ana.nodes_returned {
+        return Err(format!(
+            "nodes_returned mismatch: {} vs {}",
+            sim.nodes_returned, ana.nodes_returned
+        ));
+    }
+    if sim.zombies != ana.zombies {
+        return Err(format!("zombies mismatch: {} vs {}", sim.zombies, ana.zombies));
+    }
+    Ok(())
+}
+
+fn run_both(s: &Scenario) -> Result<(), String> {
+    let sim = run_reconfiguration(s).map_err(|e| format!("simulated failed: {e:#}"))?;
+    let ana = run_reconfiguration_analytic(s).map_err(|e| format!("analytic failed: {e:#}"))?;
+    compare(&sim, &ana).map_err(|msg| {
+        format!(
+            "{} {}+{} {}->{} data={} on {}: {}",
+            if s.target_nodes < s.initial_nodes { "shrink" } else { "expand" },
+            s.method.name(),
+            s.strategy.name(),
+            s.initial_nodes,
+            s.target_nodes,
+            s.data_bytes,
+            s.cluster.name,
+            msg
+        )
+    })
+}
+
+/// Random homogeneous-cluster scenario (all five strategies are legal).
+fn homogeneous_scenario(g: &mut Gen) -> Scenario {
+    let nodes = g.usize_in(2, 7);
+    let cores = g.usize_in(1, 5) as u32;
+    let cluster = Cluster::mini(nodes, cores);
+    let strategy = g.pick(&[
+        SpawnStrategy::Plain,
+        SpawnStrategy::Single,
+        SpawnStrategy::NodeByNode,
+        SpawnStrategy::ParallelHypercube,
+        SpawnStrategy::ParallelDiffusive,
+    ]);
+    let method = g.pick(&[Method::Merge, Method::Baseline]);
+    let mut i = g.usize_in(1, nodes + 1);
+    let mut n = g.usize_in(1, nodes + 1);
+    if i == n {
+        n = if n == nodes { 1 } else { n + 1 };
+    }
+    // Merge shrinks take the TS/ZS path regardless of strategy; keep the
+    // strategy axis meaningful by only shrinking via Merge occasionally.
+    if n < i && method == Method::Merge && !g.bool() {
+        std::mem::swap(&mut i, &mut n);
+    }
+    let data_bytes = match g.usize_in(0, 3) {
+        0 => 0,
+        1 => g.usize_in(1, 4096) as u64,
+        // Above the eager limit: exercises the rendezvous sender path.
+        _ => g.usize_in(60_000, 300_000) as u64,
+    };
+    Scenario {
+        cluster,
+        cost: CostModel::mn5().deterministic(),
+        policy: AllocPolicy::WholeNodes,
+        initial_nodes: i,
+        target_nodes: n,
+        method,
+        strategy,
+        seed: g.u64_below(1 << 20),
+        warmup_iters: g.usize_in(0, 3),
+        data_bytes,
+        prepare_parallel: n < i,
+    }
+}
+
+/// Random heterogeneous-cluster scenario (Hypercube excluded, as on
+/// NASP; balanced-type allocations).
+fn heterogeneous_scenario(g: &mut Gen) -> Scenario {
+    let small = g.usize_in(2, 4);
+    let big = g.usize_in(2, 4);
+    let small_cores = g.usize_in(1, 3) as u32;
+    let big_cores = small_cores + g.usize_in(1, 3) as u32;
+    let cluster = mini_hetero(small, small_cores, big, big_cores);
+    let max_nodes = small.min(big) * 2;
+    let strategy = g.pick(&[
+        SpawnStrategy::Plain,
+        SpawnStrategy::Single,
+        SpawnStrategy::NodeByNode,
+        SpawnStrategy::ParallelDiffusive,
+    ]);
+    let method = g.pick(&[Method::Merge, Method::Baseline]);
+    let mut i = g.usize_in(1, max_nodes + 1);
+    let mut n = g.usize_in(1, max_nodes + 1);
+    if i == n {
+        n = if n == max_nodes { 1 } else { n + 1 };
+    }
+    if n < i && method == Method::Merge && !g.bool() {
+        std::mem::swap(&mut i, &mut n);
+    }
+    Scenario {
+        cluster,
+        cost: CostModel::nasp().deterministic(),
+        policy: AllocPolicy::BalancedTypes,
+        initial_nodes: i,
+        target_nodes: n,
+        method,
+        strategy,
+        seed: g.u64_below(1 << 20),
+        warmup_iters: g.usize_in(0, 2),
+        data_bytes: if g.bool() { 0 } else { g.usize_in(1, 100_000) as u64 },
+        prepare_parallel: n < i,
+    }
+}
+
+#[test]
+fn analytic_matches_simulator_bit_exactly_homogeneous() {
+    check("analytic == simulated (homogeneous)", 192, |g| {
+        run_both(&homogeneous_scenario(g))
+    });
+}
+
+#[test]
+fn analytic_matches_simulator_bit_exactly_heterogeneous() {
+    check("analytic == simulated (heterogeneous)", 96, |g| {
+        run_both(&heterogeneous_scenario(g))
+    });
+}
+
+/// Directed coverage of every strategy × method × direction cell on one
+/// fixed cluster shape (the property sweeps randomize around these).
+#[test]
+fn analytic_matches_simulator_all_config_cells() {
+    let strategies = [
+        SpawnStrategy::Plain,
+        SpawnStrategy::Single,
+        SpawnStrategy::NodeByNode,
+        SpawnStrategy::ParallelHypercube,
+        SpawnStrategy::ParallelDiffusive,
+    ];
+    for &strategy in &strategies {
+        for &method in &[Method::Merge, Method::Baseline] {
+            for &(i, n) in &[(1usize, 4usize), (2, 4), (4, 2), (4, 1)] {
+                let s = Scenario {
+                    cluster: Cluster::mini(4, 3),
+                    cost: CostModel::mn5().deterministic(),
+                    policy: AllocPolicy::WholeNodes,
+                    initial_nodes: i,
+                    target_nodes: n,
+                    method,
+                    strategy,
+                    seed: 7,
+                    warmup_iters: 1,
+                    data_bytes: 2048,
+                    prepare_parallel: n < i,
+                };
+                if let Err(msg) = run_both(&s) {
+                    panic!("cell {}+{} {}->{}: {}", method.name(), strategy.name(), i, n, msg);
+                }
+            }
+        }
+    }
+}
+
+/// Stochastic-model invariants: the analytic engine reports location
+/// parameters plus structural guarantees that hold for any dispersion.
+#[test]
+fn stochastic_invariants_hold() {
+    check("stochastic invariants", 64, |g| {
+        let mut s = homogeneous_scenario(g);
+        s.cost = CostModel::mn5(); // jitter_frac > 0
+        let ana = run_reconfiguration_analytic(&s)
+            .map_err(|e| format!("analytic failed: {e:#}"))?;
+        // Phase durations are non-negative and partition at most the
+        // total (the lap clock is monotone; trailing teardown may extend
+        // t_end past the last lap).
+        for (p, d) in &ana.phases {
+            if *d < 0.0 {
+                return Err(format!("negative {} phase: {}", p.name(), d));
+            }
+        }
+        let sum: f64 = ana.phases.iter().map(|(_, d)| d).sum();
+        if sum > ana.total_time + 1e-9 {
+            return Err(format!("phase sum {} exceeds total {}", sum, ana.total_time));
+        }
+        // Monotone in the redistribution payload.
+        let mut bigger = s.clone();
+        bigger.data_bytes = s.data_bytes + (1 << 20);
+        let ana_big = run_reconfiguration_analytic(&bigger)
+            .map_err(|e| format!("analytic failed: {e:#}"))?;
+        if ana_big.total_time < ana.total_time {
+            return Err(format!(
+                "payload monotonicity violated: {} B -> {}, {} B -> {}",
+                s.data_bytes, ana.total_time, bigger.data_bytes, ana_big.total_time
+            ));
+        }
+        // The analytic location equals the deterministic-model timing:
+        // dispersion never shifts the reported parameters.
+        let mut det = s.clone();
+        det.cost = det.cost.deterministic();
+        let ana_det = run_reconfiguration_analytic(&det)
+            .map_err(|e| format!("analytic failed: {e:#}"))?;
+        if ana.total_time.to_bits() != ana_det.total_time.to_bits() {
+            return Err("stochastic-model analytic result drifted from the location".into());
+        }
+        // And a sampled simulated run stays in a generous envelope
+        // around the location (3% per-charge lognormal jitter cannot
+        // halve or double an aggregate resize time).
+        let sim = run_reconfiguration(&s).map_err(|e| format!("simulated failed: {e:#}"))?;
+        let ratio = sim.total_time / ana.total_time;
+        if !(0.5..=2.0).contains(&ratio) {
+            return Err(format!(
+                "sampled total {} implausibly far from location {} (ratio {})",
+                sim.total_time, ana.total_time, ratio
+            ));
+        }
+        Ok(())
+    });
+}

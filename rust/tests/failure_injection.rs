@@ -11,17 +11,20 @@ use paraspawn::topology::Cluster;
 use std::sync::Arc;
 use std::time::Instant;
 
-fn fast_watchdog() -> SimConfig {
+/// A fast deadlock detector whose budget scales with the world size
+/// (10 ms per rank on top of the base), so large-cluster protocol tests
+/// measure stalls rather than CI machine speed.
+fn fast_watchdog(total_ranks: usize) -> SimConfig {
     SimConfig {
         cost: CostModel::mn5().deterministic(),
-        watchdog_secs: Some(1.5),
         ..Default::default()
     }
+    .with_scaled_watchdog(1.5, total_ranks)
 }
 
 #[test]
 fn mid_protocol_panic_unblocks_collective_peers() {
-    let world = World::new(Cluster::mini(1, 4), fast_watchdog());
+    let world = World::new(Cluster::mini(1, 4), fast_watchdog(4));
     world.launch(
         &[(0, 4)],
         Arc::new(|ctx: Ctx, w: Comm| {
@@ -39,7 +42,7 @@ fn mid_protocol_panic_unblocks_collective_peers() {
 
 #[test]
 fn connect_to_unpublished_service_hits_watchdog() {
-    let world = World::new(Cluster::mini(1, 1), fast_watchdog());
+    let world = World::new(Cluster::mini(1, 1), fast_watchdog(1));
     world.launch(
         &[(0, 1)],
         Arc::new(|ctx: Ctx, _w: Comm| {
@@ -54,7 +57,7 @@ fn connect_to_unpublished_service_hits_watchdog() {
 fn mismatched_collective_participation_aborts() {
     // Rank 0 calls barrier twice, rank 1 once, on a 2-rank comm: the
     // second instance can never complete -> watchdog.
-    let world = World::new(Cluster::mini(1, 2), fast_watchdog());
+    let world = World::new(Cluster::mini(1, 2), fast_watchdog(2));
     world.launch(
         &[(0, 2)],
         Arc::new(|ctx: Ctx, w: Comm| {
@@ -69,7 +72,7 @@ fn mismatched_collective_participation_aborts() {
 
 #[test]
 fn wrong_payload_type_panics_cleanly() {
-    let world = World::new(Cluster::mini(1, 2), fast_watchdog());
+    let world = World::new(Cluster::mini(1, 2), fast_watchdog(2));
     world.launch(
         &[(0, 2)],
         Arc::new(|ctx: Ctx, w: Comm| {
@@ -87,7 +90,7 @@ fn wrong_payload_type_panics_cleanly() {
 
 #[test]
 fn recv_from_out_of_range_rank_aborts() {
-    let world = World::new(Cluster::mini(1, 2), fast_watchdog());
+    let world = World::new(Cluster::mini(1, 2), fast_watchdog(2));
     world.launch(
         &[(0, 2)],
         Arc::new(|ctx: Ctx, w: Comm| {
@@ -138,7 +141,7 @@ fn hypercube_on_heterogeneous_cluster_fails_loudly() {
 #[test]
 fn zombie_terminate_order_drains_parked_rank() {
     use paraspawn::simmpi::ZombieOrder;
-    let world = World::new(Cluster::mini(1, 2), fast_watchdog());
+    let world = World::new(Cluster::mini(1, 2), fast_watchdog(2));
     world.launch(
         &[(0, 2)],
         Arc::new(|ctx: Ctx, w: Comm| {
@@ -158,7 +161,7 @@ fn zombie_terminate_order_drains_parked_rank() {
 
 #[test]
 fn abort_is_idempotent_and_first_reason_wins() {
-    let world = World::new(Cluster::mini(1, 1), fast_watchdog());
+    let world = World::new(Cluster::mini(1, 1), fast_watchdog(1));
     world.abort("first");
     world.abort("second");
     world.launch(&[(0, 1)], Arc::new(|ctx: Ctx, w: Comm| {
@@ -168,4 +171,84 @@ fn abort_is_idempotent_and_first_reason_wins() {
     let err = world.join_all().unwrap_err();
     let msg = format!("{err}");
     assert!(msg.contains("first"), "got: {msg}");
+}
+
+// ---------------------------------------------------------------------------
+// Asynchronous-expansion failure injection: faults between
+// expand_async_initiate and expand_async_complete must abort the whole
+// simulation promptly (no hangs past the watchdog window).
+// ---------------------------------------------------------------------------
+
+fn async_spec(
+    plan: paraspawn::mam::Plan,
+    t_start: f64,
+) -> paraspawn::mam::ReconfigSpec {
+    paraspawn::mam::ReconfigSpec {
+        plan: Arc::new(plan),
+        t_start,
+        data_bytes: 0,
+        cont: Arc::new(|_ctx: Ctx, _job: paraspawn::mam::JobCtx| {}),
+        zombie_pids: Vec::new(),
+    }
+}
+
+fn async_expansion_plan() -> paraspawn::mam::Plan {
+    // 1 -> 2 nodes, Merge + Hypercube (the async-eligible shape).
+    paraspawn::mam::Plan::new(
+        0,
+        Method::Merge,
+        SpawnStrategy::ParallelHypercube,
+        vec![0, 1],
+        vec![2, 2],
+        vec![2, 0],
+    )
+}
+
+#[test]
+fn panic_between_async_initiate_and_complete_aborts_peers() {
+    use paraspawn::mam::{driver, JobCtx};
+    let world = World::new(Cluster::mini(2, 2), fast_watchdog(4));
+    world.launch(
+        &[(0, 2)],
+        Arc::new(|ctx: Ctx, wc: Comm| {
+            let job = JobCtx { app: wc.clone(), mcw: wc, epoch: 0, zombie_pids: Vec::new() };
+            let spec = async_spec(async_expansion_plan(), ctx.clock());
+            let pending = driver::expand_async_initiate(&ctx, &job, &spec);
+            if job.app.rank() == 1 {
+                panic!("injected failure during async overlap");
+            }
+            // Rank 0 proceeds to completion; the merge can never finish
+            // because rank 1 died, so abort propagation must unwind it.
+            let _ = driver::expand_async_complete(&ctx, &job, pending);
+        }),
+    );
+    let t0 = Instant::now();
+    let err = world.join_all().unwrap_err();
+    assert!(
+        format!("{err}").contains("injected failure"),
+        "unexpected: {err}"
+    );
+    assert!(t0.elapsed().as_secs_f64() < 10.0, "abort must release async peers promptly");
+}
+
+#[test]
+fn abandoned_async_completion_hits_watchdog_not_hang() {
+    use paraspawn::mam::{driver, JobCtx};
+    let world = World::new(Cluster::mini(2, 2), fast_watchdog(4));
+    world.launch(
+        &[(0, 2)],
+        Arc::new(|ctx: Ctx, wc: Comm| {
+            let job = JobCtx { app: wc.clone(), mcw: wc, epoch: 0, zombie_pids: Vec::new() };
+            let spec = async_spec(async_expansion_plan(), ctx.clock());
+            // Initiate and then never complete: the spawned groups stay
+            // blocked in their final merge. The watchdog must fire.
+            let pending = driver::expand_async_initiate(&ctx, &job, &spec);
+            drop(pending);
+        }),
+    );
+    let t0 = Instant::now();
+    let err = world.join_all().unwrap_err();
+    assert!(format!("{err}").contains("watchdog"), "unexpected: {err}");
+    // Scaled budget: 1.5 s base + 10 ms x 4 ranks, plus wakeup slack.
+    assert!(t0.elapsed().as_secs_f64() < 20.0, "watchdog must bound the hang");
 }

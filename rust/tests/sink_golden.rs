@@ -1,0 +1,105 @@
+//! Golden snapshot tests for the sweep result sinks.
+//!
+//! The CSV column schema and the JSON field set of `SweepResults` are a
+//! public interface: downstream notebooks and the CI smoke invocations
+//! parse them. These tests pin the exact rendered bytes of a synthetic
+//! result set against checked-in fixtures (`rust/tests/golden/`), so a
+//! sink refactor that drops/renames/reorders a column — or changes the
+//! JSON quoting of a field — fails loudly instead of silently breaking
+//! downstream parsing.
+//!
+//! The fixture inputs are hand-picked dyadic values (0.25, 0.125, ...)
+//! so every statistic is exact in binary and the `{:.6}`/`{:.9}`
+//! renderings are platform-independent.
+
+use paraspawn::coordinator::sweep::{CellKey, SweepResults};
+use paraspawn::metrics::Phase;
+use std::path::PathBuf;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+fn fixture(name: &str) -> String {
+    let path = golden_dir().join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading golden fixture {}: {e}", path.display()))
+}
+
+/// A synthetic two-cell result set covering both directions, a label
+/// with a non-identifier character (`M+TS`), and distinct phase sets.
+fn golden_results() -> SweepResults {
+    let mut r = SweepResults::default();
+    let expand = CellKey {
+        cluster: "mini".to_string(),
+        initial_nodes: 1,
+        target_nodes: 2,
+        config: "M".to_string(),
+    };
+    r.samples.insert(expand.clone(), vec![0.25, 0.5, 0.75]);
+    r.phase_means
+        .insert(expand, vec![(Phase::Spawn, 0.125), (Phase::Connect, 0.0625)]);
+    let shrink = CellKey {
+        cluster: "mini".to_string(),
+        initial_nodes: 4,
+        target_nodes: 2,
+        config: "M+TS".to_string(),
+    };
+    r.samples.insert(shrink.clone(), vec![0.001, 0.002, 0.003]);
+    r.phase_means
+        .insert(shrink, vec![(Phase::Plan, 0.0005), (Phase::Shrink, 0.00025)]);
+    r
+}
+
+#[test]
+fn summary_csv_matches_golden() {
+    assert_eq!(golden_results().summary_table().to_csv(), fixture("sweep_summary.csv"));
+}
+
+#[test]
+fn samples_csv_matches_golden() {
+    assert_eq!(golden_results().samples_table().to_csv(), fixture("sweep_samples.csv"));
+}
+
+#[test]
+fn phases_csv_matches_golden() {
+    assert_eq!(golden_results().phase_table().to_csv(), fixture("sweep_phases.csv"));
+}
+
+#[test]
+fn summary_json_matches_golden() {
+    assert_eq!(golden_results().summary_table().to_json(), fixture("sweep_summary.json"));
+}
+
+#[test]
+fn samples_json_matches_golden() {
+    assert_eq!(golden_results().samples_table().to_json(), fixture("sweep_samples.json"));
+}
+
+#[test]
+fn phases_json_matches_golden() {
+    assert_eq!(golden_results().phase_table().to_json(), fixture("sweep_phases.json"));
+}
+
+/// `SweepResults::write` must emit exactly the golden files (same
+/// basenames, same bytes) — the contract the CI smoke tests rely on.
+#[test]
+fn write_emits_the_golden_file_set() {
+    let dir = std::env::temp_dir().join(format!("paraspawn-golden-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    golden_results().write(&dir, true).unwrap();
+    for name in [
+        "sweep_summary.csv",
+        "sweep_samples.csv",
+        "sweep_phases.csv",
+        "sweep_summary.json",
+        "sweep_samples.json",
+        "sweep_phases.json",
+    ] {
+        let written = std::fs::read_to_string(dir.join(name))
+            .unwrap_or_else(|e| panic!("write() did not produce {name}: {e}"));
+        assert_eq!(written, fixture(name), "byte mismatch in {name}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
