@@ -12,7 +12,7 @@
 
 use paraspawn::coordinator::sweep::ClusterKind;
 use paraspawn::coordinator::wsweep::{
-    calibrated_costs, run_workload_matrix, WorkloadMatrix, WorkloadSpec,
+    calibrated_costs, run_workload_matrix, scalar_pricers, WorkloadMatrix, WorkloadSpec,
 };
 use paraspawn::rms::workload::synthetic_workload;
 
@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     let matrix = WorkloadMatrix {
-        costs,
+        pricers: scalar_pricers(&costs),
         workloads: vec![WorkloadSpec {
             label: "synthetic".to_string(),
             jobs: synthetic_workload(50, total_nodes, 0.6, 2025),

@@ -1,0 +1,86 @@
+//! Trace-replay benchmarks: the bundled 2000+-job shrink-heavy SWF
+//! trace through the batch scheduler under scalar vs analytic pricing,
+//! plus the raw cost of cold analytic `(pre, post)` queries — the
+//! numbers behind "exact per-event pricing at scalar speed".
+//!
+//! Run with `cargo bench --bench trace_replay`.
+
+use paraspawn::bench::Runner;
+use paraspawn::coordinator::sweep::ClusterKind;
+use paraspawn::coordinator::wsweep::kind_cost_model;
+use paraspawn::rms::sched::{
+    self, schedule_with_pricer, AnalyticPricer, ResizePricer, SchedPolicy,
+};
+use paraspawn::rms::workload::{JobSpec, ReconfigCostModel};
+use paraspawn::rms::AllocPolicy;
+use std::path::PathBuf;
+
+fn replay_jobs() -> Vec<JobSpec> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/replay2k.swf");
+    let text = std::fs::read_to_string(&path).expect("bundled replay trace readable");
+    let mut jobs = sched::read_swf(&text, 112, 32).expect("bundled replay trace parses");
+    sched::mark_malleable(&mut jobs, 0.7, 4, 32, 2025);
+    jobs
+}
+
+fn main() {
+    let mut r = Runner::from_args();
+    let kind = ClusterKind::Mn5;
+    let cluster = kind.cluster();
+    let cost = kind_cost_model(kind);
+    let jobs = replay_jobs();
+    assert!(jobs.len() >= 2000);
+
+    // Scalar pricing: the pre-axis baseline.
+    r.bench("replay/scalar-ts", 3, || {
+        let mut pricer = ReconfigCostModel::ts(1.0);
+        let res = schedule_with_pricer(
+            &cluster,
+            AllocPolicy::WholeNodes,
+            SchedPolicy::Malleable,
+            &mut pricer,
+            &jobs,
+        )
+        .expect("replay schedules");
+        assert!(res.makespan > 0.0);
+    });
+
+    // Analytic pricing, cold cache each repetition: every distinct
+    // (pre, post) pair is evaluated through the closed-form engine.
+    r.bench("replay/analytic-ts-cold", 3, || {
+        let mut pricer = AnalyticPricer::ts(cluster.clone(), cost.clone());
+        let res = schedule_with_pricer(
+            &cluster,
+            AllocPolicy::WholeNodes,
+            SchedPolicy::Malleable,
+            &mut pricer,
+            &jobs,
+        )
+        .expect("replay schedules");
+        assert!(res.reconfigurations() > 0);
+    });
+
+    // Analytic pricing with a warm memo cache shared across repetitions
+    // (the steady state a long trace reaches almost immediately).
+    let mut warm = AnalyticPricer::ts(cluster.clone(), cost.clone());
+    r.bench("replay/analytic-ts-warm", 5, || {
+        let res = schedule_with_pricer(
+            &cluster,
+            AllocPolicy::WholeNodes,
+            SchedPolicy::Malleable,
+            &mut warm,
+            &jobs,
+        )
+        .expect("replay schedules");
+        assert!(res.makespan > 0.0);
+    });
+
+    // Raw cold-query cost: one paper-scale expansion pair per call.
+    r.bench("pricer/cold-expand-2to32", 10, || {
+        let mut p = AnalyticPricer::ts(cluster.clone(), cost.clone());
+        let secs = p.expand_seconds(2, 32).expect("pair prices");
+        assert!(secs > 0.0);
+    });
+
+    r.finish();
+}

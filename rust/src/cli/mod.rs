@@ -432,37 +432,80 @@ fn cmd_workload(a: &Args) -> Result<()> {
         bail!("--json needs --out DIR (JSON is written next to the CSVs)");
     }
     let threads = a.usize_or("threads", sweep::default_threads())?;
-    let costs = if a.get("cost-from-sweep").is_some() {
-        let reps = a.usize_or("calib-reps", 3)?;
-        eprintln!(
-            "calibrating TS/SS cost models on '{}' via the sweep engine ({} reps)...",
-            kind.name(),
-            reps
-        );
-        wsweep::calibrated_costs(kind, reps, seed, threads)?
-    } else {
-        wsweep::default_costs()
+
+    // The pricing axis: scalar (two fitted constants per arm), analytic
+    // (exact per-event prices from the closed-form engine), or both
+    // side-by-side.
+    let pricing = a.get("pricing").unwrap_or("scalar");
+    let (scalar_arm, analytic_arm) = match pricing {
+        "scalar" => (true, false),
+        "analytic" => (false, true),
+        "both" => (true, true),
+        other => bail!("unknown pricing '{other}' (scalar | analytic | both)"),
     };
-    for c in &costs {
-        eprintln!(
-            "cost model {}: expand {:.6}s, shrink {:.6}s",
-            c.label, c.model.expand_cost, c.model.shrink_cost
-        );
+    let strategy = match a.get("strategy") {
+        Some(s) => Some(SpawnStrategy::parse(s).with_context(|| {
+            format!("unknown strategy '{s}' (plain|single|nodebynode|hypercube|diffusive)")
+        })?),
+        None => None,
+    };
+    if strategy.is_some() && !analytic_arm {
+        bail!("--strategy only affects analytic pricing (use --pricing analytic|both)");
+    }
+    if a.get("cost-from-sweep").is_some() && !scalar_arm {
+        bail!("--cost-from-sweep only affects scalar pricing (use --pricing scalar|both)");
+    }
+    let data_bytes = a.usize_or("data-bytes", 0)? as u64;
+    if data_bytes > 0 && !analytic_arm {
+        bail!("--data-bytes only affects analytic pricing (use --pricing analytic|both)");
+    }
+    let mut pricers: Vec<wsweep::PricerSpec> = Vec::new();
+    if scalar_arm {
+        let costs = if a.get("cost-from-sweep").is_some() {
+            let reps = a.usize_or("calib-reps", 3)?;
+            eprintln!(
+                "calibrating TS/SS cost models on '{}' via the sweep engine ({} reps)...",
+                kind.name(),
+                reps
+            );
+            wsweep::calibrated_costs(kind, reps, seed, threads)?
+        } else {
+            wsweep::default_costs()
+        };
+        for c in &costs {
+            eprintln!(
+                "pricing {} (scalar): expand {:.6}s, shrink {:.6}s",
+                c.label, c.model.expand_cost, c.model.shrink_cost
+            );
+        }
+        pricers.extend(wsweep::scalar_pricers(&costs));
+    }
+    if analytic_arm {
+        let cost = wsweep::kind_cost_model(kind);
+        let arms = wsweep::analytic_pricers(&cost, strategy, data_bytes);
+        for p in &arms {
+            eprintln!(
+                "pricing {} (analytic): exact per-event prices on '{}', memoized per node pair",
+                p.label,
+                cluster.name
+            );
+        }
+        pricers.extend(arms);
     }
 
     let matrix = WorkloadMatrix {
         cluster,
         alloc,
         policies,
-        costs,
+        pricers,
         workloads: vec![WorkloadSpec { label, jobs }],
     };
     eprintln!(
-        "workload: {} jobs x {} polic{} x {} cost model(s) on {} nodes, {} thread(s)",
+        "workload: {} jobs x {} polic{} x {} pricing arm(s) on {} nodes, {} thread(s)",
         matrix.workloads[0].jobs.len(),
         matrix.policies.len(),
         if matrix.policies.len() == 1 { "y" } else { "ies" },
-        matrix.costs.len(),
+        matrix.pricers.len(),
         total_nodes,
         threads,
     );
@@ -545,6 +588,9 @@ USAGE:
   paraspawn workload [--cluster mn5|nasp|mini] [--nodes N] [--jobs J]
                      [--seed S] [--malleable-frac F]
                      [--policy fcfs|easy|malleable|all]
+                     [--pricing scalar|analytic|both]
+                     [--strategy plain|single|nodebynode|hypercube|diffusive]
+                     [--data-bytes B]
                      [--trace FILE.swf] [--save-trace FILE.swf]
                      [--cost-from-sweep] [--calib-reps K]
                      [--threads T] [--out DIR] [--json]
@@ -554,6 +600,12 @@ USAGE:
 The analytic engine (--engine analytic) evaluates the closed-form model
 (mam::model): bit-identical to the simulator under deterministic cost
 models, and fast enough for full 112-core paper grids in milliseconds.
+
+Workload pricing (--pricing): 'scalar' charges every resize from two
+fitted constants per arm (TS/SS); 'analytic' prices each individual
+resize exactly per (strategy, method, pre -> post nodes, cluster shape)
+through the closed-form engine, memoized per node pair — SWF traces
+with thousands of jobs replay with exact prices at scalar speed.
 ";
 
 /// Binary entry point.

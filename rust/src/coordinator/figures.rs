@@ -2,7 +2,11 @@
 //! paper's evaluation (§5). Each returns a [`Table`] (CSV/ASCII) with the
 //! same rows/series the paper reports, plus [`headline_summary`] checking
 //! the headline ratios (expansion overhead, shrink speedups, Merge-win
-//! percentages).
+//! percentages). The workload figure
+//! ([`crate::coordinator::wsweep::fig_workload`], `--fig workload`) runs
+//! the policy grid under four pricing arms: sweep-calibrated scalar
+//! TS/SS cost models next to the exact analytic per-event pricers
+//! (`TS-exact`/`SS-exact`).
 
 use super::sweep::{run_matrix_engine, ClusterKind, Engine, ScenarioMatrix};
 use crate::util::csvout::{fmt_time, Table};

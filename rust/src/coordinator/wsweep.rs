@@ -1,13 +1,22 @@
-//! Workload-level sweeps: policy × cost-model × workload grids over the
+//! Workload-level sweeps: policy × pricing × workload grids over the
 //! batch scheduler ([`crate::rms::sched`]), executed on the same thread
 //! pool as the reconfiguration sweeps ([`super::sweep::parallel_map`]).
 //!
-//! This closes the loop from microbenchmark to makespan: the spawn-
-//! strategy medians the sweep engine measures (Merge/TS vs the
-//! spawn-based SS baseline) become [`ReconfigCostModel`]s
-//! ([`calibrated_costs`]), and the scheduler turns the 1387×/20× cheaper
-//! TS shrinks into workload-level makespan and mean-wait wins — the
-//! paper's §1 motivation, measured instead of asserted.
+//! This closes the loop from microbenchmark to makespan along two
+//! pricing arms ([`PricerSpec`]):
+//!
+//! * **Scalar** — the spawn-strategy medians the sweep engine measures
+//!   (Merge/TS vs the spawn-based SS baseline) become
+//!   [`ReconfigCostModel`]s ([`calibrated_costs`]): two fitted constants
+//!   per arm, blind to node counts.
+//! * **Analytic** — every individual resize is priced exactly by the
+//!   closed-form engine ([`crate::rms::sched::AnalyticPricer`] over
+//!   [`crate::mam::model::predict_resize_pair`]), per (strategy, method,
+//!   `pre -> post` node pair, cluster shape), memoized per pair.
+//!
+//! Either way the scheduler turns the 1387×/20× cheaper TS shrinks into
+//! workload-level makespan and mean-wait wins — the paper's §1
+//! motivation, measured instead of asserted.
 //!
 //! Because every scheduler cell is a deterministic simulation and
 //! results are reassembled in task order, a workload sweep is
@@ -16,7 +25,11 @@
 
 use super::figures::FigureConfig;
 use super::sweep::{parallel_map, ClusterKind, Engine, ScenarioMatrix};
-use crate::rms::sched::{schedule, SchedPolicy, SchedResult};
+use crate::config::CostModel;
+use crate::mam::SpawnStrategy;
+use crate::rms::sched::{
+    schedule_with_pricer, AnalyticPricer, ResizePricer, SchedPolicy, SchedResult, ShrinkPricing,
+};
 use crate::rms::workload::{synthetic_workload, JobSpec, ReconfigCostModel};
 use crate::rms::AllocPolicy;
 use crate::topology::Cluster;
@@ -33,6 +46,92 @@ pub struct CostSpec {
     pub model: ReconfigCostModel,
 }
 
+/// How one pricing arm of a workload matrix prices reconfigurations.
+#[derive(Clone, Debug)]
+pub enum Pricing {
+    /// Two fitted scalar constants (the pre-pricing-axis behavior).
+    Scalar(ReconfigCostModel),
+    /// Exact per-event analytic pricing on the matrix's cluster.
+    Analytic {
+        /// The calibrated per-phase cost model (e.g. [`CostModel::mn5`]).
+        cost: CostModel,
+        /// Spawn strategy for expansions (and SS respawn shrinks);
+        /// `None` picks the widest applicable strategy for the cluster
+        /// ([`AnalyticPricer::auto_strategy`]).
+        strategy: Option<SpawnStrategy>,
+        /// TS (termination) vs SS (respawn) shrink pricing.
+        shrink: ShrinkPricing,
+        /// Application payload redistributed per resize.
+        data_bytes: u64,
+    },
+}
+
+/// A labelled pricing arm (e.g. `"TS"` scalar, `"TS-exact"` analytic).
+#[derive(Clone, Debug)]
+pub struct PricerSpec {
+    pub label: String,
+    pub pricing: Pricing,
+}
+
+impl PricerSpec {
+    /// A scalar arm from a labelled cost model.
+    pub fn scalar(label: impl Into<String>, model: ReconfigCostModel) -> PricerSpec {
+        PricerSpec { label: label.into(), pricing: Pricing::Scalar(model) }
+    }
+
+    /// Instantiate the pricer for one scheduler cell on `cluster`. Each
+    /// cell builds its own pricer, so the memo cache warms per cell and
+    /// the cells stay embarrassingly parallel.
+    pub fn build(&self, cluster: &Cluster) -> Box<dyn ResizePricer> {
+        match &self.pricing {
+            Pricing::Scalar(model) => Box::new(*model),
+            Pricing::Analytic { cost, strategy, shrink, data_bytes } => {
+                let strategy = strategy.unwrap_or_else(|| AnalyticPricer::auto_strategy(cluster));
+                Box::new(AnalyticPricer::new(
+                    cluster.clone(),
+                    cost.clone(),
+                    strategy,
+                    *shrink,
+                    *data_bytes,
+                ))
+            }
+        }
+    }
+}
+
+/// Scalar pricing arms from labelled cost models (e.g. the calibrated
+/// TS/SS pair).
+pub fn scalar_pricers(costs: &[CostSpec]) -> Vec<PricerSpec> {
+    costs.iter().map(|c| PricerSpec::scalar(c.label.clone(), c.model)).collect()
+}
+
+/// The analytic pricing arms: exact TS ("TS-exact") and SS ("SS-exact")
+/// per-event pricing under `cost`, with an optional spawn-strategy
+/// override (default: widest applicable for the cell's cluster).
+pub fn analytic_pricers(
+    cost: &CostModel,
+    strategy: Option<SpawnStrategy>,
+    data_bytes: u64,
+) -> Vec<PricerSpec> {
+    let arm = |label: &str, shrink: ShrinkPricing| PricerSpec {
+        label: label.to_string(),
+        pricing: Pricing::Analytic { cost: cost.clone(), strategy, shrink, data_bytes },
+    };
+    vec![
+        arm("TS-exact", ShrinkPricing::Termination),
+        arm("SS-exact", ShrinkPricing::Respawn),
+    ]
+}
+
+/// The per-phase [`CostModel`] the paper calibrates for a cluster kind
+/// (the mini test cluster prices like MN5 hardware).
+pub fn kind_cost_model(kind: ClusterKind) -> CostModel {
+    match kind {
+        ClusterKind::Nasp => CostModel::nasp(),
+        _ => CostModel::mn5(),
+    }
+}
+
 /// A labelled job list.
 #[derive(Clone, Debug)]
 pub struct WorkloadSpec {
@@ -40,32 +139,32 @@ pub struct WorkloadSpec {
     pub jobs: Vec<JobSpec>,
 }
 
-/// A declarative workload sweep: every policy × cost × workload cell
+/// A declarative workload sweep: every policy × pricing × workload cell
 /// runs the batch scheduler once on `cluster`.
 #[derive(Clone, Debug)]
 pub struct WorkloadMatrix {
     pub cluster: Cluster,
     pub alloc: AllocPolicy,
     pub policies: Vec<SchedPolicy>,
-    pub costs: Vec<CostSpec>,
+    pub pricers: Vec<PricerSpec>,
     pub workloads: Vec<WorkloadSpec>,
 }
 
 impl WorkloadMatrix {
-    /// An empty matrix (all three policies, no costs/workloads yet) on
+    /// An empty matrix (all three policies, no pricers/workloads yet) on
     /// the named cluster kind.
     pub fn for_kind(kind: ClusterKind) -> WorkloadMatrix {
         WorkloadMatrix {
             cluster: kind.cluster(),
             alloc: kind.alloc_policy(),
             policies: SchedPolicy::ALL.to_vec(),
-            costs: Vec::new(),
+            pricers: Vec::new(),
             workloads: Vec::new(),
         }
     }
 
     pub fn len(&self) -> usize {
-        self.policies.len() * self.costs.len() * self.workloads.len()
+        self.policies.len() * self.pricers.len() * self.workloads.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -73,7 +172,7 @@ impl WorkloadMatrix {
     }
 }
 
-/// Cell identity: `(workload, policy, cost)` labels.
+/// Cell identity: `(workload, policy, pricing)` labels.
 pub type WorkloadKey = (String, String, String);
 
 /// Results of a workload sweep, keyed deterministically.
@@ -85,12 +184,12 @@ pub struct WorkloadResults {
 impl WorkloadResults {
     /// One row per cell: makespan/wait/turnaround plus the reconfig and
     /// node-second accounting, and makespan relative to the same
-    /// workload's FCFS cell under the same cost model (when present).
+    /// workload's FCFS cell under the same pricing arm (when present).
     pub fn summary_table(&self) -> Table {
         let mut t = Table::new(vec![
             "workload",
             "policy",
-            "cost_model",
+            "pricing",
             "makespan_s",
             "mean_wait_s",
             "max_wait_s",
@@ -132,7 +231,7 @@ impl WorkloadResults {
         let mut t = Table::new(vec![
             "workload",
             "policy",
-            "cost_model",
+            "pricing",
             "job",
             "start_s",
             "finish_s",
@@ -171,29 +270,32 @@ impl WorkloadResults {
 
 /// Run a workload matrix on `threads` worker threads. Cells are
 /// reassembled in task order, so the result is identical for any thread
-/// count.
+/// count (each cell instantiates its own pricer, so analytic memo
+/// caches never cross threads).
 pub fn run_workload_matrix(matrix: &WorkloadMatrix, threads: usize) -> Result<WorkloadResults> {
     let cluster = &matrix.cluster;
     let alloc = matrix.alloc;
-    let mut tasks: Vec<(WorkloadKey, &WorkloadSpec, SchedPolicy, ReconfigCostModel)> = Vec::new();
+    let mut tasks: Vec<(WorkloadKey, &WorkloadSpec, SchedPolicy, &PricerSpec)> = Vec::new();
     for w in &matrix.workloads {
         for &p in &matrix.policies {
-            for c in &matrix.costs {
+            for spec in &matrix.pricers {
                 tasks.push((
-                    (w.label.clone(), p.name().to_string(), c.label.clone()),
+                    (w.label.clone(), p.name().to_string(), spec.label.clone()),
                     w,
                     p,
-                    c.model,
+                    spec,
                 ));
             }
         }
     }
-    let results = parallel_map(&tasks, threads, |(_, w, p, c)| {
-        schedule(cluster, alloc, *p, *c, &w.jobs).map_err(|e| anyhow!("{e}"))
+    let results = parallel_map(&tasks, threads, |(_, w, p, spec)| {
+        let mut pricer = spec.build(cluster);
+        schedule_with_pricer(cluster, alloc, *p, pricer.as_mut(), &w.jobs)
+            .map_err(|e| anyhow!("{e}"))
     })
     .map_err(|(idx, e)| {
         let (w, p, c) = &tasks[idx].0;
-        anyhow!("workload cell failed (workload {w}, policy {p}, costs {c}): {e:#}")
+        anyhow!("workload cell failed (workload {w}, policy {p}, pricing {c}): {e:#}")
     })?;
     let mut out = WorkloadResults::default();
     for ((key, ..), r) in tasks.iter().zip(results) {
@@ -289,14 +391,24 @@ pub fn default_costs() -> Vec<CostSpec> {
     ]
 }
 
+/// [`default_costs`] as scalar pricing arms.
+pub fn default_pricers() -> Vec<PricerSpec> {
+    scalar_pricers(&default_costs())
+}
+
 /// The workload figure: makespan / mean-wait across the three policies
-/// and the TS/SS cost models on synthetic workloads, with costs
-/// calibrated from the sweep engine. The malleability-aware policy with
-/// TS costs is the paper's pitch; FCFS is the rigid baseline.
+/// and four pricing arms — the sweep-calibrated scalar TS/SS cost
+/// models next to the exact analytic TS/SS per-event pricers — on
+/// synthetic workloads. The malleability-aware policy with TS pricing
+/// is the paper's pitch; FCFS is the rigid baseline, and the
+/// scalar-vs-exact columns show what per-event pricing changes at
+/// workload scale.
 pub fn fig_workload(cfg: &FigureConfig) -> Result<(Table, WorkloadResults)> {
     let kind = ClusterKind::Mn5;
     let total_nodes = kind.cluster().len();
     let costs = calibrated_costs_engine(kind, cfg.reps, cfg.seed, cfg.threads, cfg.engine)?;
+    let mut pricers = scalar_pricers(&costs);
+    pricers.extend(analytic_pricers(&kind_cost_model(kind), None, 0));
     let workloads = vec![
         WorkloadSpec {
             label: "synthetic-a".to_string(),
@@ -307,7 +419,7 @@ pub fn fig_workload(cfg: &FigureConfig) -> Result<(Table, WorkloadResults)> {
             jobs: synthetic_workload(40, total_nodes, 0.6, cfg.seed.wrapping_add(7919)),
         },
     ];
-    let matrix = WorkloadMatrix { costs, workloads, ..WorkloadMatrix::for_kind(kind) };
+    let matrix = WorkloadMatrix { pricers, workloads, ..WorkloadMatrix::for_kind(kind) };
     let results = run_workload_matrix(&matrix, cfg.threads)?;
     Ok((results.summary_table(), results))
 }
@@ -318,7 +430,7 @@ mod tests {
 
     fn tiny_matrix() -> WorkloadMatrix {
         WorkloadMatrix {
-            costs: default_costs(),
+            pricers: default_pricers(),
             workloads: vec![WorkloadSpec {
                 label: "w".to_string(),
                 jobs: synthetic_workload(15, 8, 0.6, 3),
@@ -364,6 +476,29 @@ mod tests {
         let msg = format!("{err}");
         assert!(msg.contains("workload w"), "unexpected: {msg}");
         assert!(msg.contains("unschedulable"), "unexpected: {msg}");
+    }
+
+    #[test]
+    fn analytic_arm_runs_and_conserves_node_seconds() {
+        // Both analytic arms run a malleable workload end-to-end on the
+        // mini cluster; every cell keeps the conservation invariant
+        // (work + reconfig + idle == nodes * makespan) and reconfigures
+        // at least once (the per-event pricer is actually exercised).
+        let mut m = tiny_matrix();
+        m.pricers = analytic_pricers(&kind_cost_model(ClusterKind::Mini), None, 0);
+        m.policies = vec![SchedPolicy::Malleable];
+        let r = run_workload_matrix(&m, 2).unwrap();
+        assert_eq!(r.cells.len(), 2);
+        for ((_, _, pricing), cell) in &r.cells {
+            let lhs =
+                cell.work_node_seconds + cell.reconfig_node_seconds + cell.idle_node_seconds;
+            let rhs = cell.total_node_seconds;
+            assert!(
+                (lhs - rhs).abs() < 1e-6 * rhs.max(1.0),
+                "{pricing}: node-seconds not conserved ({lhs} vs {rhs})"
+            );
+            assert!(cell.reconfigurations() > 0, "{pricing}: no reconfigurations priced");
+        }
     }
 
     #[test]

@@ -64,15 +64,21 @@
 //! node pool (node-type balance and fragmentation are modeled, not just
 //! counts) under three pluggable policies — FCFS, EASY backfilling, and
 //! a malleability-aware policy that shrinks malleable jobs to admit
-//! queued work and expands them into idle nodes. Per-reconfiguration
-//! costs come from [`rms::workload::ReconfigCostModel`]s that
+//! queued work and expands them into idle nodes. Reconfigurations are
+//! priced through the [`rms::sched::ResizePricer`] axis: either scalar
+//! [`rms::workload::ReconfigCostModel`]s that
 //! [`coordinator::wsweep::calibrated_costs`] derives from the sweep
-//! engine's spawn-strategy medians (Merge/TS vs SS), so the 1387×/20×
-//! cheaper TS shrinks are *measured* into workload-level makespan and
-//! mean-wait wins. [`coordinator::wsweep`] runs policy × cost-model ×
-//! workload grids on the sweep thread pool (bit-identical for any thread
-//! count) with CSV/JSON output; `paraspawn workload` exposes it with
-//! synthetic workloads or SWF-style trace files
+//! engine's spawn-strategy medians (Merge/TS vs SS), or the
+//! [`rms::sched::AnalyticPricer`], which prices every individual resize
+//! exactly per (strategy, method, `pre -> post` node pair, cluster
+//! shape) through [`mam::model::predict_resize_pair`] with a memoized
+//! pair cache — so the 1387×/20× cheaper TS shrinks are *measured* into
+//! workload-level makespan and mean-wait wins, and multi-thousand-job
+//! SWF traces replay with exact per-event prices
+//! (`examples/trace_replay.rs`). [`coordinator::wsweep`] runs policy ×
+//! pricing × workload grids on the sweep thread pool (bit-identical for
+//! any thread count) with CSV/JSON output; `paraspawn workload` exposes
+//! it with synthetic workloads or SWF-style trace files
 //! ([`rms::sched::read_swf`]).
 //! * **L2/L1 (build-time Python)** — the application compute (Monte-Carlo
 //!   π, a tiled-matmul workload) and a batched strategy-cost model,

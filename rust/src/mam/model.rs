@@ -1083,6 +1083,72 @@ pub fn predict_resize_time(
     Ok(rec.total())
 }
 
+/// The canonical [`Plan`] of a whole-node resize between `pre` and
+/// `post` nodes of `cluster`: nodes `0..max(pre, post)` in id order,
+/// every participating node filled to its core count. Expansions keep
+/// the first `pre` nodes as sources and spawn the difference; shrinks
+/// keep the first `post` nodes as the target layout — for Merge shrinks
+/// this is the TS/ZS termination path, for Baseline it is a spawn-based
+/// respawn of the surviving layout (the SS pricing of the paper's
+/// motivation).
+///
+/// This is the plan shape the batch scheduler's analytic pricer
+/// ([`crate::rms::sched::AnalyticPricer`]) asks about: the scheduler
+/// tracks allocations only by node count, so the pair `(pre, post)`
+/// plus the cluster shape identifies the resize.
+pub fn resize_pair_plan(
+    cluster: &Cluster,
+    method: Method,
+    strategy: SpawnStrategy,
+    pre: usize,
+    post: usize,
+) -> Result<Plan> {
+    if pre == 0 || post == 0 {
+        bail!("resize pair {pre} -> {post}: node counts must be positive");
+    }
+    if pre == post {
+        bail!("resize pair {pre} -> {post} has nothing to reconfigure");
+    }
+    let n = pre.max(post);
+    if n > cluster.len() {
+        bail!(
+            "resize pair {pre} -> {post} needs {n} nodes but cluster '{}' has {}",
+            cluster.name,
+            cluster.len()
+        );
+    }
+    let nodes: Vec<NodeId> = (0..n).collect();
+    let cores: Vec<u32> = nodes.iter().map(|&id| cluster.cores(id)).collect();
+    let keep = pre.min(post);
+    let occupied = |upto: usize| -> Vec<u32> {
+        cores.iter().enumerate().map(|(i, &c)| if i < upto { c } else { 0 }).collect()
+    };
+    let (a, r) = if post > pre {
+        (cores.clone(), occupied(keep))
+    } else {
+        (occupied(keep), cores.clone())
+    };
+    Ok(Plan::new(0, method, strategy, nodes, a, r))
+}
+
+/// [`predict_resize_time`] for a whole-node `(pre, post)` pair: build
+/// the canonical [`resize_pair_plan`] and evaluate it. This is the
+/// cheap per-event query the workload scheduler prices reconfigurations
+/// with — thousands of evaluations per second, so a multi-thousand-job
+/// SWF replay can price every individual resize exactly.
+pub fn predict_resize_pair(
+    cluster: &Cluster,
+    cost: &CostModel,
+    method: Method,
+    strategy: SpawnStrategy,
+    pre: usize,
+    post: usize,
+    data_bytes: u64,
+) -> Result<f64> {
+    let plan = resize_pair_plan(cluster, method, strategy, pre, post)?;
+    predict_resize_time(cluster, cost, &plan, data_bytes)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1245,6 +1311,81 @@ mod tests {
         assert_eq!(r1.total(), r2.total());
         assert_eq!(r1.jitter_frac, 0.03);
         assert_eq!(r2.jitter_frac, 0.0);
+    }
+
+    #[test]
+    fn resize_pair_plan_shapes_expansions_and_shrinks() {
+        let c = Cluster::mini(8, 4);
+        let grow =
+            resize_pair_plan(&c, Method::Merge, SpawnStrategy::ParallelHypercube, 2, 6).unwrap();
+        assert_eq!(grow.nodes.len(), 6);
+        assert_eq!(grow.a, vec![4; 6]);
+        assert_eq!(grow.r, vec![4, 4, 0, 0, 0, 0]);
+        assert_eq!(grow.spawn_total(), 16);
+
+        let ts = resize_pair_plan(&c, Method::Merge, SpawnStrategy::Plain, 6, 2).unwrap();
+        assert_eq!(ts.nodes.len(), 6);
+        assert_eq!(ts.a, vec![4, 4, 0, 0, 0, 0]);
+        assert_eq!(ts.r, vec![4; 6]);
+        assert_eq!(ts.spawn_total(), 0);
+
+        let ss =
+            resize_pair_plan(&c, Method::Baseline, SpawnStrategy::ParallelHypercube, 6, 2).unwrap();
+        // Baseline respawns the surviving layout (S = A).
+        assert_eq!(ss.spawn_total(), 8);
+
+        assert!(resize_pair_plan(&c, Method::Merge, SpawnStrategy::Plain, 4, 4).is_err());
+        assert!(resize_pair_plan(&c, Method::Merge, SpawnStrategy::Plain, 0, 4).is_err());
+        assert!(resize_pair_plan(&c, Method::Merge, SpawnStrategy::Plain, 1, 9).is_err());
+    }
+
+    #[test]
+    fn predict_resize_pair_reproduces_the_ts_vs_ss_gap() {
+        let c = Cluster::mini(8, 4);
+        let cost = CostModel::mn5();
+        let ts = predict_resize_pair(&c, &cost, Method::Merge, SpawnStrategy::Plain, 6, 2, 0)
+            .unwrap();
+        let ss = predict_resize_pair(
+            &c,
+            &cost,
+            Method::Baseline,
+            SpawnStrategy::ParallelHypercube,
+            6,
+            2,
+            0,
+        )
+        .unwrap();
+        assert!(ts > 0.0 && ss > 0.0);
+        assert!(ss / ts > 10.0, "SS shrink {ss} vs TS shrink {ts} not far apart");
+    }
+
+    #[test]
+    fn predict_resize_pair_handles_heterogeneous_clusters_via_diffusive() {
+        // NASP mixes 20- and 32-core nodes: the hypercube strategy must
+        // refuse while the diffusive strategy prices the pair.
+        let c = Cluster::nasp();
+        let cost = CostModel::nasp();
+        let id = predict_resize_pair(
+            &c,
+            &cost,
+            Method::Merge,
+            SpawnStrategy::ParallelDiffusive,
+            2,
+            10,
+            0,
+        )
+        .unwrap();
+        assert!(id > 0.0);
+        let hc = predict_resize_pair(
+            &c,
+            &cost,
+            Method::Merge,
+            SpawnStrategy::ParallelHypercube,
+            2,
+            10,
+            0,
+        );
+        assert!(hc.is_err());
     }
 
     #[test]

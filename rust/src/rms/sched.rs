@@ -13,18 +13,36 @@
 //!   reconfiguration (the paper's DRM motivation, §1). Malleable running
 //!   jobs are shrunk toward `min_nodes` to admit queued work and expanded
 //!   into idle nodes when the queue drains, paying per-reconfiguration
-//!   costs from a [`ReconfigCostModel`] — typically calibrated with the
-//!   spawn-strategy medians the sweep engine measures
-//!   ([`crate::coordinator::wsweep::calibrated_costs`]), closing the loop
-//!   from the paper's microbenchmarks to workload-level makespan.
+//!   costs from the pricing axis ([`ResizePricer`]) — either a scalar
+//!   [`ReconfigCostModel`] calibrated with the spawn-strategy medians
+//!   the sweep engine measures
+//!   ([`crate::coordinator::wsweep::calibrated_costs`]) or the exact
+//!   per-event [`AnalyticPricer`], closing the loop from the paper's
+//!   microbenchmarks to workload-level makespan.
 //!
-//! Reconfiguration charging: a resize between `a` and `b` nodes stalls
-//! every participating process for the cost duration, adding
-//! `cost * max(a, b)` node-seconds to the job's remaining work — the same
-//! resize is priced identically in both directions (see
-//! [`ReconfigCostModel`]).
+//! Reconfiguration charging — the *pricing axis*: every resize is priced
+//! by a [`ResizePricer`], which returns the seconds of stall each
+//! participating process pays; the scheduler charges
+//! `seconds * max(a, b)` node-seconds for a resize between `a` and `b`
+//! nodes — the *participant count* is direction-symmetric (every
+//! pre-shrink process synchronizes before terminating, and every
+//! post-expansion process synchronizes before resuming). The stall
+//! seconds themselves need not be: the scalar pricer charges one
+//! constant per direction, while the analytic pricer prices an
+//! expansion (a spawn protocol) very differently from a TS shrink (pure
+//! termination — the paper's 1387×/20× gap). Two pricers ship:
 //!
-//! The scheduler is deterministic: same cluster, policy, costs and job
+//! * [`ReconfigCostModel`] — the scalar pricer: two fitted constants
+//!   (expand/shrink seconds), blind to node counts and cluster shape.
+//!   [`schedule`] keeps this backward-compatible signature.
+//! * [`AnalyticPricer`] — exact per-event pricing from the closed-form
+//!   reconfiguration engine ([`crate::mam::model::predict_resize_pair`]):
+//!   each `(strategy, method, pre -> post, cluster shape)` resize is
+//!   evaluated analytically and memoized per `(pre, post)` pair, so
+//!   month-long multi-thousand-job SWF traces replay with exact prices
+//!   at scalar-pricer speed ([`schedule_with_pricer`]).
+//!
+//! The scheduler is deterministic: same cluster, policy, pricer and job
 //! list in, bit-identical [`SchedResult`] out. Node-seconds are conserved:
 //! `work + reconfig + idle == total_nodes * makespan` (tested in
 //! `rust/tests/sched.rs`).
@@ -36,9 +54,12 @@
 
 use super::workload::{validate_jobs, JobSpec, ReconfigCostModel, WorkloadError};
 use super::{AllocPolicy, Allocation, Rms};
+use crate::config::CostModel;
+use crate::mam::model::predict_resize_pair;
+use crate::mam::{Method, SpawnStrategy};
 use crate::topology::Cluster;
 use crate::util::rng::Rng;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 /// Work considered zero (simulation epsilon, matches `rms::workload`).
 const EPS_WORK: f64 = 1e-9;
@@ -75,6 +96,175 @@ impl SchedPolicy {
             "malleable" | "drm" => Some(SchedPolicy::Malleable),
             _ => None,
         }
+    }
+}
+
+/// The pricing axis: how many seconds of stall a reconfiguration costs
+/// every participating process. The scheduler multiplies the returned
+/// seconds by the participating node count (`max(pre, post)`) to charge
+/// node-seconds, so pricers deal purely in per-process stall time.
+///
+/// Methods take `&mut self` so implementations can memoize: the
+/// [`AnalyticPricer`] answers repeated `(pre, post)` queries from a
+/// cache, which is what keeps multi-thousand-job SWF replays fast.
+/// Errors are returned as strings and surface from the scheduler as
+/// [`WorkloadError::Pricing`] — a pricer must never panic mid-trace.
+pub trait ResizePricer {
+    /// Stall seconds per process for an expansion `pre -> post` nodes.
+    fn expand_seconds(&mut self, pre: usize, post: usize) -> Result<f64, String>;
+    /// Stall seconds per process for a shrink `pre -> post` nodes.
+    fn shrink_seconds(&mut self, pre: usize, post: usize) -> Result<f64, String>;
+}
+
+/// The scalar pricer: the two fitted [`ReconfigCostModel`] constants,
+/// independent of node counts — the backward-compatible behavior every
+/// pre-pricing-axis caller gets through [`schedule`].
+impl ResizePricer for ReconfigCostModel {
+    fn expand_seconds(&mut self, _pre: usize, _post: usize) -> Result<f64, String> {
+        Ok(self.expand_cost)
+    }
+
+    fn shrink_seconds(&mut self, _pre: usize, _post: usize) -> Result<f64, String> {
+        Ok(self.shrink_cost)
+    }
+}
+
+/// How an [`AnalyticPricer`] prices shrinks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShrinkPricing {
+    /// Merge/TS: terminate whole per-node worlds, no spawning — the
+    /// paper's cheap shrink (requires a prior parallel expansion).
+    Termination,
+    /// Baseline/SS: respawn the surviving layout, i.e. a shrink as
+    /// expensive as an expansion — the spawn-based baseline.
+    Respawn,
+}
+
+/// Exact per-event pricing from the closed-form reconfiguration engine:
+/// every `(pre, post)` resize is evaluated by
+/// [`crate::mam::model::predict_resize_pair`] against the actual cluster
+/// shape (per-node core counts, link topology) under this pricer's
+/// spawn strategy and shrink method, then memoized so a trace touching
+/// the same pair again costs a hash lookup.
+///
+/// The scheduler tracks allocations by node count only, so the pricer
+/// prices the *canonical* resize of that pair: nodes `0..max(pre, post)`
+/// in id order, each filled to its core count. On homogeneous clusters
+/// this is exact; on heterogeneous pools it is the id-ordered
+/// representative of the pair (the allocation's actual node types may
+/// differ — documented approximation).
+#[derive(Clone, Debug)]
+pub struct AnalyticPricer {
+    cluster: Cluster,
+    cost: CostModel,
+    strategy: SpawnStrategy,
+    shrink: ShrinkPricing,
+    data_bytes: u64,
+    expand_cache: HashMap<(usize, usize), f64>,
+    shrink_cache: HashMap<(usize, usize), f64>,
+}
+
+impl AnalyticPricer {
+    pub fn new(
+        cluster: Cluster,
+        cost: CostModel,
+        strategy: SpawnStrategy,
+        shrink: ShrinkPricing,
+        data_bytes: u64,
+    ) -> AnalyticPricer {
+        AnalyticPricer {
+            cluster,
+            cost,
+            strategy,
+            shrink,
+            data_bytes,
+            expand_cache: HashMap::new(),
+            shrink_cache: HashMap::new(),
+        }
+    }
+
+    /// The widest applicable parallel strategy: Hypercube on
+    /// core-homogeneous clusters, Iterative Diffusive otherwise (§5.3:
+    /// the Hypercube cannot spawn correctly on heterogeneous
+    /// allocations).
+    pub fn auto_strategy(cluster: &Cluster) -> SpawnStrategy {
+        if cluster.is_core_homogeneous() {
+            SpawnStrategy::ParallelHypercube
+        } else {
+            SpawnStrategy::ParallelDiffusive
+        }
+    }
+
+    /// TS pricing: parallel Merge expansions, termination-based shrinks.
+    pub fn ts(cluster: Cluster, cost: CostModel) -> AnalyticPricer {
+        let strategy = AnalyticPricer::auto_strategy(&cluster);
+        AnalyticPricer::new(cluster, cost, strategy, ShrinkPricing::Termination, 0)
+    }
+
+    /// SS pricing: parallel Merge expansions, spawn-based (respawn)
+    /// shrinks — the baseline the paper's 1387×/20× ratios are against.
+    pub fn ss(cluster: Cluster, cost: CostModel) -> AnalyticPricer {
+        let strategy = AnalyticPricer::auto_strategy(&cluster);
+        AnalyticPricer::new(cluster, cost, strategy, ShrinkPricing::Respawn, 0)
+    }
+
+    /// Override the memoized expansion price of one `(pre, post)` pair —
+    /// e.g. to splice in a measured value, or to constant-fold the
+    /// pricer to scalar costs for differential testing.
+    pub fn pin_expand(&mut self, pre: usize, post: usize, seconds: f64) {
+        self.expand_cache.insert((pre, post), seconds);
+    }
+
+    /// Override the memoized shrink price of one `(pre, post)` pair.
+    pub fn pin_shrink(&mut self, pre: usize, post: usize, seconds: f64) {
+        self.shrink_cache.insert((pre, post), seconds);
+    }
+
+    /// Distinct resize pairs priced so far (cache occupancy).
+    pub fn cached_pairs(&self) -> usize {
+        self.expand_cache.len() + self.shrink_cache.len()
+    }
+}
+
+impl ResizePricer for AnalyticPricer {
+    fn expand_seconds(&mut self, pre: usize, post: usize) -> Result<f64, String> {
+        if let Some(&s) = self.expand_cache.get(&(pre, post)) {
+            return Ok(s);
+        }
+        let secs = predict_resize_pair(
+            &self.cluster,
+            &self.cost,
+            Method::Merge,
+            self.strategy,
+            pre,
+            post,
+            self.data_bytes,
+        )
+        .map_err(|e| format!("{e:#}"))?;
+        self.expand_cache.insert((pre, post), secs);
+        Ok(secs)
+    }
+
+    fn shrink_seconds(&mut self, pre: usize, post: usize) -> Result<f64, String> {
+        if let Some(&s) = self.shrink_cache.get(&(pre, post)) {
+            return Ok(s);
+        }
+        let method = match self.shrink {
+            ShrinkPricing::Termination => Method::Merge,
+            ShrinkPricing::Respawn => Method::Baseline,
+        };
+        let secs = predict_resize_pair(
+            &self.cluster,
+            &self.cost,
+            method,
+            self.strategy,
+            pre,
+            post,
+            self.data_bytes,
+        )
+        .map_err(|e| format!("{e:#}"))?;
+        self.shrink_cache.insert((pre, post), secs);
+        Ok(secs)
     }
 }
 
@@ -151,7 +341,7 @@ struct Scheduler<'a> {
     rms: Rms,
     alloc_policy: AllocPolicy,
     policy: SchedPolicy,
-    costs: ReconfigCostModel,
+    pricer: &'a mut dyn ResizePricer,
     now: f64,
     queue: VecDeque<usize>,
     running: Vec<Run>,
@@ -164,8 +354,10 @@ struct Scheduler<'a> {
     busy_node_seconds: f64,
 }
 
-/// Schedule `jobs` on `cluster` under `policy`, charging `costs` per
-/// reconfiguration. Jobs are taken in arrival order (ties broken by input
+/// Schedule `jobs` on `cluster` under `policy`, charging the scalar
+/// `costs` per reconfiguration — the backward-compatible entry point,
+/// equivalent to [`schedule_with_pricer`] with the [`ReconfigCostModel`]
+/// pricer. Jobs are taken in arrival order (ties broken by input
 /// index); the returned [`SchedResult::jobs`] is in input order.
 ///
 /// Errors up front ([`WorkloadError`]) if any job can never run — an
@@ -176,6 +368,21 @@ pub fn schedule(
     alloc_policy: AllocPolicy,
     policy: SchedPolicy,
     costs: ReconfigCostModel,
+    jobs: &[JobSpec],
+) -> Result<SchedResult, WorkloadError> {
+    let mut pricer = costs;
+    schedule_with_pricer(cluster, alloc_policy, policy, &mut pricer, jobs)
+}
+
+/// [`schedule`] with an explicit [`ResizePricer`] — the pricing axis.
+/// With the scalar pricer this is bit-identical to [`schedule`]; with an
+/// [`AnalyticPricer`] every reconfiguration event is priced exactly per
+/// `(strategy, method, pre -> post, cluster shape)`.
+pub fn schedule_with_pricer(
+    cluster: &Cluster,
+    alloc_policy: AllocPolicy,
+    policy: SchedPolicy,
+    pricer: &mut dyn ResizePricer,
     jobs: &[JobSpec],
 ) -> Result<SchedResult, WorkloadError> {
     let total_nodes = cluster.len();
@@ -192,7 +399,7 @@ pub fn schedule(
         rms: Rms::new(cluster.clone()),
         alloc_policy,
         policy,
-        costs,
+        pricer,
         now: 0.0,
         queue: VecDeque::new(),
         running: Vec::new(),
@@ -214,7 +421,7 @@ pub fn schedule(
             s.queue.push_back(order[next_arrival]);
             next_arrival += 1;
         }
-        s.scheduling_pass();
+        s.scheduling_pass()?;
 
         // Next event: earliest projected finish or next arrival.
         let next_finish =
@@ -335,7 +542,7 @@ impl Scheduler<'_> {
 
     /// One policy step at the current time. Called whenever the world
     /// changes (arrival, completion) — must be idempotent at fixed state.
-    fn scheduling_pass(&mut self) {
+    fn scheduling_pass(&mut self) -> Result<(), WorkloadError> {
         match self.policy {
             SchedPolicy::Fcfs => self.admit_fifo(),
             SchedPolicy::EasyBackfill => {
@@ -349,7 +556,7 @@ impl Scheduler<'_> {
                 // Shrink malleable runners to make room for the head;
                 // repeat while admissions keep succeeding.
                 while let Some(&head) = self.queue.front() {
-                    if !self.shrink_to_fit(self.jobs[head].min_nodes) {
+                    if !self.shrink_to_fit(self.jobs[head].min_nodes)? {
                         break;
                     }
                     if self.try_start(head) {
@@ -363,10 +570,11 @@ impl Scheduler<'_> {
                     self.backfill();
                 }
                 if self.queue.is_empty() {
-                    self.expand_into_idle();
+                    self.expand_into_idle()?;
                 }
             }
         }
+        Ok(())
     }
 
     /// EASY backfill: compute the head's shadow time (earliest instant
@@ -430,11 +638,21 @@ impl Scheduler<'_> {
     /// heterogeneous pools we keep releasing until the right node types
     /// are free (at least one node per step) and stop the moment the head
     /// fits — a successful return guarantees the subsequent allocation
-    /// succeeds. Charges `shrink_cost * pre_nodes` node-seconds per
+    /// succeeds. Charges `shrink_seconds * pre_nodes` node-seconds per
     /// shrink (every terminating process participates).
-    fn shrink_to_fit(&mut self, need: usize) -> bool {
+    ///
+    /// A pass that can never admit the head must not shrink anybody: the
+    /// full release of every victim's surplus is dry-run on a scratch
+    /// RMS first, and if even that state cannot place the allocation
+    /// (count-short, or type-fragmented under `BalancedTypes`) the pass
+    /// bails up front without charging (regression: victims used to pay
+    /// real reconfiguration cost for shrinks that admitted nothing).
+    /// Conversely, a feasible pass always ends placeable: passes repeat
+    /// while victims still hold surplus, and the incremental releases
+    /// converge on exactly the dry-run pool state.
+    fn shrink_to_fit(&mut self, need: usize) -> Result<bool, WorkloadError> {
         if self.can_place(need) {
-            return true;
+            return Ok(true);
         }
         let mut order: Vec<usize> = (0..self.running.len())
             .filter(|&i| {
@@ -442,6 +660,14 @@ impl Scheduler<'_> {
                 self.jobs[r.job].malleable && r.alloc.n_nodes() > self.jobs[r.job].min_nodes
             })
             .collect();
+        let mut scratch = self.rms.clone();
+        for &i in &order {
+            let r = &self.running[i];
+            scratch.shrink(&r.alloc, self.jobs[r.job].min_nodes);
+        }
+        if scratch.plan_allocation(need, self.alloc_policy).is_err() {
+            return Ok(false); // doomed: bail before anyone pays
+        }
         order.sort_by_key(|&i| {
             let r = &self.running[i];
             (
@@ -449,37 +675,76 @@ impl Scheduler<'_> {
                 r.job,
             )
         });
-        for i in order {
-            let idle = self.idle_count();
-            let r = &mut self.running[i];
-            let pre = r.alloc.n_nodes();
-            let surplus = pre - self.jobs[r.job].min_nodes;
-            // Count-sufficient but type-fragmented pools still need more
-            // releases — free at least one node per step.
-            let give = surplus.min(need.saturating_sub(idle).max(1));
-            r.progress_to(self.now);
-            r.alloc = self.rms.shrink(&r.alloc, pre - give);
-            let charge = self.costs.shrink_cost * pre as f64;
-            r.remaining += charge;
-            self.reconfig_node_seconds += charge;
-            self.shrinks += 1;
-            self.job_reconfigs[r.job] += 1;
+        loop {
+            let mut progressed = false;
+            for &i in &order {
+                if self.can_place(need) {
+                    return Ok(true);
+                }
+                let idle = self.idle_count();
+                let (job, pre) = {
+                    let r = &self.running[i];
+                    (r.job, r.alloc.n_nodes())
+                };
+                let surplus = pre - self.jobs[job].min_nodes;
+                if surplus == 0 {
+                    continue;
+                }
+                // While the idle count is still short, release just the
+                // deficit. A count-sufficient but type-fragmented pool
+                // (`BalancedTypes`) instead releases the victim's whole
+                // surplus as ONE priced event — never a chain of
+                // single-node shrinks that would charge one logical
+                // resize several times over.
+                let deficit = need.saturating_sub(idle);
+                let give = if deficit == 0 { surplus } else { surplus.min(deficit) };
+                let post = pre - give;
+                let secs = self
+                    .pricer
+                    .shrink_seconds(pre, post)
+                    .map_err(|reason| WorkloadError::Pricing { job, pre, post, reason })?;
+                let r = &mut self.running[i];
+                r.progress_to(self.now);
+                r.alloc = self.rms.shrink(&r.alloc, post);
+                let charge = secs * pre as f64;
+                r.remaining += charge;
+                self.reconfig_node_seconds += charge;
+                self.shrinks += 1;
+                self.job_reconfigs[job] += 1;
+                progressed = true;
+            }
             if self.can_place(need) {
-                return true;
+                return Ok(true);
+            }
+            if !progressed {
+                // Every victim fully released yet still unplaceable —
+                // unreachable given the dry-run guard, kept defensive.
+                return Ok(false);
             }
         }
-        self.can_place(need)
     }
 
     /// Expand malleable running jobs into idle nodes (start order, i.e.
-    /// oldest first — deterministic), up to `max_nodes`, charging
-    /// `expand_cost * post_nodes` node-seconds per expansion (existing
+    /// oldest first: recorded start time, ties by job id —
+    /// deterministic), up to `max_nodes`, charging
+    /// `expand_seconds * post_nodes` node-seconds per expansion (existing
     /// plus spawned processes all participate).
-    fn expand_into_idle(&mut self) {
-        // Indexed loop: the body needs `&mut self.rms` alongside the
-        // current `Run`, which an `iter_mut` borrow would forbid.
-        #[allow(clippy::needless_range_loop)]
-        for i in 0..self.running.len() {
+    ///
+    /// The `running` vector is *admission* order, which diverges from
+    /// start order when several queued jobs are admitted at the same
+    /// instant (e.g. after a mid-trace completion frees the cluster):
+    /// the queue hands them over in arrival order, not job-id order, so
+    /// iterating the vector directly would hand the idle nodes to
+    /// whichever beneficiary happened to be queued first. Sorting by the
+    /// recorded start times pins the documented order (regression-tested
+    /// in `expansion_beneficiaries_follow_start_order`).
+    fn expand_into_idle(&mut self) -> Result<(), WorkloadError> {
+        let mut order: Vec<usize> = (0..self.running.len()).collect();
+        order.sort_by(|&x, &y| {
+            let (jx, jy) = (self.running[x].job, self.running[y].job);
+            self.starts[jx].total_cmp(&self.starts[jy]).then(jx.cmp(&jy))
+        });
+        for i in order {
             let idle = self.idle_count();
             if idle == 0 {
                 break;
@@ -495,13 +760,17 @@ impl Scheduler<'_> {
             if want <= cur {
                 continue;
             }
-            let r = &mut self.running[i];
-            match self.rms.grow(&r.alloc, want, self.alloc_policy) {
+            match self.rms.grow(&self.running[i].alloc, want, self.alloc_policy) {
                 Ok(alloc) => {
+                    let post = alloc.n_nodes();
+                    let secs = self
+                        .pricer
+                        .expand_seconds(cur, post)
+                        .map_err(|reason| WorkloadError::Pricing { job, pre: cur, post, reason })?;
+                    let r = &mut self.running[i];
                     r.progress_to(self.now);
                     r.alloc = alloc;
-                    let post = r.alloc.n_nodes();
-                    let charge = self.costs.expand_cost * post as f64;
+                    let charge = secs * post as f64;
                     r.remaining += charge;
                     self.reconfig_node_seconds += charge;
                     self.expands += 1;
@@ -513,6 +782,7 @@ impl Scheduler<'_> {
                 }
             }
         }
+        Ok(())
     }
 }
 
@@ -784,6 +1054,137 @@ mod tests {
             assert_eq!(x.malleable, y.malleable);
             assert!(x.max_nodes <= 8 && x.max_nodes >= x.min_nodes);
         }
+    }
+
+    #[test]
+    fn doomed_shrink_pass_charges_nothing() {
+        // job0: rigid, 4 nodes for 100 s; job1: malleable min 2 (expands
+        // into the idle half); job2: needs the whole 8-node cluster.
+        // While job0 runs, idle (0) + releasable surplus (2) can never
+        // reach 8, so the malleable pass is doomed and must not shrink
+        // anybody. Regression: job1 used to pay shrink_cost * pre
+        // node-seconds for a pass that admitted nothing.
+        let jobs = vec![
+            rigid(0.0, 400.0, 4),
+            JobSpec { arrival: 0.0, work: 100.0, min_nodes: 2, max_nodes: 8, malleable: true },
+            rigid(1.0, 80.0, 8),
+        ];
+        let r = schedule(
+            &Cluster::mini(8, 4),
+            AllocPolicy::WholeNodes,
+            SchedPolicy::Malleable,
+            ReconfigCostModel { expand_cost: 0.0, shrink_cost: 1.0 },
+            &jobs,
+        )
+        .unwrap();
+        assert_eq!(r.shrinks, 0, "doomed passes must not shrink: {r:?}");
+        assert_eq!(r.reconfig_node_seconds, 0.0);
+    }
+
+    #[test]
+    fn expansion_beneficiaries_follow_start_order() {
+        // job0 holds all 8 nodes until t = 10; input index 2 arrives
+        // before index 1, so after job0's mid-trace completion the queue
+        // admits them as [2, 1] — admission order diverges from job-id
+        // order at the tied start instant. The documented expansion
+        // order (start time, ties by job id) must hand the 4 idle nodes
+        // to job 1 first; iterating the running vector directly handed
+        // them to job 2.
+        let jobs = vec![
+            rigid(0.0, 80.0, 8),
+            JobSpec { arrival: 2.0, work: 60.0, min_nodes: 2, max_nodes: 6, malleable: true },
+            JobSpec { arrival: 1.0, work: 60.0, min_nodes: 2, max_nodes: 6, malleable: true },
+        ];
+        let r = schedule(
+            &Cluster::mini(8, 4),
+            AllocPolicy::WholeNodes,
+            SchedPolicy::Malleable,
+            ReconfigCostModel { expand_cost: 0.0, shrink_cost: 0.0 },
+            &jobs,
+        )
+        .unwrap();
+        assert_eq!(r.jobs[1].start, r.jobs[2].start, "both admitted at job0's completion");
+        assert!(r.jobs[1].reconfigs >= 1, "job 1 must be the first beneficiary: {:?}", r.jobs);
+        assert!(
+            r.jobs[1].finish < r.jobs[2].finish,
+            "the first beneficiary finishes first: {:?}",
+            r.jobs
+        );
+    }
+
+    #[test]
+    fn scalar_pricer_path_is_bit_identical_to_schedule() {
+        let jobs = super::super::workload::synthetic_workload(30, 8, 0.6, 11);
+        let a = schedule(
+            &Cluster::mini(8, 4),
+            AllocPolicy::WholeNodes,
+            SchedPolicy::Malleable,
+            ts(),
+            &jobs,
+        )
+        .unwrap();
+        let mut pricer = ts();
+        let b = schedule_with_pricer(
+            &Cluster::mini(8, 4),
+            AllocPolicy::WholeNodes,
+            SchedPolicy::Malleable,
+            &mut pricer,
+            &jobs,
+        )
+        .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn analytic_pricer_memoizes_and_reproduces_the_ts_gap() {
+        let mut p = AnalyticPricer::ts(Cluster::mini(8, 4), CostModel::mn5());
+        assert_eq!(p.strategy, SpawnStrategy::ParallelHypercube);
+        let a = p.expand_seconds(2, 6).unwrap();
+        let b = p.expand_seconds(2, 6).unwrap();
+        assert_eq!(a, b, "memoized queries are bit-identical");
+        assert!(a > 0.0);
+        assert_eq!(p.cached_pairs(), 1);
+        let ts_shrink = p.shrink_seconds(6, 2).unwrap();
+        let mut ss = AnalyticPricer::ss(Cluster::mini(8, 4), CostModel::mn5());
+        let ss_shrink = ss.shrink_seconds(6, 2).unwrap();
+        assert!(
+            ss_shrink / ts_shrink > 10.0,
+            "spawn-based shrink {ss_shrink} must dwarf the TS shrink {ts_shrink}"
+        );
+        // Pinning overrides the memo (calibration splice-in).
+        p.pin_expand(2, 6, 42.0);
+        assert_eq!(p.expand_seconds(2, 6).unwrap(), 42.0);
+    }
+
+    #[test]
+    fn analytic_pricer_errors_surface_as_workload_errors() {
+        // The hypercube strategy is invalid on the heterogeneous NASP
+        // cluster: the pricer must error, and the scheduler must surface
+        // it as WorkloadError::Pricing instead of mispricing the trace.
+        let mut p = AnalyticPricer::new(
+            Cluster::nasp(),
+            CostModel::nasp(),
+            SpawnStrategy::ParallelHypercube,
+            ShrinkPricing::Termination,
+            0,
+        );
+        assert!(p.expand_seconds(2, 10).is_err());
+        let jobs = vec![JobSpec {
+            arrival: 0.0,
+            work: 100.0,
+            min_nodes: 2,
+            max_nodes: 10,
+            malleable: true,
+        }];
+        let err = schedule_with_pricer(
+            &Cluster::nasp(),
+            AllocPolicy::BalancedTypes,
+            SchedPolicy::Malleable,
+            &mut p,
+            &jobs,
+        )
+        .unwrap_err();
+        assert!(matches!(err, WorkloadError::Pricing { job: 0, .. }), "got {err:?}");
     }
 
     #[test]

@@ -73,6 +73,11 @@ pub enum WorkloadError {
     /// A job is malformed (zero node count, non-positive or non-finite
     /// work, non-finite arrival, `max_nodes < min_nodes`).
     InvalidJob { job: usize, reason: &'static str },
+    /// The resize pricer could not price a reconfiguration event (e.g.
+    /// an analytic pricer asked to evaluate a strategy that is invalid
+    /// on the cluster shape). Surfaced instead of silently falling back
+    /// to a different price — a mispriced trace is worse than no trace.
+    Pricing { job: usize, pre: usize, post: usize, reason: String },
 }
 
 impl std::fmt::Display for WorkloadError {
@@ -84,6 +89,9 @@ impl std::fmt::Display for WorkloadError {
             ),
             WorkloadError::InvalidJob { job, reason } => {
                 write!(f, "job {job} is invalid: {reason}")
+            }
+            WorkloadError::Pricing { job, pre, post, reason } => {
+                write!(f, "pricing job {job}'s resize {pre} -> {post} nodes failed: {reason}")
             }
         }
     }

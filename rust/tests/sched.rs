@@ -9,11 +9,15 @@
 //! plus the node-seconds conservation invariant
 //!     (work + reconfig + idle == nodes × makespan).
 
+use paraspawn::config::CostModel;
 use paraspawn::coordinator::sweep::ClusterKind;
 use paraspawn::coordinator::wsweep::{
-    calibrated_costs, default_costs, run_workload_matrix, WorkloadMatrix, WorkloadSpec,
+    analytic_pricers, calibrated_costs, default_pricers, kind_cost_model, run_workload_matrix,
+    WorkloadMatrix, WorkloadSpec,
 };
-use paraspawn::rms::sched::{schedule, SchedPolicy, SchedResult};
+use paraspawn::rms::sched::{
+    schedule, schedule_with_pricer, AnalyticPricer, SchedPolicy, SchedResult,
+};
 use paraspawn::rms::workload::{synthetic_workload, JobSpec, ReconfigCostModel};
 use paraspawn::rms::AllocPolicy;
 use paraspawn::topology::Cluster;
@@ -109,8 +113,13 @@ fn b_ts_shrink_gap_reproduces_as_workload_level_win() {
 
 #[test]
 fn c_workload_sweep_is_bit_identical_across_thread_counts() {
+    // Scalar and analytic pricing arms side by side: per-cell pricer
+    // instances (and their memo caches) must not leak any thread-order
+    // dependence into the results.
+    let mut pricers = default_pricers();
+    pricers.extend(analytic_pricers(&kind_cost_model(ClusterKind::Mini), None, 0));
     let matrix = WorkloadMatrix {
-        costs: default_costs(),
+        pricers,
         workloads: vec![
             WorkloadSpec { label: "w0".into(), jobs: synthetic_workload(25, 8, 0.6, 5) },
             WorkloadSpec { label: "w1".into(), jobs: synthetic_workload(25, 8, 0.3, 6) },
@@ -171,6 +180,69 @@ fn node_seconds_are_conserved_on_heterogeneous_clusters() {
     )
     .unwrap();
     assert_conserved(&r, 16);
+}
+
+/// Property: node-second conservation holds under *exact analytic*
+/// per-event pricing across random malleable traces — the pricing axis
+/// must not perturb the scheduler's accounting, only the prices.
+#[test]
+fn conservation_holds_under_analytic_pricing_across_random_traces() {
+    for seed in [1u64, 7, 42, 1009, 86243] {
+        let jobs = synthetic_workload(25, 8, 0.7, seed);
+        for ts_pricing in [true, false] {
+            let mut pricer = if ts_pricing {
+                AnalyticPricer::ts(mini(), CostModel::mn5())
+            } else {
+                AnalyticPricer::ss(mini(), CostModel::mn5())
+            };
+            let r = schedule_with_pricer(
+                &mini(),
+                AllocPolicy::WholeNodes,
+                SchedPolicy::Malleable,
+                &mut pricer,
+                &jobs,
+            )
+            .unwrap();
+            assert_conserved(&r, 8);
+            for (o, j) in r.jobs.iter().zip(&jobs) {
+                assert!(o.start + 1e-12 >= j.arrival, "seed {seed}: started before arrival");
+                assert!(o.finish > o.start - 1e-12, "seed {seed}: finished before start");
+            }
+        }
+    }
+}
+
+/// Property: the pricing axis is purely a price source — an analytic
+/// pricer constant-folded to the scalar costs (every `(pre, post)` pair
+/// pinned to the scalar constants, so the closed-form engine is never
+/// consulted) must reproduce the scalar run **bit-identically**.
+#[test]
+fn constant_folded_analytic_pricer_is_bit_identical_to_scalar() {
+    let costs = ReconfigCostModel { expand_cost: 0.8, shrink_cost: 0.3 };
+    for seed in [5u64, 17, 23] {
+        let jobs = synthetic_workload(25, 8, 0.7, seed);
+        for policy in SchedPolicy::ALL {
+            let scalar = schedule(&mini(), AllocPolicy::WholeNodes, policy, costs, &jobs).unwrap();
+            let mut folded = AnalyticPricer::ts(mini(), CostModel::mn5());
+            for pre in 1..=8usize {
+                for post in 1..=8usize {
+                    if pre != post {
+                        folded.pin_expand(pre, post, costs.expand_cost);
+                        folded.pin_shrink(pre, post, costs.shrink_cost);
+                    }
+                }
+            }
+            let analytic = schedule_with_pricer(
+                &mini(),
+                AllocPolicy::WholeNodes,
+                policy,
+                &mut folded,
+                &jobs,
+            )
+            .unwrap();
+            assert_eq!(scalar, analytic, "seed {seed}, policy {policy:?}");
+        }
+    }
 }
 
 #[test]

@@ -13,7 +13,9 @@
 //! renderings are platform-independent.
 
 use paraspawn::coordinator::sweep::{CellKey, SweepResults};
+use paraspawn::coordinator::wsweep::WorkloadResults;
 use paraspawn::metrics::Phase;
+use paraspawn::rms::sched::{JobOutcome, SchedResult};
 use std::path::PathBuf;
 
 fn golden_dir() -> PathBuf {
@@ -79,6 +81,97 @@ fn samples_json_matches_golden() {
 #[test]
 fn phases_json_matches_golden() {
     assert_eq!(golden_results().phase_table().to_json(), fixture("sweep_phases.json"));
+}
+
+/// A synthetic two-cell workload result set (one FCFS baseline, one
+/// malleable cell with reconfigurations) with dyadic values, pinning
+/// the workload sink schema — including the `pricing` column of the
+/// pricing axis — the CI replay smoke invocations parse.
+fn golden_workload_results() -> WorkloadResults {
+    let mut r = WorkloadResults::default();
+    let fcfs = SchedResult {
+        makespan: 32.0,
+        mean_wait: 0.5,
+        max_wait: 1.0,
+        mean_turnaround: 16.25,
+        expands: 0,
+        shrinks: 0,
+        reconfig_node_seconds: 0.0,
+        work_node_seconds: 192.0,
+        idle_node_seconds: 64.0,
+        total_node_seconds: 256.0,
+        jobs: vec![
+            JobOutcome { start: 0.0, finish: 16.0, wait: 0.0, reconfigs: 0 },
+            JobOutcome { start: 1.0, finish: 32.0, wait: 1.0, reconfigs: 0 },
+        ],
+    };
+    let malleable = SchedResult {
+        makespan: 16.0,
+        mean_wait: 0.25,
+        max_wait: 0.5,
+        mean_turnaround: 8.125,
+        expands: 2,
+        shrinks: 1,
+        reconfig_node_seconds: 3.5,
+        work_node_seconds: 120.0,
+        idle_node_seconds: 4.5,
+        total_node_seconds: 128.0,
+        jobs: vec![
+            JobOutcome { start: 0.0, finish: 8.0, wait: 0.0, reconfigs: 2 },
+            JobOutcome { start: 0.5, finish: 16.0, wait: 0.5, reconfigs: 1 },
+        ],
+    };
+    r.cells.insert(("wA".to_string(), "fcfs".to_string(), "TS".to_string()), fcfs);
+    r.cells.insert(("wA".to_string(), "malleable".to_string(), "TS".to_string()), malleable);
+    r
+}
+
+#[test]
+fn workload_summary_csv_matches_golden() {
+    assert_eq!(
+        golden_workload_results().summary_table().to_csv(),
+        fixture("workload_summary.csv")
+    );
+}
+
+#[test]
+fn workload_jobs_csv_matches_golden() {
+    assert_eq!(golden_workload_results().jobs_table().to_csv(), fixture("workload_jobs.csv"));
+}
+
+#[test]
+fn workload_summary_json_matches_golden() {
+    assert_eq!(
+        golden_workload_results().summary_table().to_json(),
+        fixture("workload_summary.json")
+    );
+}
+
+#[test]
+fn workload_jobs_json_matches_golden() {
+    assert_eq!(golden_workload_results().jobs_table().to_json(), fixture("workload_jobs.json"));
+}
+
+/// `WorkloadResults::write` must emit exactly the golden workload file
+/// set — the contract of the `paraspawn workload --out` sinks the CI
+/// replay smoke asserts against.
+#[test]
+fn workload_write_emits_the_golden_file_set() {
+    let dir = std::env::temp_dir().join(format!("paraspawn-wgolden-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    golden_workload_results().write(&dir, true).unwrap();
+    for name in [
+        "workload_summary.csv",
+        "workload_jobs.csv",
+        "workload_summary.json",
+        "workload_jobs.json",
+    ] {
+        let written = std::fs::read_to_string(dir.join(name))
+            .unwrap_or_else(|e| panic!("write() did not produce {name}: {e}"));
+        assert_eq!(written, fixture(name), "byte mismatch in {name}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// `SweepResults::write` must emit exactly the golden files (same
