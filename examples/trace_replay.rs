@@ -1,14 +1,19 @@
 //! Paper-scale SWF trace replay under the pricing axis: the bundled
 //! 2000+-job shrink-heavy trace (MN5-shaped, 32 nodes × 112 cores)
-//! replayed end-to-end under the scalar TS/SS cost models *and* the
-//! exact analytic per-event pricers, reporting the
-//! makespan / mean-wait / reconfig-node-seconds deltas per strategy.
+//! replayed end-to-end under the scalar TS/SS cost models, the exact
+//! analytic per-event pricers *and* the cluster-state-aware stateful
+//! pricers, reporting the makespan / mean-wait / reconfig-node-seconds
+//! deltas per strategy.
 //!
 //! The acceptance bar this example demonstrates: the full replay (all
-//! policy × pricing cells) finishes in well under ten seconds, and the
+//! policy × pricing cells) finishes in well under ten seconds; the
 //! analytic pricer reproduces the paper's qualitative result at
 //! workload scale — TS yields strictly lower reconfiguration
-//! node-seconds and makespan than SS on a shrink-heavy trace.
+//! node-seconds and makespan than SS on a shrink-heavy trace — and the
+//! stateful pricer never pays more reconfiguration node-seconds than
+//! the canonical analytic one (on a warm cluster, expansions skip the
+//! cold daemon rollout the canonical pair always charges, and victims
+//! are picked by predicted cost).
 //!
 //! ```bash
 //! cargo run --release --example trace_replay
@@ -17,7 +22,7 @@
 use paraspawn::coordinator::sweep::ClusterKind;
 use paraspawn::coordinator::wsweep::{
     analytic_pricers, default_costs, kind_cost_model, run_workload_matrix, scalar_pricers,
-    WorkloadMatrix, WorkloadSpec,
+    stateful_pricers, WorkloadMatrix, WorkloadSpec,
 };
 use paraspawn::rms::sched::{self, AnalyticPricer, ResizePricer, SchedPolicy};
 use std::path::PathBuf;
@@ -36,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     sched::mark_malleable(&mut jobs, 0.7, 4, total_nodes, 2025);
     let n_jobs = jobs.len();
     println!(
-        "replaying {n_jobs} jobs on {} ({} nodes x {} cores) under 4 pricing arms",
+        "replaying {n_jobs} jobs on {} ({} nodes x {} cores) under 6 pricing arms",
         cluster.name, total_nodes, cores
     );
     assert!(n_jobs >= 2000, "the bundled trace must stay paper-scale (got {n_jobs})");
@@ -63,6 +68,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut pricers = scalar_pricers(&default_costs());
     pricers.extend(analytic_pricers(&cost, None, 0));
+    pricers.extend(stateful_pricers(&cost, None, 0));
     let matrix = WorkloadMatrix {
         policies: vec![SchedPolicy::Fcfs, SchedPolicy::Malleable],
         pricers,
@@ -96,6 +102,14 @@ fn main() -> anyhow::Result<()> {
         ts_s.mean_wait - ss_s.mean_wait,
         ts_s.reconfig_node_seconds - ss_s.reconfig_node_seconds,
     );
+    let ts_st = get("malleable", "TS-state");
+    println!(
+        "stateful TS vs analytic TS (malleable policy): d_reconfig_node_s {:+.1} \
+         ({} vs {} reconfigs)",
+        ts_st.reconfig_node_seconds - ts_x.reconfig_node_seconds,
+        ts_st.reconfigurations(),
+        ts_x.reconfigurations(),
+    );
 
     // The paper's qualitative result at workload scale, under exact
     // per-event pricing: cheap termination-based shrinks strictly beat
@@ -112,6 +126,18 @@ fn main() -> anyhow::Result<()> {
         "TS makespan {} must be strictly below SS {}",
         ts_x.makespan,
         ss_x.makespan
+    );
+
+    // State-aware pricing can only cut prices relative to the canonical
+    // empty-cluster pair: the same resize on a warm node set is cheaper
+    // (no cold daemon rollout) and the malleable policy additionally
+    // picks the cheapest predicted shrink victims. At replay scale the
+    // per-event savings dominate any trajectory divergence.
+    assert!(
+        ts_st.reconfig_node_seconds <= ts_x.reconfig_node_seconds,
+        "stateful TS reconfig node-seconds {} must not exceed analytic TS {}",
+        ts_st.reconfig_node_seconds,
+        ts_x.reconfig_node_seconds
     );
 
     // Wall-clock budget (shared CI runners can override).

@@ -1,7 +1,9 @@
 //! Trace-replay benchmarks: the bundled 2000+-job shrink-heavy SWF
-//! trace through the batch scheduler under scalar vs analytic pricing,
-//! plus the raw cost of cold analytic `(pre, post)` queries — the
-//! numbers behind "exact per-event pricing at scalar speed".
+//! trace through the batch scheduler under scalar vs analytic vs
+//! stateful pricing, plus the raw cost of cold analytic `(pre, post)`
+//! queries — the numbers behind "exact per-event pricing at scalar
+//! speed" and the state-profile memoization that keeps the stateful
+//! pricer in the same class.
 //!
 //! Run with `cargo bench --bench trace_replay`.
 
@@ -9,7 +11,7 @@ use paraspawn::bench::Runner;
 use paraspawn::coordinator::sweep::ClusterKind;
 use paraspawn::coordinator::wsweep::kind_cost_model;
 use paraspawn::rms::sched::{
-    self, schedule_with_pricer, AnalyticPricer, ResizePricer, SchedPolicy,
+    self, schedule_with_pricer, AnalyticPricer, ResizePricer, SchedPolicy, StatefulPricer,
 };
 use paraspawn::rms::workload::{JobSpec, ReconfigCostModel};
 use paraspawn::rms::AllocPolicy;
@@ -69,6 +71,57 @@ fn main() {
             AllocPolicy::WholeNodes,
             SchedPolicy::Malleable,
             &mut warm,
+            &jobs,
+        )
+        .expect("replay schedules");
+        assert!(res.makespan > 0.0);
+    });
+
+    // Stateful pricing, cold cache each repetition: every distinct
+    // state profile (node sets, warmth, load) is evaluated through
+    // predict_resize_in_state. On the symmetric MN5 cluster the memo
+    // erases node identity, so this stays in the analytic class. The
+    // replay must also never pay more reconfiguration node-seconds
+    // than the canonical analytic arm on the same trace.
+    let analytic_reference = {
+        let mut pricer = AnalyticPricer::ts(cluster.clone(), cost.clone());
+        schedule_with_pricer(
+            &cluster,
+            AllocPolicy::WholeNodes,
+            SchedPolicy::Malleable,
+            &mut pricer,
+            &jobs,
+        )
+        .expect("replay schedules")
+        .reconfig_node_seconds
+    };
+    r.bench("replay/stateful-ts-cold", 3, || {
+        let mut pricer = StatefulPricer::ts(cluster.clone(), cost.clone());
+        let res = schedule_with_pricer(
+            &cluster,
+            AllocPolicy::WholeNodes,
+            SchedPolicy::Malleable,
+            &mut pricer,
+            &jobs,
+        )
+        .expect("replay schedules");
+        assert!(res.reconfigurations() > 0);
+        assert!(
+            res.reconfig_node_seconds <= analytic_reference,
+            "stateful {} must not exceed analytic {}",
+            res.reconfig_node_seconds,
+            analytic_reference
+        );
+    });
+
+    // Stateful pricing with a warm memo shared across repetitions.
+    let mut warm_state = StatefulPricer::ts(cluster.clone(), cost.clone());
+    r.bench("replay/stateful-ts-warm", 5, || {
+        let res = schedule_with_pricer(
+            &cluster,
+            AllocPolicy::WholeNodes,
+            SchedPolicy::Malleable,
+            &mut warm_state,
             &jobs,
         )
         .expect("replay schedules");

@@ -26,7 +26,9 @@ use std::path::PathBuf;
 /// Parsed `--key value` arguments plus positional words.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// Words that are not `--key` options, in order.
     pub positional: Vec<String>,
+    /// `--key value` pairs (bare flags map to `"true"`).
     pub options: BTreeMap<String, String>,
 }
 
@@ -50,10 +52,12 @@ pub fn parse_args<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
 }
 
 impl Args {
+    /// The value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Parse `--key` as an integer, defaulting when absent.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
@@ -434,14 +438,19 @@ fn cmd_workload(a: &Args) -> Result<()> {
     let threads = a.usize_or("threads", sweep::default_threads())?;
 
     // The pricing axis: scalar (two fitted constants per arm), analytic
-    // (exact per-event prices from the closed-form engine), or both
-    // side-by-side.
+    // (exact per-event prices from the closed-form engine against the
+    // canonical empty-cluster pair), stateful (per-event prices against
+    // the actual cluster state, which also makes the malleable policy
+    // pick shrink victims and expansion targets by predicted cost),
+    // or combinations side-by-side.
     let pricing = a.get("pricing").unwrap_or("scalar");
-    let (scalar_arm, analytic_arm) = match pricing {
-        "scalar" => (true, false),
-        "analytic" => (false, true),
-        "both" => (true, true),
-        other => bail!("unknown pricing '{other}' (scalar | analytic | both)"),
+    let (scalar_arm, analytic_arm, stateful_arm) = match pricing {
+        "scalar" => (true, false, false),
+        "analytic" => (false, true, false),
+        "stateful" => (false, false, true),
+        "both" => (true, true, false),
+        "all" => (true, true, true),
+        other => bail!("unknown pricing '{other}' (scalar | analytic | stateful | both | all)"),
     };
     let strategy = match a.get("strategy") {
         Some(s) => Some(SpawnStrategy::parse(s).with_context(|| {
@@ -449,15 +458,21 @@ fn cmd_workload(a: &Args) -> Result<()> {
         })?),
         None => None,
     };
-    if strategy.is_some() && !analytic_arm {
-        bail!("--strategy only affects analytic pricing (use --pricing analytic|both)");
+    if strategy.is_some() && !(analytic_arm || stateful_arm) {
+        bail!(
+            "--strategy only affects analytic/stateful pricing \
+             (use --pricing analytic|stateful|both|all)"
+        );
     }
     if a.get("cost-from-sweep").is_some() && !scalar_arm {
-        bail!("--cost-from-sweep only affects scalar pricing (use --pricing scalar|both)");
+        bail!("--cost-from-sweep only affects scalar pricing (use --pricing scalar|both|all)");
     }
     let data_bytes = a.usize_or("data-bytes", 0)? as u64;
-    if data_bytes > 0 && !analytic_arm {
-        bail!("--data-bytes only affects analytic pricing (use --pricing analytic|both)");
+    if data_bytes > 0 && !(analytic_arm || stateful_arm) {
+        bail!(
+            "--data-bytes only affects analytic/stateful pricing \
+             (use --pricing analytic|stateful|both|all)"
+        );
     }
     let mut pricers: Vec<wsweep::PricerSpec> = Vec::new();
     if scalar_arm {
@@ -486,6 +501,20 @@ fn cmd_workload(a: &Args) -> Result<()> {
         for p in &arms {
             eprintln!(
                 "pricing {} (analytic): exact per-event prices on '{}', memoized per node pair",
+                p.label,
+                cluster.name
+            );
+        }
+        pricers.extend(arms);
+    }
+    if stateful_arm {
+        let cost = wsweep::kind_cost_model(kind);
+        let arms = wsweep::stateful_pricers(&cost, strategy, data_bytes);
+        for p in &arms {
+            eprintln!(
+                "pricing {} (stateful): per-event prices against the actual cluster state \
+                 of '{}' (daemon warmth, concrete nodes); victim/target selection by \
+                 predicted resize seconds",
                 p.label,
                 cluster.name
             );
@@ -588,7 +617,7 @@ USAGE:
   paraspawn workload [--cluster mn5|nasp|mini] [--nodes N] [--jobs J]
                      [--seed S] [--malleable-frac F]
                      [--policy fcfs|easy|malleable|all]
-                     [--pricing scalar|analytic|both]
+                     [--pricing scalar|analytic|stateful|both|all]
                      [--strategy plain|single|nodebynode|hypercube|diffusive]
                      [--data-bytes B]
                      [--trace FILE.swf] [--save-trace FILE.swf]
@@ -605,7 +634,12 @@ Workload pricing (--pricing): 'scalar' charges every resize from two
 fitted constants per arm (TS/SS); 'analytic' prices each individual
 resize exactly per (strategy, method, pre -> post nodes, cluster shape)
 through the closed-form engine, memoized per node pair — SWF traces
-with thousands of jobs replay with exact prices at scalar speed.
+with thousands of jobs replay with exact prices at scalar speed;
+'stateful' prices each resize against the actual cluster state (the
+concrete nodes gained/lost, daemon warmth, co-located load) and makes
+the malleable policy pick shrink victims and expansion targets by
+predicted resize seconds. 'both' = scalar + analytic; 'all' adds the
+stateful arms.
 ";
 
 /// Binary entry point.

@@ -56,8 +56,11 @@ pub struct CostModel {
     pub oversub_penalty: bool,
 
     // -- ports & name service --
+    /// `MPI_Open_port` on the accepting root.
     pub c_open_port: f64,
+    /// `MPI_Publish_name` into the name service.
     pub c_publish: f64,
+    /// `MPI_Lookup_name` resolution by a connecting root.
     pub c_lookup: f64,
     /// Root-to-root connect/accept handshake (on top of path latency).
     pub c_connect: f64,
@@ -210,6 +213,7 @@ impl CostModel {
 /// Top-level simulation configuration.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
+    /// The calibrated latency constants every charge draws from.
     pub cost: CostModel,
     /// Master seed; every simulated process derives its own stream.
     pub seed: u64,
@@ -233,10 +237,12 @@ impl Default for SimConfig {
 }
 
 impl SimConfig {
+    /// Default configuration with an explicit cost model.
     pub fn with_cost(cost: CostModel) -> Self {
         SimConfig { cost, ..Default::default() }
     }
 
+    /// Replace the master seed.
     pub fn seeded(mut self, seed: u64) -> Self {
         self.seed = seed;
         self

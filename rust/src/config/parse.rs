@@ -6,10 +6,23 @@
 
 use std::collections::BTreeMap;
 
+/// Why a config file failed to parse.
 #[derive(Debug, PartialEq, Eq)]
 pub enum ParseError {
-    Malformed { line: usize, text: String },
-    Duplicate { line: usize, key: String },
+    /// A non-comment line is not of the form `key = value`.
+    Malformed {
+        /// 1-based line number.
+        line: usize,
+        /// The offending raw line.
+        text: String,
+    },
+    /// A key appears more than once.
+    Duplicate {
+        /// 1-based line number of the second occurrence.
+        line: usize,
+        /// The duplicated key.
+        key: String,
+    },
 }
 
 impl std::fmt::Display for ParseError {

@@ -32,6 +32,7 @@ pub struct FigureConfig {
     /// Restrict node sets to values `<= max_nodes` (wall-clock control;
     /// the full sweeps run thousands of simulated ranks per cell).
     pub max_nodes: usize,
+    /// Base seed for the sweep's derived repetition seeds.
     pub seed: u64,
     /// Sweep-executor worker threads (`$PARASPAWN_THREADS` or the
     /// machine's parallelism). Results are identical for any value.

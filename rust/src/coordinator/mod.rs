@@ -24,13 +24,21 @@ use std::sync::Arc;
 /// Monte-Carlo warm-up (the paper's 5 iterations).
 #[derive(Clone, Debug)]
 pub struct Scenario {
+    /// Cluster topology the experiment runs on.
     pub cluster: Cluster,
+    /// Calibrated cost model for every charge.
     pub cost: CostModel,
+    /// How the RMS builds the job's allocations.
     pub policy: AllocPolicy,
+    /// Nodes the job holds before the measured reconfiguration.
     pub initial_nodes: usize,
+    /// Nodes the job holds afterwards.
     pub target_nodes: usize,
+    /// Process-management method of the measured reconfiguration.
     pub method: Method,
+    /// Spawning strategy of the measured reconfiguration.
     pub strategy: SpawnStrategy,
+    /// Simulation seed (stochastic cost models only).
     pub seed: u64,
     /// Warm-up iterations before the reconfiguration (paper: 5).
     pub warmup_iters: usize,
@@ -88,12 +96,14 @@ impl Scenario {
         }
     }
 
+    /// Replace the measured method/strategy pair.
     pub fn with(mut self, method: Method, strategy: SpawnStrategy) -> Scenario {
         self.method = method;
         self.strategy = strategy;
         self
     }
 
+    /// Replace the simulation seed.
     pub fn seeded(mut self, seed: u64) -> Scenario {
         self.seed = seed;
         self
@@ -107,7 +117,9 @@ pub struct ReconfigReport {
     pub total_time: f64,
     /// Per-phase breakdown (spawn / sync / connect / reorder / ...).
     pub phases: Vec<(Phase, f64)>,
+    /// Source process count.
     pub ns: usize,
+    /// Target process count.
     pub nt: usize,
     /// Label recorded by the driver (`"shrink-ts"`, method names, ...).
     pub strategy_label: String,

@@ -22,7 +22,9 @@ pub const N_FEATURES: usize = 8;
 /// A candidate configuration for an upcoming reconfiguration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Candidate {
+    /// Process-management method.
     pub method: Method,
+    /// Spawning strategy.
     pub strategy: SpawnStrategy,
 }
 

@@ -46,12 +46,15 @@ use std::sync::mpsc;
 ///   same jitter-free location timing (zero-width CIs).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum Engine {
+    /// Thread-per-rank virtual-time simulation ([`crate::simmpi`]).
     #[default]
     Simulated,
+    /// Closed-form analytic evaluation ([`crate::mam::model`]).
     Analytic,
 }
 
 impl Engine {
+    /// Stable lower-case label (`"simulated"` / `"analytic"`).
     pub fn name(self) -> &'static str {
         match self {
             Engine::Simulated => "simulated",
@@ -59,6 +62,7 @@ impl Engine {
         }
     }
 
+    /// Parse an engine label (accepts the `sim` / `model` aliases).
     pub fn parse(s: &str) -> Option<Engine> {
         match s {
             "simulated" | "sim" => Some(Engine::Simulated),
@@ -86,8 +90,11 @@ pub const MINI_NODES: [usize; 4] = [1, 2, 4, 8];
 /// A method × strategy configuration with its figure label.
 #[derive(Clone, Copy, Debug)]
 pub struct MethodConfig {
+    /// Figure label (`"M+HC"`, `"B+ID"`, ...).
     pub label: &'static str,
+    /// Process-management method.
     pub method: Method,
+    /// Spawning strategy.
     pub strategy: SpawnStrategy,
 }
 
@@ -172,6 +179,7 @@ pub enum ClusterKind {
 }
 
 impl ClusterKind {
+    /// Stable lower-case label (`"mn5"` / `"nasp"` / `"mini"`).
     pub fn name(self) -> &'static str {
         match self {
             ClusterKind::Mn5 => "mn5",
@@ -180,6 +188,7 @@ impl ClusterKind {
         }
     }
 
+    /// Parse a cluster-kind label.
     pub fn parse(s: &str) -> Option<ClusterKind> {
         match s {
             "mn5" => Some(ClusterKind::Mn5),
@@ -249,8 +258,11 @@ pub fn cell_scenario(
 /// Identity of one matrix cell (everything but the repetition index).
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct CellKey {
+    /// Cluster name.
     pub cluster: String,
+    /// Nodes before the resize.
     pub initial_nodes: usize,
+    /// Nodes after the resize.
     pub target_nodes: usize,
     /// Configuration label (`"M+HC"`, `"merge+hypercube"`, ...).
     pub config: String,
@@ -259,8 +271,11 @@ pub struct CellKey {
 /// One unit of sweep work: a single repetition of a single cell.
 #[derive(Clone, Debug)]
 pub struct SweepTask {
+    /// Cell the task belongs to.
     pub cell: CellKey,
+    /// Repetition index within the cell.
     pub rep: usize,
+    /// The fully resolved scenario to run.
     pub scenario: Scenario,
 }
 
@@ -271,7 +286,9 @@ pub type CellSamples = BTreeMap<(usize, usize, &'static str), Vec<f64>>;
 /// A declarative cartesian scenario matrix.
 #[derive(Clone, Debug)]
 pub struct ScenarioMatrix {
+    /// Cluster axis.
     pub clusters: Vec<ClusterKind>,
+    /// Method × strategy axis.
     pub configs: Vec<MethodConfig>,
     /// `(initial_nodes, target_nodes)` pairs; `i == n` entries are
     /// skipped (nothing to reconfigure).
@@ -300,10 +317,12 @@ impl Default for ScenarioMatrix {
 }
 
 impl ScenarioMatrix {
+    /// The default matrix (MN5 expansion configurations, no pairs yet).
     pub fn new() -> ScenarioMatrix {
         ScenarioMatrix::default()
     }
 
+    /// Set the cluster axis.
     pub fn clusters(mut self, clusters: Vec<ClusterKind>) -> Self {
         self.clusters = clusters;
         self
@@ -337,16 +356,19 @@ impl ScenarioMatrix {
         self.pairs(pairs)
     }
 
+    /// Set the repetitions per cell.
     pub fn reps(mut self, reps: usize) -> Self {
         self.reps = reps;
         self
     }
 
+    /// Set the base seed.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Set the redistributed payload per resize.
     pub fn data_bytes(mut self, data_bytes: u64) -> Self {
         self.data_bytes = data_bytes;
         self
@@ -402,6 +424,7 @@ impl ScenarioMatrix {
         self.clusters.len() * pairs * self.configs.len() * self.reps
     }
 
+    /// True when no tasks would run.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

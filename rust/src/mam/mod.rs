@@ -17,11 +17,15 @@
 //!   shrinkage) and TS (termination shrinkage, enabled by the per-node
 //!   `MPI_COMM_WORLD` isolation the parallel strategies provide).
 
+#[allow(missing_docs)] // legacy: §4.4 protocol internals (simulated ranks)
 pub mod connect;
+#[allow(missing_docs)] // legacy: per-rank reconfiguration driver internals
 pub mod driver;
 pub mod model;
 pub mod plan;
+#[allow(missing_docs)] // legacy: §4.7 shrink protocol internals
 pub mod shrink;
+#[allow(missing_docs)] // legacy: §4.3 synchronization protocol internals
 pub mod sync;
 
 pub use driver::{expand, AppCont, ReconfigSpec};
@@ -41,6 +45,7 @@ pub enum Method {
 }
 
 impl Method {
+    /// Stable lower-case label (`"baseline"` / `"merge"`).
     pub fn name(self) -> &'static str {
         match self {
             Method::Baseline => "baseline",
@@ -48,6 +53,7 @@ impl Method {
         }
     }
 
+    /// Parse a method label (accepts the `b` / `m` shorthands).
     pub fn parse(s: &str) -> Option<Method> {
         match s {
             "baseline" | "b" => Some(Method::Baseline),
@@ -78,6 +84,7 @@ pub enum SpawnStrategy {
 }
 
 impl SpawnStrategy {
+    /// Stable lower-case label (`"plain"`, `"hypercube"`, ...).
     pub fn name(self) -> &'static str {
         match self {
             SpawnStrategy::Plain => "plain",
@@ -88,6 +95,8 @@ impl SpawnStrategy {
         }
     }
 
+    /// Parse a strategy label (accepts the `nbn` / `hc` / `id`
+    /// shorthands).
     pub fn parse(s: &str) -> Option<SpawnStrategy> {
         match s {
             "plain" => Some(SpawnStrategy::Plain),
@@ -125,6 +134,7 @@ pub enum ShrinkKind {
 }
 
 impl ShrinkKind {
+    /// Paper-style acronym (`"SS"` / `"ZS"` / `"TS"`).
     pub fn name(self) -> &'static str {
         match self {
             ShrinkKind::SpawnShrink => "SS",

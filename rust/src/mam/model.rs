@@ -28,6 +28,23 @@
 //! timings plus the dispersion parameter ([`ModelRecord::jitter_frac`])
 //! — the parameters of the distribution the simulator samples from —
 //! instead of sampling itself.
+//!
+//! ## Pricing entry points
+//!
+//! Three standalone queries wrap the engine for schedulers and scorers,
+//! from most abstract to most concrete:
+//!
+//! * [`predict_resize_time`] — price an explicit [`Plan`]
+//!   (the exact strategy-selection scorer).
+//! * [`predict_resize_pair`] — price the canonical whole-node
+//!   `(pre, post)` resize on an otherwise empty cluster (the batch
+//!   scheduler's [`crate::rms::sched::AnalyticPricer`]).
+//! * [`predict_resize_in_state`] — price a resize between *concrete*
+//!   node sets against a [`ClusterState`] view (daemon warmth,
+//!   co-located load): what the state-aware
+//!   [`crate::rms::sched::StatefulPricer`] consults so workload
+//!   scheduling decisions reflect the actual cluster, not the canonical
+//!   empty slice.
 
 use super::plan::{Plan, SpawnTask};
 use super::shrink::decide;
@@ -45,8 +62,11 @@ use std::collections::{BTreeMap, BTreeSet, HashMap};
 /// what TS shrinkage can terminate wholesale).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ModelRank {
+    /// Node hosting this rank.
     pub node: NodeId,
+    /// The rank's logical clock (virtual seconds since launch).
     pub clock: f64,
+    /// Identity of the rank's `MPI_COMM_WORLD` (its spawn group).
     pub mcw: u64,
 }
 
@@ -54,11 +74,14 @@ pub struct ModelRank {
 /// communicator as a rank-ordered vector of [`ModelRank`]s.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelJob {
+    /// Reconfiguration epoch (increments on every resize).
     pub epoch: u64,
+    /// The job's ranks in application-communicator order.
     pub ranks: Vec<ModelRank>,
 }
 
 impl ModelJob {
+    /// Number of ranks in the application communicator.
     pub fn size(&self) -> usize {
         self.ranks.len()
     }
@@ -71,13 +94,21 @@ impl ModelJob {
 /// The analytic counterpart of [`crate::metrics::ReconfigRecord`].
 #[derive(Clone, Debug)]
 pub struct ModelRecord {
+    /// Epoch the reconfiguration started from.
     pub epoch: u64,
+    /// Method name (`"merge"` / `"baseline"`).
     pub method: String,
+    /// Strategy label (`"hypercube"`, `"shrink-ts"`, ...).
     pub strategy: String,
+    /// Source process count.
     pub ns: usize,
+    /// Target process count.
     pub nt: usize,
+    /// Recording rank's clock when the reconfiguration began.
     pub t_start: f64,
+    /// Recording rank's clock when the reconfiguration completed.
     pub t_end: f64,
+    /// Per-phase breakdown (spawn / sync / connect / reorder / ...).
     pub phases: Vec<(Phase, f64)>,
     /// Dispersion parameter of the source cost model: the simulator
     /// multiplies every charge by `LogNormal(0, jitter_frac)`; the
@@ -86,6 +117,7 @@ pub struct ModelRecord {
 }
 
 impl ModelRecord {
+    /// Total reconfiguration time (the paper's resize time).
     pub fn total(&self) -> f64 {
         self.t_end - self.t_start
     }
@@ -95,6 +127,7 @@ impl ModelRecord {
 /// mirroring [`crate::simmpi::World`], plus the counters the
 /// reconfiguration reports surface.
 pub struct ModelWorld {
+    /// Topology the job runs on.
     pub cluster: Cluster,
     /// Jitter-free copy of the source model (all charges evaluate at the
     /// location parameter).
@@ -111,6 +144,9 @@ pub struct ModelWorld {
 }
 
 impl ModelWorld {
+    /// A fresh analytic world: no daemons warm, no processes running.
+    /// The stochastic part of `cost` is split off into the `jitter_frac`
+    /// field; all charges evaluate at the location parameter.
     pub fn new(cluster: Cluster, cost: CostModel) -> ModelWorld {
         let n = cluster.len();
         let jitter_frac = cost.jitter_frac;
@@ -1047,18 +1083,14 @@ impl<'w> Expansion<'w> {
 // Standalone prediction entry point
 // ---------------------------------------------------------------------------
 
-/// Predict the resize time of a single reconfiguration directly from a
-/// [`CostModel`] and a [`Plan`], with no scenario scaffolding: sources
-/// start at clock 0 on the plan's `R` layout with per-node MCWs (the
-/// state a prior parallel expansion establishes). Used by the exact
-/// strategy-selection scorer ([`crate::coordinator::select`]).
-pub fn predict_resize_time(
-    cluster: &Cluster,
-    cost: &CostModel,
-    plan: &Plan,
-    data_bytes: u64,
-) -> Result<f64> {
-    let mut world = ModelWorld::new(cluster.clone(), cost.clone());
+/// Layer `plan`'s source ranks onto `world` (clock 0, per-node MCWs —
+/// the state a prior parallel expansion establishes) and evaluate the
+/// reconfiguration, returning its total time. The single evaluation
+/// path behind [`predict_resize_time`] and
+/// [`predict_resize_in_state`]: the two entry points differ only in
+/// how the world is pre-seeded, so sharing this keeps their
+/// cold-state-equals-canonical bit-exactness from drifting.
+fn evaluate_plan_in_world(world: &mut ModelWorld, plan: &Plan, data_bytes: u64) -> Result<f64> {
     let mut ranks = Vec::new();
     for (i, &ri) in plan.r.iter().enumerate() {
         let node = plan.nodes[i];
@@ -1081,6 +1113,21 @@ pub fn predict_resize_time(
         world.expand(&job, plan, data_bytes)?
     };
     Ok(rec.total())
+}
+
+/// Predict the resize time of a single reconfiguration directly from a
+/// [`CostModel`] and a [`Plan`], with no scenario scaffolding: sources
+/// start at clock 0 on the plan's `R` layout with per-node MCWs (the
+/// state a prior parallel expansion establishes). Used by the exact
+/// strategy-selection scorer ([`crate::coordinator::select`]).
+pub fn predict_resize_time(
+    cluster: &Cluster,
+    cost: &CostModel,
+    plan: &Plan,
+    data_bytes: u64,
+) -> Result<f64> {
+    let mut world = ModelWorld::new(cluster.clone(), cost.clone());
+    evaluate_plan_in_world(&mut world, plan, data_bytes)
 }
 
 /// The canonical [`Plan`] of a whole-node resize between `pre` and
@@ -1147,6 +1194,266 @@ pub fn predict_resize_pair(
 ) -> Result<f64> {
     let plan = resize_pair_plan(cluster, method, strategy, pre, post)?;
     predict_resize_time(cluster, cost, &plan, data_bytes)
+}
+
+// ---------------------------------------------------------------------------
+// Cluster-state-aware pricing
+// ---------------------------------------------------------------------------
+
+/// A per-node view of the cluster state a resize is priced against:
+/// RTE-daemon warmth and the process load co-located jobs impose.
+///
+/// [`predict_resize_pair`] prices every resize against the *canonical*
+/// pair — an empty cluster slice with cold daemons beyond the job's own
+/// nodes. On a busy machine that is pessimistic (most nodes have hosted
+/// a job before, so their daemons are warm — spawning there skips the
+/// `c_daemon_cold` rollout) and occasionally optimistic (co-located
+/// load oversubscribes the fork stage). `ClusterState` carries exactly
+/// the two per-node facts the closed-form engine consumes, so a
+/// scheduler can price a job's reconfiguration against the nodes it
+/// would actually gain or lose ([`predict_resize_in_state`]).
+///
+/// The state describes the cluster *around* the priced job: `load`
+/// counts processes of **other** jobs only — the priced job's own ranks
+/// are layered on top from the resize plan.
+///
+/// # Examples
+///
+/// ```
+/// use paraspawn::mam::model::ClusterState;
+///
+/// let mut st = ClusterState::cold(4);
+/// st.set_warm(2);
+/// st.add_load(2, 8);
+/// assert!(st.is_warm(2) && !st.is_warm(0));
+/// assert_eq!(st.load(2), 8);
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterState {
+    warm: Vec<bool>,
+    load: Vec<u32>,
+}
+
+impl ClusterState {
+    /// An idle cluster of `n` nodes: every daemon cold, no load — the
+    /// state [`predict_resize_pair`]'s canonical pricing assumes beyond
+    /// the job's own nodes.
+    pub fn cold(n: usize) -> ClusterState {
+        ClusterState { warm: vec![false; n], load: vec![0; n] }
+    }
+
+    /// An uncontended cluster whose every daemon is warm — the steady
+    /// state a busy machine reaches once each node has hosted at least
+    /// one job. Never prices above [`ClusterState::cold`].
+    pub fn warm_all(n: usize) -> ClusterState {
+        ClusterState { warm: vec![true; n], load: vec![0; n] }
+    }
+
+    /// Number of nodes the state describes (must match the cluster).
+    pub fn len(&self) -> usize {
+        self.warm.len()
+    }
+
+    /// True when the state describes no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.warm.is_empty()
+    }
+
+    /// Mark `node`'s RTE daemon warm (a job has launched there).
+    pub fn set_warm(&mut self, node: NodeId) {
+        self.warm[node] = true;
+    }
+
+    /// Whether `node`'s RTE daemon is warm.
+    pub fn is_warm(&self, node: NodeId) -> bool {
+        self.warm[node]
+    }
+
+    /// Add `procs` co-located processes on `node` (another job's load).
+    pub fn add_load(&mut self, node: NodeId, procs: u32) {
+        self.load[node] += procs;
+    }
+
+    /// Remove up to `procs` co-located processes from `node`.
+    pub fn sub_load(&mut self, node: NodeId, procs: u32) {
+        self.load[node] = self.load[node].saturating_sub(procs);
+    }
+
+    /// Co-located process count on `node`.
+    pub fn load(&self, node: NodeId) -> u32 {
+        self.load[node]
+    }
+}
+
+/// The `(sources, rest)` node split every state-aware resize uses:
+/// sources first (kept nodes for a shrink, all held nodes for an
+/// expansion), then the gained/dropped remainder, each half in
+/// ascending node-id order. [`state_resize_plan`] concatenates the two
+/// halves into its node list, and the scheduler's state-aware pricer
+/// keys its memo on per-position profiles along the same split — a
+/// single definition keeps the two from drifting apart.
+///
+/// Errors on duplicate or empty sets, on `held == target` (nothing to
+/// reconfigure), and on a resize that both gains and loses nodes (two
+/// reconfigurations in the MaM protocol — the caller must split it).
+pub fn state_resize_split(
+    held: &[NodeId],
+    target: &[NodeId],
+) -> Result<(Vec<NodeId>, Vec<NodeId>)> {
+    let held_set: BTreeSet<NodeId> = held.iter().copied().collect();
+    let target_set: BTreeSet<NodeId> = target.iter().copied().collect();
+    if held_set.len() != held.len() || target_set.len() != target.len() {
+        bail!("resize node sets must not contain duplicate nodes");
+    }
+    if held.is_empty() || target.is_empty() {
+        bail!("resize node sets must be non-empty");
+    }
+    if held_set == target_set {
+        bail!("resize from {held:?} to {target:?} has nothing to reconfigure");
+    }
+    let growing = held_set.is_subset(&target_set);
+    if !growing && !target_set.is_subset(&held_set) {
+        bail!(
+            "resize from {held:?} to {target:?} both gains and loses nodes; \
+             split it into a shrink and an expansion"
+        );
+    }
+    Ok(if growing {
+        (
+            held_set.iter().copied().collect(),
+            target_set.difference(&held_set).copied().collect(),
+        )
+    } else {
+        (
+            target_set.iter().copied().collect(),
+            held_set.difference(&target_set).copied().collect(),
+        )
+    })
+}
+
+/// The [`Plan`] of a whole-node resize between two *concrete* node
+/// sets: the job currently fills every node of `held` and the resize
+/// leaves it filling every node of `target`. One set must contain the
+/// other — a resize that gains some nodes while losing others is two
+/// reconfigurations (shrink then expand) in the MaM protocol, and the
+/// caller must split it.
+///
+/// Sources come first in the plan's node list ([`state_resize_split`]),
+/// each side in ascending node-id order — the same shape
+/// [`resize_pair_plan`] produces for the canonical `0..max(pre, post)`
+/// slice, so prices computed from this plan are directly comparable
+/// with the canonical ones.
+pub fn state_resize_plan(
+    cluster: &Cluster,
+    method: Method,
+    strategy: SpawnStrategy,
+    held: &[NodeId],
+    target: &[NodeId],
+) -> Result<Plan> {
+    let (src, rest) = state_resize_split(held, target)?;
+    if let Some(&n) = src.iter().chain(&rest).find(|&&n| n >= cluster.len()) {
+        bail!("node {n} is out of range for cluster '{}' ({} nodes)", cluster.name, cluster.len());
+    }
+    let held_set: BTreeSet<NodeId> = held.iter().copied().collect();
+    let target_set: BTreeSet<NodeId> = target.iter().copied().collect();
+    let mut nodes = src;
+    nodes.extend(rest);
+    let cores: Vec<u32> = nodes.iter().map(|&id| cluster.cores(id)).collect();
+    let a: Vec<u32> = nodes
+        .iter()
+        .zip(&cores)
+        .map(|(n, &c)| if target_set.contains(n) { c } else { 0 })
+        .collect();
+    let r: Vec<u32> = nodes
+        .iter()
+        .zip(&cores)
+        .map(|(n, &c)| if held_set.contains(n) { c } else { 0 })
+        .collect();
+    Ok(Plan::new(0, method, strategy, nodes, a, r))
+}
+
+/// Price a whole-node resize against the *actual* cluster state: the
+/// concrete nodes the job holds and would gain or lose, their daemon
+/// warmth, and the load co-located jobs impose — instead of
+/// [`predict_resize_pair`]'s canonical empty-cluster pair.
+///
+/// Build the [`state_resize_plan`] for `held -> target`, seed an
+/// analytic world with `state`'s warmth and load, layer the job's own
+/// source ranks on top (per-node MCWs at clock 0 — the state a prior
+/// parallel expansion establishes), and evaluate the reconfiguration.
+/// Held nodes are always treated as warm: the job's own daemons run
+/// there.
+///
+/// On a warm, uncontended state this never prices above the canonical
+/// pair for the same node counts, and it prices expansions strictly
+/// below it (gained nodes skip the cold daemon rollout) — the property
+/// `rust/tests/stateful_pricing.rs` pins.
+///
+/// # Examples
+///
+/// ```
+/// use paraspawn::config::CostModel;
+/// use paraspawn::mam::model::{
+///     predict_resize_in_state, predict_resize_pair, ClusterState,
+/// };
+/// use paraspawn::mam::{Method, SpawnStrategy};
+/// use paraspawn::topology::Cluster;
+///
+/// let cluster = Cluster::mini(8, 4);
+/// let cost = CostModel::mn5();
+/// let held = [0usize, 1];
+/// let target = [0usize, 1, 2, 3, 4, 5];
+/// // Same 2 -> 6 expansion; the canonical pair assumes the four gained
+/// // nodes are cold, the warm state knows their daemons are running.
+/// let warm = predict_resize_in_state(
+///     &cluster,
+///     &cost,
+///     Method::Merge,
+///     SpawnStrategy::ParallelHypercube,
+///     &ClusterState::warm_all(cluster.len()),
+///     &held,
+///     &target,
+///     0,
+/// )
+/// .unwrap();
+/// let canonical = predict_resize_pair(
+///     &cluster,
+///     &cost,
+///     Method::Merge,
+///     SpawnStrategy::ParallelHypercube,
+///     2,
+///     6,
+///     0,
+/// )
+/// .unwrap();
+/// assert!(warm < canonical);
+/// ```
+#[allow(clippy::too_many_arguments)]
+pub fn predict_resize_in_state(
+    cluster: &Cluster,
+    cost: &CostModel,
+    method: Method,
+    strategy: SpawnStrategy,
+    state: &ClusterState,
+    held: &[NodeId],
+    target: &[NodeId],
+    data_bytes: u64,
+) -> Result<f64> {
+    if state.len() != cluster.len() {
+        bail!(
+            "cluster state describes {} nodes but cluster '{}' has {}",
+            state.len(),
+            cluster.name,
+            cluster.len()
+        );
+    }
+    let plan = state_resize_plan(cluster, method, strategy, held, target)?;
+    let mut world = ModelWorld::new(cluster.clone(), cost.clone());
+    for node in 0..cluster.len() {
+        world.node_daemon[node] = state.is_warm(node);
+        world.node_running[node] = state.load(node);
+    }
+    evaluate_plan_in_world(&mut world, &plan, data_bytes)
 }
 
 #[cfg(test)]
@@ -1386,6 +1693,151 @@ mod tests {
             0,
         );
         assert!(hc.is_err());
+    }
+
+    #[test]
+    fn state_resize_plan_orders_sources_first() {
+        let c = Cluster::mini(8, 4);
+        // Expansion: held {3, 5} gaining {1, 6}.
+        let grow = state_resize_plan(
+            &c,
+            Method::Merge,
+            SpawnStrategy::ParallelHypercube,
+            &[5, 3],
+            &[3, 5, 6, 1],
+        )
+        .unwrap();
+        assert_eq!(grow.nodes, vec![3, 5, 1, 6]);
+        assert_eq!(grow.r, vec![4, 4, 0, 0]);
+        assert_eq!(grow.a, vec![4, 4, 4, 4]);
+        assert_eq!(grow.spawn_total(), 8);
+
+        // Shrink: held {1, 3, 5, 6} keeping {3, 6}.
+        let shrink = state_resize_plan(
+            &c,
+            Method::Merge,
+            SpawnStrategy::Plain,
+            &[1, 3, 5, 6],
+            &[6, 3],
+        )
+        .unwrap();
+        assert_eq!(shrink.nodes, vec![3, 6, 1, 5]);
+        assert_eq!(shrink.a, vec![4, 4, 0, 0]);
+        assert_eq!(shrink.r, vec![4, 4, 4, 4]);
+        assert_eq!(shrink.spawn_total(), 0);
+    }
+
+    #[test]
+    fn state_resize_plan_rejects_malformed_sets() {
+        let c = Cluster::mini(8, 4);
+        let plan = |held: &[NodeId], target: &[NodeId]| {
+            state_resize_plan(&c, Method::Merge, SpawnStrategy::Plain, held, target)
+        };
+        assert!(plan(&[0, 0], &[0, 1]).is_err(), "duplicate held node");
+        assert!(plan(&[], &[0]).is_err(), "empty held set");
+        assert!(plan(&[0], &[]).is_err(), "empty target set");
+        assert!(plan(&[0], &[0]).is_err(), "nothing to reconfigure");
+        assert!(plan(&[0], &[0, 9]).is_err(), "out-of-range node");
+        let err = plan(&[0, 1], &[1, 2]).unwrap_err();
+        assert!(format!("{err}").contains("split"), "mixed gain/lose must direct to a split");
+    }
+
+    #[test]
+    fn warm_state_prices_expansions_strictly_below_canonical() {
+        let c = Cluster::mini(8, 4);
+        let cost = CostModel::mn5();
+        let held: Vec<NodeId> = (0..2).collect();
+        let target: Vec<NodeId> = (0..6).collect();
+        let warm = predict_resize_in_state(
+            &c,
+            &cost,
+            Method::Merge,
+            SpawnStrategy::ParallelHypercube,
+            &ClusterState::warm_all(c.len()),
+            &held,
+            &target,
+            0,
+        )
+        .unwrap();
+        let canonical = predict_resize_pair(
+            &c,
+            &cost,
+            Method::Merge,
+            SpawnStrategy::ParallelHypercube,
+            2,
+            6,
+            0,
+        )
+        .unwrap();
+        assert!(warm < canonical, "warm {warm} must undercut canonical {canonical}");
+
+        // A cold state over the same ids reproduces the canonical price
+        // bit-exactly: same plan shape, same daemon charges.
+        let cold = predict_resize_in_state(
+            &c,
+            &cost,
+            Method::Merge,
+            SpawnStrategy::ParallelHypercube,
+            &ClusterState::cold(c.len()),
+            &held,
+            &target,
+            0,
+        )
+        .unwrap();
+        assert_eq!(cold, canonical);
+    }
+
+    #[test]
+    fn colocated_load_oversubscribes_the_fork_stage() {
+        let c = Cluster::mini(8, 4);
+        let cost = CostModel::mn5(); // oversub_penalty: true
+        let held: Vec<NodeId> = vec![0];
+        let target: Vec<NodeId> = vec![0, 1];
+        let quiet = ClusterState::warm_all(c.len());
+        let mut contended = ClusterState::warm_all(c.len());
+        contended.add_load(1, 12); // another job oversubscribes node 1
+        let price = |st: &ClusterState| {
+            predict_resize_in_state(
+                &c,
+                &cost,
+                Method::Merge,
+                SpawnStrategy::ParallelHypercube,
+                st,
+                &held,
+                &target,
+                0,
+            )
+            .unwrap()
+        };
+        assert!(
+            price(&contended) > price(&quiet),
+            "co-located load must slow the spawn ({} vs {})",
+            price(&contended),
+            price(&quiet)
+        );
+    }
+
+    #[test]
+    fn ts_shrink_price_is_state_independent() {
+        // Termination shrinks spawn nothing: daemon warmth cannot matter.
+        let c = Cluster::mini(8, 4);
+        let cost = CostModel::mn5();
+        let held: Vec<NodeId> = (0..6).collect();
+        let target: Vec<NodeId> = (0..2).collect();
+        let price = |st: &ClusterState| {
+            predict_resize_in_state(
+                &c,
+                &cost,
+                Method::Merge,
+                SpawnStrategy::Plain,
+                st,
+                &held,
+                &target,
+                0,
+            )
+            .unwrap()
+        };
+        assert_eq!(price(&ClusterState::warm_all(c.len())), price(&ClusterState::cold(c.len())));
     }
 
     #[test]

@@ -32,15 +32,20 @@ pub struct Group {
 /// One spawn task: `spawner` must spawn `group` during `step` (1-based).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SpawnTask {
+    /// Strategy step the spawn is issued in (1-based).
     pub step: usize,
+    /// The group to spawn.
     pub group: Group,
 }
 
 /// The full reconfiguration plan, shared verbatim by sources and targets.
 #[derive(Clone, Debug)]
 pub struct Plan {
+    /// Reconfiguration epoch the plan executes in.
     pub epoch: u64,
+    /// Process-management method (§3).
     pub method: Method,
+    /// Spawning strategy for the process-management stage.
     pub strategy: SpawnStrategy,
     /// Target node list; nodes hosting source processes come first.
     pub nodes: Vec<NodeId>,
@@ -240,6 +245,7 @@ pub fn hypercube_assignments(plan: &Plan) -> HashMap<usize, Vec<SpawnTask>> {
 /// One row of the diffusive step trace (the columns of Table 2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DiffusiveStep {
+    /// Step number (`s = 0` is the initial state).
     pub s: usize,
     /// `t_s`: total processes existing at the end of step `s` (Eq. 4).
     pub t: usize,

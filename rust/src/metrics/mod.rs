@@ -37,6 +37,7 @@ impl Phase {
         Phase::Shrink,
     ];
 
+    /// Stable lower-case label used in sink tables.
     pub fn name(self) -> &'static str {
         match self {
             Phase::Plan => "plan",
@@ -59,17 +60,20 @@ pub struct ReconfigRecord {
     pub method: String,
     /// Strategy label (e.g. `"hypercube"`).
     pub strategy: String,
-    /// Source / target process counts.
+    /// Source process count.
     pub ns: usize,
+    /// Target process count.
     pub nt: usize,
-    /// Virtual start and end of the reconfiguration.
+    /// Virtual start of the reconfiguration.
     pub t_start: f64,
+    /// Virtual end of the reconfiguration.
     pub t_end: f64,
     /// Per-phase durations (virtual seconds).
     pub phases: Vec<(Phase, f64)>,
 }
 
 impl ReconfigRecord {
+    /// Total reconfiguration time (the paper's resize time).
     pub fn total(&self) -> f64 {
         self.t_end - self.t_start
     }
@@ -79,7 +83,9 @@ impl ReconfigRecord {
 /// ZS cannot).
 #[derive(Clone, Copy, Debug)]
 pub struct NodeReturn {
+    /// The returned node.
     pub node: NodeId,
+    /// Virtual instant of the return.
     pub at: f64,
 }
 
@@ -102,50 +108,62 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// An empty sink.
     pub fn new() -> Self {
         Metrics::default()
     }
 
+    /// Record one completed reconfiguration.
     pub fn record_reconfig(&self, rec: ReconfigRecord) {
         self.inner.lock().unwrap().reconfigs.push(rec);
     }
 
+    /// Record a node returned to the RMS at virtual time `at`.
     pub fn record_node_return(&self, node: NodeId, at: f64) {
         self.inner.lock().unwrap().node_returns.push(NodeReturn { node, at });
     }
 
+    /// Add `n` zombie processes to the running tally.
     pub fn record_zombies(&self, n: u64) {
         self.inner.lock().unwrap().zombies_created += n;
     }
 
+    /// Record the rank-to-node layout after a reconfiguration.
     pub fn record_layout(&self, epoch: u64, nodes: Vec<NodeId>) {
         self.inner.lock().unwrap().layouts.push((epoch, nodes));
     }
 
+    /// The recorded `(epoch, nodes-in-rank-order)` layouts.
     pub fn layouts(&self) -> Vec<(u64, Vec<NodeId>)> {
         self.inner.lock().unwrap().layouts.clone()
     }
 
+    /// Bump the named counter by `n`.
     pub fn count(&self, key: &'static str, n: u64) {
         *self.inner.lock().unwrap().counters.entry(key).or_insert(0) += n;
     }
 
+    /// The recorded reconfigurations, in completion order.
     pub fn reconfigs(&self) -> Vec<ReconfigRecord> {
         self.inner.lock().unwrap().reconfigs.clone()
     }
 
+    /// The recorded node returns, in event order.
     pub fn node_returns(&self) -> Vec<NodeReturn> {
         self.inner.lock().unwrap().node_returns.clone()
     }
 
+    /// Zombie processes created so far.
     pub fn zombies_created(&self) -> u64 {
         self.inner.lock().unwrap().zombies_created
     }
 
+    /// The named counter's value (0 when never bumped).
     pub fn counter(&self, key: &str) -> u64 {
         self.inner.lock().unwrap().counters.get(key).copied().unwrap_or(0)
     }
 
+    /// All counters, keyed by name.
     pub fn counters(&self) -> BTreeMap<&'static str, u64> {
         self.inner.lock().unwrap().counters.clone()
     }

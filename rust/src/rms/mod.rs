@@ -14,10 +14,14 @@ use std::collections::BTreeMap;
 /// A job's node allocation: ordered `(node, cores_used)` pairs.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Allocation {
+    /// `(node, cores)` pairs in grant order: the launch nodes first,
+    /// expansion nodes appended — [`Rms::shrink`] releases from the
+    /// tail, matching §4.6's release order.
     pub slots: Vec<(NodeId, u32)>,
 }
 
 impl Allocation {
+    /// An allocation over the given `(node, cores)` slots.
     pub fn new(slots: Vec<(NodeId, u32)>) -> Self {
         Allocation { slots }
     }
@@ -27,10 +31,12 @@ impl Allocation {
         self.slots.iter().map(|&(_, c)| c as usize).sum()
     }
 
+    /// The allocated node ids, in slot order.
     pub fn nodes(&self) -> Vec<NodeId> {
         self.slots.iter().map(|&(n, _)| n).collect()
     }
 
+    /// Number of allocated nodes.
     pub fn n_nodes(&self) -> usize {
         self.slots.len()
     }
@@ -63,13 +69,22 @@ pub enum AllocPolicy {
 /// capacity.
 #[derive(Clone, Debug)]
 pub struct Rms {
+    /// The managed cluster topology.
     pub cluster: Cluster,
     free: Vec<u32>,
 }
 
+/// Why an allocation request failed.
 #[derive(Debug)]
 pub enum RmsError {
-    Capacity { requested: usize, available: usize },
+    /// Not enough (type-compatible) idle nodes for the request.
+    Capacity {
+        /// Nodes the request asked for.
+        requested: usize,
+        /// Idle nodes actually available.
+        available: usize,
+    },
+    /// A claim overlaps cores that are already granted.
     Conflict(NodeId),
 }
 
@@ -90,6 +105,7 @@ impl std::fmt::Display for RmsError {
 impl std::error::Error for RmsError {}
 
 impl Rms {
+    /// A resource manager over `cluster` with every core free.
     pub fn new(cluster: Cluster) -> Self {
         let free = cluster.nodes.iter().map(|n| n.cores).collect();
         Rms { cluster, free }

@@ -41,6 +41,14 @@
 //!   evaluated analytically and memoized per `(pre, post)` pair, so
 //!   month-long multi-thousand-job SWF traces replay with exact prices
 //!   at scalar-pricer speed ([`schedule_with_pricer`]).
+//! * [`StatefulPricer`] — cluster-state-aware pricing
+//!   ([`crate::mam::model::predict_resize_in_state`]): each resize is
+//!   priced against the concrete nodes the job holds and would gain or
+//!   lose — daemon warmth, co-located load, real core counts and link
+//!   paths — instead of the canonical empty-cluster pair. A stateful
+//!   pricer also changes the *decisions*: the malleable policy picks
+//!   shrink victims by cheapest predicted release (not largest surplus)
+//!   and steers expansions toward warm nodes.
 //!
 //! The scheduler is deterministic: same cluster, policy, pricer and job
 //! list in, bit-identical [`SchedResult`] out. Node-seconds are conserved:
@@ -53,11 +61,13 @@
 //! files and real traces can be replayed.
 
 use super::workload::{validate_jobs, JobSpec, ReconfigCostModel, WorkloadError};
-use super::{AllocPolicy, Allocation, Rms};
+use super::{AllocPolicy, Allocation, Rms, RmsError};
 use crate::config::CostModel;
-use crate::mam::model::predict_resize_pair;
+use crate::mam::model::{
+    predict_resize_in_state, predict_resize_pair, state_resize_split, ClusterState,
+};
 use crate::mam::{Method, SpawnStrategy};
-use crate::topology::Cluster;
+use crate::topology::{Cluster, NodeId};
 use crate::util::rng::Rng;
 use std::collections::{HashMap, VecDeque};
 
@@ -78,9 +88,11 @@ pub enum SchedPolicy {
 }
 
 impl SchedPolicy {
+    /// Every policy, in sweep order.
     pub const ALL: [SchedPolicy; 3] =
         [SchedPolicy::Fcfs, SchedPolicy::EasyBackfill, SchedPolicy::Malleable];
 
+    /// Stable lower-case label (`"fcfs"` / `"easy"` / `"malleable"`).
     pub fn name(self) -> &'static str {
         match self {
             SchedPolicy::Fcfs => "fcfs",
@@ -89,6 +101,7 @@ impl SchedPolicy {
         }
     }
 
+    /// Parse a policy label (accepts the aliases `backfill` and `drm`).
     pub fn parse(s: &str) -> Option<SchedPolicy> {
         match s {
             "fcfs" => Some(SchedPolicy::Fcfs),
@@ -109,11 +122,64 @@ impl SchedPolicy {
 /// cache, which is what keeps multi-thousand-job SWF replays fast.
 /// Errors are returned as strings and surface from the scheduler as
 /// [`WorkloadError::Pricing`] — a pricer must never panic mid-trace.
+///
+/// Count-based pricers implement only the two required methods. A
+/// *state-aware* pricer additionally overrides [`ResizePricer::is_stateful`]
+/// and the `*_in_state` queries, which receive the concrete node ids a
+/// resize touches plus a [`ClusterState`] view (daemon warmth,
+/// co-located load) — the scheduler then routes every pricing event
+/// through them and lets predicted resize seconds drive its shrink-victim
+/// and expansion-target choices.
+///
+/// # Examples
+///
+/// ```
+/// use paraspawn::rms::sched::ResizePricer;
+/// use paraspawn::rms::workload::ReconfigCostModel;
+///
+/// let mut scalar = ReconfigCostModel { expand_cost: 0.5, shrink_cost: 0.002 };
+/// assert_eq!(scalar.expand_seconds(2, 8).unwrap(), 0.5);
+/// assert_eq!(scalar.shrink_seconds(8, 2).unwrap(), 0.002);
+/// ```
 pub trait ResizePricer {
     /// Stall seconds per process for an expansion `pre -> post` nodes.
     fn expand_seconds(&mut self, pre: usize, post: usize) -> Result<f64, String>;
     /// Stall seconds per process for a shrink `pre -> post` nodes.
     fn shrink_seconds(&mut self, pre: usize, post: usize) -> Result<f64, String>;
+
+    /// Whether this pricer prices against concrete cluster state. When
+    /// `true` the scheduler calls the `*_in_state` queries for every
+    /// reconfiguration, orders shrink victims by predicted resize cost
+    /// (instead of surplus), and steers expansions toward warm nodes.
+    fn is_stateful(&self) -> bool {
+        false
+    }
+
+    /// Stall seconds per process for an expansion from the concrete
+    /// node set `held` to `target` (`held` ⊆ `target`), given the
+    /// ambient `state` of the rest of the cluster. The default ignores
+    /// the state and delegates to the count-based query.
+    fn expand_seconds_in_state(
+        &mut self,
+        _state: &ClusterState,
+        held: &[NodeId],
+        target: &[NodeId],
+    ) -> Result<f64, String> {
+        self.expand_seconds(held.len(), target.len())
+    }
+
+    /// Stall seconds per process for a shrink from the concrete node
+    /// set `held` to `target` (`target` ⊆ `held`), given the ambient
+    /// `state` of the rest of the cluster. The default ignores the
+    /// state and delegates to the count-based query.
+    fn shrink_seconds_in_state(
+        &mut self,
+        _state: &ClusterState,
+        held: &[NodeId],
+        target: &[NodeId],
+    ) -> Result<f64, String> {
+        self.shrink_seconds(held.len(), target.len())
+    }
 }
 
 /// The scalar pricer: the two fitted [`ReconfigCostModel`] constants,
@@ -152,7 +218,24 @@ pub enum ShrinkPricing {
 /// in id order, each filled to its core count. On homogeneous clusters
 /// this is exact; on heterogeneous pools it is the id-ordered
 /// representative of the pair (the allocation's actual node types may
-/// differ — documented approximation).
+/// differ — documented approximation). For pricing against the *actual*
+/// nodes and cluster state, see [`StatefulPricer`].
+///
+/// # Examples
+///
+/// ```
+/// use paraspawn::config::CostModel;
+/// use paraspawn::rms::sched::{AnalyticPricer, ResizePricer};
+/// use paraspawn::topology::Cluster;
+///
+/// let mut ts = AnalyticPricer::ts(Cluster::mini(8, 4), CostModel::mn5());
+/// let mut ss = AnalyticPricer::ss(Cluster::mini(8, 4), CostModel::mn5());
+/// // Termination-based shrinks are orders of magnitude cheaper than
+/// // spawn-based ones — the paper's headline, priced per event.
+/// let ts_shrink = ts.shrink_seconds(6, 2).unwrap();
+/// let ss_shrink = ss.shrink_seconds(6, 2).unwrap();
+/// assert!(ss_shrink / ts_shrink > 10.0);
+/// ```
 #[derive(Clone, Debug)]
 pub struct AnalyticPricer {
     cluster: Cluster,
@@ -165,6 +248,9 @@ pub struct AnalyticPricer {
 }
 
 impl AnalyticPricer {
+    /// An analytic pricer over `cluster` pricing expansions with
+    /// `strategy` and shrinks per `shrink`, redistributing `data_bytes`
+    /// of application payload per resize.
     pub fn new(
         cluster: Cluster,
         cost: CostModel,
@@ -268,11 +354,237 @@ impl ResizePricer for AnalyticPricer {
     }
 }
 
+/// Memo key of one state-aware pricing query, mirroring the node order
+/// of [`crate::mam::model::state_resize_plan`] (sources first, then the
+/// gained/dropped side, each half id-sorted): two queries with the same
+/// per-position `(warm, load, cores)` profiles build the same plan
+/// shape. On a fully symmetric cluster (homogeneous cores, single
+/// switch) node identities are erased from the key — an all-warm,
+/// uncontended resize collapses to one memo slot per `(pre, post)`
+/// shape, so the cache stays as small as the analytic pricer's pair
+/// cache once every daemon is warm. On asymmetric clusters the
+/// concrete ids are part of the key.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct StateKey {
+    shrink: bool,
+    /// Source-side nodes in plan order: (warm, load, cores).
+    src: Vec<(bool, u32, u32)>,
+    /// Gained (expansion) / dropped (shrink) nodes in plan order.
+    rest: Vec<(bool, u32, u32)>,
+    /// Concrete `(source, rest)` node ids (asymmetric clusters only —
+    /// on symmetric clusters same-profile resizes price identically).
+    ids: Option<(Vec<NodeId>, Vec<NodeId>)>,
+}
+
+/// The cluster-state-aware pricer: every reconfiguration is priced by
+/// [`crate::mam::model::predict_resize_in_state`] against the concrete
+/// nodes the job holds and would gain or lose — their daemon warmth,
+/// their core counts and link paths, and the load co-located jobs
+/// impose — instead of the canonical empty-cluster `(pre, post)` pair
+/// the [`AnalyticPricer`] asks about.
+///
+/// Two things change at workload scale:
+///
+/// * **Prices drop.** On a busy cluster nearly every node has hosted a
+///   job before, so expansions reuse warm RTE daemons instead of paying
+///   the canonical cold rollout — per event a stateful price never
+///   exceeds the canonical one on a warm uncontended cluster (pinned in
+///   `rust/tests/stateful_pricing.rs`), and on the bundled 2094-job
+///   replay the stateful arms undercut the analytic arms' total
+///   reconfiguration node-seconds (asserted as `<=` in
+///   `examples/trace_replay.rs` — scheduling trajectories diverge, so
+///   only the per-event bound is a theorem).
+/// * **Decisions improve.** Because the pricer understands state, the
+///   malleable policy consults it to pick *which* job to shrink (the
+///   cheapest predicted release, not the largest surplus) and *which*
+///   idle nodes to expand into (warm daemons first).
+///
+/// Count-only queries (no node ids available) fall back to the
+/// canonical [`AnalyticPricer`]. State queries are memoized per state
+/// profile; on symmetric clusters node identities are erased from the
+/// memo key, so the cache collapses to the same size as the canonical
+/// pair cache once the machine is warm and replay speed stays in the
+/// same class.
+///
+/// # Examples
+///
+/// ```
+/// use paraspawn::config::CostModel;
+/// use paraspawn::mam::model::ClusterState;
+/// use paraspawn::rms::sched::{ResizePricer, StatefulPricer};
+/// use paraspawn::topology::Cluster;
+///
+/// let cluster = Cluster::mini(8, 4);
+/// let mut pricer = StatefulPricer::ts(cluster.clone(), CostModel::mn5());
+/// // Count-based queries fall back to the canonical empty-cluster pair.
+/// let canonical = pricer.expand_seconds(2, 6).unwrap();
+/// // The same resize on a warm cluster is strictly cheaper.
+/// let warm = pricer
+///     .expand_seconds_in_state(
+///         &ClusterState::warm_all(cluster.len()),
+///         &[0usize, 1],
+///         &[0usize, 1, 2, 3, 4, 5],
+///     )
+///     .unwrap();
+/// assert!(warm < canonical);
+/// ```
+#[derive(Clone, Debug)]
+pub struct StatefulPricer {
+    canonical: AnalyticPricer,
+    /// Homogeneous cores + single switch: node identity cannot affect a
+    /// price, so memo keys drop the ids.
+    symmetric: bool,
+    state_cache: HashMap<StateKey, f64>,
+}
+
+impl StatefulPricer {
+    /// A stateful pricer over `cluster` pricing expansions with
+    /// `strategy` and shrinks per `shrink`, redistributing `data_bytes`
+    /// of application payload per resize.
+    pub fn new(
+        cluster: Cluster,
+        cost: CostModel,
+        strategy: SpawnStrategy,
+        shrink: ShrinkPricing,
+        data_bytes: u64,
+    ) -> StatefulPricer {
+        let symmetric = cluster.is_core_homogeneous() && cluster.switches.len() <= 1;
+        StatefulPricer {
+            canonical: AnalyticPricer::new(cluster, cost, strategy, shrink, data_bytes),
+            symmetric,
+            state_cache: HashMap::new(),
+        }
+    }
+
+    /// TS pricing: parallel Merge expansions, termination-based shrinks
+    /// (the paper's contribution), widest applicable strategy.
+    pub fn ts(cluster: Cluster, cost: CostModel) -> StatefulPricer {
+        let strategy = AnalyticPricer::auto_strategy(&cluster);
+        StatefulPricer::new(cluster, cost, strategy, ShrinkPricing::Termination, 0)
+    }
+
+    /// SS pricing: spawn-based (respawn) shrinks — the baseline arm.
+    pub fn ss(cluster: Cluster, cost: CostModel) -> StatefulPricer {
+        let strategy = AnalyticPricer::auto_strategy(&cluster);
+        StatefulPricer::new(cluster, cost, strategy, ShrinkPricing::Respawn, 0)
+    }
+
+    /// Distinct state profiles priced so far (cache occupancy), not
+    /// counting the canonical fallback's pair cache.
+    pub fn cached_states(&self) -> usize {
+        self.state_cache.len()
+    }
+
+    fn state_key(
+        &self,
+        shrink: bool,
+        state: &ClusterState,
+        src: Vec<NodeId>,
+        rest: Vec<NodeId>,
+    ) -> StateKey {
+        // The evaluation forces every *held* node warm (the job's own
+        // daemons run there): source nodes always, and for a shrink the
+        // dropped nodes too. Normalize those warmth bits so provably
+        // identical prices share one memo slot.
+        let profile = |nodes: &[NodeId], forced_warm: bool| -> Vec<(bool, u32, u32)> {
+            nodes
+                .iter()
+                .map(|&n| {
+                    (
+                        forced_warm || state.is_warm(n),
+                        state.load(n),
+                        self.canonical.cluster.cores(n),
+                    )
+                })
+                .collect()
+        };
+        StateKey {
+            shrink,
+            src: profile(&src, true),
+            rest: profile(&rest, shrink),
+            ids: if self.symmetric { None } else { Some((src, rest)) },
+        }
+    }
+
+    fn price_in_state(
+        &mut self,
+        shrink: bool,
+        state: &ClusterState,
+        held: &[NodeId],
+        target: &[NodeId],
+    ) -> Result<f64, String> {
+        // The same (sources, rest) split state_resize_plan orders the
+        // plan by — sharing the definition keeps the memo key and the
+        // priced plan from drifting apart.
+        let (src, rest) = state_resize_split(held, target).map_err(|e| format!("{e:#}"))?;
+        let key = self.state_key(shrink, state, src, rest);
+        if let Some(&secs) = self.state_cache.get(&key) {
+            return Ok(secs);
+        }
+        let method = if shrink {
+            match self.canonical.shrink {
+                ShrinkPricing::Termination => Method::Merge,
+                ShrinkPricing::Respawn => Method::Baseline,
+            }
+        } else {
+            Method::Merge
+        };
+        let secs = predict_resize_in_state(
+            &self.canonical.cluster,
+            &self.canonical.cost,
+            method,
+            self.canonical.strategy,
+            state,
+            held,
+            target,
+            self.canonical.data_bytes,
+        )
+        .map_err(|e| format!("{e:#}"))?;
+        self.state_cache.insert(key, secs);
+        Ok(secs)
+    }
+}
+
+impl ResizePricer for StatefulPricer {
+    fn expand_seconds(&mut self, pre: usize, post: usize) -> Result<f64, String> {
+        self.canonical.expand_seconds(pre, post)
+    }
+
+    fn shrink_seconds(&mut self, pre: usize, post: usize) -> Result<f64, String> {
+        self.canonical.shrink_seconds(pre, post)
+    }
+
+    fn is_stateful(&self) -> bool {
+        true
+    }
+
+    fn expand_seconds_in_state(
+        &mut self,
+        state: &ClusterState,
+        held: &[NodeId],
+        target: &[NodeId],
+    ) -> Result<f64, String> {
+        self.price_in_state(false, state, held, target)
+    }
+
+    fn shrink_seconds_in_state(
+        &mut self,
+        state: &ClusterState,
+        held: &[NodeId],
+        target: &[NodeId],
+    ) -> Result<f64, String> {
+        self.price_in_state(true, state, held, target)
+    }
+}
+
 /// Per-job outcome of a scheduled workload (input order).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct JobOutcome {
+    /// Instant the job started running.
     pub start: f64,
+    /// Instant the job completed.
     pub finish: f64,
+    /// Seconds spent queued (`start - arrival`).
     pub wait: f64,
     /// Reconfigurations (expands + shrinks) this job went through.
     pub reconfigs: usize,
@@ -281,11 +593,17 @@ pub struct JobOutcome {
 /// Result of scheduling one workload under one policy and cost model.
 #[derive(Clone, Debug, PartialEq, Default)]
 pub struct SchedResult {
+    /// Completion instant of the last job.
     pub makespan: f64,
+    /// Mean queue wait across jobs.
     pub mean_wait: f64,
+    /// Worst queue wait across jobs.
     pub max_wait: f64,
+    /// Mean `finish - arrival` across jobs.
     pub mean_turnaround: f64,
+    /// Expansion events executed.
     pub expands: usize,
+    /// Shrink events executed.
     pub shrinks: usize,
     /// Node-seconds charged for reconfigurations (stall time × nodes).
     pub reconfig_node_seconds: f64,
@@ -295,10 +613,12 @@ pub struct SchedResult {
     pub idle_node_seconds: f64,
     /// `total_nodes * makespan` — the conservation budget.
     pub total_node_seconds: f64,
+    /// Per-job outcomes in input order.
     pub jobs: Vec<JobOutcome>,
 }
 
 impl SchedResult {
+    /// Total reconfiguration events (expands + shrinks).
     pub fn reconfigurations(&self) -> usize {
         self.expands + self.shrinks
     }
@@ -352,6 +672,11 @@ struct Scheduler<'a> {
     shrinks: usize,
     reconfig_node_seconds: f64,
     busy_node_seconds: f64,
+    /// Per-node RTE-daemon warmth observed by the event loop: a node is
+    /// warm once any job has started or expanded onto it. Feeds the
+    /// state-aware pricing queries and the warm-first expansion-target
+    /// choice of stateful pricers; cheap enough to track always.
+    warm: Vec<bool>,
 }
 
 /// Schedule `jobs` on `cluster` under `policy`, charging the scalar
@@ -410,6 +735,7 @@ pub fn schedule_with_pricer(
         shrinks: 0,
         reconfig_node_seconds: 0.0,
         busy_node_seconds: 0.0,
+        warm: vec![false; total_nodes],
     };
 
     let mut next_arrival = 0usize;
@@ -506,12 +832,39 @@ pub fn schedule_with_pricer(
 }
 
 impl Scheduler<'_> {
+    /// Mark every node of `alloc` daemon-warm (a job launched there).
+    fn mark_warm(&mut self, alloc: &Allocation) {
+        for &(node, _) in &alloc.slots {
+            self.warm[node] = true;
+        }
+    }
+
+    /// The cluster state *around* one job: global warmth plus the load
+    /// every node carries, with `exclude`'s own processes subtracted
+    /// (state-aware pricers layer the priced job's ranks back on top
+    /// from the resize plan).
+    fn ambient_state(&self, exclude: &Allocation) -> ClusterState {
+        let n = self.rms.cluster.len();
+        let mut state = ClusterState::cold(n);
+        for node in 0..n {
+            if self.warm[node] {
+                state.set_warm(node);
+            }
+            state.add_load(node, self.rms.cluster.cores(node) - self.rms.free_on(node));
+        }
+        for &(node, cores) in &exclude.slots {
+            state.sub_load(node, cores);
+        }
+        state
+    }
+
     /// Try to start `jid` at its minimum width from the idle pool.
     fn try_start(&mut self, jid: usize) -> bool {
         let spec = &self.jobs[jid];
         match self.rms.plan_allocation(spec.min_nodes, self.alloc_policy) {
             Ok(alloc) => {
                 self.rms.claim(&alloc).expect("planned allocation claims cleanly");
+                self.mark_warm(&alloc);
                 self.starts[jid] = self.now;
                 self.running.push(Run {
                     job: jid,
@@ -632,14 +985,18 @@ impl Scheduler<'_> {
     }
 
     /// Shrink malleable running jobs toward `min_nodes` until a
-    /// `need`-node allocation becomes *placeable* (largest surplus first,
-    /// ties by job id — deterministic). Placement is checked against the
-    /// RMS after every shrink rather than by node counting, so on
-    /// heterogeneous pools we keep releasing until the right node types
-    /// are free (at least one node per step) and stop the moment the head
-    /// fits — a successful return guarantees the subsequent allocation
-    /// succeeds. Charges `shrink_seconds * pre_nodes` node-seconds per
-    /// shrink (every terminating process participates).
+    /// `need`-node allocation becomes *placeable*. Victim order depends
+    /// on the pricer: count-based pricers shrink the largest surplus
+    /// first (ties by job id — deterministic), while a stateful pricer
+    /// ([`ResizePricer::is_stateful`]) greedily shrinks whichever victim
+    /// has the cheapest *predicted* release
+    /// ([`Scheduler::shrink_to_fit_stateful`]). Placement is checked
+    /// against the RMS after every shrink rather than by node counting,
+    /// so on heterogeneous pools we keep releasing until the right node
+    /// types are free (at least one node per step) and stop the moment
+    /// the head fits — a successful return guarantees the subsequent
+    /// allocation succeeds. Charges `shrink_seconds * pre_nodes`
+    /// node-seconds per shrink (every terminating process participates).
     ///
     /// A pass that can never admit the head must not shrink anybody: the
     /// full release of every victim's surplus is dry-run on a scratch
@@ -667,6 +1024,9 @@ impl Scheduler<'_> {
         }
         if scratch.plan_allocation(need, self.alloc_policy).is_err() {
             return Ok(false); // doomed: bail before anyone pays
+        }
+        if self.pricer.is_stateful() {
+            return self.shrink_to_fit_stateful(need, &order);
         }
         order.sort_by_key(|&i| {
             let r = &self.running[i];
@@ -724,11 +1084,119 @@ impl Scheduler<'_> {
         }
     }
 
+    /// The stateful victim-selection loop: while the head's allocation
+    /// is unplaceable, price every candidate victim's next release —
+    /// shrinking it by the current deficit (or its whole surplus when
+    /// the pool is count-sufficient but type-fragmented) — through the
+    /// state-aware pricer, and execute the cheapest predicted charge
+    /// (ties by job id — deterministic). This replaces the
+    /// surplus-ordered sort: a large-surplus victim whose release is
+    /// expensive (wide collectives, slow links, a spawn-based respawn)
+    /// loses to a small victim whose release is cheap, which is exactly
+    /// the decision the paper's per-resize cost differences enable.
+    ///
+    /// Feasibility has already been dry-run by [`Scheduler::shrink_to_fit`];
+    /// the defensive `Ok(false)` is unreachable under that guard.
+    fn shrink_to_fit_stateful(
+        &mut self,
+        need: usize,
+        candidates: &[usize],
+    ) -> Result<bool, WorkloadError> {
+        loop {
+            if self.can_place(need) {
+                return Ok(true);
+            }
+            let deficit = need.saturating_sub(self.idle_count());
+            // (charge, job, running index, post nodes) of the cheapest
+            // predicted release so far.
+            let mut best: Option<(f64, usize, usize, usize)> = None;
+            for &i in candidates {
+                let (job, pre) = {
+                    let r = &self.running[i];
+                    (r.job, r.alloc.n_nodes())
+                };
+                let surplus = pre - self.jobs[job].min_nodes;
+                if surplus == 0 {
+                    continue;
+                }
+                // Same release sizing as the count-based pass: cover the
+                // deficit, or release the whole surplus in one priced
+                // event when the pool is fragmented rather than short.
+                let give = if deficit == 0 { surplus } else { surplus.min(deficit) };
+                let post = pre - give;
+                let (held, kept) = {
+                    let r = &self.running[i];
+                    (
+                        r.alloc.nodes(),
+                        r.alloc.slots[..post].iter().map(|&(n, _)| n).collect::<Vec<NodeId>>(),
+                    )
+                };
+                let state = self.ambient_state(&self.running[i].alloc);
+                let secs = self
+                    .pricer
+                    .shrink_seconds_in_state(&state, &held, &kept)
+                    .map_err(|reason| WorkloadError::Pricing { job, pre, post, reason })?;
+                let charge = secs * pre as f64;
+                let cheaper = match best {
+                    None => true,
+                    Some((c, j, ..)) => charge.total_cmp(&c).then(job.cmp(&j)).is_lt(),
+                };
+                if cheaper {
+                    best = Some((charge, job, i, post));
+                }
+            }
+            let Some((charge, job, i, post)) = best else {
+                return Ok(false); // no surplus left anywhere (defensive)
+            };
+            let r = &mut self.running[i];
+            r.progress_to(self.now);
+            r.alloc = self.rms.shrink(&r.alloc, post);
+            r.remaining += charge;
+            self.reconfig_node_seconds += charge;
+            self.shrinks += 1;
+            self.job_reconfigs[job] += 1;
+        }
+    }
+
+    /// Grow a running job's allocation preferring *warm* idle nodes —
+    /// the cheapest predicted expansion targets: among idle whole nodes
+    /// of a homogeneous pool, daemon warmth is the only per-node state
+    /// the cost model distinguishes, so warm-first ordering *is*
+    /// predicted-resize-seconds ordering without pricing every subset.
+    /// Ties break by node id, keeping the choice deterministic. On
+    /// heterogeneous pools (`BalancedTypes`) type balance constrains
+    /// the choice instead and the plain [`Rms::grow`] is used.
+    fn grow_warm_first(
+        &mut self,
+        current: &Allocation,
+        want: usize,
+    ) -> Result<Allocation, RmsError> {
+        if self.alloc_policy != AllocPolicy::WholeNodes {
+            return self.rms.grow(current, want, self.alloc_policy);
+        }
+        let mut idle = self.rms.idle_nodes();
+        let extra_n = want - current.n_nodes();
+        if idle.len() < extra_n {
+            return Err(RmsError::Capacity { requested: extra_n, available: idle.len() });
+        }
+        idle.sort_by_key(|&n| (!self.warm[n], n)); // warm daemons first
+        let extra = Allocation::new(
+            idle.into_iter().take(extra_n).map(|n| (n, self.rms.cluster.cores(n))).collect(),
+        );
+        self.rms.claim(&extra)?;
+        let mut slots = current.slots.clone();
+        slots.extend(extra.slots);
+        Ok(Allocation::new(slots))
+    }
+
     /// Expand malleable running jobs into idle nodes (start order, i.e.
     /// oldest first: recorded start time, ties by job id —
     /// deterministic), up to `max_nodes`, charging
     /// `expand_seconds * post_nodes` node-seconds per expansion (existing
-    /// plus spawned processes all participate).
+    /// plus spawned processes all participate). Stateful pricers
+    /// additionally steer the growth toward warm nodes
+    /// ([`Scheduler::grow_warm_first`]) and price the event against the
+    /// concrete gained nodes and ambient cluster state.
     ///
     /// The `running` vector is *admission* order, which diverges from
     /// start order when several queued jobs are admitted at the same
@@ -744,6 +1212,7 @@ impl Scheduler<'_> {
             let (jx, jy) = (self.running[x].job, self.running[y].job);
             self.starts[jx].total_cmp(&self.starts[jy]).then(jx.cmp(&jy))
         });
+        let stateful = self.pricer.is_stateful();
         for i in order {
             let idle = self.idle_count();
             if idle == 0 {
@@ -760,13 +1229,32 @@ impl Scheduler<'_> {
             if want <= cur {
                 continue;
             }
-            match self.rms.grow(&self.running[i].alloc, want, self.alloc_policy) {
+            let grown = if stateful {
+                let held = self.running[i].alloc.clone();
+                self.grow_warm_first(&held, want)
+            } else {
+                self.rms.grow(&self.running[i].alloc, want, self.alloc_policy)
+            };
+            match grown {
                 Ok(alloc) => {
                     let post = alloc.n_nodes();
-                    let secs = self
-                        .pricer
-                        .expand_seconds(cur, post)
-                        .map_err(|reason| WorkloadError::Pricing { job, pre: cur, post, reason })?;
+                    let secs = if stateful {
+                        // The gained nodes are claimed already, so the
+                        // ambient state excludes the whole grown
+                        // allocation; warmth is marked only after
+                        // pricing — this expansion pays for any cold
+                        // daemons it is the first to roll out. The held
+                        // nodes are the grown allocation's first `cur`
+                        // slots (grow keeps current slots in place).
+                        let held: Vec<NodeId> =
+                            alloc.slots[..cur].iter().map(|&(n, _)| n).collect();
+                        let state = self.ambient_state(&alloc);
+                        self.pricer.expand_seconds_in_state(&state, &held, &alloc.nodes())
+                    } else {
+                        self.pricer.expand_seconds(cur, post)
+                    }
+                    .map_err(|reason| WorkloadError::Pricing { job, pre: cur, post, reason })?;
+                    self.mark_warm(&alloc);
                     let r = &mut self.running[i];
                     r.progress_to(self.now);
                     r.alloc = alloc;
@@ -813,6 +1301,17 @@ pub fn mark_malleable(
 /// (failed/cancelled jobs) are skipped. Processor counts convert to
 /// whole nodes of `cores_per_node`, clamped to `total_nodes`; jobs are
 /// rigid (`malleable: false`) — overlay with [`mark_malleable`].
+///
+/// # Examples
+///
+/// ```
+/// use paraspawn::rms::sched::read_swf;
+///
+/// let trace = "1 0.0 -1 100.0 8 -1 -1 8 100.0 -1 1 -1 -1 -1 -1 -1 -1 -1\n";
+/// let jobs = read_swf(trace, 4, 8).unwrap();
+/// assert_eq!(jobs.len(), 1);
+/// assert_eq!(jobs[0].min_nodes, 2); // 8 processors on 4-core nodes
+/// ```
 pub fn read_swf(
     text: &str,
     cores_per_node: u32,
@@ -1154,6 +1653,70 @@ mod tests {
         // Pinning overrides the memo (calibration splice-in).
         p.pin_expand(2, 6, 42.0);
         assert_eq!(p.expand_seconds(2, 6).unwrap(), 42.0);
+    }
+
+    #[test]
+    fn stateful_pricer_count_queries_match_canonical() {
+        let cluster = Cluster::mini(8, 4);
+        let cost = CostModel::mn5();
+        let mut st = StatefulPricer::ts(cluster.clone(), cost.clone());
+        let mut an = AnalyticPricer::ts(cluster, cost);
+        assert!(st.is_stateful() && !an.is_stateful());
+        assert_eq!(st.expand_seconds(2, 6).unwrap(), an.expand_seconds(2, 6).unwrap());
+        assert_eq!(st.shrink_seconds(6, 2).unwrap(), an.shrink_seconds(6, 2).unwrap());
+    }
+
+    #[test]
+    fn stateful_memo_erases_node_identity_on_symmetric_clusters() {
+        let mut p = StatefulPricer::ts(Cluster::mini(8, 4), CostModel::mn5());
+        let state = ClusterState::warm_all(8);
+        let a = p.expand_seconds_in_state(&state, &[0, 1], &[0, 1, 2, 3]).unwrap();
+        assert_eq!(p.cached_states(), 1);
+        // A different concrete placement with the same per-position
+        // profile must hit the memo (the mini cluster is symmetric).
+        let b = p.expand_seconds_in_state(&state, &[4, 5], &[4, 5, 6, 7]).unwrap();
+        assert_eq!(p.cached_states(), 1, "same profile must not re-evaluate");
+        assert_eq!(a, b);
+        // A different warmth profile is a different price point.
+        let mut held_warm_only = ClusterState::cold(8);
+        held_warm_only.set_warm(0);
+        held_warm_only.set_warm(1);
+        let c = p.expand_seconds_in_state(&held_warm_only, &[0, 1], &[0, 1, 2, 3]).unwrap();
+        assert_eq!(p.cached_states(), 2);
+        assert!(c > a, "cold gained daemons must price above warm ones");
+    }
+
+    #[test]
+    fn stateful_pricer_errors_surface_as_workload_errors() {
+        // Hypercube on the heterogeneous NASP cluster is invalid: the
+        // stateful pricer must refuse and the scheduler must surface it.
+        let mut p = StatefulPricer::new(
+            Cluster::nasp(),
+            CostModel::nasp(),
+            SpawnStrategy::ParallelHypercube,
+            ShrinkPricing::Termination,
+            0,
+        );
+        let state = ClusterState::cold(16);
+        assert!(p
+            .expand_seconds_in_state(&state, &[0], &[0, 8])
+            .is_err());
+        let jobs = vec![JobSpec {
+            arrival: 0.0,
+            work: 100.0,
+            min_nodes: 2,
+            max_nodes: 10,
+            malleable: true,
+        }];
+        let err = schedule_with_pricer(
+            &Cluster::nasp(),
+            AllocPolicy::BalancedTypes,
+            SchedPolicy::Malleable,
+            &mut p,
+            &jobs,
+        )
+        .unwrap_err();
+        assert!(matches!(err, WorkloadError::Pricing { job: 0, .. }), "got {err:?}");
     }
 
     #[test]

@@ -44,6 +44,7 @@ impl ReconfigCostModel {
 /// One job of the workload.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
+    /// Submission instant (seconds).
     pub arrival: f64,
     /// Total node-seconds of work.
     pub work: f64,
@@ -51,15 +52,20 @@ pub struct JobSpec {
     pub min_nodes: usize,
     /// Maximum useful nodes.
     pub max_nodes: usize,
+    /// Whether the scheduler may resize the job while it runs.
     pub malleable: bool,
 }
 
 /// Result of a workload simulation.
 #[derive(Clone, Debug)]
 pub struct WorkloadResult {
+    /// Completion instant of the last job.
     pub makespan: f64,
+    /// Mean queue wait across jobs.
     pub mean_wait: f64,
+    /// Mean `finish - arrival` across jobs.
     pub mean_turnaround: f64,
+    /// Resize events executed.
     pub reconfigurations: usize,
 }
 
@@ -69,15 +75,36 @@ pub enum WorkloadError {
     /// A job can never run: its minimum node count exceeds the cluster.
     /// Silently skipping it would deflate makespan/mean-wait (the job
     /// would be reported as finishing at t=0 with zero wait).
-    Unschedulable { job: usize, min_nodes: usize, total_nodes: usize },
+    Unschedulable {
+        /// Input index of the offending job.
+        job: usize,
+        /// Its minimum node count.
+        min_nodes: usize,
+        /// Nodes the cluster actually has.
+        total_nodes: usize,
+    },
     /// A job is malformed (zero node count, non-positive or non-finite
     /// work, non-finite arrival, `max_nodes < min_nodes`).
-    InvalidJob { job: usize, reason: &'static str },
+    InvalidJob {
+        /// Input index of the offending job.
+        job: usize,
+        /// What is malformed about it.
+        reason: &'static str,
+    },
     /// The resize pricer could not price a reconfiguration event (e.g.
     /// an analytic pricer asked to evaluate a strategy that is invalid
     /// on the cluster shape). Surfaced instead of silently falling back
     /// to a different price — a mispriced trace is worse than no trace.
-    Pricing { job: usize, pre: usize, post: usize, reason: String },
+    Pricing {
+        /// Input index of the resizing job.
+        job: usize,
+        /// Nodes held before the resize.
+        pre: usize,
+        /// Nodes held after the resize.
+        post: usize,
+        /// The pricer's error message.
+        reason: String,
+    },
 }
 
 impl std::fmt::Display for WorkloadError {

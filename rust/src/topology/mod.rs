@@ -65,15 +65,20 @@ pub struct NodeSpec {
 /// A switch: every node attached to it talks through `fabric`.
 #[derive(Clone, Debug)]
 pub struct Switch {
+    /// Human-readable name, e.g. `"nasp-ib"`.
     pub name: String,
+    /// Fabric connecting the nodes on this switch.
     pub fabric: LinkKind,
 }
 
 /// A cluster: nodes, switches, and the shared inter-switch uplink.
 #[derive(Clone, Debug)]
 pub struct Cluster {
+    /// Cluster name (used in sink tables and error messages).
     pub name: String,
+    /// The compute nodes, indexed by [`NodeId`].
     pub nodes: Vec<NodeSpec>,
+    /// The switches, indexed by [`SwitchId`].
     pub switches: Vec<Switch>,
     /// Link used when two nodes sit on different switches.
     pub inter_switch: LinkKind,
@@ -129,6 +134,7 @@ impl Cluster {
         self.nodes.len()
     }
 
+    /// True when the cluster has no nodes.
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }

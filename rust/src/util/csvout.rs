@@ -8,15 +8,19 @@ use std::path::Path;
 /// A rectangular table with a header row; renders to CSV or aligned ASCII.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
+    /// Column names.
     pub header: Vec<String>,
+    /// Rows of rendered cells (same arity as the header).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given column names.
     pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
         Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
     }
 
+    /// Append one row (must match the header's arity).
     pub fn push_row<S: Into<String>>(&mut self, row: Vec<S>) {
         let row: Vec<String> = row.into_iter().map(Into::into).collect();
         assert_eq!(row.len(), self.header.len(), "row width mismatch");

@@ -7,13 +7,21 @@
 /// Five-number-ish summary of a sample.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Smallest sample.
     pub min: f64,
+    /// First quartile.
     pub q1: f64,
+    /// Median.
     pub median: f64,
+    /// Third quartile.
     pub q3: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub std: f64,
 }
 

@@ -1,0 +1,168 @@
+//! Acceptance tests for cluster-state-aware pricing
+//! ([`paraspawn::mam::model::predict_resize_in_state`] and
+//! [`paraspawn::rms::sched::StatefulPricer`]).
+//!
+//! Three claims are pinned:
+//!
+//! 1. **The pricer property**: on a warm, uncontended cluster a
+//!    stateful price never exceeds the canonical empty-cluster price of
+//!    the same resize — expansions are strictly cheaper (gained nodes
+//!    skip the cold daemon rollout), termination shrinks are
+//!    bit-identical (they spawn nothing, so state cannot matter).
+//! 2. **The decision change**: with a stateful pricer the malleable
+//!    policy shrinks the victim with the cheapest *predicted* release,
+//!    not the largest surplus.
+//! 3. **Determinism**: `--pricing stateful` workloads are bit-identical
+//!    across thread counts, like every other arm.
+
+use paraspawn::config::CostModel;
+use paraspawn::coordinator::sweep::ClusterKind;
+use paraspawn::coordinator::wsweep::{
+    kind_cost_model, run_workload_matrix, stateful_pricers, WorkloadMatrix, WorkloadSpec,
+};
+use paraspawn::mam::model::ClusterState;
+use paraspawn::rms::sched::{
+    self, schedule_with_pricer, AnalyticPricer, ResizePricer, SchedPolicy, StatefulPricer,
+};
+use paraspawn::rms::workload::JobSpec;
+use paraspawn::rms::AllocPolicy;
+use paraspawn::topology::{Cluster, NodeId};
+use std::path::PathBuf;
+
+fn ids(n: usize) -> Vec<NodeId> {
+    (0..n).collect()
+}
+
+/// Warm-daemon, uncontended state prices `<=` the canonical
+/// [`AnalyticPricer`] for the same resize, across directions and both
+/// shrink pricings; expansions price strictly below, and termination
+/// shrinks are bit-identical.
+#[test]
+fn warm_uncontended_state_never_prices_above_canonical() {
+    let cluster = Cluster::mini(8, 4);
+    let cost = CostModel::mn5();
+    let warm = ClusterState::warm_all(cluster.len());
+
+    let mut ts_state = StatefulPricer::ts(cluster.clone(), cost.clone());
+    let mut ts_canon = AnalyticPricer::ts(cluster.clone(), cost.clone());
+    let mut ss_state = StatefulPricer::ss(cluster.clone(), cost.clone());
+    let mut ss_canon = AnalyticPricer::ss(cluster.clone(), cost.clone());
+
+    for &(pre, post) in &[(1usize, 2usize), (1, 8), (2, 6), (3, 5), (4, 8)] {
+        let canon = ts_canon.expand_seconds(pre, post).unwrap();
+        let state = ts_state
+            .expand_seconds_in_state(&warm, &ids(pre), &ids(post))
+            .unwrap();
+        assert!(
+            state < canon,
+            "warm expansion {pre}->{post}: state {state} must undercut canonical {canon}"
+        );
+    }
+    for &(pre, post) in &[(2usize, 1usize), (6, 2), (8, 1), (5, 3), (8, 4)] {
+        // Termination shrinks spawn nothing: warmth cannot matter, the
+        // state price reproduces the canonical one bit-exactly.
+        let canon = ts_canon.shrink_seconds(pre, post).unwrap();
+        let state = ts_state
+            .shrink_seconds_in_state(&warm, &ids(pre), &ids(post))
+            .unwrap();
+        assert_eq!(state, canon, "TS shrink {pre}->{post} must be state-independent");
+
+        // Respawn (SS) shrinks spawn onto *held* nodes, which are warm
+        // under both views: still never above canonical.
+        let canon = ss_canon.shrink_seconds(pre, post).unwrap();
+        let state = ss_state
+            .shrink_seconds_in_state(&warm, &ids(pre), &ids(post))
+            .unwrap();
+        assert!(
+            state <= canon,
+            "warm SS shrink {pre}->{post}: state {state} above canonical {canon}"
+        );
+    }
+}
+
+/// Regression for pricer-ordered victim selection: the malleable
+/// policy's shrink pass must pick the victim whose release is predicted
+/// cheapest (a small job: fewer ranks in the shrink collectives, fewer
+/// participating nodes to charge) over the surplus-largest victim the
+/// count-based pricers pick.
+#[test]
+fn stateful_victim_selection_picks_the_cheap_release() {
+    // job 0: malleable 2..6 nodes, expands to 6 at t=0.
+    // job 1: malleable 1..2 nodes, expands to 2 at t=1.
+    // job 2: rigid 1 node at t=5 — someone must give up one node.
+    let jobs = vec![
+        JobSpec { arrival: 0.0, work: 1000.0, min_nodes: 2, max_nodes: 6, malleable: true },
+        JobSpec { arrival: 1.0, work: 1000.0, min_nodes: 1, max_nodes: 2, malleable: true },
+        JobSpec { arrival: 5.0, work: 10.0, min_nodes: 1, max_nodes: 1, malleable: false },
+    ];
+    let cluster = Cluster::mini(8, 4);
+    let cost = CostModel::mn5();
+
+    let run = |pricer: &mut dyn ResizePricer| {
+        schedule_with_pricer(
+            &cluster,
+            AllocPolicy::WholeNodes,
+            SchedPolicy::Malleable,
+            pricer,
+            &jobs,
+        )
+        .unwrap()
+    };
+
+    let mut stateful = StatefulPricer::ts(cluster.clone(), cost.clone());
+    let st = run(&mut stateful);
+    let mut analytic = AnalyticPricer::ts(cluster.clone(), cost.clone());
+    let an = run(&mut analytic);
+
+    assert_eq!(st.shrinks, 1, "stateful run shrinks exactly once: {st:?}");
+    assert_eq!(an.shrinks, 1, "analytic run shrinks exactly once: {an:?}");
+
+    // Surplus order (analytic): job 0 (surplus 4) is the victim and
+    // later re-expands — expand + shrink + expand = 3 reconfigs.
+    assert_eq!(an.jobs[0].reconfigs, 3, "analytic victim must be job 0: {an:?}");
+    assert_eq!(an.jobs[1].reconfigs, 1, "analytic leaves job 1 alone: {an:?}");
+
+    // Predicted-cost order (stateful): job 1's 2 -> 1 release is far
+    // cheaper than job 0's 6 -> 5 (8 vs 24 ranks in the shrink
+    // collectives, x2 vs x6 participating nodes), so job 1 is shrunk
+    // and later re-expands instead.
+    assert_eq!(st.jobs[1].reconfigs, 3, "stateful victim must be job 1: {st:?}");
+    assert_eq!(st.jobs[0].reconfigs, 1, "stateful leaves job 0 alone: {st:?}");
+}
+
+fn smoke_jobs(total_nodes: usize, cores: u32) -> Vec<JobSpec> {
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/replay_smoke.swf");
+    let text = std::fs::read_to_string(&path).expect("bundled smoke trace readable");
+    let mut jobs = sched::read_swf(&text, cores, total_nodes).expect("smoke trace parses");
+    sched::mark_malleable(&mut jobs, 0.7, 4, total_nodes, 2025);
+    jobs
+}
+
+/// `--pricing stateful` is bit-identical across thread counts: every
+/// cell is a deterministic simulation (warmth tracking, price-ordered
+/// victim selection and warm-first growth all derive from simulation
+/// state alone), and cells are reassembled in task order.
+#[test]
+fn stateful_workload_is_bit_identical_across_thread_counts() {
+    let kind = ClusterKind::Mini;
+    let cluster = kind.cluster();
+    let jobs = smoke_jobs(cluster.len(), 4);
+    assert!(jobs.len() >= 50, "smoke trace must stay non-trivial ({})", jobs.len());
+    let matrix = WorkloadMatrix {
+        pricers: stateful_pricers(&kind_cost_model(kind), None, 0),
+        policies: vec![SchedPolicy::Fcfs, SchedPolicy::Malleable],
+        workloads: vec![WorkloadSpec { label: "smoke".to_string(), jobs }],
+        ..WorkloadMatrix::for_kind(kind)
+    };
+    let serial = run_workload_matrix(&matrix, 1).unwrap();
+    let parallel = run_workload_matrix(&matrix, 4).unwrap();
+    assert_eq!(serial, parallel, "stateful cells must not depend on thread count");
+    // The malleable cells actually reconfigure (the stateful machinery
+    // is exercised, not bypassed).
+    for ((_, policy, pricing), cell) in &serial.cells {
+        if policy == "malleable" {
+            assert!(cell.reconfigurations() > 0, "{pricing}: no reconfigurations");
+        }
+    }
+}
