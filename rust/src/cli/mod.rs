@@ -8,6 +8,7 @@
 //! * `table2`   — print the diffusive worked example (paper Table 2).
 //! * `workload` — RMS makespan simulation (DRM on/off).
 //! * `select`   — cost-model strategy selection demo.
+//! * `lint`     — the `detlint` determinism static-analysis pass.
 //!
 //! Arg parsing is hand-rolled (`--key value` pairs); clap is unavailable
 //! offline (DESIGN.md §2).
@@ -596,6 +597,52 @@ fn cmd_select(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `paraspawn lint`: run the detlint determinism pass over the crate's
+/// sources (see `rust/src/lint` and `docs/LINTS.md`).
+fn cmd_lint(a: &Args) -> Result<()> {
+    use crate::lint;
+    let root = match a.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => default_lint_root()?,
+    };
+    let policy = match a.get("config") {
+        Some(p) => {
+            std::fs::read_to_string(p).with_context(|| format!("reading lint config {p}"))?
+        }
+        None => lint::DEFAULT_POLICY.to_string(),
+    };
+    let config = lint::Config::parse(&policy).map_err(|e| anyhow::anyhow!(e))?;
+    let findings =
+        lint::run_lint(&root, &config).with_context(|| format!("linting {}", root.display()))?;
+    if a.get("json").is_some() {
+        print!("{}", lint::findings_json(&findings));
+    } else {
+        print!("{}", lint::findings_text(&findings));
+    }
+    if a.get("deny").is_some() && !findings.is_empty() {
+        bail!("detlint --deny: {} finding(s)", findings.len());
+    }
+    Ok(())
+}
+
+/// Default lint root: `rust/src` under the nearest ancestor of the
+/// current directory that has one (so the gate works from the repo root
+/// or any subdirectory), falling back to the current directory itself.
+fn default_lint_root() -> Result<PathBuf> {
+    let cwd = std::env::current_dir().context("resolving current directory")?;
+    let mut dir = cwd.as_path();
+    loop {
+        let candidate = dir.join("rust").join("src");
+        if candidate.is_dir() {
+            return Ok(candidate);
+        }
+        match dir.parent() {
+            Some(p) => dir = p,
+            None => return Ok(cwd.clone()),
+        }
+    }
+}
+
 const USAGE: &str = "paraspawn — parallel spawning strategies for malleable MPI (simulated)
 
 USAGE:
@@ -625,6 +672,7 @@ USAGE:
                      [--threads T] [--out DIR] [--json]
   paraspawn select   [--i I] [--n N] [--cores C] [--expected-shrinks K]
                      [--exact]
+  paraspawn lint     [--root DIR] [--config FILE] [--json] [--deny]
 
 The analytic engine (--engine analytic) evaluates the closed-form model
 (mam::model): bit-identical to the simulator under deterministic cost
@@ -640,6 +688,12 @@ concrete nodes gained/lost, daemon warmth, co-located load) and makes
 the malleable policy pick shrink victims and expansion targets by
 predicted resize seconds. 'both' = scalar + analytic; 'all' adds the
 stateful arms.
+
+The lint subcommand runs detlint (docs/LINTS.md): determinism and
+float-ordering rules over the crate's own sources. --root defaults to
+rust/src under the nearest ancestor containing it (or CWD); --config
+overrides the compiled-in rust/detlint.conf; --deny exits non-zero on
+any finding (the CI gate); --json emits machine-readable findings.
 ";
 
 /// Binary entry point.
@@ -661,6 +715,7 @@ pub fn main() -> Result<()> {
         }
         "workload" => cmd_workload(&args),
         "select" => cmd_select(&args),
+        "lint" => cmd_lint(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())

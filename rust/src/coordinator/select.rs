@@ -138,7 +138,7 @@ pub fn select(
             (true, true) => std::cmp::Ordering::Equal,
             (true, false) => std::cmp::Ordering::Greater,
             (false, true) => std::cmp::Ordering::Less,
-            (false, false) => a.1.partial_cmp(b.1).expect("both scores are non-NaN"),
+            (false, false) => a.1.total_cmp(b.1),
         })
         .map(|(i, _)| i)
         .unwrap();

@@ -124,6 +124,11 @@
 // allow-list is intentionally here in lib.rs, not scattered through
 // the tree, so the debt stays visible.
 #![deny(missing_docs)]
+// No unsafe anywhere except the two audited `unsafe impl Send/Sync`
+// in `runtime::pjrt` (scoped `#[allow]` + SAFETY comment there) —
+// a data race could silently break the bit-reproducibility this
+// repro stakes its results on.
+#![deny(unsafe_code)]
 
 #[allow(missing_docs)] // legacy: Proteo-like application driver internals
 pub mod app;
@@ -132,6 +137,7 @@ pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod lint;
 pub mod mam;
 pub mod metrics;
 pub mod redistrib;

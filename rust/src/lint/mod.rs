@@ -1,0 +1,318 @@
+//! `detlint`: a dependency-free determinism & float-ordering lint.
+//!
+//! Every guarantee this repro makes — thread-count-invariant sweeps,
+//! the bit-exact analytic conformance suite, byte-identical sharded
+//! merges — rests on one invariant: no wall-clock time, no unordered
+//! container iteration, and no partial float ordering may reach a
+//! simulation result. This module machine-checks that invariant at the
+//! source level, over the crate's own sources, with zero external
+//! dependencies (no `syn`, offline-friendly).
+//!
+//! Structure:
+//! - [`tokens`]: a comment/string-aware tokenizer, so matches inside
+//!   strings or doc comments never fire;
+//! - [`rules`]: the rule engine (`wall-clock`, `unordered-iter`,
+//!   `total-order-floats`, `lossy-cast`, `naked-unwrap`) plus the
+//!   `suppression` meta-rule for defective suppression comments;
+//! - this file: policy config, source-tree walking, and JSON output.
+//!
+//! Policy lives in `rust/detlint.conf` (compiled in as
+//! [`DEFAULT_POLICY`], overridable with `--config`), so module-level
+//! allow decisions are reviewable in diffs. Per-site escapes are
+//! `// detlint: allow(rule) -- <reason>` comments; a missing reason is
+//! itself a finding. See `docs/LINTS.md` for the rule catalog.
+
+pub mod rules;
+pub mod tokens;
+
+pub use rules::{describe, lint_source, Finding, RULES, SUPPRESSION_RULE};
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The checked-in policy (`rust/detlint.conf`), compiled into the
+/// binary so `paraspawn lint` needs no files beyond the sources.
+pub const DEFAULT_POLICY: &str = include_str!("../../detlint.conf");
+
+/// Parsed lint policy: which modules each rule runs in, and which
+/// modules are allow-listed (with a mandatory reason).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    /// Rule id -> module patterns the rule is scoped to (`*` = all).
+    /// A rule absent from the map defaults to `*`.
+    scopes: BTreeMap<String, Vec<String>>,
+    /// (rule id, module pattern, reason) allow-list entries.
+    allows: Vec<(String, String, String)>,
+}
+
+impl Config {
+    /// Parse a policy text. Lines are `scope <rule> <mod>...`,
+    /// `allow <rule> <mod> -- <reason>`, blank, or `#` comments; an
+    /// allow without a reason is a parse error (policy must say why).
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        for (lno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut words = line.split_whitespace();
+            let verb = words.next().unwrap_or("");
+            let err = |msg: &str| format!("detlint.conf line {}: {}", lno + 1, msg);
+            match verb {
+                "scope" => {
+                    let rule = words.next().ok_or_else(|| err("scope needs a rule id"))?;
+                    if !RULES.contains(&rule) {
+                        return Err(err(&format!("unknown rule `{rule}`")));
+                    }
+                    let mods: Vec<String> = words.map(str::to_string).collect();
+                    if mods.is_empty() {
+                        return Err(err("scope needs at least one module (or `*`)"));
+                    }
+                    cfg.scopes.entry(rule.to_string()).or_default().extend(mods);
+                }
+                "allow" => {
+                    let rule = words.next().ok_or_else(|| err("allow needs a rule id"))?;
+                    if !RULES.contains(&rule) {
+                        return Err(err(&format!("unknown rule `{rule}`")));
+                    }
+                    let module =
+                        words.next().ok_or_else(|| err("allow needs a module pattern"))?;
+                    let rest: Vec<&str> = words.collect();
+                    let reason = match rest.split_first() {
+                        Some((&"--", tail)) if !tail.is_empty() => tail.join(" "),
+                        _ => return Err(err("allow needs `-- <reason>`")),
+                    };
+                    cfg.allows.push((rule.to_string(), module.to_string(), reason));
+                }
+                _ => return Err(err(&format!("unknown directive `{verb}`"))),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Whether `rule` is scoped to run in `module`.
+    pub fn applies(&self, rule: &str, module: &str) -> bool {
+        match self.scopes.get(rule) {
+            None => true, // unscoped rules run everywhere
+            Some(pats) => pats.iter().any(|p| module_matches(module, p)),
+        }
+    }
+
+    /// The allow-list reason covering (`rule`, `module`), if any.
+    pub fn allow_reason(&self, rule: &str, module: &str) -> Option<&str> {
+        self.allows
+            .iter()
+            .find(|(r, p, _)| r == rule && module_matches(module, p))
+            .map(|(_, _, reason)| reason.as_str())
+    }
+
+    /// The rules that should run for `module`: scoped in and not
+    /// module-allow-listed.
+    pub fn checked_in(&self, module: &str) -> BTreeSet<&'static str> {
+        RULES
+            .iter()
+            .copied()
+            .filter(|r| self.applies(r, module) && self.allow_reason(r, module).is_none())
+            .collect()
+    }
+}
+
+/// Module-pattern match: exact, or a prefix on a `::` boundary
+/// (`mam` covers `mam::model`), or the wildcard `*`.
+fn module_matches(module: &str, pattern: &str) -> bool {
+    pattern == "*"
+        || module == pattern
+        || (module.len() > pattern.len()
+            && module.starts_with(pattern)
+            && module[pattern.len()..].starts_with("::"))
+}
+
+/// Crate-relative module path of a source file: `rms/sched.rs` ->
+/// `rms::sched`, `cli/mod.rs` -> `cli`, `lib.rs` -> `` (crate root).
+pub fn module_path_of(rel: &Path) -> String {
+    let mut parts: Vec<String> = rel
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect();
+    if let Some(last) = parts.last_mut() {
+        if let Some(stem) = last.strip_suffix(".rs") {
+            *last = stem.to_string();
+        }
+    }
+    if matches!(parts.last().map(String::as_str), Some("mod" | "lib" | "main")) {
+        parts.pop();
+    }
+    parts.join("::")
+}
+
+/// Recursively collect the `.rs` files under `root`, sorted by path so
+/// findings come out in a stable order regardless of directory-entry
+/// order.
+fn rs_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `root` with `config`. Paths in findings
+/// are relative to `root`; results are sorted by (file, line, rule).
+pub fn run_lint(root: &Path, config: &Config) -> io::Result<Vec<Finding>> {
+    let mut out = Vec::new();
+    for path in rs_files(root)? {
+        let rel = path.strip_prefix(root).unwrap_or(&path);
+        let module = module_path_of(rel);
+        let checked = config.checked_in(&module);
+        let src = fs::read_to_string(&path)?;
+        out.extend(lint_source(&rel.display().to_string(), &src, &checked));
+    }
+    out.sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+    Ok(out)
+}
+
+/// Render findings as a JSON array (stable field order, one object per
+/// finding) for the CI artifact.
+pub fn findings_json(findings: &[Finding]) -> String {
+    let esc = |s: &str| -> String {
+        let mut out = String::with_capacity(s.len() + 2);
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => {
+                    let _ = write!(out, "\\u{:04x}", c as u32);
+                }
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+        out
+    };
+    let mut out = String::from("[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "\n  {{\"file\": {}, \"line\": {}, \"rule\": {}, \"snippet\": {}, \"detail\": {}}}",
+            esc(&f.file),
+            f.line,
+            esc(&f.rule),
+            esc(&f.snippet),
+            esc(&f.detail)
+        );
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+/// Render findings as human-readable `file:line [rule] snippet` lines
+/// plus a summary count.
+pub fn findings_text(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        let _ = writeln!(out, "{}:{} [{}] {}", f.file, f.line, f.rule, f.snippet);
+        let _ = writeln!(out, "    {}", f.detail);
+    }
+    if findings.is_empty() {
+        let _ = writeln!(out, "detlint: clean (0 findings)");
+    } else {
+        let _ = writeln!(out, "detlint: {} finding(s)", findings.len());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_parses_scopes_and_allows() {
+        let cfg = Config::parse(
+            "# comment\n\
+             scope naked-unwrap rms::sched mam::model\n\
+             allow wall-clock simmpi -- watchdog deadline is real time\n",
+        )
+        .expect("config parses");
+        assert!(cfg.applies("naked-unwrap", "rms::sched"));
+        assert!(cfg.applies("naked-unwrap", "rms::sched::inner"));
+        assert!(!cfg.applies("naked-unwrap", "util::stats"));
+        assert!(cfg.applies("wall-clock", "util::stats")); // unscoped
+        assert!(cfg.allow_reason("wall-clock", "simmpi::world").is_some());
+        assert!(cfg.allow_reason("wall-clock", "rms::sched").is_none());
+        assert!(!cfg.checked_in("simmpi::world").contains("wall-clock"));
+        assert!(cfg.checked_in("rms::sched").contains("wall-clock"));
+    }
+
+    #[test]
+    fn config_rejects_allow_without_reason() {
+        assert!(Config::parse("allow wall-clock simmpi\n").is_err());
+        assert!(Config::parse("allow wall-clock simmpi --\n").is_err());
+        assert!(Config::parse("scope no-such-rule *\n").is_err());
+        assert!(Config::parse("frobnicate x\n").is_err());
+    }
+
+    #[test]
+    fn checked_in_policy_parses() {
+        let cfg = Config::parse(DEFAULT_POLICY).expect("checked-in detlint.conf is valid");
+        // The checked-in policy must keep every rule live somewhere.
+        for rule in RULES {
+            assert!(
+                cfg.applies(rule, "rms::sched") || cfg.applies(rule, "mam::model"),
+                "rule {rule} is scoped out of the core accounting modules"
+            );
+        }
+    }
+
+    #[test]
+    fn module_paths() {
+        assert_eq!(module_path_of(Path::new("rms/sched.rs")), "rms::sched");
+        assert_eq!(module_path_of(Path::new("cli/mod.rs")), "cli");
+        assert_eq!(module_path_of(Path::new("lib.rs")), "");
+        assert_eq!(module_path_of(Path::new("util/stats.rs")), "util::stats");
+    }
+
+    #[test]
+    fn module_match_respects_boundaries() {
+        assert!(module_matches("mam::model", "mam"));
+        assert!(!module_matches("mammoth", "mam"));
+        assert!(module_matches("mam", "mam"));
+        assert!(module_matches("anything", "*"));
+    }
+
+    #[test]
+    fn json_escapes_and_shape() {
+        let f = vec![Finding {
+            file: "a\"b.rs".to_string(),
+            line: 3,
+            rule: "wall-clock".to_string(),
+            snippet: "let t = Instant::now();".to_string(),
+            detail: "d".to_string(),
+        }];
+        let j = findings_json(&f);
+        assert!(j.contains("\"a\\\"b.rs\""), "{j}");
+        assert!(j.contains("\"line\": 3"), "{j}");
+        assert!(j.trim_start().starts_with('['));
+        assert!(j.trim_end().ends_with(']'));
+        assert_eq!(findings_json(&[]).trim(), "[\n]");
+    }
+}

@@ -1,0 +1,467 @@
+//! The `detlint` rules: token-pattern checks for determinism hazards.
+//!
+//! Each rule scans the token stream from [`super::tokens::lex`] and
+//! reports [`Finding`]s. Rules are deliberately shallow — per-file
+//! taint tracking of names, fixed token patterns — which keeps them
+//! dependency-free and predictable; `docs/LINTS.md` documents the
+//! known blind spots that shallowness buys.
+
+use std::collections::BTreeSet;
+
+use super::tokens::{lex, Tok};
+
+/// The rule ids the engine knows, in reporting order.
+pub const RULES: [&str; 5] =
+    ["wall-clock", "unordered-iter", "total-order-floats", "lossy-cast", "naked-unwrap"];
+
+/// Meta-rule id for defective suppression comments (malformed marker,
+/// unknown rule name, or missing reason).
+pub const SUPPRESSION_RULE: &str = "suppression";
+
+/// One lint finding: a rule violation at a source location.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path of the offending file, relative to the lint root.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule id (one of [`RULES`] or [`SUPPRESSION_RULE`]).
+    pub rule: String,
+    /// The offending source line, trimmed and truncated.
+    pub snippet: String,
+    /// One-line explanation of why the site is a hazard.
+    pub detail: String,
+}
+
+/// One-line rationale for a rule id, shown next to findings.
+pub fn describe(rule: &str) -> &'static str {
+    match rule {
+        "wall-clock" => "wall-clock time read in a result-producing module; \
+                         results must depend only on virtual time",
+        "unordered-iter" => "iteration over a HashMap/HashSet, whose order varies \
+                             per process; use BTreeMap/BTreeSet or sort first",
+        "total-order-floats" => "partial_cmp panics or misorders on NaN; \
+                                 use f64::total_cmp (or f32::total_cmp)",
+        "lossy-cast" => "u64 -> f64 cast silently loses precision above 2^53; \
+                         justify the bound or keep integer arithmetic",
+        "naked-unwrap" => "unwrap() in an accounting/event-loop module; errors \
+                           must surface with context via expect or WorkloadError",
+        _ => "defective detlint suppression comment",
+    }
+}
+
+/// Lint one file's source text. `checked` restricts which of [`RULES`]
+/// run (per the config's module scopes); the suppression meta-rule
+/// always runs. Findings come back sorted by line then rule.
+pub fn lint_source(file: &str, src: &str, checked: &BTreeSet<&str>) -> Vec<Finding> {
+    let lexed = lex(src);
+    let tests = test_regions(&lexed.toks);
+    let in_tests = |line: usize| tests.iter().any(|&(lo, hi)| line >= lo && line <= hi);
+    let lines: Vec<&str> = src.lines().collect();
+    let snippet_at = |line: usize| -> String {
+        let raw = lines.get(line.saturating_sub(1)).map_or("", |l| l.trim());
+        if raw.chars().count() > 120 {
+            let mut s: String = raw.chars().take(117).collect();
+            s.push_str("...");
+            s
+        } else {
+            raw.to_string()
+        }
+    };
+
+    let mut hits: Vec<(usize, &'static str)> = Vec::new();
+    if checked.contains("wall-clock") {
+        hits.extend(rule_wall_clock(&lexed.toks));
+    }
+    if checked.contains("unordered-iter") {
+        hits.extend(rule_unordered_iter(&lexed.toks));
+    }
+    if checked.contains("total-order-floats") {
+        hits.extend(rule_total_order(&lexed.toks));
+    }
+    if checked.contains("lossy-cast") {
+        hits.extend(rule_lossy_cast(&lexed.toks));
+    }
+    if checked.contains("naked-unwrap") {
+        hits.extend(rule_naked_unwrap(&lexed.toks));
+    }
+    hits.retain(|&(line, _)| !in_tests(line));
+    hits.sort_unstable();
+    hits.dedup();
+
+    let mut out = Vec::new();
+    for (line, rule) in hits {
+        let suppressed = lexed
+            .sups
+            .iter()
+            .any(|s| s.covers == line && s.rules.iter().any(|r| r == rule));
+        if suppressed {
+            continue;
+        }
+        out.push(Finding {
+            file: file.to_string(),
+            line,
+            rule: rule.to_string(),
+            snippet: snippet_at(line),
+            detail: describe(rule).to_string(),
+        });
+    }
+
+    // Defective suppressions are findings in their own right, even in
+    // test regions (a bad marker is a bad marker wherever it sits).
+    for s in &lexed.sups {
+        let defect = if s.rules.is_empty() {
+            Some("malformed marker; expected `// detlint: allow(rule, ...) -- reason`")
+        } else if s.rules.iter().any(|r| !RULES.contains(&r.as_str())) {
+            Some("unknown rule id in allow(...)")
+        } else if !s.has_reason {
+            Some("suppression must carry a reason: `-- <why this site is safe>`")
+        } else {
+            None
+        };
+        if let Some(why) = defect {
+            out.push(Finding {
+                file: file.to_string(),
+                line: s.at,
+                rule: SUPPRESSION_RULE.to_string(),
+                snippet: snippet_at(s.at),
+                detail: why.to_string(),
+            });
+        }
+    }
+    out.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
+    out
+}
+
+/// Line ranges (inclusive) covered by `#[cfg(test)] mod ... { ... }`
+/// blocks, found by brace-matching over the token stream.
+fn test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let t = |i: usize| toks.get(i).map_or("", |t| t.text.as_str());
+    let mut i = 0usize;
+    while i < toks.len() {
+        // `# [ cfg ( test ) ]` then (`pub`)? `mod` name `{`
+        if t(i) == "#"
+            && t(i + 1) == "["
+            && t(i + 2) == "cfg"
+            && t(i + 3) == "("
+            && t(i + 4) == "test"
+            && t(i + 5) == ")"
+            && t(i + 6) == "]"
+        {
+            let mut j = i + 7;
+            if t(j) == "pub" {
+                j += 1;
+            }
+            if t(j) == "mod" {
+                // Skip to the opening brace (a `mod name;` has none).
+                let mut k = j + 1;
+                while k < toks.len() && t(k) != "{" && t(k) != ";" {
+                    k += 1;
+                }
+                if t(k) == "{" {
+                    let start = toks[i].line;
+                    let mut depth = 1usize;
+                    let mut m = k + 1;
+                    while m < toks.len() && depth > 0 {
+                        match t(m) {
+                            "{" => depth += 1,
+                            "}" => depth -= 1,
+                            _ => {}
+                        }
+                        m += 1;
+                    }
+                    let end = toks.get(m.saturating_sub(1)).map_or(start, |t| t.line);
+                    out.push((start, end));
+                    i = m;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Whether a token looks like an identifier (starts with `_` or an
+/// ASCII letter).
+fn is_ident(s: &str) -> bool {
+    s.chars().next().is_some_and(|c| c == '_' || c.is_ascii_alphabetic())
+}
+
+/// Positional taint tracking: update `tainted` with whatever name the
+/// declaration starting at token `i` (if any) binds. Two sources:
+///
+/// 1. type ascriptions `name : ...Marker...` (struct fields, fn params,
+///    typed lets), scanning type tokens until a `,`/`;`/`=`/`)`/`{` at
+///    angle-bracket depth <= 0 (capped at 48 tokens) — these only add
+///    taint (the same shape appears in struct literals, where removing
+///    would be wrong);
+/// 2. untyped `let [mut] name = <rhs> ;` — adds taint when the
+///    right-hand side mentions a marker, and *removes* it when it does
+///    not, so a local shadowing a tainted field name (e.g. a `Vec` of
+///    procs next to a `procs` map field) is not a false positive.
+///    When `as_cast_only` is set, casts decide: the *last* `as <type>`
+///    in the rhs wins, so `x as u64 as usize` taints as usize, not u64,
+///    and arithmetic on already-cast values doesn't taint.
+///
+/// Tracking is sequential per file, not per-scope — a shadow lasts
+/// until the next re-declaration, which can over- or under-taint across
+/// function boundaries. LINTS.md lists this as a known limitation.
+fn update_taint(
+    tainted: &mut BTreeSet<String>,
+    toks: &[Tok],
+    i: usize,
+    markers: &[&str],
+    as_cast_only: bool,
+) {
+    let t = |k: usize| toks.get(k).map_or("", |t| t.text.as_str());
+    // Source 1: `name : <type tokens>`.
+    if t(i + 1) == ":" && is_ident(t(i)) && t(i + 2) != ":" {
+        let mut depth = 0i32;
+        for j in (i + 2)..(i + 50).min(toks.len()) {
+            match t(j) {
+                "<" => depth += 1,
+                ">" => depth -= 1,
+                "," | ";" | "=" | ")" | "{" if depth <= 0 => break,
+                tok if markers.contains(&tok) => {
+                    tainted.insert(t(i).to_string());
+                    break;
+                }
+                _ => {}
+            }
+        }
+    }
+    // Source 2: untyped `let [mut] name = <rhs> ;`.
+    if t(i) == "let" {
+        let mut j = i + 1;
+        if t(j) == "mut" {
+            j += 1;
+        }
+        if !is_ident(t(j)) || t(j + 1) != "=" {
+            return;
+        }
+        let name = t(j).to_string();
+        let mut hit = false;
+        let mut k = j + 2;
+        while k < toks.len() && t(k) != ";" {
+            if as_cast_only {
+                // Last cast wins: `x as u64 as usize` is usize-typed.
+                if t(k) == "as" && is_ident(t(k + 1)) {
+                    hit = markers.contains(&t(k + 1));
+                }
+            } else if markers.contains(&t(k)) {
+                hit = true;
+                break;
+            }
+            k += 1;
+        }
+        if hit {
+            tainted.insert(name);
+        } else {
+            tainted.remove(&name);
+        }
+    }
+}
+
+/// `wall-clock`: `Instant::now(` / `SystemTime::now(`.
+fn rule_wall_clock(toks: &[Tok]) -> Vec<(usize, &'static str)> {
+    toks.windows(3)
+        .filter(|w| {
+            (w[0].text == "Instant" || w[0].text == "SystemTime")
+                && w[1].text == "::"
+                && w[2].text == "now"
+        })
+        .map(|w| (w[0].line, "wall-clock"))
+        .collect()
+}
+
+/// `total-order-floats`: any use of `partial_cmp` — the repo's policy
+/// is total_cmp everywhere, so the bare name suffices.
+fn rule_total_order(toks: &[Tok]) -> Vec<(usize, &'static str)> {
+    toks.iter()
+        .filter(|t| t.text == "partial_cmp")
+        .map(|t| (t.line, "total-order-floats"))
+        .collect()
+}
+
+/// `naked-unwrap`: `.unwrap()`. `Option::expect("...")` with a message
+/// is the approved spelling.
+fn rule_naked_unwrap(toks: &[Tok]) -> Vec<(usize, &'static str)> {
+    toks.windows(4)
+        .filter(|w| {
+            w[0].text == "." && w[1].text == "unwrap" && w[2].text == "(" && w[3].text == ")"
+        })
+        .map(|w| (w[1].line, "naked-unwrap"))
+        .collect()
+}
+
+/// Methods whose iteration order is the container's.
+const ITER_METHODS: [&str; 9] = [
+    "iter", "iter_mut", "keys", "values", "values_mut", "drain", "into_iter", "into_keys",
+    "into_values",
+];
+
+/// `unordered-iter`: iterating a name declared as `HashMap`/`HashSet`,
+/// either via an iterator method or a `for .. in` over it.
+fn rule_unordered_iter(toks: &[Tok]) -> Vec<(usize, &'static str)> {
+    let t = |i: usize| toks.get(i).map_or("", |t| t.text.as_str());
+    let mut tainted = BTreeSet::new();
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        update_taint(&mut tainted, toks, i, &["HashMap", "HashSet"], false);
+        // `name . iter_method (`
+        if tainted.contains(t(i))
+            && t(i + 1) == "."
+            && ITER_METHODS.contains(&t(i + 2))
+            && t(i + 3) == "("
+        {
+            out.push((toks[i].line, "unordered-iter"));
+        }
+        // `for <pat> in <expr mentioning a tainted name> {`
+        if t(i) == "for" {
+            let mut j = i + 1;
+            while j < toks.len() && t(j) != "in" && t(j) != "{" && j < i + 24 {
+                j += 1;
+            }
+            if t(j) != "in" {
+                continue;
+            }
+            let mut k = j + 1;
+            while k < toks.len() && t(k) != "{" && k < j + 24 {
+                if tainted.contains(t(k)) {
+                    out.push((toks[k].line, "unordered-iter"));
+                    break;
+                }
+                k += 1;
+            }
+        }
+    }
+    out
+}
+
+/// `lossy-cast`: `<u64-typed name> as f64`. Tracks u64 only — the
+/// usize quantities in this codebase are cluster-bounded counts far
+/// below 2^53, while u64 carries byte counts and ids that are not.
+fn rule_lossy_cast(toks: &[Tok]) -> Vec<(usize, &'static str)> {
+    let t = |i: usize| toks.get(i).map_or("", |t| t.text.as_str());
+    let mut tainted = BTreeSet::new();
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        update_taint(&mut tainted, toks, i, &["u64"], true);
+        if tainted.contains(t(i)) && t(i + 1) == "as" && t(i + 2) == "f64" {
+            out.push((toks[i].line, "lossy-cast"));
+        }
+    }
+    out
+}
+
+/// Convenience: lint with every rule enabled (used by fixture tests).
+pub fn lint_all_rules(file: &str, src: &str) -> Vec<Finding> {
+    let all: BTreeSet<&str> = RULES.iter().copied().collect();
+    lint_source(file, src, &all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_fires_and_respects_suppression() {
+        let bad = "fn f() { let t = Instant::now(); }\n";
+        let f = lint_all_rules("x.rs", bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "wall-clock");
+        assert_eq!(f[0].line, 1);
+
+        let ok = "fn f() { let t = Instant::now(); } \
+                  // detlint: allow(wall-clock) -- display timing only\n";
+        assert!(lint_all_rules("x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn unordered_iter_taints_by_declaration() {
+        let bad = "fn f(m: &HashMap<u32, u32>) { for (k, v) in m.iter() { g(k, v); } }\n";
+        let f = lint_all_rules("x.rs", bad);
+        assert!(f.iter().any(|f| f.rule == "unordered-iter"), "{f:?}");
+
+        // A BTreeMap with the same shape must not fire.
+        let ok = "fn f(m: &BTreeMap<u32, u32>) { for (k, v) in m.iter() { g(k, v); } }\n";
+        assert!(lint_all_rules("x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn shadowing_local_untaints() {
+        // A local `Vec` reusing a map field's name must not fire after
+        // its declaration, while earlier uses of the field still do.
+        let src = "struct W { procs: HashMap<u32, u32> }\n\
+                   fn f(w: &W) {\n\
+                   for p in w.procs.values() { g(p); }\n\
+                   let mut procs = Vec::new();\n\
+                   for p in procs.iter() { g(p); }\n\
+                   }\n";
+        let f = lint_all_rules("x.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "unordered-iter");
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn lossy_cast_is_u64_only() {
+        let bad = "fn f(bytes: u64) -> f64 { bytes as f64 }\n";
+        let f = lint_all_rules("x.rs", bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "lossy-cast");
+
+        let ok = "fn f(n: usize) -> f64 { n as f64 }\n";
+        assert!(lint_all_rules("x.rs", ok).is_empty());
+
+        // Last cast wins: a value cast through u64 but bound as usize
+        // is a cluster-bounded count, not a 2^53 hazard.
+        let ok2 = "fn f(total: usize, r: &mut Rng) -> f64 {\n\
+                   let n = 1 + r.below(total as u64) as usize;\n\
+                   n as f64\n\
+                   }\n";
+        assert!(lint_all_rules("x.rs", ok2).is_empty());
+
+        let bad2 = "fn f(a: usize) -> f64 { let bytes = a as u64 * 8u64; bytes as f64 }\n";
+        assert_eq!(lint_all_rules("x.rs", bad2).len(), 1);
+    }
+
+    #[test]
+    fn test_regions_are_skipped() {
+        let src = "\
+fn prod() {}\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    #[test]\n\
+    fn t() { let x = v.partial_cmp(&w); let _ = x.unwrap(); }\n\
+}\n";
+        assert!(lint_all_rules("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn suppression_without_reason_is_a_finding() {
+        let src = "fn f() { let t = Instant::now(); } // detlint: allow(wall-clock)\n";
+        let f = lint_all_rules("x.rs", src);
+        // The wall-clock hit itself is suppressed, but the reason-less
+        // marker surfaces as a `suppression` finding.
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, SUPPRESSION_RULE);
+    }
+
+    #[test]
+    fn unknown_rule_in_suppression_is_flagged() {
+        let src = "let x = 1; // detlint: allow(no-such-rule) -- because\n";
+        let f = lint_all_rules("x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, SUPPRESSION_RULE);
+    }
+
+    #[test]
+    fn scoped_rules_only_run_when_enabled() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        let none: BTreeSet<&str> = BTreeSet::new();
+        assert!(lint_source("x.rs", src, &none).is_empty());
+    }
+}

@@ -1,0 +1,378 @@
+//! The `detlint` lexer: a minimal comment- and string-aware tokenizer.
+//!
+//! [`lex`] reduces a Rust source file to a stream of *code* tokens —
+//! identifiers, numbers, and punctuation (with `::` fused) — tagged with
+//! 1-based line numbers, so the rules in [`super::rules`] never match
+//! text inside comments, doc comments, or string/char literals.
+//! Suppression comments (`// detlint: allow(rule) -- reason`) are
+//! extracted on the way.
+//!
+//! The lexer is deliberately small and dependency-free; it understands
+//! just enough Rust lexical structure to be trustworthy on this crate's
+//! own sources: line and (nested) block comments, plain/byte/raw string
+//! literals, char literals vs lifetimes, identifiers and numbers. It
+//! does not build a syntax tree — the rules work on token patterns.
+
+/// One code token with its 1-based source line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tok {
+    /// Token text: identifiers and numbers verbatim; `::` fused into a
+    /// single token; every other punctuation char stands alone.
+    pub text: String,
+    /// 1-based line the token starts on.
+    pub line: usize,
+}
+
+/// One `// detlint: allow(rule, ...) -- reason` suppression comment.
+#[derive(Clone, Debug)]
+pub struct Suppression {
+    /// Rule ids listed inside `allow(...)`; empty when the marker was
+    /// malformed (which the rule engine reports as a finding).
+    pub rules: Vec<String>,
+    /// Line the suppression covers: the comment's own line, or the next
+    /// line when the comment stands alone on its line.
+    pub covers: usize,
+    /// Line the comment itself sits on (for reporting).
+    pub at: usize,
+    /// Whether a non-empty reason follows the rule list.
+    pub has_reason: bool,
+}
+
+/// Lexer output: code tokens plus extracted suppression comments.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    /// The code tokens in source order.
+    pub toks: Vec<Tok>,
+    /// The suppression comments in source order.
+    pub sups: Vec<Suppression>,
+}
+
+/// Tokenize `src`. Never fails: an unterminated literal simply ends the
+/// token stream at end-of-file — a lint must not crash on input the
+/// compiler will reject anyway.
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    // Whether a code token has already been produced on `line` (decides
+    // if a suppression comment is trailing or standalone).
+    let mut code_on_line = false;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            code_on_line = false;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comments (including `///` and `//!` doc comments).
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            // Doc comments (`///`, `//!`) never carry suppressions —
+            // they *document* the marker syntax in the lint's own
+            // sources, and must not parse as (malformed) markers.
+            let is_doc = text.starts_with("///") || text.starts_with("//!");
+            if !is_doc {
+                if let Some(sup) = parse_suppression(&text, line, code_on_line) {
+                    out.sups.push(sup);
+                }
+            }
+            continue;
+        }
+        // Block comments, with nesting (Rust allows it).
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw/byte string and byte-char literals: r".."/r#".."#, b"..",
+        // br#".."#, b'x'. Checked before identifier scanning, since the
+        // prefix chars would otherwise lex as an identifier.
+        if c == 'r' || c == 'b' {
+            if let Some((ni, nl)) = scan_raw_or_byte(&b, i, line) {
+                i = ni;
+                line = nl;
+                code_on_line = true;
+                continue;
+            }
+        }
+        // Plain string literals, with escapes.
+        if c == '"' {
+            i += 1;
+            while i < n {
+                match b[i] {
+                    '\\' => i += 2,
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    '\n' => {
+                        line += 1;
+                        i += 1;
+                    }
+                    _ => i += 1,
+                }
+            }
+            code_on_line = true;
+            continue;
+        }
+        // Char literal vs lifetime tick.
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // Escaped char literal: skip to the closing quote
+                // (handles '\n', '\'', '\u{..}', ...).
+                i += 2;
+                if i < n {
+                    i += 1; // the escaped char itself
+                }
+                while i < n && b[i] != '\'' {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                i += 1;
+            } else if i + 2 < n && b[i + 2] == '\'' {
+                i += 3; // 'a'
+            } else {
+                i += 1; // lifetime: the name lexes as an identifier
+            }
+            code_on_line = true;
+            continue;
+        }
+        // Identifiers and keywords.
+        if c == '_' || c.is_ascii_alphabetic() {
+            let start = i;
+            while i < n && (b[i] == '_' || b[i].is_ascii_alphanumeric()) {
+                i += 1;
+            }
+            out.toks.push(Tok { text: b[start..i].iter().collect(), line });
+            code_on_line = true;
+            continue;
+        }
+        // Numbers (loose: `1_000u64`, `0xff`, `1.5`; a `.` is consumed
+        // only when a digit follows, so `0..n` and `x.0.iter()` keep
+        // their punctuation).
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n
+                && (b[i] == '_'
+                    || b[i].is_ascii_alphanumeric()
+                    || (b[i] == '.' && i + 1 < n && b[i + 1].is_ascii_digit()))
+            {
+                i += 1;
+            }
+            out.toks.push(Tok { text: b[start..i].iter().collect(), line });
+            code_on_line = true;
+            continue;
+        }
+        // Punctuation: `::` fused, everything else single-char.
+        if c == ':' && i + 1 < n && b[i + 1] == ':' {
+            out.toks.push(Tok { text: "::".to_string(), line });
+            i += 2;
+        } else {
+            out.toks.push(Tok { text: c.to_string(), line });
+            i += 1;
+        }
+        code_on_line = true;
+    }
+    out
+}
+
+/// Recognize a raw/byte string (or byte-char) literal starting at `i`;
+/// returns the position and line after the literal, or `None` when
+/// `b[i]` starts an ordinary identifier.
+fn scan_raw_or_byte(b: &[char], i: usize, line: usize) -> Option<(usize, usize)> {
+    let n = b.len();
+    let mut j = i;
+    let mut raw = false;
+    if b[j] == 'b' {
+        j += 1;
+        if j < n && b[j] == '\'' {
+            // b'x' byte literal.
+            j += 1;
+            while j < n && b[j] != '\'' {
+                if b[j] == '\\' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            return Some(((j + 1).min(n), line));
+        }
+        if j < n && b[j] == 'r' {
+            raw = true;
+            j += 1;
+        }
+    } else {
+        // b[j] == 'r'
+        raw = true;
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    if raw {
+        while j < n && b[j] == '#' {
+            hashes += 1;
+            j += 1;
+        }
+    }
+    if j >= n || b[j] != '"' {
+        return None; // `break`, `ref`, `r#ident`, ... — not a literal
+    }
+    j += 1;
+    let mut ln = line;
+    while j < n {
+        match b[j] {
+            '\n' => {
+                ln += 1;
+                j += 1;
+            }
+            '\\' if !raw => j += 2,
+            '"' => {
+                let mut k = 0usize;
+                while k < hashes && j + 1 + k < n && b[j + 1 + k] == '#' {
+                    k += 1;
+                }
+                if k == hashes {
+                    return Some((j + 1 + hashes, ln));
+                }
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    Some((n, ln))
+}
+
+/// Parse a `detlint:` suppression marker out of a comment's text.
+/// Returns `None` for ordinary comments; a [`Suppression`] with empty
+/// `rules` for a malformed marker (so the engine can flag it).
+fn parse_suppression(comment: &str, line: usize, code_before: bool) -> Option<Suppression> {
+    let idx = comment.find("detlint:")?;
+    let covers = if code_before { line } else { line + 1 };
+    let malformed = Suppression { rules: Vec::new(), covers, at: line, has_reason: false };
+    let rest = comment[idx + "detlint:".len()..].trim_start();
+    let Some(rest) = rest.strip_prefix("allow") else {
+        return Some(malformed);
+    };
+    let Some(rest) = rest.trim_start().strip_prefix('(') else {
+        return Some(malformed);
+    };
+    let Some(close) = rest.find(')') else {
+        return Some(malformed);
+    };
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return Some(malformed);
+    }
+    let mut tail = rest[close + 1..].trim();
+    for sep in ["--", "—"] {
+        if let Some(t) = tail.strip_prefix(sep) {
+            tail = t.trim();
+            break;
+        }
+    }
+    Some(Suppression { rules, covers, at: line, has_reason: !tail.is_empty() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_stripped() {
+        let src = r#"
+// Instant::now() in a comment
+/* block Instant::now() /* nested */ still comment */
+let s = "Instant::now() in a string";
+/// doc: map.iter()
+fn real() {}
+"#;
+        let t = texts(src);
+        assert!(!t.contains(&"Instant".to_string()), "{t:?}");
+        assert!(!t.contains(&"iter".to_string()), "{t:?}");
+        assert!(t.contains(&"real".to_string()));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals() {
+        let src = r##"
+let a = r"partial_cmp \";
+let b = r#"unwrap() "quoted" here"#;
+let c = b"partial_cmp";
+let d = 'x';
+let e = '\'';
+let f: &'static str = "s";
+"##;
+        let t = texts(src);
+        assert!(!t.contains(&"partial_cmp".to_string()), "{t:?}");
+        assert!(!t.contains(&"unwrap".to_string()), "{t:?}");
+        assert!(t.contains(&"static".to_string())); // lifetime name lexes
+    }
+
+    #[test]
+    fn double_colon_is_fused_and_lines_tracked() {
+        let lexed = lex("a::b\nc");
+        let toks = &lexed.toks;
+        assert_eq!(toks[1].text, "::");
+        assert_eq!(toks[2].line, 1);
+        assert_eq!(toks[3].line, 2);
+    }
+
+    #[test]
+    fn suppression_parsing() {
+        let lexed = lex(
+            "let x = 1; // detlint: allow(wall-clock) -- timing display only\n\
+             // detlint: allow(unordered-iter, lossy-cast)\n\
+             let y = 2;\n",
+        );
+        assert_eq!(lexed.sups.len(), 2);
+        let s0 = &lexed.sups[0];
+        assert_eq!(s0.rules, vec!["wall-clock".to_string()]);
+        assert_eq!(s0.covers, 1); // trailing: covers its own line
+        assert!(s0.has_reason);
+        let s1 = &lexed.sups[1];
+        assert_eq!(s1.rules.len(), 2);
+        assert_eq!(s1.covers, 3); // standalone: covers the next line
+        assert!(!s1.has_reason);
+    }
+
+    #[test]
+    fn malformed_suppression_has_no_rules() {
+        let lexed = lex("// detlint: allow wall-clock\n");
+        assert_eq!(lexed.sups.len(), 1);
+        assert!(lexed.sups[0].rules.is_empty());
+    }
+}

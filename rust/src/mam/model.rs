@@ -55,7 +55,7 @@ use crate::redistrib;
 use crate::simmpi::EAGER_LIMIT;
 use crate::topology::{Cluster, Link, NodeId};
 use anyhow::{bail, Result};
-use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet};
 
 /// One rank of an analytic job: placement, logical clock, and the
 /// identity of its `MPI_COMM_WORLD` (the spawn group it was created in —
@@ -188,6 +188,7 @@ impl ModelWorld {
     /// [`crate::simmpi::World::coll_cost`].
     fn coll_cost(&self, n: usize, bytes: u64, link: Link) -> f64 {
         let stages = if n <= 1 { 0.0 } else { (n as f64).log2().ceil() };
+        // detlint: allow(lossy-cast) -- per-stage payload sizes are far below 2^53; must stay bit-identical to World::coll_cost
         stages * (link.latency + bytes as f64 / link.bandwidth) + self.cost.c_coll_enter
     }
 
@@ -442,7 +443,7 @@ struct Expansion<'w> {
     origin: Vec<f64>,
     groups: Vec<GroupInfo>,
     /// Child groups spawned by each slot, in task (step) order.
-    children_of: HashMap<usize, Vec<usize>>,
+    children_of: BTreeMap<usize, Vec<usize>>,
 }
 
 impl<'w> Expansion<'w> {
@@ -481,7 +482,7 @@ impl<'w> Expansion<'w> {
             src_mcw: job.ranks.iter().map(|r| r.mcw).collect(),
             origin,
             groups,
-            children_of: HashMap::new(),
+            children_of: BTreeMap::new(),
             w,
             plan,
             data_bytes,
@@ -506,6 +507,7 @@ impl<'w> Expansion<'w> {
     fn send(&mut self, from: usize, to_node: NodeId, bytes: u64) -> f64 {
         self.clock[from] += self.w.cost.o_send;
         let link = self.w.cluster.path(self.node[from], to_node);
+        // detlint: allow(lossy-cast) -- message payloads are far below 2^53; must stay bit-identical to the simulator's wire cost
         let arrive = self.clock[from] + link.latency + bytes as f64 / link.bandwidth;
         if bytes > EAGER_LIMIT {
             // Rendezvous: the sender also pays the wire time.
@@ -552,7 +554,7 @@ impl<'w> Expansion<'w> {
     ///
     /// The parallel/source entry charges (`open_port` + `publish` on the
     /// source root) must be applied by the caller *before* this runs.
-    fn run_spawn_tree(&mut self, asg: &HashMap<usize, Vec<SpawnTask>>) {
+    fn run_spawn_tree(&mut self, asg: &BTreeMap<usize, Vec<SpawnTask>>) {
         let gcount = self.groups.len();
         // (step, initiator slot, gid) in ascending step order.
         let mut tasks: Vec<(usize, usize, usize)> = Vec::new();
@@ -615,8 +617,8 @@ impl<'w> Expansion<'w> {
         let mut order: Vec<usize> = (0..units.len()).collect();
         order.sort_by_key(|&i| units[i].step);
 
-        let mut arrive_up: HashMap<usize, f64> = HashMap::new(); // gid -> arrival at parent
-        let mut arrive_down: HashMap<usize, f64> = HashMap::new(); // gid -> arrival at group root
+        let mut arrive_up: BTreeMap<usize, f64> = BTreeMap::new(); // gid -> arrival at parent
+        let mut arrive_down: BTreeMap<usize, f64> = BTreeMap::new(); // gid -> arrival at group root
 
         // Upside pass: leaves (largest step) first.
         for &ui in order.iter().rev() {
@@ -643,7 +645,7 @@ impl<'w> Expansion<'w> {
             }
             // Group root notifies its parent (8-byte token).
             if let Some(parent_slot) = units[ui].parent_slot {
-                let gid = units[ui].gid.unwrap();
+                let gid = units[ui].gid.expect("child sync units always carry a gid");
                 let a = self.send(root, self.node[parent_slot], 8);
                 arrive_up.insert(gid, a);
             }
@@ -655,7 +657,7 @@ impl<'w> Expansion<'w> {
             let root = members[0];
             let is_child = units[ui].parent_slot.is_some();
             if is_child {
-                let gid = units[ui].gid.unwrap();
+                let gid = units[ui].gid.expect("child sync units always carry a gid");
                 let a = arrive_down[&gid];
                 self.recv(root, a);
             }
@@ -703,7 +705,7 @@ impl<'w> Expansion<'w> {
     /// "acceptor first", so merged rank 0 is always the port owner.
     fn run_binary_connection(&mut self) {
         let gcount = self.groups.len();
-        let mut active: HashMap<usize, Vec<usize>> = (0..gcount)
+        let mut active: BTreeMap<usize, Vec<usize>> = (0..gcount)
             .map(|gid| (gid, self.group_members(gid)))
             .collect();
         let mut groups = gcount;
@@ -755,7 +757,7 @@ impl<'w> Expansion<'w> {
     fn redistrib_intracomm(&mut self, rank_slot: &[usize]) {
         let (ns, nt) = (self.plan.ns(), self.plan.nt());
         let plan = redistrib::block_plan(ns, nt, self.data_bytes);
-        let mut arrivals: HashMap<(usize, usize), f64> = HashMap::new();
+        let mut arrivals: BTreeMap<(usize, usize), f64> = BTreeMap::new();
         for t in plan.iter().filter(|t| t.src != t.dst) {
             let from = rank_slot[t.src];
             let to_node = self.node[rank_slot[t.dst]];
@@ -773,7 +775,7 @@ impl<'w> Expansion<'w> {
     fn redistrib_intercomm(&mut self, src_slots: &[usize], dst_slots: &[usize]) {
         let (ns, nt) = (self.plan.ns(), self.plan.nt());
         let plan = redistrib::block_plan(ns, nt, self.data_bytes);
-        let mut arrivals: HashMap<(usize, usize), f64> = HashMap::new();
+        let mut arrivals: BTreeMap<(usize, usize), f64> = BTreeMap::new();
         for t in &plan {
             let from = src_slots[t.src];
             let to_node = self.node[dst_slots[t.dst]];

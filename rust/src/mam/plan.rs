@@ -15,7 +15,7 @@
 
 use super::{Method, SpawnStrategy};
 use crate::topology::NodeId;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// A group to be spawned: one `MPI_Comm_spawn` target, fully contained in
 /// one node (the property that later enables TS shrinkage).
@@ -148,14 +148,14 @@ impl Plan {
     }
 
     /// The per-slot spawn assignments for this plan's strategy.
-    pub fn assignments(&self) -> HashMap<usize, Vec<SpawnTask>> {
+    pub fn assignments(&self) -> BTreeMap<usize, Vec<SpawnTask>> {
         match self.strategy {
             SpawnStrategy::ParallelHypercube => hypercube_assignments(self),
             SpawnStrategy::ParallelDiffusive => diffusive_assignments(self),
             // Plain / Single / NodeByNode funnel all groups through the
             // root source rank (slot 0) in a single step.
             _ => {
-                let mut map = HashMap::new();
+                let mut map = BTreeMap::new();
                 let tasks: Vec<SpawnTask> =
                     self.groups().into_iter().map(|group| SpawnTask { step: 1, group }).collect();
                 if !tasks.is_empty() {
@@ -213,13 +213,13 @@ pub fn hypercube_steps(c: u32, i: usize, n: usize) -> usize {
 /// Hypercube spawn assignment: in each step every existing process (by
 /// enumeration slot order: sources first, then groups by id) takes the
 /// next unspawned group. Matches Figure 1 of the paper.
-pub fn hypercube_assignments(plan: &Plan) -> HashMap<usize, Vec<SpawnTask>> {
+pub fn hypercube_assignments(plan: &Plan) -> BTreeMap<usize, Vec<SpawnTask>> {
     let groups = plan.groups();
     assert!(
         plan.is_homogeneous(),
         "hypercube strategy requires a homogeneous allocation (use diffusive)"
     );
-    let mut map: HashMap<usize, Vec<SpawnTask>> = HashMap::new();
+    let mut map: BTreeMap<usize, Vec<SpawnTask>> = BTreeMap::new();
     let mut available = plan.ns(); // t_{s-1}, in processes
     let mut next_group = 0usize;
     let mut step = 1usize;
@@ -308,14 +308,14 @@ pub fn diffusive_trace(plan: &Plan) -> Vec<DiffusiveStep> {
 /// `lambda_{s-1} .. min(N, lambda_s)` of `S` to the first `t_{s-1}`
 /// enumeration slots, one entry per slot; entries with `S_i = 0` are
 /// no-ops for their slot.
-pub fn diffusive_assignments(plan: &Plan) -> HashMap<usize, Vec<SpawnTask>> {
+pub fn diffusive_assignments(plan: &Plan) -> BTreeMap<usize, Vec<SpawnTask>> {
     let n = plan.n_nodes();
     // Map node index -> group (for entries that spawn).
-    let mut group_of_node: HashMap<usize, Group> = HashMap::new();
+    let mut group_of_node: BTreeMap<usize, Group> = BTreeMap::new();
     for g in plan.groups() {
         group_of_node.insert(g.node_idx, g);
     }
-    let mut map: HashMap<usize, Vec<SpawnTask>> = HashMap::new();
+    let mut map: BTreeMap<usize, Vec<SpawnTask>> = BTreeMap::new();
     let mut available = plan.ns();
     let mut lambda = 0usize;
     let mut step = 1usize;
@@ -378,7 +378,7 @@ impl Plan {
     /// spawn task, avoiding a full assignment recomputation per call.
     pub fn rte_queue_pos_in(
         &self,
-        assignments: &HashMap<usize, Vec<SpawnTask>>,
+        assignments: &BTreeMap<usize, Vec<SpawnTask>>,
         slot: usize,
         step: usize,
     ) -> usize {
@@ -679,6 +679,40 @@ mod tests {
         let asg = plan.assignments();
         assert_eq!(asg.len(), 1);
         assert_eq!(asg[&0].len(), 2);
+    }
+
+    #[test]
+    fn assignments_iterate_in_slot_order() {
+        // Determinism regression for the HashMap -> BTreeMap migration:
+        // the assignment map must enumerate initiator slots in ascending
+        // order on every call, for every strategy, so downstream
+        // consumers (spawn-tree replay, RTE queue positions) never
+        // depend on hash-seed iteration order.
+        for strategy in
+            [SpawnStrategy::Plain, SpawnStrategy::ParallelHypercube, SpawnStrategy::ParallelDiffusive]
+        {
+            let plan = Plan::new(
+                0,
+                Method::Merge,
+                strategy,
+                (0..8).collect(),
+                vec![2; 8],
+                vec![2, 0, 0, 0, 0, 0, 0, 0],
+            );
+            let slots: Vec<usize> = plan.assignments().keys().copied().collect();
+            let mut sorted = slots.clone();
+            sorted.sort_unstable();
+            assert_eq!(slots, sorted, "{strategy:?} slots out of order");
+            // And two computations agree exactly (same keys, same tasks).
+            let a = plan.assignments();
+            let b = plan.assignments();
+            let flat = |m: &BTreeMap<usize, Vec<SpawnTask>>| -> Vec<(usize, usize, usize)> {
+                m.iter()
+                    .flat_map(|(&s, ts)| ts.iter().map(move |t| (s, t.step, t.group.gid)))
+                    .collect()
+            };
+            assert_eq!(flat(&a), flat(&b));
+        }
     }
 
     #[test]

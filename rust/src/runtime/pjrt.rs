@@ -90,8 +90,11 @@ pub struct SharedKernel {
 
 // SAFETY: all access to the underlying PJRT objects goes through the
 // Mutex (one thread at a time); PJRT CPU clients are documented to be
-// usable from any thread.
+// usable from any thread. These are the only two unsafe items in the
+// crate, scoped against the crate-wide `#![deny(unsafe_code)]`.
+#[allow(unsafe_code)]
 unsafe impl Send for SharedKernel {}
+#[allow(unsafe_code)]
 unsafe impl Sync for SharedKernel {}
 
 impl SharedKernel {

@@ -263,6 +263,7 @@ impl Ctx {
                 }
                 let mut assignments: HashMap<usize, (Arc<CommInner>, Side, usize)> =
                     HashMap::new();
+                // detlint: allow(unordered-iter) -- keys are collected and sorted before any order-sensitive use
                 let mut colors: Vec<i64> = by_color.keys().copied().collect();
                 colors.sort_unstable();
                 for color in colors {

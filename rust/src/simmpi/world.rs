@@ -246,6 +246,7 @@ impl World {
         }
         drop(rvs);
         let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        // detlint: allow(unordered-iter) -- wake-only abort broadcast; every proc gets notified and iteration order cannot affect virtual time
         for p in inner.procs.values() {
             p.mailbox_cv.notify_all();
             p.zombie_cv.notify_all();
@@ -456,6 +457,7 @@ impl World {
     /// `link`: `ceil(log2 n) * (alpha + bytes/beta) + entry`.
     pub(crate) fn coll_cost(&self, n: usize, bytes: u64, link: Link) -> f64 {
         let stages = if n <= 1 { 0.0 } else { (n as f64).log2().ceil() };
+        // detlint: allow(lossy-cast) -- per-stage payload sizes are far below 2^53; the alpha-beta cost model is f64 by definition
         stages * (link.latency + bytes as f64 / link.bandwidth) + self.cfg.cost.c_coll_enter
     }
 

@@ -35,7 +35,7 @@ pub fn cmp_nan_last(a: &f64, b: &f64) -> std::cmp::Ordering {
         (true, true) => std::cmp::Ordering::Equal,
         (true, false) => std::cmp::Ordering::Greater,
         (false, true) => std::cmp::Ordering::Less,
-        (false, false) => a.partial_cmp(b).expect("both values are non-NaN"),
+        (false, false) => a.total_cmp(b),
     }
 }
 

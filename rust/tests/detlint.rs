@@ -1,0 +1,150 @@
+//! Fixture-based suite for the `detlint` static-analysis pass, plus the
+//! tree-wide self-check that gates tier 1: `rust/src` must be clean
+//! under the checked-in policy, with every suppression carrying a
+//! reason.
+
+use paraspawn::lint::{self, rules::lint_all_rules, Finding, SUPPRESSION_RULE};
+use std::path::Path;
+
+/// Findings of `rule` in pre-rendered findings.
+fn of_rule<'a>(findings: &'a [Finding], rule: &str) -> Vec<&'a Finding> {
+    findings.iter().filter(|f| f.rule == rule).collect()
+}
+
+/// Assert the known-bad fixture fires `rule` (and nothing unrelated)
+/// and the known-good twin is completely clean.
+fn assert_rule_pair(rule: &str, bad_name: &str, bad_src: &str, good_name: &str, good_src: &str) {
+    let bad = lint_all_rules(bad_name, bad_src);
+    assert!(
+        !of_rule(&bad, rule).is_empty(),
+        "{bad_name}: expected a `{rule}` finding, got {bad:?}"
+    );
+    assert!(
+        bad.iter().all(|f| f.rule == rule),
+        "{bad_name}: unexpected extra findings {bad:?}"
+    );
+    let good = lint_all_rules(good_name, good_src);
+    assert!(good.is_empty(), "{good_name}: expected clean, got {good:?}");
+}
+
+#[test]
+fn wall_clock_fixtures() {
+    assert_rule_pair(
+        "wall-clock",
+        "wall_clock_bad.rs",
+        include_str!("fixtures/detlint/wall_clock_bad.rs"),
+        "wall_clock_good.rs",
+        include_str!("fixtures/detlint/wall_clock_good.rs"),
+    );
+}
+
+#[test]
+fn unordered_iter_fixtures() {
+    assert_rule_pair(
+        "unordered-iter",
+        "unordered_iter_bad.rs",
+        include_str!("fixtures/detlint/unordered_iter_bad.rs"),
+        "unordered_iter_good.rs",
+        include_str!("fixtures/detlint/unordered_iter_good.rs"),
+    );
+}
+
+#[test]
+fn total_order_fixtures() {
+    assert_rule_pair(
+        "total-order-floats",
+        "total_order_bad.rs",
+        include_str!("fixtures/detlint/total_order_bad.rs"),
+        "total_order_good.rs",
+        include_str!("fixtures/detlint/total_order_good.rs"),
+    );
+}
+
+#[test]
+fn lossy_cast_fixtures() {
+    assert_rule_pair(
+        "lossy-cast",
+        "lossy_cast_bad.rs",
+        include_str!("fixtures/detlint/lossy_cast_bad.rs"),
+        "lossy_cast_good.rs",
+        include_str!("fixtures/detlint/lossy_cast_good.rs"),
+    );
+}
+
+#[test]
+fn naked_unwrap_fixtures() {
+    assert_rule_pair(
+        "naked-unwrap",
+        "naked_unwrap_bad.rs",
+        include_str!("fixtures/detlint/naked_unwrap_bad.rs"),
+        "naked_unwrap_good.rs",
+        include_str!("fixtures/detlint/naked_unwrap_good.rs"),
+    );
+}
+
+#[test]
+fn reasoned_suppression_silences_the_site() {
+    let f = lint_all_rules("suppressed_ok.rs", include_str!("fixtures/detlint/suppressed_ok.rs"));
+    assert!(f.is_empty(), "reasoned suppression should be clean, got {f:?}");
+}
+
+#[test]
+fn suppression_without_reason_is_itself_a_finding() {
+    let f = lint_all_rules(
+        "suppressed_no_reason.rs",
+        include_str!("fixtures/detlint/suppressed_no_reason.rs"),
+    );
+    // The wall-clock hazard is suppressed, but the reason-less marker
+    // surfaces as exactly one `suppression` finding.
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, SUPPRESSION_RULE);
+    assert!(of_rule(&f, "wall-clock").is_empty());
+}
+
+#[test]
+fn findings_carry_location_and_snippet() {
+    let f = lint_all_rules(
+        "wall_clock_bad.rs",
+        include_str!("fixtures/detlint/wall_clock_bad.rs"),
+    );
+    let hit = &f[0];
+    assert_eq!(hit.file, "wall_clock_bad.rs");
+    assert!(hit.line > 0);
+    assert!(hit.snippet.contains("Instant::now"), "{:?}", hit.snippet);
+    assert!(!hit.detail.is_empty());
+    let json = lint::findings_json(&f);
+    assert!(json.contains("\"rule\": \"wall-clock\""), "{json}");
+    assert!(json.contains("\"file\": \"wall_clock_bad.rs\""), "{json}");
+}
+
+#[test]
+fn cfg_test_modules_are_exempt() {
+    let src = "pub fn prod() {}\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+                   use std::time::Instant;\n\
+                   #[test]\n\
+                   fn timing_is_fine_in_tests() {\n\
+                       let t = Instant::now();\n\
+                       let _ = t.elapsed();\n\
+                   }\n\
+               }\n";
+    assert!(lint_all_rules("x.rs", src).is_empty());
+}
+
+/// The tier-1 gate: the crate's own sources are clean under the
+/// checked-in policy — zero unsuppressed findings, and (because a
+/// reason-less suppression is itself a finding) every suppression in
+/// the tree carries a reason.
+#[test]
+fn tree_is_clean_under_checked_in_policy() {
+    let config = lint::Config::parse(lint::DEFAULT_POLICY)
+        .expect("checked-in rust/detlint.conf must parse");
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src");
+    let findings = lint::run_lint(&root, &config).expect("lint walks rust/src");
+    assert!(
+        findings.is_empty(),
+        "unsuppressed detlint findings in the tree:\n{}",
+        lint::findings_text(&findings)
+    );
+}

@@ -1,0 +1,7 @@
+// detlint fixture: known-bad for `lossy-cast`.
+
+pub fn node_seconds(consumed_ns: u64) -> f64 {
+    // u64 -> f64 silently rounds above 2^53: accounting drift for large
+    // cumulative nanosecond counters.
+    consumed_ns as f64 / 1e9
+}

@@ -1,0 +1,7 @@
+// detlint fixture: known-good for `lossy-cast`.
+
+pub fn mean_nodes(total: usize, jobs: usize) -> f64 {
+    // usize counts here are cluster-bounded (nodes, jobs), far below
+    // 2^53 — out of scope for the rule by design.
+    total as f64 / jobs.max(1) as f64
+}

@@ -1,0 +1,5 @@
+// detlint fixture: known-good for `naked-unwrap`.
+
+pub fn front_job(queue: &[u64]) -> u64 {
+    *queue.first().expect("scheduler invariant: queue is non-empty here")
+}

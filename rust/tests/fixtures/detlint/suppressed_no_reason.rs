@@ -1,0 +1,10 @@
+// detlint fixture: a suppression without a reason. The target hazard is
+// suppressed, but the reason-less marker is itself a `suppression`
+// finding.
+use std::time::Instant;
+
+pub fn harness_elapsed() -> f64 {
+    // detlint: allow(wall-clock)
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,9 @@
+// detlint fixture: a hazard with a well-formed, reasoned suppression —
+// must produce zero findings.
+use std::time::Instant;
+
+pub fn harness_elapsed() -> f64 {
+    // detlint: allow(wall-clock) -- measures harness wall time for an operator progress bar; never reaches a result
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

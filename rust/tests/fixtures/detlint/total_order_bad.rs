@@ -1,0 +1,7 @@
+// detlint fixture: known-bad for `total-order-floats`.
+// The PR 2 bug this guards against: sort_by(partial_cmp().unwrap())
+// panicked the sweep harness on a NaN-poisoned score.
+
+pub fn sort_scores(scores: &mut Vec<f64>) {
+    scores.sort_by(|a, b| a.partial_cmp(b).expect("non-NaN"));
+}

@@ -1,0 +1,6 @@
+// detlint fixture: known-good for `total-order-floats`.
+
+pub fn sort_scores(scores: &mut Vec<f64>) {
+    // total_cmp is a total order: never panics, NaNs sort consistently.
+    scores.sort_by(|a, b| a.total_cmp(b));
+}

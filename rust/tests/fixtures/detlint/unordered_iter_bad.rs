@@ -1,0 +1,13 @@
+// detlint fixture: known-bad for `unordered-iter`.
+use std::collections::HashMap;
+
+pub fn first_assignment(assignments: &HashMap<usize, Vec<usize>>) -> Option<usize> {
+    // Iteration order depends on the hash seed: a different "first"
+    // entry per process.
+    for (slot, tasks) in assignments.iter() {
+        if !tasks.is_empty() {
+            return Some(*slot);
+        }
+    }
+    None
+}

@@ -1,0 +1,12 @@
+// detlint fixture: known-good for `unordered-iter`.
+use std::collections::BTreeMap;
+
+pub fn first_assignment(assignments: &BTreeMap<usize, Vec<usize>>) -> Option<usize> {
+    // BTreeMap iterates in key order — deterministic on every run.
+    for (slot, tasks) in assignments.iter() {
+        if !tasks.is_empty() {
+            return Some(*slot);
+        }
+    }
+    None
+}

@@ -1,0 +1,9 @@
+// detlint fixture: known-bad for `wall-clock`.
+// The PR 1 bug this guards against: RTE queue positions derived from
+// wall-clock FCFS arrival order made repeated runs drift.
+use std::time::Instant;
+
+pub fn queue_position() -> u128 {
+    let t = Instant::now();
+    t.elapsed().as_nanos()
+}

@@ -1,0 +1,9 @@
+// detlint fixture: known-good for `wall-clock`.
+// Virtual time from the simulation clock; `Instant::now()` appears only
+// in this comment and the string below, which must not fire.
+
+pub fn queue_position(virtual_clock: f64) -> f64 {
+    let label = "never call Instant::now() here";
+    let _ = label;
+    virtual_clock + 1.0
+}
