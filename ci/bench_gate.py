@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Replay-throughput regression gate for CI.
+
+Compares a fresh ``BENCH_replay.json`` (written by
+``cargo bench --bench bench_replay``) against the committed
+``BENCH_replay.baseline.json`` and fails if any arm's jobs/sec falls
+more than the allowed slack below its baseline.
+
+The baseline is a deliberately conservative floor, not a fresh
+measurement: CI runners are noisy and heterogeneous, so the committed
+numbers sit far below what any release build achieves, and the 20%
+slack on top absorbs scheduler jitter. Ratchet the floor upward by
+editing the baseline file when the measured rates have stably moved.
+
+Usage: bench_gate.py MEASURED_JSON BASELINE_JSON
+
+Exit code 0 when every gated arm passes, 1 otherwise. Stdlib only.
+"""
+
+import json
+import sys
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    with open(argv[1]) as f:
+        measured = json.load(f)
+    with open(argv[2]) as f:
+        baseline = json.load(f)
+
+    if measured.get("schema") != "paraspawn-bench-replay-v1":
+        print(f"unexpected schema in {argv[1]}: {measured.get('schema')!r}", file=sys.stderr)
+        return 1
+
+    slack = float(baseline.get("slack", 0.8))
+    floors = baseline.get("min_jobs_per_sec", {})
+    rates = {arm["name"]: arm["jobs_per_sec"] for arm in measured.get("arms", [])}
+
+    failed = False
+    for name, floor in sorted(floors.items()):
+        got = rates.get(name)
+        if got is None:
+            print(f"FAIL {name}: arm missing from {argv[1]}")
+            failed = True
+            continue
+        limit = slack * float(floor)
+        verdict = "ok" if got >= limit else "FAIL"
+        print(f"{verdict} {name}: {got:.1f} jobs/s (floor {floor:.1f} x {slack:.2f} = {limit:.1f})")
+        if got < limit:
+            failed = True
+
+    ref = measured.get("reference", {})
+    speedup = measured.get("speedup_vs_reference")
+    if speedup is not None:
+        print(
+            f"info speedup_vs_reference: {speedup:.2f}x "
+            f"(reference {ref.get('jobs_per_sec', 0):.1f} jobs/s on {ref.get('jobs', 0)} jobs)"
+        )
+    min_speedup = baseline.get("min_speedup_vs_reference")
+    if min_speedup is not None and speedup is not None and speedup < float(min_speedup):
+        print(f"FAIL speedup_vs_reference: {speedup:.2f}x < {float(min_speedup):.2f}x")
+        failed = True
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,203 @@
+//! Replay-throughput bench: the tracked jobs/sec artifact behind the
+//! trace-rate scheduler core (PR 7).
+//!
+//! Replays a seeded synthetic sustained-backlog trace
+//! (`testing::synth_trace` — the same generator as
+//! `paraspawn workload --synth N`) through the refactored event loop
+//! under all three policies with scalar TS pricing, measures the frozen
+//! pre-refactor loop (`rms::sched::reference`) on a capped prefix of
+//! the same trace as the speedup denominator, records analytic and
+//! stateful memo occupancy on a warm-up prefix, and writes everything
+//! to `BENCH_replay.json` (schema `paraspawn-bench-replay-v1`).
+//!
+//! Modes:
+//!
+//! * smoke (default): 5 000 jobs — seconds even unoptimized; what CI's
+//!   `bench-replay` job runs and gates via `ci/bench_gate.py` against
+//!   the committed `BENCH_replay.baseline.json`.
+//! * `--full`: 1 000 000 jobs — the paper-scale replay; single-digit
+//!   minutes in release on a laptop-class core.
+//!
+//! Knobs: `PARASPAWN_BENCH_JOBS` overrides the job count,
+//! `PARASPAWN_BENCH_REF_JOBS` the reference-loop prefix (default
+//! 5 000 — the old loop is O(cluster + running + queue) per event, the
+//! very cost this PR removed, so it gets a shorter leash),
+//! `PARASPAWN_BENCH_SEED` the trace seed, `--out PATH` the artifact
+//! path.
+//!
+//! Run with `cargo bench --bench bench_replay [-- --full] [-- --out P]`.
+
+use paraspawn::config::CostModel;
+use paraspawn::rms::sched::reference::schedule_with_pricer_reference;
+use paraspawn::rms::sched::{
+    schedule_with_pricer, AnalyticPricer, SchedPolicy, SchedResult, StatefulPricer,
+};
+use paraspawn::rms::workload::{JobSpec, ReconfigCostModel};
+use paraspawn::rms::AllocPolicy;
+use paraspawn::testing::synth_trace;
+use paraspawn::topology::Cluster;
+use std::path::PathBuf;
+use std::time::Instant;
+
+const SMOKE_JOBS: usize = 5_000;
+const FULL_JOBS: usize = 1_000_000;
+const NODES: usize = 256;
+const CORES: u32 = 8;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+struct Arm {
+    name: &'static str,
+    jobs: usize,
+    seconds: f64,
+    events: usize,
+}
+
+impl Arm {
+    fn jobs_per_sec(&self) -> f64 {
+        self.jobs as f64 / self.seconds.max(1e-9)
+    }
+
+    fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.seconds.max(1e-9)
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "    {{\"name\": \"{}\", \"jobs\": {}, \"seconds\": {:.3}, \"events\": {}, \
+             \"jobs_per_sec\": {:.1}, \"events_per_sec\": {:.1}}}",
+            self.name,
+            self.jobs,
+            self.seconds,
+            self.events,
+            self.jobs_per_sec(),
+            self.events_per_sec(),
+        )
+    }
+}
+
+fn replay(policy: SchedPolicy, jobs: &[JobSpec], cluster: &Cluster) -> (SchedResult, f64) {
+    let mut pricer = ReconfigCostModel::ts(1.0);
+    let t0 = Instant::now();
+    let res = schedule_with_pricer(cluster, AllocPolicy::WholeNodes, policy, &mut pricer, jobs)
+        .expect("synthetic trace schedules");
+    (res, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let full = argv.iter().any(|a| a == "--full");
+    let out = argv
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| argv.get(i + 1))
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_replay.json"));
+
+    let n_jobs = env_usize("PARASPAWN_BENCH_JOBS", if full { FULL_JOBS } else { SMOKE_JOBS });
+    let ref_jobs = env_usize("PARASPAWN_BENCH_REF_JOBS", SMOKE_JOBS).min(n_jobs);
+    let seed = env_usize("PARASPAWN_BENCH_SEED", 2026) as u64;
+    let cluster = Cluster::mini(NODES, CORES);
+
+    eprintln!("generating {n_jobs}-job synthetic trace (seed {seed}, {NODES} nodes)...");
+    let t0 = Instant::now();
+    let jobs = synth_trace(n_jobs, seed, NODES);
+    eprintln!("  generated in {:.2}s", t0.elapsed().as_secs_f64());
+
+    // The refactored loop, all three policies.
+    let mut arms = Vec::new();
+    for (name, policy) in [
+        ("fcfs", SchedPolicy::Fcfs),
+        ("easy", SchedPolicy::EasyBackfill),
+        ("malleable", SchedPolicy::Malleable),
+    ] {
+        let (res, secs) = replay(policy, &jobs, &cluster);
+        eprintln!(
+            "  {name}: {n_jobs} jobs / {} events in {secs:.2}s = {:.0} jobs/s, makespan {:.0}s",
+            res.events,
+            n_jobs as f64 / secs.max(1e-9),
+            res.makespan,
+        );
+        arms.push(Arm { name, jobs: n_jobs, seconds: secs, events: res.events });
+    }
+
+    // The frozen pre-refactor loop on a capped prefix of the same
+    // trace: the speedup denominator. Same policy as the headline arm
+    // (malleable), same pricer, bit-identical results — only the
+    // mechanics differ.
+    eprintln!("reference loop on {ref_jobs}-job prefix...");
+    let prefix = &jobs[..ref_jobs];
+    let mut pricer = ReconfigCostModel::ts(1.0);
+    let t0 = Instant::now();
+    let ref_res = schedule_with_pricer_reference(
+        &cluster,
+        AllocPolicy::WholeNodes,
+        SchedPolicy::Malleable,
+        &mut pricer,
+        prefix,
+    )
+    .expect("reference replays the prefix");
+    let ref_secs = t0.elapsed().as_secs_f64();
+    let ref_rate = ref_jobs as f64 / ref_secs.max(1e-9);
+    eprintln!(
+        "  reference: {ref_jobs} jobs / {} events in {ref_secs:.2}s = {ref_rate:.0} jobs/s",
+        ref_res.events,
+    );
+    let headline = arms.iter().find(|a| a.name == "malleable").expect("malleable arm ran");
+    let speedup = headline.jobs_per_sec() / ref_rate.max(1e-9);
+    eprintln!("  speedup vs reference (malleable, scalar TS): {speedup:.1}x");
+
+    // Memo occupancy on a warm-up prefix: how many distinct (pre, post)
+    // pairs / state profiles a backlog replay actually touches — the
+    // numbers behind "exact pricing at scalar speed".
+    let memo_prefix = &jobs[..n_jobs.min(2_000)];
+    let mut analytic = AnalyticPricer::ts(cluster.clone(), CostModel::mn5());
+    schedule_with_pricer(
+        &cluster,
+        AllocPolicy::WholeNodes,
+        SchedPolicy::Malleable,
+        &mut analytic,
+        memo_prefix,
+    )
+    .expect("analytic memo prefix schedules");
+    let mut stateful = StatefulPricer::ts(cluster.clone(), CostModel::mn5());
+    schedule_with_pricer(
+        &cluster,
+        AllocPolicy::WholeNodes,
+        SchedPolicy::Malleable,
+        &mut stateful,
+        memo_prefix,
+    )
+    .expect("stateful memo prefix schedules");
+    eprintln!(
+        "  memo occupancy after {} jobs: {} analytic pairs, {} state profiles",
+        memo_prefix.len(),
+        analytic.cached_pairs(),
+        stateful.cached_states(),
+    );
+
+    let arm_lines: Vec<String> = arms.iter().map(Arm::json).collect();
+    let json = format!(
+        "{{\n  \"schema\": \"paraspawn-bench-replay-v1\",\n  \"mode\": \"{}\",\n  \
+         \"jobs\": {},\n  \"cluster_nodes\": {},\n  \"seed\": {},\n  \"arms\": [\n{}\n  ],\n  \
+         \"reference\": {{\"jobs\": {}, \"seconds\": {:.3}, \"jobs_per_sec\": {:.1}}},\n  \
+         \"speedup_vs_reference\": {:.2},\n  \
+         \"memo\": {{\"prefix_jobs\": {}, \"analytic_pairs\": {}, \"state_profiles\": {}}}\n}}\n",
+        if full { "full" } else { "smoke" },
+        n_jobs,
+        NODES,
+        seed,
+        arm_lines.join(",\n"),
+        ref_jobs,
+        ref_secs,
+        ref_rate,
+        speedup,
+        memo_prefix.len(),
+        analytic.cached_pairs(),
+        stateful.cached_states(),
+    );
+    std::fs::write(&out, json).unwrap_or_else(|e| panic!("writing {}: {e}", out.display()));
+    println!("[written {}]", out.display());
+}

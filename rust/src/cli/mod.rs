@@ -404,6 +404,9 @@ fn cmd_workload(a: &Args) -> Result<()> {
     }
     let cores_per_node = cluster.nodes.iter().map(|n| n.cores).min().unwrap_or(1);
 
+    if a.get("trace").is_some() && a.get("synth").is_some() {
+        bail!("--trace and --synth are mutually exclusive");
+    }
     let (label, jobs) = if let Some(path) = a.get("trace") {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
         let mut jobs = sched::read_swf(&text, cores_per_node, total_nodes)
@@ -415,6 +418,14 @@ fn cmd_workload(a: &Args) -> Result<()> {
             .map(|s| s.to_string_lossy().into_owned())
             .unwrap_or_else(|| "trace".to_string());
         (label, jobs)
+    } else if a.get("synth").is_some() {
+        // Escape hatch for scale testing: the seeded sustained-backlog
+        // generator behind the replay bench, sized on the command line.
+        // Bit-deterministic per (N, seed, nodes), so results reproduce.
+        let n = a.usize_or("synth", 100_000)?;
+        let mut spec = crate::testing::SynthTrace::new(n, seed, total_nodes);
+        spec.malleable_frac = frac;
+        (format!("synth{n}"), spec.generate())
     } else {
         let jobs_n = a.usize_or("jobs", 40)?;
         ("synthetic".to_string(), synthetic_workload(jobs_n, total_nodes, frac, seed))
@@ -667,7 +678,7 @@ USAGE:
                      [--pricing scalar|analytic|stateful|both|all]
                      [--strategy plain|single|nodebynode|hypercube|diffusive]
                      [--data-bytes B]
-                     [--trace FILE.swf] [--save-trace FILE.swf]
+                     [--trace FILE.swf] [--synth N] [--save-trace FILE.swf]
                      [--cost-from-sweep] [--calib-reps K]
                      [--threads T] [--out DIR] [--json]
   paraspawn select   [--i I] [--n N] [--cores C] [--expected-shrinks K]
@@ -688,6 +699,12 @@ concrete nodes gained/lost, daemon warmth, co-located load) and makes
 the malleable policy pick shrink victims and expansion targets by
 predicted resize seconds. 'both' = scalar + analytic; 'all' adds the
 stateful arms.
+
+Workload sources: --trace replays an SWF file; --synth N generates a
+seeded sustained-backlog trace of N jobs (testing::synth_trace, the
+same generator as the replay-throughput bench) — the scale escape
+hatch for 10^5-10^6-job runs; neither flag falls back to the default
+40-job synthetic workload. --trace and --synth are mutually exclusive.
 
 The lint subcommand runs detlint (docs/LINTS.md): determinism and
 float-ordering rules over the crate's own sources. --root defaults to

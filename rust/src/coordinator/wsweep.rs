@@ -201,6 +201,20 @@ pub struct WorkloadSpec {
     pub jobs: Vec<JobSpec>,
 }
 
+impl WorkloadSpec {
+    /// A seeded sustained-backlog synthetic trace of `jobs` jobs sized
+    /// for `total_nodes` (see [`crate::testing::synth_trace`]), labelled
+    /// `synth{jobs}` — the same generator the replay-throughput bench
+    /// and `paraspawn workload --synth N` use, packaged for matrix
+    /// construction.
+    pub fn synth(jobs: usize, seed: u64, total_nodes: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            label: format!("synth{jobs}"),
+            jobs: crate::testing::synth_trace(jobs, seed, total_nodes),
+        }
+    }
+}
+
 /// A declarative workload sweep: every policy × pricing × workload cell
 /// runs the batch scheduler once on `cluster`.
 #[derive(Clone, Debug)]

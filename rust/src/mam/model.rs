@@ -1302,6 +1302,28 @@ pub fn state_resize_split(
     held: &[NodeId],
     target: &[NodeId],
 ) -> Result<(Vec<NodeId>, Vec<NodeId>)> {
+    let mut src = Vec::new();
+    let mut rest = Vec::new();
+    state_resize_split_into(held, target, &mut src, &mut rest)?;
+    Ok((src, rest))
+}
+
+/// [`state_resize_split`] into caller-provided buffers: `src` and
+/// `rest` are cleared and refilled with the sources and the
+/// gained/dropped remainder (each ascending node-id), reusing whatever
+/// capacity the buffers already hold. This is the variant the
+/// scheduler's state-aware pricer probes its memo with on every
+/// reconfiguration of a trace replay — the two scratch buffers live
+/// for the whole replay, so steady-state probes stop allocating.
+/// On error the buffers are left empty.
+pub fn state_resize_split_into(
+    held: &[NodeId],
+    target: &[NodeId],
+    src: &mut Vec<NodeId>,
+    rest: &mut Vec<NodeId>,
+) -> Result<()> {
+    src.clear();
+    rest.clear();
     let held_set: BTreeSet<NodeId> = held.iter().copied().collect();
     let target_set: BTreeSet<NodeId> = target.iter().copied().collect();
     if held_set.len() != held.len() || target_set.len() != target.len() {
@@ -1320,17 +1342,14 @@ pub fn state_resize_split(
              split it into a shrink and an expansion"
         );
     }
-    Ok(if growing {
-        (
-            held_set.iter().copied().collect(),
-            target_set.difference(&held_set).copied().collect(),
-        )
+    if growing {
+        src.extend(held_set.iter().copied());
+        rest.extend(target_set.difference(&held_set).copied());
     } else {
-        (
-            target_set.iter().copied().collect(),
-            held_set.difference(&target_set).copied().collect(),
-        )
-    })
+        src.extend(target_set.iter().copied());
+        rest.extend(held_set.difference(&target_set).copied());
+    }
+    Ok(())
 }
 
 /// The [`Plan`] of a whole-node resize between two *concrete* node

@@ -9,7 +9,7 @@ pub mod sched;
 pub mod workload;
 
 use crate::topology::{Cluster, NodeId};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// A job's node allocation: ordered `(node, cores_used)` pairs.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -67,11 +67,33 @@ pub enum AllocPolicy {
 /// allocations. Reconfiguration *decisions* (when to resize, to what) come
 /// from the coordinator or the workload simulator; the RMS enforces
 /// capacity.
+///
+/// Alongside the per-node `free` vector the manager maintains an
+/// *indexed free pool*: an id-ordered set of completely idle nodes plus
+/// the same set partitioned by core count (the node "type" used by
+/// [`AllocPolicy::BalancedTypes`]). The index is updated incrementally
+/// on every [`Rms::claim`]/[`Rms::release`], which makes
+/// [`Rms::idle_count`] O(1) and lets [`Rms::plan_allocation`] walk idle
+/// nodes without materializing a scratch `Vec` per query — the
+/// data-structure fix that takes the batch scheduler ([`sched`]) from
+/// pool-scan-limited to trace-rate-limited on 10⁵–10⁶-job SWF replays.
+///
+/// Invariant: `idle` (and its `idle_by_cores` partition) contains node
+/// `n` **iff** `free[n] == cluster.cores(n)`. Iteration order over
+/// either structure is ascending node id, identical to the historical
+/// `(0..len).filter(...)` scan, so allocation decisions are
+/// bit-identical to the unindexed implementation.
 #[derive(Clone, Debug)]
 pub struct Rms {
     /// The managed cluster topology.
     pub cluster: Cluster,
     free: Vec<u32>,
+    /// Completely idle nodes, ascending id.
+    idle: BTreeSet<NodeId>,
+    /// Idle nodes partitioned by core count, each bucket ascending id;
+    /// empty buckets are removed so `idle_by_cores.len()` is the number
+    /// of node *types* with at least one idle node.
+    idle_by_cores: BTreeMap<u32, BTreeSet<NodeId>>,
 }
 
 /// Why an allocation request failed.
@@ -107,8 +129,13 @@ impl std::error::Error for RmsError {}
 impl Rms {
     /// A resource manager over `cluster` with every core free.
     pub fn new(cluster: Cluster) -> Self {
-        let free = cluster.nodes.iter().map(|n| n.cores).collect();
-        Rms { cluster, free }
+        let free: Vec<u32> = cluster.nodes.iter().map(|n| n.cores).collect();
+        let idle: BTreeSet<NodeId> = (0..cluster.len()).collect();
+        let mut idle_by_cores: BTreeMap<u32, BTreeSet<NodeId>> = BTreeMap::new();
+        for n in 0..cluster.len() {
+            idle_by_cores.entry(cluster.cores(n)).or_default().insert(n);
+        }
+        Rms { cluster, free, idle, idle_by_cores }
     }
 
     /// Free cores on a node.
@@ -116,15 +143,44 @@ impl Rms {
         self.free[node]
     }
 
-    /// Nodes that are completely idle.
+    /// Re-derive `node`'s membership in the idle index from its free-core
+    /// count. Called after every per-slot mutation so the invariant
+    /// `idle ∋ n ⟺ free[n] == cores(n)` holds between public calls.
+    fn update_idle(&mut self, node: NodeId) {
+        let cores = self.cluster.cores(node);
+        if self.free[node] == cores {
+            if self.idle.insert(node) {
+                self.idle_by_cores.entry(cores).or_default().insert(node);
+            }
+        } else if self.idle.remove(&node) {
+            let bucket = self
+                .idle_by_cores
+                .get_mut(&cores)
+                .expect("idle index tracks a type bucket for every idle node");
+            bucket.remove(&node);
+            if bucket.is_empty() {
+                self.idle_by_cores.remove(&cores);
+            }
+        }
+    }
+
+    /// Nodes that are completely idle, ascending id.
+    ///
+    /// Materializes a `Vec` from the maintained index; when only the
+    /// *count* is needed use the O(1) [`Rms::idle_count`] instead.
     pub fn idle_nodes(&self) -> Vec<NodeId> {
-        (0..self.cluster.len())
-            .filter(|&n| self.free[n] == self.cluster.cores(n))
-            .collect()
+        self.idle.iter().copied().collect()
+    }
+
+    /// Number of completely idle nodes. O(1): reads the maintained
+    /// index's length instead of scanning (or allocating) anything.
+    pub fn idle_count(&self) -> usize {
+        self.idle.len()
     }
 
     /// Build (without claiming) an allocation of `n_nodes` under `policy`.
-    /// Node choice is deterministic: lowest-index idle nodes first.
+    /// Node choice is deterministic: lowest-index idle nodes first. Walks
+    /// the maintained idle index directly — no scratch `Vec` per query.
     pub fn plan_allocation(
         &self,
         n_nodes: usize,
@@ -132,28 +188,29 @@ impl Rms {
     ) -> Result<Allocation, RmsError> {
         match policy {
             AllocPolicy::WholeNodes => {
-                let idle = self.idle_nodes();
-                if idle.len() < n_nodes {
-                    return Err(RmsError::Capacity { requested: n_nodes, available: idle.len() });
+                if self.idle.len() < n_nodes {
+                    return Err(RmsError::Capacity {
+                        requested: n_nodes,
+                        available: self.idle.len(),
+                    });
                 }
                 Ok(Allocation::new(
-                    idle.into_iter().take(n_nodes).map(|n| (n, self.cluster.cores(n))).collect(),
+                    self.idle.iter().take(n_nodes).map(|&n| (n, self.cluster.cores(n))).collect(),
                 ))
             }
             AllocPolicy::BalancedTypes => {
-                // Two type classes by core count (NASP: 20 and 32).
-                let mut by_type: BTreeMap<u32, Vec<NodeId>> = BTreeMap::new();
-                for n in self.idle_nodes() {
-                    by_type.entry(self.cluster.cores(n)).or_default().push(n);
-                }
-                let mut types: Vec<(u32, Vec<NodeId>)> = by_type.into_iter().collect();
-                if types.len() < 2 {
+                // Two type classes by core count (NASP: 20 and 32); the
+                // index's buckets are exactly the non-empty classes.
+                if self.idle_by_cores.len() < 2 {
                     // Degenerate: fall back to whole nodes.
                     return self.plan_allocation(n_nodes, AllocPolicy::WholeNodes);
                 }
+                let mut classes = self.idle_by_cores.iter();
                 // Paper: a single node comes from the smaller-core type.
-                let (small_cores, small) = types.remove(0);
-                let (big_cores, big) = types.remove(0);
+                let (&small_cores, small) =
+                    classes.next().expect("first idle type class exists");
+                let (&big_cores, big) =
+                    classes.next().expect("second idle type class exists");
                 let half_small = n_nodes - n_nodes / 2; // odd counts favour the small type
                 let half_big = n_nodes / 2;
                 if small.len() < half_small || big.len() < half_big {
@@ -162,7 +219,7 @@ impl Rms {
                         available: small.len() + big.len(),
                     });
                 }
-                let mut slots = Vec::new();
+                let mut slots = Vec::with_capacity(n_nodes);
                 for &n in small.iter().take(half_small) {
                     slots.push((n, small_cores));
                 }
@@ -183,6 +240,7 @@ impl Rms {
         }
         for &(node, cores) in &alloc.slots {
             self.free[node] -= cores;
+            self.update_idle(node);
         }
         Ok(())
     }
@@ -195,6 +253,7 @@ impl Rms {
                 self.free[node] <= self.cluster.cores(node),
                 "released more cores than node {node} has"
             );
+            self.update_idle(node);
         }
     }
 
@@ -215,16 +274,14 @@ impl Rms {
                 self.plan_allocation(n_nodes - current.n_nodes(), policy)?
             }
             AllocPolicy::BalancedTypes => {
-                let mut by_type: BTreeMap<u32, Vec<NodeId>> = BTreeMap::new();
-                for n in self.idle_nodes() {
-                    by_type.entry(self.cluster.cores(n)).or_default().push(n);
-                }
-                let mut types: Vec<(u32, Vec<NodeId>)> = by_type.into_iter().collect();
-                if types.len() < 2 {
+                if self.idle_by_cores.len() < 2 {
                     self.plan_allocation(n_nodes - current.n_nodes(), AllocPolicy::WholeNodes)?
                 } else {
-                    let (small_cores, small) = types.remove(0);
-                    let (big_cores, big) = types.remove(0);
+                    let mut classes = self.idle_by_cores.iter();
+                    let (&small_cores, small) =
+                        classes.next().expect("first idle type class exists");
+                    let (&big_cores, big) =
+                        classes.next().expect("second idle type class exists");
                     let have_small =
                         current.slots.iter().filter(|&&(_, c)| c == small_cores).count();
                     let have_big = current.n_nodes() - have_small;
@@ -400,6 +457,48 @@ mod tests {
         rms.release(&grown);
         rms.release(&hog);
         assert_eq!(rms.idle_nodes().len(), 16);
+    }
+
+    #[test]
+    fn idle_index_tracks_scan_through_mixed_traffic() {
+        // The maintained index must agree with a from-scratch scan of
+        // the free vector after every kind of pool mutation.
+        let check = |rms: &Rms| {
+            let scan: Vec<NodeId> = (0..rms.cluster.len())
+                .filter(|&n| rms.free_on(n) == rms.cluster.cores(n))
+                .collect();
+            assert_eq!(rms.idle_nodes(), scan);
+            assert_eq!(rms.idle_count(), scan.len());
+        };
+        let mut rms = Rms::new(Cluster::nasp());
+        check(&rms);
+        let a = rms.plan_allocation(5, AllocPolicy::BalancedTypes).unwrap();
+        rms.claim(&a).unwrap();
+        check(&rms);
+        let grown = rms.grow(&a, 9, AllocPolicy::BalancedTypes).unwrap();
+        check(&rms);
+        let shrunk = rms.shrink(&grown, 2);
+        check(&rms);
+        rms.release(&shrunk);
+        check(&rms);
+        assert_eq!(rms.idle_count(), 16);
+    }
+
+    #[test]
+    fn partial_core_claims_leave_node_non_idle() {
+        // A node with *any* busy cores must leave the idle index, and
+        // only a full release brings it back.
+        let mut rms = Rms::new(Cluster::mini(2, 4));
+        let half = Allocation::new(vec![(0, 2)]);
+        rms.claim(&half).unwrap();
+        assert_eq!(rms.idle_nodes(), vec![1]);
+        assert_eq!(rms.idle_count(), 1);
+        rms.claim(&half).unwrap(); // the remaining two cores
+        assert_eq!(rms.idle_count(), 1);
+        rms.release(&half);
+        assert_eq!(rms.idle_count(), 1); // two cores still busy on node 0
+        rms.release(&half);
+        assert_eq!(rms.idle_nodes(), vec![0, 1]);
     }
 
     #[test]

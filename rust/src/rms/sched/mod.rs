@@ -59,12 +59,30 @@
 //! (one job per whitespace-separated line, `;` comments) and
 //! [`write_swf`] emits it, so synthetic workloads round-trip through
 //! files and real traces can be replayed.
+//!
+//! **Trace-rate internals** (the million-job refactor): the event loop
+//! leans on the [`Rms`] free-pool index (O(1) [`Rms::idle_count`],
+//! scratch-free allocation planning), count-gates every admission
+//! attempt, reuses one scratch buffer for the backfill
+//! projected-completion list, early-outs doomed malleable passes before
+//! cloning the pool, and batches the ambient [`ClusterState`] across a
+//! stateful shrink round. Every one of those changes is
+//! *decision-identical* by construction and proven **bit-identical**
+//! against the frozen pre-refactor loop kept in [`reference`]
+//! (`rust/tests/sched_conformance.rs`); `rust/benches/bench_replay.rs`
+//! tracks the resulting jobs/sec in `BENCH_replay.json`. See
+//! `docs/ARCHITECTURE.md` for the data-structure walk-through,
+//! including why the per-event completion min-scan deliberately stays
+//! a scan (an incrementally keyed heap is *not* bit-identical under
+//! eager float progression).
+
+pub mod reference;
 
 use super::workload::{validate_jobs, JobSpec, ReconfigCostModel, WorkloadError};
 use super::{AllocPolicy, Allocation, Rms, RmsError};
 use crate::config::CostModel;
 use crate::mam::model::{
-    predict_resize_in_state, predict_resize_pair, state_resize_split, ClusterState,
+    predict_resize_in_state, predict_resize_pair, state_resize_split_into, ClusterState,
 };
 use crate::mam::{Method, SpawnStrategy};
 use crate::topology::{Cluster, NodeId};
@@ -435,6 +453,15 @@ pub struct StatefulPricer {
     /// price, so memo keys drop the ids.
     symmetric: bool,
     state_cache: HashMap<StateKey, f64>,
+    /// Reusable probe key: memo lookups fill this in place (keeping its
+    /// `Vec` capacities across the replay) and clone it only on a miss,
+    /// when the price is inserted — steady-state probes allocate
+    /// nothing.
+    probe: StateKey,
+    /// Reusable `(sources, rest)` split buffers for
+    /// [`crate::mam::model::state_resize_split_into`].
+    scratch_src: Vec<NodeId>,
+    scratch_rest: Vec<NodeId>,
 }
 
 impl StatefulPricer {
@@ -453,6 +480,9 @@ impl StatefulPricer {
             canonical: AnalyticPricer::new(cluster, cost, strategy, shrink, data_bytes),
             symmetric,
             state_cache: HashMap::new(),
+            probe: StateKey { shrink: false, src: Vec::new(), rest: Vec::new(), ids: None },
+            scratch_src: Vec::new(),
+            scratch_rest: Vec::new(),
         }
     }
 
@@ -475,34 +505,42 @@ impl StatefulPricer {
         self.state_cache.len()
     }
 
-    fn state_key(
-        &self,
-        shrink: bool,
-        state: &ClusterState,
-        src: Vec<NodeId>,
-        rest: Vec<NodeId>,
-    ) -> StateKey {
-        // The evaluation forces every *held* node warm (the job's own
-        // daemons run there): source nodes always, and for a shrink the
-        // dropped nodes too. Normalize those warmth bits so provably
-        // identical prices share one memo slot.
-        let profile = |nodes: &[NodeId], forced_warm: bool| -> Vec<(bool, u32, u32)> {
-            nodes
-                .iter()
-                .map(|&n| {
-                    (
-                        forced_warm || state.is_warm(n),
-                        state.load(n),
-                        self.canonical.cluster.cores(n),
-                    )
-                })
-                .collect()
-        };
-        StateKey {
-            shrink,
-            src: profile(&src, true),
-            rest: profile(&rest, shrink),
-            ids: if self.symmetric { None } else { Some((src, rest)) },
+    /// Fill the reusable probe key in place from the scratch split and
+    /// `state`. The evaluation forces every *held* node warm (the job's
+    /// own daemons run there): source nodes always, and for a shrink
+    /// the dropped nodes too — normalized here so provably identical
+    /// prices share one memo slot. On symmetric clusters the ids are
+    /// dropped; on asymmetric ones they are copied into the probe's
+    /// retained buffers.
+    fn fill_probe(&mut self, shrink: bool, state: &ClusterState) {
+        self.probe.shrink = shrink;
+        self.probe.src.clear();
+        for &n in &self.scratch_src {
+            self.probe.src.push((true, state.load(n), self.canonical.cluster.cores(n)));
+        }
+        self.probe.rest.clear();
+        for &n in &self.scratch_rest {
+            self.probe.rest.push((
+                shrink || state.is_warm(n),
+                state.load(n),
+                self.canonical.cluster.cores(n),
+            ));
+        }
+        if self.symmetric {
+            self.probe.ids = None;
+        } else {
+            match &mut self.probe.ids {
+                Some((s, r)) => {
+                    s.clear();
+                    s.extend_from_slice(&self.scratch_src);
+                    r.clear();
+                    r.extend_from_slice(&self.scratch_rest);
+                }
+                None => {
+                    self.probe.ids =
+                        Some((self.scratch_src.clone(), self.scratch_rest.clone()));
+                }
+            }
         }
     }
 
@@ -515,10 +553,14 @@ impl StatefulPricer {
     ) -> Result<f64, String> {
         // The same (sources, rest) split state_resize_plan orders the
         // plan by — sharing the definition keeps the memo key and the
-        // priced plan from drifting apart.
-        let (src, rest) = state_resize_split(held, target).map_err(|e| format!("{e:#}"))?;
-        let key = self.state_key(shrink, state, src, rest);
-        if let Some(&secs) = self.state_cache.get(&key) {
+        // priced plan from drifting apart. The split lands in retained
+        // scratch buffers and the probe key is filled in place, so a
+        // memo hit — the steady state of a warm replay — allocates
+        // nothing; only a miss clones the key to insert it.
+        state_resize_split_into(held, target, &mut self.scratch_src, &mut self.scratch_rest)
+            .map_err(|e| format!("{e:#}"))?;
+        self.fill_probe(shrink, state);
+        if let Some(&secs) = self.state_cache.get(&self.probe) {
             return Ok(secs);
         }
         let method = if shrink {
@@ -540,7 +582,7 @@ impl StatefulPricer {
             self.canonical.data_bytes,
         )
         .map_err(|e| format!("{e:#}"))?;
-        self.state_cache.insert(key, secs);
+        self.state_cache.insert(self.probe.clone(), secs);
         Ok(secs)
     }
 }
@@ -613,6 +655,10 @@ pub struct SchedResult {
     pub idle_node_seconds: f64,
     /// `total_nodes * makespan` — the conservation budget.
     pub total_node_seconds: f64,
+    /// Event-loop iterations executed (arrival/completion instants
+    /// processed). A replay-throughput denominator: the bench artifact
+    /// `BENCH_replay.json` reports both jobs/sec and events/sec.
+    pub events: usize,
     /// Per-job outcomes in input order.
     pub jobs: Vec<JobOutcome>,
 }
@@ -672,6 +718,13 @@ struct Scheduler<'a> {
     shrinks: usize,
     reconfig_node_seconds: f64,
     busy_node_seconds: f64,
+    /// Event-loop iterations executed so far.
+    events: usize,
+    /// Reusable scratch for the backfill projected-completion list —
+    /// cleared and refilled per backfill pass instead of allocating a
+    /// fresh `Vec` per event (the buffer keeps its capacity across the
+    /// whole replay).
+    frees: Vec<(f64, usize)>,
     /// Per-node RTE-daemon warmth observed by the event loop: a node is
     /// warm once any job has started or expanded onto it. Feeds the
     /// state-aware pricing queries and the warm-first expansion-target
@@ -735,11 +788,14 @@ pub fn schedule_with_pricer(
         shrinks: 0,
         reconfig_node_seconds: 0.0,
         busy_node_seconds: 0.0,
+        events: 0,
+        frees: Vec::new(),
         warm: vec![false; total_nodes],
     };
 
     let mut next_arrival = 0usize;
     loop {
+        s.events += 1;
         // Move due arrivals into the queue, then let the policy act.
         while next_arrival < order.len()
             && s.jobs[order[next_arrival]].arrival <= s.now + EPS_TIME
@@ -774,7 +830,10 @@ pub fn schedule_with_pricer(
         let t = t.max(s.now);
 
         // Integrate busy node-seconds across the interval, advance work.
-        let busy: usize = s.running.iter().map(|r| r.alloc.n_nodes()).sum();
+        // Every allocation holds whole nodes and nodes are never shared,
+        // so busy == total - idle exactly — same integer, no O(running)
+        // sum per event.
+        let busy: usize = total_nodes - s.rms.idle_count();
         s.busy_node_seconds += busy as f64 * (t - s.now);
         s.now = t;
         for r in s.running.iter_mut() {
@@ -820,6 +879,7 @@ pub fn schedule_with_pricer(
         work_node_seconds,
         idle_node_seconds: total_node_seconds - s.busy_node_seconds,
         total_node_seconds,
+        events: s.events,
         jobs: (0..jobs.len())
             .map(|j| JobOutcome {
                 start: s.starts[j],
@@ -839,11 +899,12 @@ impl Scheduler<'_> {
         }
     }
 
-    /// The cluster state *around* one job: global warmth plus the load
-    /// every node carries, with `exclude`'s own processes subtracted
-    /// (state-aware pricers layer the priced job's ranks back on top
-    /// from the resize plan).
-    fn ambient_state(&self, exclude: &Allocation) -> ClusterState {
+    /// The full cluster state: global warmth plus the load every node
+    /// carries, *nobody* subtracted. Per-job views are derived by
+    /// subtracting one allocation's slots ([`Scheduler::ambient_state`]),
+    /// which lets a stateful shrink round build this O(nodes) view once
+    /// and splice each candidate in and out in O(candidate slots).
+    fn ambient_state_all(&self) -> ClusterState {
         let n = self.rms.cluster.len();
         let mut state = ClusterState::cold(n);
         for node in 0..n {
@@ -852,6 +913,15 @@ impl Scheduler<'_> {
             }
             state.add_load(node, self.rms.cluster.cores(node) - self.rms.free_on(node));
         }
+        state
+    }
+
+    /// The cluster state *around* one job: global warmth plus the load
+    /// every node carries, with `exclude`'s own processes subtracted
+    /// (state-aware pricers layer the priced job's ranks back on top
+    /// from the resize plan).
+    fn ambient_state(&self, exclude: &Allocation) -> ClusterState {
+        let mut state = self.ambient_state_all();
         for &(node, cores) in &exclude.slots {
             state.sub_load(node, cores);
         }
@@ -861,6 +931,16 @@ impl Scheduler<'_> {
     /// Try to start `jid` at its minimum width from the idle pool.
     fn try_start(&mut self, jid: usize) -> bool {
         let spec = &self.jobs[jid];
+        // O(1) count gate: with fewer idle nodes than requested,
+        // plan_allocation fails under BOTH policies (WholeNodes needs
+        // `idle >= n`; BalancedTypes needs per-type halves summing to
+        // `n`, impossible from a smaller pool — including its
+        // degenerate whole-node fallback). Skipping the plan walk is
+        // therefore decision-identical, and it is the common case on a
+        // backlogged cluster.
+        if spec.min_nodes > self.rms.idle_count() {
+            return false;
+        }
         match self.rms.plan_allocation(spec.min_nodes, self.alloc_policy) {
             Ok(alloc) => {
                 self.rms.claim(&alloc).expect("planned allocation claims cleanly");
@@ -890,7 +970,9 @@ impl Scheduler<'_> {
     }
 
     fn idle_count(&self) -> usize {
-        self.rms.idle_nodes().len()
+        // O(1) via the maintained Rms index (the pre-refactor version
+        // materialized the full idle Vec just to take its length).
+        self.rms.idle_count()
     }
 
     /// One policy step at the current time. Called whenever the world
@@ -937,16 +1019,27 @@ impl Scheduler<'_> {
     /// nodes. Every start still allocates through the RMS, so node-type
     /// fragmentation can veto a count-feasible backfill.
     fn backfill(&mut self) {
+        // With only the reserved head queued there is nothing to
+        // backfill, and the shadow/spare computation below has no side
+        // effects — skip it entirely. This is the common case whenever
+        // the queue drains to a single blocked job.
+        if self.queue.len() < 2 {
+            return;
+        }
         let head = *self.queue.front().expect("backfill requires a blocked head");
         let head_need = self.jobs[head].min_nodes;
 
-        let mut frees: Vec<(f64, usize)> =
-            self.running.iter().map(|r| (r.projected_finish(), r.alloc.n_nodes())).collect();
-        frees.sort_by(|a, b| a.0.total_cmp(&b.0));
+        // Refill the reusable scratch buffer (stable sort, insertion
+        // order = running order — exactly the fresh-Vec semantics, so
+        // `total_cmp` ties keep resolving by running-vector position).
+        self.frees.clear();
+        self.frees
+            .extend(self.running.iter().map(|r| (r.projected_finish(), r.alloc.n_nodes())));
+        self.frees.sort_by(|a, b| a.0.total_cmp(&b.0));
         let mut avail = self.idle_count();
         let mut shadow = f64::INFINITY;
         let mut spare = 0usize;
-        for (t, n) in frees {
+        for &(t, n) in &self.frees {
             avail += n;
             if avail >= head_need {
                 shadow = t;
@@ -957,6 +1050,15 @@ impl Scheduler<'_> {
 
         let mut i = 1;
         while i < self.queue.len() {
+            // Idle nodes only ever shrink during a backfill pass (each
+            // successful start claims some); once the pool is empty no
+            // queued job can start and a failed try_start has no side
+            // effects — walking the rest of the queue would be a no-op.
+            // On a backlogged million-job trace this turns the O(queue)
+            // walk into an O(1) exit.
+            if self.rms.idle_count() == 0 {
+                break;
+            }
             let jid = self.queue[i];
             let spec = &self.jobs[jid];
             // Runtime estimate at minimum width (the scheduler's
@@ -1017,6 +1119,33 @@ impl Scheduler<'_> {
                 self.jobs[r.job].malleable && r.alloc.n_nodes() > self.jobs[r.job].min_nodes
             })
             .collect();
+        // Two O(candidates) early-outs that avoid cloning the RMS for
+        // the dry-run below — both provably reach the dry-run's own
+        // `Ok(false)` verdict:
+        //
+        // * No candidates: the scratch pool would equal the current
+        //   pool, whose plan just failed in `can_place` above.
+        // * Count-short: even with every surplus node released,
+        //   `idle + surplus < need` makes plan_allocation fail under
+        //   both policies on count alone (WholeNodes needs
+        //   `idle >= need`; BalancedTypes' per-type halves sum to
+        //   `need`, impossible from a smaller pool, fallback included).
+        //
+        // On a backlogged trace nearly every malleable pass is doomed,
+        // so this removes the dominant clone from the hot path.
+        if order.is_empty() {
+            return Ok(false);
+        }
+        let surplus_total: usize = order
+            .iter()
+            .map(|&i| {
+                let r = &self.running[i];
+                r.alloc.n_nodes() - self.jobs[r.job].min_nodes
+            })
+            .sum();
+        if self.rms.idle_count() + surplus_total < need {
+            return Ok(false);
+        }
         let mut scratch = self.rms.clone();
         for &i in &order {
             let r = &self.running[i];
@@ -1107,6 +1236,15 @@ impl Scheduler<'_> {
                 return Ok(true);
             }
             let deficit = need.saturating_sub(self.idle_count());
+            // One ambient view shared by the whole round: build the
+            // global O(nodes) state once, and splice each candidate's
+            // own load out and back in around its pricing query. The
+            // subtraction can never underflow (a node's load is the sum
+            // of its residents' cores, which includes this candidate's),
+            // so the u32 round-trip restores the state exactly and every
+            // candidate prices against precisely `ambient_state(its
+            // alloc)` — bit-identical to the per-candidate rebuild.
+            let mut state = self.ambient_state_all();
             // (charge, job, running index, post nodes) of the cheapest
             // predicted release so far.
             let mut best: Option<(f64, usize, usize, usize)> = None;
@@ -1131,11 +1269,16 @@ impl Scheduler<'_> {
                         r.alloc.slots[..post].iter().map(|&(n, _)| n).collect::<Vec<NodeId>>(),
                     )
                 };
-                let state = self.ambient_state(&self.running[i].alloc);
+                for &(node, cores) in &self.running[i].alloc.slots {
+                    state.sub_load(node, cores);
+                }
                 let secs = self
                     .pricer
                     .shrink_seconds_in_state(&state, &held, &kept)
                     .map_err(|reason| WorkloadError::Pricing { job, pre, post, reason })?;
+                for &(node, cores) in &self.running[i].alloc.slots {
+                    state.add_load(node, cores);
+                }
                 let charge = secs * pre as f64;
                 let cheaper = match best {
                     None => true,

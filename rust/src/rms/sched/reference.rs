@@ -1,0 +1,695 @@
+//! The frozen pre-refactor scheduler event loop — the differential
+//! baseline for the trace-rate refactor of `rms::sched`.
+//!
+//! [`schedule_with_pricer_reference`] reproduces the batch scheduler
+//! exactly as it stood before the indexed-free-pool / scratch-buffer /
+//! count-gate refactor, including its *cost profile*: every idle-pool
+//! query materializes a fresh `Vec<NodeId>` by scanning the free
+//! vector, every allocation plan rebuilds its per-type map from that
+//! scan, every backfill pass collects and sorts a fresh
+//! projected-completion list, every malleable pass dry-runs the full
+//! surplus release on a scratch RMS clone, and every stateful shrink
+//! round rebuilds the ambient [`ClusterState`] per candidate. Two
+//! guarantees follow:
+//!
+//! * **Bit-identity oracle** — `rust/tests/sched_conformance.rs`
+//!   asserts `schedule_with_pricer(..) ==
+//!   schedule_with_pricer_reference(..)` (exact [`SchedResult`]
+//!   equality, f64 bits included) across random traces × policies ×
+//!   pricers, so the refactored loop is proven decision- and
+//!   charge-identical to this one.
+//! * **Speedup denominator** — `rust/benches/bench_replay.rs` replays
+//!   a prefix of the same synthetic trace through both paths and
+//!   records the jobs/sec ratio in `BENCH_replay.json`.
+//!
+//! Nothing here is reachable from production code paths; the module
+//! exists for tests and benches and is deliberately exempt from future
+//! optimization passes — it must stay an honest snapshot of the
+//! pre-refactor scheduler.
+
+use super::super::workload::{validate_jobs, JobSpec, WorkloadError};
+use super::super::{AllocPolicy, Allocation, Rms, RmsError};
+use super::{ResizePricer, SchedPolicy, SchedResult};
+use super::{EPS_TIME, EPS_WORK};
+use crate::mam::model::ClusterState;
+use crate::topology::{Cluster, NodeId};
+use std::collections::{BTreeMap, VecDeque};
+
+/// One running job in the reference loop (see `Run` in the live
+/// scheduler — same fields, same float-drift semantics).
+#[derive(Clone, Debug)]
+struct RefRun {
+    job: usize,
+    alloc: Allocation,
+    remaining: f64,
+    last_update: f64,
+}
+
+impl RefRun {
+    fn progress_to(&mut self, to: f64) {
+        self.remaining -= (to - self.last_update) * self.alloc.n_nodes() as f64;
+        self.last_update = to;
+    }
+
+    fn projected_finish(&self) -> f64 {
+        self.last_update + self.remaining.max(0.0) / self.alloc.n_nodes() as f64
+    }
+}
+
+/// The pre-refactor batch scheduler state.
+struct RefScheduler<'a> {
+    jobs: &'a [JobSpec],
+    rms: Rms,
+    alloc_policy: AllocPolicy,
+    policy: SchedPolicy,
+    pricer: &'a mut dyn ResizePricer,
+    now: f64,
+    queue: VecDeque<usize>,
+    running: Vec<RefRun>,
+    starts: Vec<f64>,
+    finishes: Vec<f64>,
+    job_reconfigs: Vec<usize>,
+    expands: usize,
+    shrinks: usize,
+    reconfig_node_seconds: f64,
+    busy_node_seconds: f64,
+    events: usize,
+    warm: Vec<bool>,
+}
+
+/// The pre-refactor [`super::schedule_with_pricer`]: identical
+/// signature, identical `SchedResult` bits, pre-refactor data
+/// structures and cost profile. See the module docs for what this
+/// baseline is for.
+pub fn schedule_with_pricer_reference(
+    cluster: &Cluster,
+    alloc_policy: AllocPolicy,
+    policy: SchedPolicy,
+    pricer: &mut dyn ResizePricer,
+    jobs: &[JobSpec],
+) -> Result<SchedResult, WorkloadError> {
+    let total_nodes = cluster.len();
+    validate_jobs(total_nodes, jobs)?;
+    if jobs.is_empty() {
+        return Ok(SchedResult::default());
+    }
+
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by(|&a, &b| jobs[a].arrival.total_cmp(&jobs[b].arrival).then(a.cmp(&b)));
+
+    let mut s = RefScheduler {
+        jobs,
+        rms: Rms::new(cluster.clone()),
+        alloc_policy,
+        policy,
+        pricer,
+        now: 0.0,
+        queue: VecDeque::new(),
+        running: Vec::new(),
+        starts: vec![0.0; jobs.len()],
+        finishes: vec![0.0; jobs.len()],
+        job_reconfigs: vec![0; jobs.len()],
+        expands: 0,
+        shrinks: 0,
+        reconfig_node_seconds: 0.0,
+        busy_node_seconds: 0.0,
+        events: 0,
+        warm: vec![false; total_nodes],
+    };
+
+    let mut next_arrival = 0usize;
+    loop {
+        s.events += 1;
+        // Move due arrivals into the queue, then let the policy act.
+        while next_arrival < order.len()
+            && s.jobs[order[next_arrival]].arrival <= s.now + EPS_TIME
+        {
+            s.queue.push_back(order[next_arrival]);
+            next_arrival += 1;
+        }
+        s.scheduling_pass()?;
+
+        // Next event: earliest projected finish or next arrival.
+        let next_finish =
+            s.running.iter().map(RefRun::projected_finish).fold(f64::INFINITY, f64::min);
+        let arrival = if next_arrival < order.len() {
+            s.jobs[order[next_arrival]].arrival
+        } else {
+            f64::INFINITY
+        };
+        let t = next_finish.min(arrival);
+        if !t.is_finite() {
+            if let Some(&head) = s.queue.front() {
+                return Err(WorkloadError::Unschedulable {
+                    job: head,
+                    min_nodes: s.jobs[head].min_nodes,
+                    total_nodes,
+                });
+            }
+            break;
+        }
+        let t = t.max(s.now);
+
+        // Integrate busy node-seconds across the interval, advance work.
+        let busy: usize = s.running.iter().map(|r| r.alloc.n_nodes()).sum();
+        s.busy_node_seconds += busy as f64 * (t - s.now);
+        s.now = t;
+        for r in s.running.iter_mut() {
+            r.progress_to(t);
+        }
+
+        // Complete jobs that ran dry, releasing their nodes to the pool.
+        let mut i = 0;
+        while i < s.running.len() {
+            if s.running[i].remaining <= EPS_WORK {
+                let r = s.running.remove(i);
+                s.rms.release(&r.alloc);
+                s.finishes[r.job] = s.now;
+            } else {
+                i += 1;
+            }
+        }
+
+        if s.running.is_empty() && s.queue.is_empty() && next_arrival >= order.len() {
+            break;
+        }
+    }
+
+    let makespan = s.finishes.iter().cloned().fold(0.0, f64::max);
+    let waits: Vec<f64> = (0..jobs.len()).map(|j| s.starts[j] - jobs[j].arrival).collect();
+    let n = jobs.len() as f64;
+    let work_node_seconds: f64 = jobs.iter().map(|j| j.work).sum();
+    let total_node_seconds = total_nodes as f64 * makespan;
+    Ok(SchedResult {
+        makespan,
+        mean_wait: waits.iter().sum::<f64>() / n,
+        max_wait: waits.iter().cloned().fold(0.0, f64::max),
+        mean_turnaround: s
+            .finishes
+            .iter()
+            .zip(jobs)
+            .map(|(f, j)| f - j.arrival)
+            .sum::<f64>()
+            / n,
+        expands: s.expands,
+        shrinks: s.shrinks,
+        reconfig_node_seconds: s.reconfig_node_seconds,
+        work_node_seconds,
+        idle_node_seconds: total_node_seconds - s.busy_node_seconds,
+        total_node_seconds,
+        events: s.events,
+        jobs: (0..jobs.len())
+            .map(|j| super::JobOutcome {
+                start: s.starts[j],
+                finish: s.finishes[j],
+                wait: waits[j],
+                reconfigs: s.job_reconfigs[j],
+            })
+            .collect(),
+    })
+}
+
+impl RefScheduler<'_> {
+    /// Mark every node of `alloc` daemon-warm (a job launched there).
+    fn mark_warm(&mut self, alloc: &Allocation) {
+        for &(node, _) in &alloc.slots {
+            self.warm[node] = true;
+        }
+    }
+
+    /// Pre-refactor idle query: scan the free vector and materialize.
+    fn idle_nodes_scan(&self) -> Vec<NodeId> {
+        (0..self.rms.cluster.len())
+            .filter(|&n| self.rms.free_on(n) == self.rms.cluster.cores(n))
+            .collect()
+    }
+
+    /// Pre-refactor `Rms::plan_allocation`: every call re-scans the
+    /// free vector and (under `BalancedTypes`) rebuilds the per-type
+    /// map from scratch. Decision-identical to the indexed plan.
+    fn plan_scan(&self, n_nodes: usize, policy: AllocPolicy) -> Result<Allocation, RmsError> {
+        match policy {
+            AllocPolicy::WholeNodes => {
+                let idle = self.idle_nodes_scan();
+                if idle.len() < n_nodes {
+                    return Err(RmsError::Capacity { requested: n_nodes, available: idle.len() });
+                }
+                Ok(Allocation::new(
+                    idle.into_iter()
+                        .take(n_nodes)
+                        .map(|n| (n, self.rms.cluster.cores(n)))
+                        .collect(),
+                ))
+            }
+            AllocPolicy::BalancedTypes => {
+                let mut by_type: BTreeMap<u32, Vec<NodeId>> = BTreeMap::new();
+                for n in self.idle_nodes_scan() {
+                    by_type.entry(self.rms.cluster.cores(n)).or_default().push(n);
+                }
+                let mut types: Vec<(u32, Vec<NodeId>)> = by_type.into_iter().collect();
+                if types.len() < 2 {
+                    // Degenerate: fall back to whole nodes.
+                    return self.plan_scan(n_nodes, AllocPolicy::WholeNodes);
+                }
+                let (small_cores, small) = types.remove(0);
+                let (big_cores, big) = types.remove(0);
+                let half_small = n_nodes - n_nodes / 2;
+                let half_big = n_nodes / 2;
+                if small.len() < half_small || big.len() < half_big {
+                    return Err(RmsError::Capacity {
+                        requested: n_nodes,
+                        available: small.len() + big.len(),
+                    });
+                }
+                let mut slots = Vec::new();
+                for &n in small.iter().take(half_small) {
+                    slots.push((n, small_cores));
+                }
+                for &n in big.iter().take(half_big) {
+                    slots.push((n, big_cores));
+                }
+                Ok(Allocation::new(slots))
+            }
+        }
+    }
+
+    /// Pre-refactor `Rms::grow`: re-derives the per-type pools from a
+    /// fresh idle scan. Decision-identical to the indexed grow.
+    fn grow_scan(&mut self, current: &Allocation, n_nodes: usize) -> Result<Allocation, RmsError> {
+        assert!(n_nodes >= current.n_nodes());
+        let extra = match self.alloc_policy {
+            AllocPolicy::WholeNodes => {
+                self.plan_scan(n_nodes - current.n_nodes(), AllocPolicy::WholeNodes)?
+            }
+            AllocPolicy::BalancedTypes => {
+                let mut by_type: BTreeMap<u32, Vec<NodeId>> = BTreeMap::new();
+                for n in self.idle_nodes_scan() {
+                    by_type.entry(self.rms.cluster.cores(n)).or_default().push(n);
+                }
+                let mut types: Vec<(u32, Vec<NodeId>)> = by_type.into_iter().collect();
+                if types.len() < 2 {
+                    self.plan_scan(n_nodes - current.n_nodes(), AllocPolicy::WholeNodes)?
+                } else {
+                    let (small_cores, small) = types.remove(0);
+                    let (big_cores, big) = types.remove(0);
+                    let have_small =
+                        current.slots.iter().filter(|&&(_, c)| c == small_cores).count();
+                    let have_big = current.n_nodes() - have_small;
+                    let want_small = n_nodes - n_nodes / 2;
+                    let want_big = n_nodes / 2;
+                    let deficit = n_nodes - current.n_nodes();
+                    let mut need_small = want_small.saturating_sub(have_small);
+                    let mut need_big = want_big.saturating_sub(have_big);
+                    if need_small + need_big > deficit {
+                        need_small = need_small.min(deficit);
+                        need_big = deficit - need_small;
+                    }
+                    need_small = need_small.min(small.len());
+                    need_big = need_big.min(big.len());
+                    let mut remainder = deficit - (need_small + need_big);
+                    let mut slots = Vec::new();
+                    for &n in small.iter().take(need_small) {
+                        slots.push((n, small_cores));
+                    }
+                    for &n in big.iter().take(need_big) {
+                        slots.push((n, big_cores));
+                    }
+                    let leftovers = small
+                        .iter()
+                        .skip(need_small)
+                        .map(|&n| (n, small_cores))
+                        .chain(big.iter().skip(need_big).map(|&n| (n, big_cores)));
+                    for slot in leftovers {
+                        if remainder == 0 {
+                            break;
+                        }
+                        slots.push(slot);
+                        remainder -= 1;
+                    }
+                    if remainder > 0 {
+                        return Err(RmsError::Capacity {
+                            requested: n_nodes,
+                            available: current.n_nodes() + small.len() + big.len(),
+                        });
+                    }
+                    Allocation::new(slots)
+                }
+            }
+        };
+        self.rms.claim(&extra)?;
+        let mut slots = current.slots.clone();
+        slots.extend(extra.slots);
+        Ok(Allocation::new(slots))
+    }
+
+    /// The cluster state around one job, rebuilt from scratch (the
+    /// pre-refactor per-candidate cost profile).
+    fn ambient_state(&self, exclude: &Allocation) -> ClusterState {
+        let n = self.rms.cluster.len();
+        let mut state = ClusterState::cold(n);
+        for node in 0..n {
+            if self.warm[node] {
+                state.set_warm(node);
+            }
+            state.add_load(node, self.rms.cluster.cores(node) - self.rms.free_on(node));
+        }
+        for &(node, cores) in &exclude.slots {
+            state.sub_load(node, cores);
+        }
+        state
+    }
+
+    /// Try to start `jid` at its minimum width (no count pre-gate: the
+    /// plan is attempted — and its scan paid — unconditionally).
+    fn try_start(&mut self, jid: usize) -> bool {
+        let spec = &self.jobs[jid];
+        match self.plan_scan(spec.min_nodes, self.alloc_policy) {
+            Ok(alloc) => {
+                self.rms.claim(&alloc).expect("planned allocation claims cleanly");
+                self.mark_warm(&alloc);
+                self.starts[jid] = self.now;
+                self.running.push(RefRun {
+                    job: jid,
+                    alloc,
+                    remaining: spec.work,
+                    last_update: self.now,
+                });
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Admit queue heads in order while they fit (the FCFS core).
+    fn admit_fifo(&mut self) {
+        while let Some(&head) = self.queue.front() {
+            if self.try_start(head) {
+                self.queue.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Pre-refactor idle count: materialize the idle list, take its
+    /// length (the allocation the live scheduler's O(1) query removes).
+    fn idle_count(&self) -> usize {
+        self.idle_nodes_scan().len()
+    }
+
+    /// One policy step at the current time.
+    fn scheduling_pass(&mut self) -> Result<(), WorkloadError> {
+        match self.policy {
+            SchedPolicy::Fcfs => self.admit_fifo(),
+            SchedPolicy::EasyBackfill => {
+                self.admit_fifo();
+                if !self.queue.is_empty() {
+                    self.backfill();
+                }
+            }
+            SchedPolicy::Malleable => {
+                self.admit_fifo();
+                while let Some(&head) = self.queue.front() {
+                    if !self.shrink_to_fit(self.jobs[head].min_nodes)? {
+                        break;
+                    }
+                    if self.try_start(head) {
+                        self.queue.pop_front();
+                        self.admit_fifo();
+                    } else {
+                        break;
+                    }
+                }
+                if !self.queue.is_empty() {
+                    self.backfill();
+                }
+                if self.queue.is_empty() {
+                    self.expand_into_idle()?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// EASY backfill, pre-refactor shape: unconditionally collect and
+    /// sort the projected completions and walk the whole queue even
+    /// when nothing can start.
+    fn backfill(&mut self) {
+        let head = *self.queue.front().expect("backfill requires a blocked head");
+        let head_need = self.jobs[head].min_nodes;
+
+        let mut frees: Vec<(f64, usize)> =
+            self.running.iter().map(|r| (r.projected_finish(), r.alloc.n_nodes())).collect();
+        frees.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut avail = self.idle_count();
+        let mut shadow = f64::INFINITY;
+        let mut spare = 0usize;
+        for (t, n) in frees {
+            avail += n;
+            if avail >= head_need {
+                shadow = t;
+                spare = avail - head_need;
+                break;
+            }
+        }
+
+        let mut i = 1;
+        while i < self.queue.len() {
+            let jid = self.queue[i];
+            let spec = &self.jobs[jid];
+            let est = spec.work / spec.min_nodes as f64;
+            let ends_before_shadow = self.now + est <= shadow + EPS_TIME;
+            let fits_spare = spec.min_nodes <= spare;
+            if (ends_before_shadow || fits_spare) && self.try_start(jid) {
+                if !ends_before_shadow {
+                    spare -= spec.min_nodes;
+                }
+                let _ = self.queue.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Whether a `need`-node allocation can be built right now.
+    fn can_place(&self, need: usize) -> bool {
+        self.plan_scan(need, self.alloc_policy).is_ok()
+    }
+
+    /// Pre-refactor shrink-to-fit: always clones the RMS for the
+    /// feasibility dry-run, even when there are no candidates or the
+    /// releasable surplus is count-short.
+    fn shrink_to_fit(&mut self, need: usize) -> Result<bool, WorkloadError> {
+        if self.can_place(need) {
+            return Ok(true);
+        }
+        let mut order: Vec<usize> = (0..self.running.len())
+            .filter(|&i| {
+                let r = &self.running[i];
+                self.jobs[r.job].malleable && r.alloc.n_nodes() > self.jobs[r.job].min_nodes
+            })
+            .collect();
+        let mut scratch = self.rms.clone();
+        for &i in &order {
+            let r = &self.running[i];
+            scratch.shrink(&r.alloc, self.jobs[r.job].min_nodes);
+        }
+        if scratch.plan_allocation(need, self.alloc_policy).is_err() {
+            return Ok(false); // doomed: bail before anyone pays
+        }
+        if self.pricer.is_stateful() {
+            return self.shrink_to_fit_stateful(need, &order);
+        }
+        order.sort_by_key(|&i| {
+            let r = &self.running[i];
+            (
+                std::cmp::Reverse(r.alloc.n_nodes() - self.jobs[r.job].min_nodes),
+                r.job,
+            )
+        });
+        loop {
+            let mut progressed = false;
+            for &i in &order {
+                if self.can_place(need) {
+                    return Ok(true);
+                }
+                let idle = self.idle_count();
+                let (job, pre) = {
+                    let r = &self.running[i];
+                    (r.job, r.alloc.n_nodes())
+                };
+                let surplus = pre - self.jobs[job].min_nodes;
+                if surplus == 0 {
+                    continue;
+                }
+                let deficit = need.saturating_sub(idle);
+                let give = if deficit == 0 { surplus } else { surplus.min(deficit) };
+                let post = pre - give;
+                let secs = self
+                    .pricer
+                    .shrink_seconds(pre, post)
+                    .map_err(|reason| WorkloadError::Pricing { job, pre, post, reason })?;
+                let r = &mut self.running[i];
+                r.progress_to(self.now);
+                r.alloc = self.rms.shrink(&r.alloc, post);
+                let charge = secs * pre as f64;
+                r.remaining += charge;
+                self.reconfig_node_seconds += charge;
+                self.shrinks += 1;
+                self.job_reconfigs[job] += 1;
+                progressed = true;
+            }
+            if self.can_place(need) {
+                return Ok(true);
+            }
+            if !progressed {
+                return Ok(false);
+            }
+        }
+    }
+
+    /// Pre-refactor stateful victim selection: the ambient cluster
+    /// state is rebuilt from scratch for every candidate in every
+    /// round.
+    fn shrink_to_fit_stateful(
+        &mut self,
+        need: usize,
+        candidates: &[usize],
+    ) -> Result<bool, WorkloadError> {
+        loop {
+            if self.can_place(need) {
+                return Ok(true);
+            }
+            let deficit = need.saturating_sub(self.idle_count());
+            let mut best: Option<(f64, usize, usize, usize)> = None;
+            for &i in candidates {
+                let (job, pre) = {
+                    let r = &self.running[i];
+                    (r.job, r.alloc.n_nodes())
+                };
+                let surplus = pre - self.jobs[job].min_nodes;
+                if surplus == 0 {
+                    continue;
+                }
+                let give = if deficit == 0 { surplus } else { surplus.min(deficit) };
+                let post = pre - give;
+                let (held, kept) = {
+                    let r = &self.running[i];
+                    (
+                        r.alloc.nodes(),
+                        r.alloc.slots[..post].iter().map(|&(n, _)| n).collect::<Vec<NodeId>>(),
+                    )
+                };
+                let state = self.ambient_state(&self.running[i].alloc);
+                let secs = self
+                    .pricer
+                    .shrink_seconds_in_state(&state, &held, &kept)
+                    .map_err(|reason| WorkloadError::Pricing { job, pre, post, reason })?;
+                let charge = secs * pre as f64;
+                let cheaper = match best {
+                    None => true,
+                    Some((c, j, ..)) => charge.total_cmp(&c).then(job.cmp(&j)).is_lt(),
+                };
+                if cheaper {
+                    best = Some((charge, job, i, post));
+                }
+            }
+            let Some((charge, job, i, post)) = best else {
+                return Ok(false); // no surplus left anywhere (defensive)
+            };
+            let r = &mut self.running[i];
+            r.progress_to(self.now);
+            r.alloc = self.rms.shrink(&r.alloc, post);
+            r.remaining += charge;
+            self.reconfig_node_seconds += charge;
+            self.shrinks += 1;
+            self.job_reconfigs[job] += 1;
+        }
+    }
+
+    /// Grow preferring warm idle nodes (stateful pricers), pre-refactor
+    /// idle materialization.
+    fn grow_warm_first(
+        &mut self,
+        current: &Allocation,
+        want: usize,
+    ) -> Result<Allocation, RmsError> {
+        if self.alloc_policy != AllocPolicy::WholeNodes {
+            return self.grow_scan(current, want);
+        }
+        let mut idle = self.idle_nodes_scan();
+        let extra_n = want - current.n_nodes();
+        if idle.len() < extra_n {
+            return Err(RmsError::Capacity { requested: extra_n, available: idle.len() });
+        }
+        idle.sort_by_key(|&n| (!self.warm[n], n)); // warm daemons first
+        let extra = Allocation::new(
+            idle.into_iter().take(extra_n).map(|n| (n, self.rms.cluster.cores(n))).collect(),
+        );
+        self.rms.claim(&extra)?;
+        let mut slots = current.slots.clone();
+        slots.extend(extra.slots);
+        Ok(Allocation::new(slots))
+    }
+
+    /// Expand malleable running jobs into idle nodes (start order).
+    fn expand_into_idle(&mut self) -> Result<(), WorkloadError> {
+        let mut order: Vec<usize> = (0..self.running.len()).collect();
+        order.sort_by(|&x, &y| {
+            let (jx, jy) = (self.running[x].job, self.running[y].job);
+            self.starts[jx].total_cmp(&self.starts[jy]).then(jx.cmp(&jy))
+        });
+        let stateful = self.pricer.is_stateful();
+        for i in order {
+            let idle = self.idle_count();
+            if idle == 0 {
+                break;
+            }
+            let (job, cur) = {
+                let r = &self.running[i];
+                (r.job, r.alloc.n_nodes())
+            };
+            if !self.jobs[job].malleable {
+                continue;
+            }
+            let want = self.jobs[job].max_nodes.min(cur + idle);
+            if want <= cur {
+                continue;
+            }
+            let grown = if stateful {
+                let held = self.running[i].alloc.clone();
+                self.grow_warm_first(&held, want)
+            } else {
+                let held = self.running[i].alloc.clone();
+                self.grow_scan(&held, want)
+            };
+            match grown {
+                Ok(alloc) => {
+                    let post = alloc.n_nodes();
+                    let secs = if stateful {
+                        let held: Vec<NodeId> =
+                            alloc.slots[..cur].iter().map(|&(n, _)| n).collect();
+                        let state = self.ambient_state(&alloc);
+                        self.pricer.expand_seconds_in_state(&state, &held, &alloc.nodes())
+                    } else {
+                        self.pricer.expand_seconds(cur, post)
+                    }
+                    .map_err(|reason| WorkloadError::Pricing { job, pre: cur, post, reason })?;
+                    self.mark_warm(&alloc);
+                    let r = &mut self.running[i];
+                    r.progress_to(self.now);
+                    r.alloc = alloc;
+                    let charge = secs * post as f64;
+                    r.remaining += charge;
+                    self.reconfig_node_seconds += charge;
+                    self.expands += 1;
+                    self.job_reconfigs[job] += 1;
+                }
+                Err(_) => {
+                    // Type-imbalanced remainder: skip, nodes stay idle.
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -19,7 +19,141 @@
 //! index and the replay seed; re-run a single case with
 //! `PARASPAWN_PROP_SEED=<seed> PARASPAWN_PROP_CASES=1`.
 
+use crate::rms::workload::JobSpec;
 use crate::util::rng::Rng;
+
+/// Knobs of the seeded synthetic SWF generator [`synth_trace`]: arrival
+/// rate (via offered `load` or an explicit mean interarrival), width
+/// mix, runtime range and the malleability overlay. The defaults shape
+/// a *sustained-backlog* trace — offered load slightly above cluster
+/// capacity, a realistic narrow-heavy width mix — because that is the
+/// regime where scheduler data structures are actually stressed (deep
+/// queues, busy pools) and where SWF archives of 10⁵–10⁶ jobs live.
+///
+/// Generation is bit-deterministic per (`seed`, knobs): one
+/// [`Rng`] stream, a fixed number of draws per job.
+#[derive(Clone, Debug)]
+pub struct SynthTrace {
+    /// Number of jobs to generate.
+    pub jobs: usize,
+    /// PRNG seed; same seed + knobs → bit-identical trace.
+    pub seed: u64,
+    /// Cluster size the trace targets (widths are capped to it).
+    pub total_nodes: usize,
+    /// Offered load as a multiple of cluster capacity (1.0 =
+    /// saturation). Used to derive the mean interarrival gap when
+    /// [`SynthTrace::mean_interarrival`] is `None`.
+    pub load: f64,
+    /// Explicit mean interarrival gap in seconds; `None` derives it
+    /// from [`SynthTrace::load`] and the expected per-job work.
+    pub mean_interarrival: Option<f64>,
+    /// Shortest job runtime (seconds, at minimum width).
+    pub min_runtime: f64,
+    /// Longest job runtime (seconds, at minimum width).
+    pub max_runtime: f64,
+    /// Fraction of jobs marked malleable (cf. `rms::sched::mark_malleable`).
+    pub malleable_frac: f64,
+    /// Malleable expansion headroom: `max_nodes = growth × min_nodes`,
+    /// capped at `total_nodes`.
+    pub growth: usize,
+}
+
+impl SynthTrace {
+    /// A sustained-backlog trace of `jobs` jobs for a `total_nodes`
+    /// cluster: offered load 1.1× capacity, runtimes 60–600 s, half the
+    /// jobs 1–2 nodes wide (the SWF-archive shape), 30% malleable with
+    /// 4× headroom.
+    pub fn new(jobs: usize, seed: u64, total_nodes: usize) -> Self {
+        SynthTrace {
+            jobs,
+            seed,
+            total_nodes,
+            load: 1.1,
+            mean_interarrival: None,
+            min_runtime: 60.0,
+            max_runtime: 600.0,
+            malleable_frac: 0.3,
+            growth: 4,
+        }
+    }
+
+    /// Width-class bounds: `(narrow, medium, wide)` upper bounds, each
+    /// at least 1 node.
+    fn width_caps(&self) -> (usize, usize, usize) {
+        let wide = (self.total_nodes / 4).max(1);
+        let medium = (self.total_nodes / 16).max(1);
+        (2usize.min(self.total_nodes.max(1)), medium, wide)
+    }
+
+    /// Expected nodes per job under the width mix of
+    /// [`SynthTrace::generate`] (half narrow, a quarter medium, a
+    /// quarter wide; each class uniform on `1..=cap`).
+    fn expected_width(&self) -> f64 {
+        let (narrow, medium, wide) = self.width_caps();
+        let mean = |cap: usize| (1.0 + cap as f64) / 2.0;
+        0.5 * mean(narrow) + 0.25 * mean(medium) + 0.25 * mean(wide)
+    }
+
+    /// The mean interarrival gap actually used: the explicit override,
+    /// or `expected work per job / (total_nodes × load)` so the offered
+    /// load lands on the configured multiple of cluster capacity.
+    pub fn gap(&self) -> f64 {
+        if let Some(g) = self.mean_interarrival {
+            return g;
+        }
+        let expected_runtime = (self.min_runtime + self.max_runtime) / 2.0;
+        let expected_work = self.expected_width() * expected_runtime;
+        expected_work / (self.total_nodes as f64 * self.load.max(1e-6))
+    }
+
+    /// Generate the trace: arrivals are a cumulative sum of uniform
+    /// gaps (mean [`SynthTrace::gap`]), widths draw a class then a
+    /// uniform width within it, runtimes are uniform in
+    /// `[min_runtime, max_runtime)`, and `malleable_frac` of the jobs
+    /// get `growth ×` expansion headroom. Jobs come out
+    /// arrival-sorted, ready for `rms::sched::schedule_with_pricer`.
+    pub fn generate(&self) -> Vec<JobSpec> {
+        let (narrow, medium, wide) = self.width_caps();
+        let gap = self.gap();
+        let mut rng = Rng::new(self.seed);
+        let mut arrival = 0.0f64;
+        let mut out = Vec::with_capacity(self.jobs);
+        for _ in 0..self.jobs {
+            // Fixed draw order per job keeps the stream stable:
+            // gap, class, width, runtime, malleable.
+            arrival += 2.0 * gap * rng.f64();
+            let cap = match rng.below(4) {
+                0 | 1 => narrow,
+                2 => medium,
+                _ => wide,
+            };
+            let width = 1 + rng.below(cap as u64) as usize;
+            let runtime = self.min_runtime + (self.max_runtime - self.min_runtime) * rng.f64();
+            let malleable = rng.f64() < self.malleable_frac;
+            let max_nodes = if malleable {
+                (width * self.growth.max(1)).min(self.total_nodes).max(width)
+            } else {
+                width
+            };
+            out.push(JobSpec {
+                arrival,
+                work: runtime * width as f64,
+                min_nodes: width,
+                max_nodes,
+                malleable,
+            });
+        }
+        out
+    }
+}
+
+/// [`SynthTrace::generate`] with the default sustained-backlog knobs —
+/// the seeded synthetic SWF generator behind the million-job replay
+/// bench (`rust/benches/bench_replay.rs`), the conformance property
+/// suite and the `paraspawn workload --synth N` escape hatch.
+pub fn synth_trace(jobs: usize, seed: u64, total_nodes: usize) -> Vec<JobSpec> {
+    SynthTrace::new(jobs, seed, total_nodes).generate()
+}
 
 /// Case-local random generator handed to properties.
 pub struct Gen {
@@ -160,6 +294,50 @@ mod tests {
     #[should_panic(expected = "panicked")]
     fn panicking_property_is_caught() {
         check("panics", 4, |_g| -> Result<(), String> { panic!("boom") });
+    }
+
+    #[test]
+    fn synth_trace_is_deterministic_sorted_and_bounded() {
+        let spec = SynthTrace::new(500, 42, 64);
+        let a = spec.generate();
+        let b = spec.generate();
+        assert_eq!(a.len(), 500);
+        // JobSpec has no PartialEq; compare field by field (floats must
+        // be bit-identical, so exact == is the right comparison here).
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x.arrival == y.arrival && x.work == y.work);
+            assert_eq!((x.min_nodes, x.max_nodes, x.malleable), (y.min_nodes, y.max_nodes, y.malleable));
+        }
+        let mut prev = 0.0;
+        let mut any_malleable = false;
+        for j in &a {
+            assert!(j.arrival >= prev, "arrivals must be sorted");
+            prev = j.arrival;
+            assert!(j.min_nodes >= 1 && j.min_nodes <= 64 / 4);
+            assert!(j.max_nodes >= j.min_nodes && j.max_nodes <= 64);
+            assert!(j.work > 0.0);
+            if j.malleable {
+                any_malleable = true;
+                assert!(j.max_nodes >= j.min_nodes);
+            } else {
+                assert_eq!(j.max_nodes, j.min_nodes);
+            }
+        }
+        assert!(any_malleable, "30% malleable draw should hit in 500 jobs");
+        // A different seed must change the trace.
+        let c = synth_trace(500, 43, 64);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.arrival != y.arrival || x.work != y.work));
+    }
+
+    #[test]
+    fn synth_trace_offered_load_tracks_knob() {
+        let spec = SynthTrace::new(4000, 7, 32);
+        let jobs = spec.generate();
+        let span = jobs.last().expect("non-empty trace").arrival;
+        let offered: f64 = jobs.iter().map(|j| j.work).sum::<f64>() / (span * 32.0);
+        // Offered load should land near the 1.1 knob (uniform gaps and
+        // widths average out over 4000 jobs).
+        assert!((offered - 1.1).abs() < 0.15, "offered load {offered}");
     }
 
     #[test]

@@ -1,0 +1,309 @@
+//! Differential conformance suite for the trace-rate scheduler core.
+//!
+//! PR 7 refactored the `rms::sched` event loop for million-job SWF
+//! replay: an indexed free pool on `Rms` (`idle_count` in O(1),
+//! id-ordered per-type free lists), count-gated placement, reusable
+//! backfill scratch, doomed-shrink early-outs and batched stateful
+//! pricing with allocation-free memo probes. Every one of those is a
+//! pure *mechanical* speedup — the scheduling decisions, float
+//! arithmetic order and resulting [`SchedResult`]s must be
+//! **bit-identical** to the pre-refactor loop.
+//!
+//! The pre-refactor loop is kept compiled as
+//! [`paraspawn::rms::sched::reference`] exactly so this suite can prove
+//! that claim:
+//!
+//! 1. **Property differential** — random small traces × all three
+//!    policies × the six CLI pricing arms × homogeneous (WholeNodes)
+//!    and heterogeneous (BalancedTypes) clusters, asserting
+//!    `schedule_with_pricer == schedule_with_pricer_reference` via
+//!    [`SchedResult`]'s exact `PartialEq` (floats compared bit-for-bit,
+//!    including the per-job outcomes and the event count).
+//! 2. **Trace differential** — the bundled 2094-job `replay2k.swf`
+//!    replayed through both loops: the full trace under scalar TS for
+//!    every policy, and a prefix (full with `PARASPAWN_CONF_FULL=1`;
+//!    tests run unoptimized and the reference loop is O(running) per
+//!    event) under analytic TS-exact and stateful TS-state.
+//! 3. **Golden pin** — the six CLI pricing arms (TS, SS, TS-exact,
+//!    SS-exact, TS-state, SS-state) replay `replay2k.swf` under the
+//!    malleable policy and their exact summary statistics are pinned
+//!    against `rust/tests/golden/replay2k_arms.txt`. Bless-on-missing:
+//!    if the fixture is absent the test writes it and passes — commit
+//!    the blessed file to turn the pin on. A repeat-run determinism
+//!    assert guards the blessing itself.
+
+use paraspawn::config::CostModel;
+use paraspawn::rms::sched::reference::schedule_with_pricer_reference;
+use paraspawn::rms::sched::{
+    self, schedule_with_pricer, AnalyticPricer, ResizePricer, SchedPolicy, SchedResult,
+    StatefulPricer,
+};
+use paraspawn::rms::workload::{JobSpec, ReconfigCostModel, WorkloadError};
+use paraspawn::rms::AllocPolicy;
+use paraspawn::testing::{check, synth_trace, Gen, SynthTrace};
+use paraspawn::topology::Cluster;
+use std::path::PathBuf;
+
+/// The pricing arms of `paraspawn workload --pricing all`.
+const ARMS: [&str; 6] = ["TS", "SS", "TS-exact", "SS-exact", "TS-state", "SS-state"];
+
+/// A fresh pricer for an arm label. Fresh per run on purpose: the
+/// analytic/stateful memo caches carry state, and the differential must
+/// hand both loops a pricer in the same (empty) starting state.
+fn make_pricer(label: &str, cluster: &Cluster) -> Box<dyn ResizePricer> {
+    match label {
+        "TS" => Box::new(ReconfigCostModel::ts(1.0)),
+        "SS" => Box::new(ReconfigCostModel::ss(1.0)),
+        "TS-exact" => Box::new(AnalyticPricer::ts(cluster.clone(), CostModel::mn5())),
+        "SS-exact" => Box::new(AnalyticPricer::ss(cluster.clone(), CostModel::mn5())),
+        "TS-state" => Box::new(StatefulPricer::ts(cluster.clone(), CostModel::mn5())),
+        "SS-state" => Box::new(StatefulPricer::ss(cluster.clone(), CostModel::mn5())),
+        other => panic!("unknown pricing arm {other}"),
+    }
+}
+
+/// Run both loops on the same inputs with fresh pricers and demand
+/// exact equality — of the error too, when the trace is unschedulable.
+fn assert_conforms(
+    cluster: &Cluster,
+    alloc: AllocPolicy,
+    policy: SchedPolicy,
+    arm: &str,
+    jobs: &[JobSpec],
+    ctx: &str,
+) -> Result<SchedResult, WorkloadError> {
+    let mut fresh = make_pricer(arm, cluster);
+    let refactored = schedule_with_pricer(cluster, alloc, policy, fresh.as_mut(), jobs);
+    let mut fresh = make_pricer(arm, cluster);
+    let reference = schedule_with_pricer_reference(cluster, alloc, policy, fresh.as_mut(), jobs);
+    assert_eq!(refactored, reference, "refactored loop diverged from reference: {ctx}");
+    refactored
+}
+
+/// Small random trace: bursty arrivals, mixed widths, ~half malleable.
+/// Kept adversarial on purpose — zero gaps (tie-breaks), widths up to
+/// the whole cluster (head blocking, backfill), big growth headroom
+/// (expansion/shrink churn).
+fn random_jobs(g: &mut Gen, total_nodes: usize) -> Vec<JobSpec> {
+    let n = g.usize_in(1, 33);
+    let mut arrival = 0.0;
+    (0..n)
+        .map(|_| {
+            if g.bool() {
+                arrival += g.f64_in(0.0, 400.0);
+            }
+            let min_nodes = g.usize_in(1, total_nodes + 1);
+            let malleable = g.bool();
+            let max_nodes = if malleable {
+                (min_nodes * g.usize_in(1, 5)).min(total_nodes).max(min_nodes)
+            } else {
+                min_nodes
+            };
+            JobSpec { arrival, work: g.f64_in(1.0, 8000.0), min_nodes, max_nodes, malleable }
+        })
+        .collect()
+}
+
+#[test]
+fn random_traces_conform_on_whole_nodes() {
+    let cluster = Cluster::mini(8, 4);
+    check("sched conformance (mini/WholeNodes)", 24, |g| {
+        let jobs = random_jobs(g, cluster.len());
+        for policy in SchedPolicy::ALL {
+            for arm in ARMS {
+                let _ = assert_conforms(
+                    &cluster,
+                    AllocPolicy::WholeNodes,
+                    policy,
+                    arm,
+                    &jobs,
+                    &format!("mini {policy:?} {arm} ({} jobs)", jobs.len()),
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn random_traces_conform_on_balanced_types() {
+    // nasp: 8x20 + 8x32 cores — exercises the per-type free lists, the
+    // two-class balanced planner and its degenerate one-class fallback.
+    let cluster = Cluster::nasp();
+    check("sched conformance (nasp/BalancedTypes)", 16, |g| {
+        let jobs = random_jobs(g, cluster.len());
+        for policy in SchedPolicy::ALL {
+            for arm in ARMS {
+                let _ = assert_conforms(
+                    &cluster,
+                    AllocPolicy::BalancedTypes,
+                    policy,
+                    arm,
+                    &jobs,
+                    &format!("nasp {policy:?} {arm} ({} jobs)", jobs.len()),
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn synth_traces_conform_under_sustained_backlog() {
+    // The bench generator's regime: deep queues, busy pool, heavy
+    // backfill — the exact paths the refactor rewired.
+    let cluster = Cluster::mini(32, 8);
+    for seed in [1u64, 2, 3] {
+        let jobs = synth_trace(400, seed, cluster.len());
+        for policy in SchedPolicy::ALL {
+            let r = assert_conforms(
+                &cluster,
+                AllocPolicy::WholeNodes,
+                policy,
+                "TS",
+                &jobs,
+                &format!("synth seed {seed} {policy:?}"),
+            )
+            .expect("synth trace schedules");
+            assert!(r.events >= jobs.len(), "event count covers every arrival");
+        }
+    }
+    // One stateful pass through the same regime (pricier, so smaller).
+    let mut spec = SynthTrace::new(150, 9, cluster.len());
+    spec.malleable_frac = 0.5;
+    let jobs = spec.generate();
+    let _ = assert_conforms(
+        &cluster,
+        AllocPolicy::WholeNodes,
+        SchedPolicy::Malleable,
+        "TS-state",
+        &jobs,
+        "synth stateful malleable",
+    );
+}
+
+fn replay2k_jobs(cluster: &Cluster) -> Vec<JobSpec> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/replay2k.swf");
+    let text = std::fs::read_to_string(&path).expect("bundled replay trace readable");
+    let mut jobs = sched::read_swf(&text, 112, cluster.len()).expect("replay trace parses");
+    sched::mark_malleable(&mut jobs, 0.7, 4, cluster.len(), 2025);
+    jobs
+}
+
+/// Conformance prefix: tests run unoptimized and the reference loop is
+/// O(running) per event, so the analytic/stateful differentials replay
+/// a prefix by default. `PARASPAWN_CONF_FULL=1` replays everything.
+fn conf_prefix(jobs: &[JobSpec]) -> &[JobSpec] {
+    if std::env::var("PARASPAWN_CONF_FULL").is_ok() {
+        jobs
+    } else {
+        &jobs[..jobs.len().min(500)]
+    }
+}
+
+#[test]
+fn replay2k_scalar_differential_all_policies() {
+    let cluster = Cluster::mn5();
+    let jobs = replay2k_jobs(&cluster);
+    assert!(jobs.len() >= 2000, "bundled trace must stay paper-scale ({})", jobs.len());
+    for policy in SchedPolicy::ALL {
+        let r = assert_conforms(
+            &cluster,
+            AllocPolicy::WholeNodes,
+            policy,
+            "TS",
+            &jobs,
+            &format!("replay2k {policy:?} scalar TS"),
+        )
+        .expect("replay2k schedules");
+        assert!(r.makespan > 0.0 && r.events > jobs.len());
+    }
+}
+
+#[test]
+fn replay2k_exact_and_stateful_differentials() {
+    let cluster = Cluster::mn5();
+    let all = replay2k_jobs(&cluster);
+    let jobs = conf_prefix(&all);
+    for arm in ["TS-exact", "TS-state"] {
+        let _ = assert_conforms(
+            &cluster,
+            AllocPolicy::WholeNodes,
+            SchedPolicy::Malleable,
+            arm,
+            jobs,
+            &format!("replay2k malleable {arm} ({} jobs)", jobs.len()),
+        );
+    }
+}
+
+/// Exact, platform-independent rendering of a result: `{:?}` on `f64`
+/// is the shortest digit string that round-trips, so two bit-identical
+/// replays render identically and any drift shows in the diff.
+fn render_arm(label: &str, jobs: usize, r: &SchedResult) -> String {
+    format!(
+        "{label} jobs={jobs} makespan={:?} mean_wait={:?} max_wait={:?} mean_turnaround={:?} \
+         expands={} shrinks={} reconfig_ns={:?} work_ns={:?} idle_ns={:?} total_ns={:?} \
+         events={}\n",
+        r.makespan,
+        r.mean_wait,
+        r.max_wait,
+        r.mean_turnaround,
+        r.expands,
+        r.shrinks,
+        r.reconfig_node_seconds,
+        r.work_node_seconds,
+        r.idle_node_seconds,
+        r.total_node_seconds,
+        r.events,
+    )
+}
+
+#[test]
+fn replay2k_six_arm_summaries_match_golden() {
+    let cluster = Cluster::mn5();
+    let all = replay2k_jobs(&cluster);
+    // Scalar arms are cheap — pin the full trace. Analytic/stateful pin
+    // a fixed 500-job prefix (not `conf_prefix`: the fixture must not
+    // depend on the env toggle) so the unoptimized run stays bounded.
+    let mut rendered = String::new();
+    for arm in ARMS {
+        let scalar = arm == "TS" || arm == "SS";
+        let jobs: &[JobSpec] = if scalar { &all } else { &all[..all.len().min(500)] };
+        let run = || {
+            let mut p = make_pricer(arm, &cluster);
+            schedule_with_pricer(
+                &cluster,
+                AllocPolicy::WholeNodes,
+                SchedPolicy::Malleable,
+                p.as_mut(),
+                jobs,
+            )
+            .expect("replay2k arm schedules")
+        };
+        let first = run();
+        // Guard the pin itself: a nondeterministic arm must never be
+        // blessed into the fixture.
+        let second = run();
+        assert_eq!(first, second, "{arm}: replay is not run-to-run deterministic");
+        rendered.push_str(&render_arm(arm, jobs.len(), &first));
+    }
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/replay2k_arms.txt");
+    if !path.exists() {
+        std::fs::write(&path, &rendered)
+            .unwrap_or_else(|e| panic!("blessing {}: {e}", path.display()));
+        eprintln!(
+            "[blessed {}] first run on this checkout — commit the file to pin the arms",
+            path.display()
+        );
+        return;
+    }
+    let pinned = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    assert_eq!(
+        rendered, pinned,
+        "six-arm replay summaries drifted from the blessed fixture {}",
+        path.display()
+    );
+}

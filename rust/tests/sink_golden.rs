@@ -100,6 +100,7 @@ fn golden_workload_results() -> WorkloadResults {
         work_node_seconds: 192.0,
         idle_node_seconds: 64.0,
         total_node_seconds: 256.0,
+        events: 4,
         jobs: vec![
             JobOutcome { start: 0.0, finish: 16.0, wait: 0.0, reconfigs: 0 },
             JobOutcome { start: 1.0, finish: 32.0, wait: 1.0, reconfigs: 0 },
@@ -116,6 +117,7 @@ fn golden_workload_results() -> WorkloadResults {
         work_node_seconds: 120.0,
         idle_node_seconds: 4.5,
         total_node_seconds: 128.0,
+        events: 6,
         jobs: vec![
             JobOutcome { start: 0.0, finish: 8.0, wait: 0.0, reconfigs: 2 },
             JobOutcome { start: 0.5, finish: 16.0, wait: 0.5, reconfigs: 1 },
