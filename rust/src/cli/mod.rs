@@ -7,6 +7,7 @@
 //! * `figures`  — regenerate the paper's tables/figures into CSV + ASCII.
 //! * `table2`   — print the diffusive worked example (paper Table 2).
 //! * `workload` — RMS makespan simulation (DRM on/off).
+//! * `merge`    — reassemble a sharded run's sinks byte-identically.
 //! * `select`   — cost-model strategy selection demo.
 //! * `lint`     — the `detlint` determinism static-analysis pass.
 //!
@@ -15,6 +16,7 @@
 
 use crate::config::CostModel;
 use crate::coordinator::figures::{self, FigureConfig};
+use crate::coordinator::shard;
 use crate::coordinator::sweep::{self, Engine};
 use crate::coordinator::Scenario;
 use crate::mam::{Method, SpawnStrategy};
@@ -275,6 +277,22 @@ fn cmd_sweep(a: &Args) -> Result<()> {
     }
     let engine = engine_from_args(a)?;
     let threads = a.usize_or("threads", sweep::default_threads())?;
+    if let Some(spec) = a.get("shard") {
+        let spec = shard::ShardSpec::parse(spec)?;
+        let out = a
+            .get("out")
+            .context("--shard needs --out DIR (the partitioned run-directory root)")?;
+        let report = shard::run_sweep_shard(
+            &matrices,
+            engine,
+            spec,
+            std::path::Path::new(out),
+            a.get("json").is_some(),
+            threads,
+        )?;
+        print_shard_report(&report, spec);
+        return Ok(());
+    }
     eprintln!(
         "sweep: {} tasks across {} matri{} ({} rep(s) each) on {} thread(s), {} engine",
         tasks.len(),
@@ -300,6 +318,48 @@ fn cmd_sweep(a: &Args) -> Result<()> {
         results.write(&dir, a.get("json").is_some())?;
         println!("[written {}/sweep_{{summary,samples,phases}}.csv]", dir.display());
     }
+    Ok(())
+}
+
+/// Operator-facing one-liner for a `--shard` invocation: what ran (or
+/// was skipped via resumability) and where the partitioned output is.
+fn print_shard_report(report: &shard::ShardRun, spec: shard::ShardSpec) {
+    match report.outcome {
+        shard::ShardOutcome::Computed => println!(
+            "[shard {}] run {}: computed {} of {} cells -> {}",
+            spec.label(),
+            report.run,
+            report.cells_run,
+            report.cells_total,
+            report.shard_dir.display()
+        ),
+        shard::ShardOutcome::Skipped => println!(
+            "[shard {}] run {}: {} already complete and checksum-valid, skipped \
+             (delete it to force recomputation)",
+            spec.label(),
+            report.run,
+            report.shard_dir.display()
+        ),
+    }
+}
+
+/// `paraspawn merge DIR`: validate and reassemble a partitioned run
+/// directory's shards into full-sweep sinks byte-identical to an
+/// unsharded run (see [`crate::coordinator::shard::merge_run`]).
+fn cmd_merge(a: &Args) -> Result<()> {
+    let dir = a.positional.first().map(|s| s.as_str()).context(
+        "usage: paraspawn merge DIR (a run-<id> directory, or the --out root holding one)",
+    )?;
+    let report = shard::merge_run(std::path::Path::new(dir))?;
+    println!(
+        "[merged run {}: {} {} shard(s), {} cells -> {}/{{{}}}]",
+        report.run,
+        report.shards,
+        report.kind,
+        report.cells,
+        report.run_dir.display(),
+        report.files.join(", ")
+    );
     Ok(())
 }
 
@@ -550,6 +610,21 @@ fn cmd_workload(a: &Args) -> Result<()> {
         total_nodes,
         threads,
     );
+    if let Some(spec) = a.get("shard") {
+        let spec = shard::ShardSpec::parse(spec)?;
+        let out = a
+            .get("out")
+            .context("--shard needs --out DIR (the partitioned run-directory root)")?;
+        let report = shard::run_workload_shard(
+            &matrix,
+            spec,
+            std::path::Path::new(out),
+            a.get("json").is_some(),
+            threads,
+        )?;
+        print_shard_report(&report, spec);
+        return Ok(());
+    }
     let results = wsweep::run_workload_matrix(&matrix, threads)?;
     print!("{}", results.summary_table().to_ascii());
     if let Some(dir) = a.get("out") {
@@ -667,7 +742,7 @@ USAGE:
                      [--cluster mn5|nasp|mini] [--direction expand|shrink|both]
                      [--nodes 1,2,4,8] [--pairs 1:4,2:8] [--configs M,M+HC]
                      [--threads T] [--reps K] [--seed S] [--max-nodes M]
-                     [--data-bytes B] [--out DIR] [--json]
+                     [--data-bytes B] [--out DIR] [--json] [--shard K/N]
   paraspawn figures  [--fig all|table2|4a|4b|5|6a|6b|workload] [--out DIR]
                      [--engine simulated|analytic]
                      [--reps K] [--max-nodes M] [--threads T]
@@ -680,7 +755,8 @@ USAGE:
                      [--data-bytes B]
                      [--trace FILE.swf] [--synth N] [--save-trace FILE.swf]
                      [--cost-from-sweep] [--calib-reps K]
-                     [--threads T] [--out DIR] [--json]
+                     [--threads T] [--out DIR] [--json] [--shard K/N]
+  paraspawn merge    DIR
   paraspawn select   [--i I] [--n N] [--cores C] [--expected-shrinks K]
                      [--exact]
   paraspawn lint     [--root DIR] [--config FILE] [--json] [--deny]
@@ -705,6 +781,15 @@ seeded sustained-backlog trace of N jobs (testing::synth_trace, the
 same generator as the replay-throughput bench) — the scale escape
 hatch for 10^5-10^6-job runs; neither flag falls back to the default
 40-job synthetic workload. --trace and --synth are mutually exclusive.
+
+Sharded sweeps (--shard K/N, with --out): any number of independent
+workers split a sweep or workload matrix at deterministic cell
+boundaries — worker K of N runs only its slice and writes it under
+OUT/run-<id>/shard-K-of-N/, where <id> is a hash of the matrix, so
+uncoordinated machines agree on the directory. Re-running a complete,
+checksum-valid shard is a no-op (resumability). `paraspawn merge DIR`
+validates every shard (truncated or corrupt files are refused) and
+reassembles full-sweep sinks byte-identical to an unsharded run.
 
 The lint subcommand runs detlint (docs/LINTS.md): determinism and
 float-ordering rules over the crate's own sources. --root defaults to
@@ -731,6 +816,7 @@ pub fn main() -> Result<()> {
             Ok(())
         }
         "workload" => cmd_workload(&args),
+        "merge" => cmd_merge(&args),
         "select" => cmd_select(&args),
         "lint" => cmd_lint(&args),
         "help" | "--help" | "-h" => {

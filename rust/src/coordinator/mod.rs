@@ -7,6 +7,7 @@
 
 pub mod figures;
 pub mod select;
+pub mod shard;
 pub mod sweep;
 pub mod wsweep;
 

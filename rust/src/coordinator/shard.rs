@@ -1,0 +1,935 @@
+//! Sharded sweep orchestration: split a scenario or workload matrix
+//! across any number of independent workers and reassemble the exact
+//! single-machine result — no scheduler, no coordination channel, no
+//! shared filesystem locks.
+//!
+//! The design extends the executor's thread-count-determinism guarantee
+//! (PR 1: results are a pure function of the task list) to *machine
+//! boundaries*:
+//!
+//! * **Deterministic boundaries** — [`ShardSpec`] slices the matrix's
+//!   deterministic cell list with integer arithmetic
+//!   (`start = k·len/N`, `end = (k+1)·len/N`), so the K-th of N shards
+//!   is the same set of cells no matter which worker computes it, and
+//!   the union over `k = 1..=N` covers every cell exactly once.
+//!   Boundaries fall on whole cells (never between repetitions), so
+//!   every per-cell statistic is computed from complete data.
+//! * **Coordination-free run identity** — the run id is an FNV-1a hash
+//!   of the matrix's canonical descriptor
+//!   ([`super::sweep::ScenarioMatrix::descriptor`] /
+//!   [`super::wsweep::WorkloadMatrix::descriptor`]), so independently
+//!   launched workers agree on the `run-<id>/` output directory without
+//!   talking to each other — and two *different* matrices can never
+//!   collide into one run directory.
+//! * **Byte-identical merge** — each shard writes its slice's sinks
+//!   plus a machine-exact part file (`shard.part`, f64s as hex bit
+//!   patterns) and a checksummed manifest. [`merge_run`] validates
+//!   every shard, reassembles the full in-memory result set, and
+//!   renders it through the *same* sink writers an unsharded run uses,
+//!   so the merged CSV/JSON bytes are identical to a single-machine
+//!   sweep (proven by `rust/tests/shard_conformance.rs`).
+//! * **Resumability** — re-running a shard whose manifest validates
+//!   (every listed file present, sizes and checksums matching) is a
+//!   no-op ([`ShardOutcome::Skipped`]); a missing, truncated or
+//!   corrupted shard recomputes. [`merge_run`] refuses partial or
+//!   corrupt shard files instead of silently merging them.
+//!
+//! Shard directories iterate in sorted order and every map involved is
+//! a `BTreeMap`, so assembly order is deterministic by construction
+//! (detlint's `unordered-iter` rule guards the module).
+
+use super::sweep::{self, CellKey, Engine, ScenarioMatrix, SweepResults, SweepTask};
+use super::wsweep::{self, WorkloadMatrix, WorkloadResults};
+use crate::metrics::Phase;
+use crate::rms::sched::{JobOutcome, SchedResult};
+use crate::util::csvout::write_atomic;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+/// Incremental FNV-1a 64-bit hasher — dependency-free and stable across
+/// platforms and processes (unlike `std`'s `DefaultHasher`, whose seed
+/// is randomized per process and therefore useless for coordination-free
+/// run identity).
+#[derive(Clone, Debug)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a::new()
+    }
+}
+
+impl Fnv1a {
+    /// The FNV-1a offset basis.
+    pub fn new() -> Fnv1a {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Absorb raw bytes.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    /// Absorb a `u64` (little-endian bytes).
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// Absorb a `usize` (widened to `u64` so 32- and 64-bit hosts agree).
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    /// Absorb a single byte.
+    pub fn write_u8(&mut self, v: u8) {
+        self.write(&[v]);
+    }
+
+    /// The digest so far.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// FNV-1a 64-bit digest of a byte string.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// Which `1`-based shard of how many this worker computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Shard index, `1..=count`.
+    pub index: usize,
+    /// Total number of shards.
+    pub count: usize,
+}
+
+impl ShardSpec {
+    /// Parse `"K/N"` (e.g. `"2/3"`): `1 <= K <= N`.
+    pub fn parse(s: &str) -> Result<ShardSpec> {
+        let (k, n) = s.split_once('/').context("shard must look like K/N (e.g. 2/3)")?;
+        let index: usize = k.trim().parse().with_context(|| format!("bad shard index '{k}'"))?;
+        let count: usize = n.trim().parse().with_context(|| format!("bad shard count '{n}'"))?;
+        if count == 0 {
+            bail!("shard count must be at least 1");
+        }
+        if index == 0 || index > count {
+            bail!("shard index must be in 1..={count}, got {index}");
+        }
+        Ok(ShardSpec { index, count })
+    }
+
+    /// The contiguous `[start, end)` slice of a `len`-element unit list
+    /// this shard owns. Balanced integer partition: every element lands
+    /// in exactly one shard, shard sizes differ by at most one, and the
+    /// result depends only on `(index, count, len)` — so any worker
+    /// computes the same boundaries. `len < count` leaves the surplus
+    /// shards empty.
+    pub fn bounds(&self, len: usize) -> (usize, usize) {
+        let k = (self.index - 1) as u128;
+        let n = self.count as u128;
+        let l = len as u128;
+        ((k * l / n) as usize, ((k + 1) * l / n) as usize)
+    }
+
+    /// Directory name of this shard inside a run directory.
+    pub fn dir_name(&self) -> String {
+        format!("shard-{}-of-{}", self.index, self.count)
+    }
+
+    /// `"K/N"` rendering (inverse of [`ShardSpec::parse`]).
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.index, self.count)
+    }
+}
+
+/// Render a run id (16 hex digits) from a canonical matrix descriptor.
+pub fn run_id(descriptor: &str) -> String {
+    format!("{:016x}", fnv1a64(descriptor.as_bytes()))
+}
+
+/// The run id of a (possibly multi-matrix) reconfiguration sweep: a
+/// hash over the engine and every matrix's canonical descriptor.
+pub fn sweep_run_id(matrices: &[ScenarioMatrix], engine: Engine) -> String {
+    let mut d = format!("sweep;engine={}", engine.name());
+    for m in matrices {
+        d.push(';');
+        d.push_str(&m.descriptor());
+    }
+    run_id(&d)
+}
+
+/// The run id of a workload sweep: a hash over the matrix's canonical
+/// descriptor (cluster shape, axes, and job-list content hashes).
+pub fn workload_run_id(matrix: &WorkloadMatrix) -> String {
+    run_id(&format!("workload;{}", matrix.descriptor()))
+}
+
+/// File name of the machine-exact partial payload inside a shard dir.
+pub const PART_FILE: &str = "shard.part";
+/// File name of the integrity manifest inside a shard dir.
+pub const MANIFEST_FILE: &str = "MANIFEST.txt";
+
+const SWEEP_SINKS: [&str; 3] = ["sweep_summary.csv", "sweep_samples.csv", "sweep_phases.csv"];
+const SWEEP_SINKS_JSON: [&str; 3] =
+    ["sweep_summary.json", "sweep_samples.json", "sweep_phases.json"];
+const WORKLOAD_SINKS: [&str; 2] = ["workload_summary.csv", "workload_jobs.csv"];
+const WORKLOAD_SINKS_JSON: [&str; 2] = ["workload_summary.json", "workload_jobs.json"];
+
+/// Bit-exact f64 rendering (16 hex digits of the IEEE-754 pattern).
+fn f64_hex(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+/// Inverse of [`f64_hex`].
+fn f64_from_hex(s: &str) -> Result<f64> {
+    let bits = u64::from_str_radix(s, 16).with_context(|| format!("bad f64 bit pattern '{s}'"))?;
+    Ok(f64::from_bits(bits))
+}
+
+/// Labels land in tab-separated part-file records; refuse the two bytes
+/// that would corrupt the framing.
+fn check_label(what: &str, s: &str) -> Result<()> {
+    if s.contains('\t') || s.contains('\n') {
+        bail!("{what} label {s:?} contains a tab or newline and cannot be sharded");
+    }
+    Ok(())
+}
+
+/// What a part file carries.
+#[derive(Clone, Debug)]
+pub enum PartPayload {
+    /// A reconfiguration-sweep slice.
+    Sweep(SweepResults),
+    /// A workload-sweep slice.
+    Workload(WorkloadResults),
+}
+
+impl PartPayload {
+    /// `"sweep"` / `"workload"` — the `kind` recorded in part files and
+    /// manifests.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            PartPayload::Sweep(_) => "sweep",
+            PartPayload::Workload(_) => "workload",
+        }
+    }
+
+    /// Number of cells in the slice.
+    pub fn cells(&self) -> usize {
+        match self {
+            PartPayload::Sweep(r) => r.samples.len(),
+            PartPayload::Workload(r) => r.cells.len(),
+        }
+    }
+}
+
+/// A parsed, checksum-validated part file.
+#[derive(Clone, Debug)]
+pub struct Part {
+    /// Run id the shard belongs to.
+    pub run: String,
+    /// Which shard of how many.
+    pub shard: ShardSpec,
+    /// The slice's results.
+    pub payload: PartPayload,
+}
+
+fn render_part(run: &str, shard: ShardSpec, payload: &PartPayload) -> Result<String> {
+    use std::fmt::Write as _;
+    let mut b = String::new();
+    let _ = writeln!(b, "paraspawn-part v1 {}", payload.kind());
+    let _ = writeln!(b, "run {run}");
+    let _ = writeln!(b, "shard {}", shard.label());
+    let _ = writeln!(b, "cells {}", payload.cells());
+    match payload {
+        PartPayload::Sweep(r) => {
+            for (cell, xs) in &r.samples {
+                check_label("cluster", &cell.cluster)?;
+                check_label("config", &cell.config)?;
+                let _ = writeln!(
+                    b,
+                    "cell\t{}\t{}\t{}\t{}",
+                    cell.cluster, cell.initial_nodes, cell.target_nodes, cell.config
+                );
+                let _ = write!(b, "samples {}", xs.len());
+                for x in xs {
+                    let _ = write!(b, " {}", f64_hex(*x));
+                }
+                b.push('\n');
+                let means: &[(Phase, f64)] =
+                    r.phase_means.get(cell).map(Vec::as_slice).unwrap_or(&[]);
+                let _ = write!(b, "phases {}", means.len());
+                for (p, v) in means {
+                    let _ = write!(b, " {}={}", p.name(), f64_hex(*v));
+                }
+                b.push('\n');
+            }
+        }
+        PartPayload::Workload(r) => {
+            for ((w, p, c), res) in &r.cells {
+                check_label("workload", w)?;
+                check_label("policy", p)?;
+                check_label("pricing", c)?;
+                let _ = writeln!(b, "cell\t{w}\t{p}\t{c}");
+                let _ = writeln!(
+                    b,
+                    "result {} {} {} {} {} {} {} {} {} {} {} {}",
+                    f64_hex(res.makespan),
+                    f64_hex(res.mean_wait),
+                    f64_hex(res.max_wait),
+                    f64_hex(res.mean_turnaround),
+                    res.expands,
+                    res.shrinks,
+                    f64_hex(res.reconfig_node_seconds),
+                    f64_hex(res.work_node_seconds),
+                    f64_hex(res.idle_node_seconds),
+                    f64_hex(res.total_node_seconds),
+                    res.events,
+                    res.jobs.len(),
+                );
+                for j in &res.jobs {
+                    let _ = writeln!(
+                        b,
+                        "job {} {} {} {}",
+                        f64_hex(j.start),
+                        f64_hex(j.finish),
+                        f64_hex(j.wait),
+                        j.reconfigs
+                    );
+                }
+            }
+        }
+    }
+    let sum = fnv1a64(b.as_bytes());
+    let _ = writeln!(b, "end fnv={sum:016x}");
+    Ok(b)
+}
+
+/// Parse and validate a part file's text: the trailing `end fnv=`
+/// checksum must match the body, so truncation or bit rot surfaces as
+/// an error here rather than as silently wrong merged results.
+pub fn parse_part(text: &str) -> Result<Part> {
+    let whole = text
+        .strip_suffix('\n')
+        .context("part file does not end in a newline (truncated?)")?;
+    let (body_sans_nl, last) = whole
+        .rsplit_once('\n')
+        .context("part file has no end marker (truncated?)")?;
+    let body = &text[..body_sans_nl.len() + 1];
+    let sum_hex = last
+        .strip_prefix("end fnv=")
+        .with_context(|| format!("part file ends with {last:?}, not an 'end fnv=' marker (truncated?)"))?;
+    let expect = u64::from_str_radix(sum_hex, 16).context("bad checksum in end marker")?;
+    let got = fnv1a64(body.as_bytes());
+    if got != expect {
+        bail!("part-file checksum mismatch (stored {expect:016x}, computed {got:016x}): corrupt shard");
+    }
+
+    let mut lines = body.lines();
+    let next = |lines: &mut std::str::Lines<'_>, what: &str| -> Result<String> {
+        lines.next().map(str::to_string).with_context(|| format!("part file missing {what}"))
+    };
+    let header = next(&mut lines, "header")?;
+    let kind = header
+        .strip_prefix("paraspawn-part v1 ")
+        .with_context(|| format!("unrecognized part header {header:?}"))?
+        .to_string();
+    let run = next(&mut lines, "run line")?
+        .strip_prefix("run ")
+        .context("part file missing 'run' line")?
+        .to_string();
+    let shard_line = next(&mut lines, "shard line")?;
+    let shard =
+        ShardSpec::parse(shard_line.strip_prefix("shard ").context("part file missing 'shard' line")?)?;
+    let cells_line = next(&mut lines, "cells line")?;
+    let cells: usize = cells_line
+        .strip_prefix("cells ")
+        .context("part file missing 'cells' line")?
+        .parse()
+        .context("bad cell count")?;
+
+    let payload = match kind.as_str() {
+        "sweep" => {
+            let mut r = SweepResults::default();
+            for _ in 0..cells {
+                let cell_line = next(&mut lines, "cell record")?;
+                let rest = cell_line.strip_prefix("cell\t").context("expected a 'cell' record")?;
+                let fields: Vec<&str> = rest.split('\t').collect();
+                if fields.len() != 4 {
+                    bail!("malformed sweep cell record {cell_line:?}");
+                }
+                let key = CellKey {
+                    cluster: fields[0].to_string(),
+                    initial_nodes: fields[1].parse().context("bad initial_nodes")?,
+                    target_nodes: fields[2].parse().context("bad target_nodes")?,
+                    config: fields[3].to_string(),
+                };
+                let samples_line = next(&mut lines, "samples record")?;
+                let mut it = samples_line.split(' ');
+                if it.next() != Some("samples") {
+                    bail!("expected a 'samples' record, got {samples_line:?}");
+                }
+                let n: usize = it.next().context("samples record missing count")?.parse()?;
+                let mut xs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    xs.push(f64_from_hex(it.next().context("samples record short")?)?);
+                }
+                let phases_line = next(&mut lines, "phases record")?;
+                let mut it = phases_line.split(' ');
+                if it.next() != Some("phases") {
+                    bail!("expected a 'phases' record, got {phases_line:?}");
+                }
+                let n: usize = it.next().context("phases record missing count")?.parse()?;
+                let mut means = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let pair = it.next().context("phases record short")?;
+                    let (name, hex) =
+                        pair.split_once('=').with_context(|| format!("bad phase entry {pair:?}"))?;
+                    let phase = Phase::ALL
+                        .iter()
+                        .copied()
+                        .find(|p| p.name() == name)
+                        .with_context(|| format!("unknown phase {name:?}"))?;
+                    means.push((phase, f64_from_hex(hex)?));
+                }
+                if r.samples.insert(key.clone(), xs).is_some() {
+                    bail!("duplicate cell in part file");
+                }
+                r.phase_means.insert(key, means);
+            }
+            PartPayload::Sweep(r)
+        }
+        "workload" => {
+            let mut r = WorkloadResults::default();
+            for _ in 0..cells {
+                let cell_line = next(&mut lines, "cell record")?;
+                let rest = cell_line.strip_prefix("cell\t").context("expected a 'cell' record")?;
+                let fields: Vec<&str> = rest.split('\t').collect();
+                if fields.len() != 3 {
+                    bail!("malformed workload cell record {cell_line:?}");
+                }
+                let key =
+                    (fields[0].to_string(), fields[1].to_string(), fields[2].to_string());
+                let result_line = next(&mut lines, "result record")?;
+                let f: Vec<&str> = result_line
+                    .strip_prefix("result ")
+                    .context("expected a 'result' record")?
+                    .split(' ')
+                    .collect();
+                if f.len() != 12 {
+                    bail!("malformed result record {result_line:?}");
+                }
+                let njobs: usize = f[11].parse().context("bad job count")?;
+                let mut jobs = Vec::with_capacity(njobs);
+                for _ in 0..njobs {
+                    let job_line = next(&mut lines, "job record")?;
+                    let jf: Vec<&str> = job_line
+                        .strip_prefix("job ")
+                        .context("expected a 'job' record")?
+                        .split(' ')
+                        .collect();
+                    if jf.len() != 4 {
+                        bail!("malformed job record {job_line:?}");
+                    }
+                    jobs.push(JobOutcome {
+                        start: f64_from_hex(jf[0])?,
+                        finish: f64_from_hex(jf[1])?,
+                        wait: f64_from_hex(jf[2])?,
+                        reconfigs: jf[3].parse().context("bad reconfig count")?,
+                    });
+                }
+                let res = SchedResult {
+                    makespan: f64_from_hex(f[0])?,
+                    mean_wait: f64_from_hex(f[1])?,
+                    max_wait: f64_from_hex(f[2])?,
+                    mean_turnaround: f64_from_hex(f[3])?,
+                    expands: f[4].parse().context("bad expand count")?,
+                    shrinks: f[5].parse().context("bad shrink count")?,
+                    reconfig_node_seconds: f64_from_hex(f[6])?,
+                    work_node_seconds: f64_from_hex(f[7])?,
+                    idle_node_seconds: f64_from_hex(f[8])?,
+                    total_node_seconds: f64_from_hex(f[9])?,
+                    events: f[10].parse().context("bad event count")?,
+                    jobs,
+                };
+                if r.cells.insert(key, res).is_some() {
+                    bail!("duplicate cell in part file");
+                }
+            }
+            PartPayload::Workload(r)
+        }
+        other => bail!("unknown part kind {other:?}"),
+    };
+    if lines.next().is_some() {
+        bail!("trailing data after the last cell record");
+    }
+    Ok(Part { run, shard, payload })
+}
+
+/// Read and validate a shard's part file.
+pub fn read_part(path: &Path) -> Result<Part> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading part file {}", path.display()))?;
+    parse_part(&text).map_err(|e| e.context(format!("parsing part file {}", path.display())))
+}
+
+/// A shard directory's integrity manifest: which run/shard produced it
+/// and the exact size + checksum of every file it wrote. The manifest
+/// is written last (and atomically), so its presence-and-validity is
+/// the shard's commit point: resumability skips a shard iff the
+/// manifest validates, and [`merge_run`] refuses one that does not.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Run id the shard belongs to.
+    pub run: String,
+    /// `"sweep"` or `"workload"`.
+    pub kind: String,
+    /// Which shard of how many.
+    pub shard: ShardSpec,
+    /// Whether JSON sinks were written alongside the CSVs.
+    pub json: bool,
+    /// `(bytes, fnv1a64, name)` per file, in written order.
+    pub files: Vec<(usize, u64, String)>,
+}
+
+fn render_manifest(m: &Manifest) -> String {
+    use std::fmt::Write as _;
+    let mut b = String::from("paraspawn-shard-manifest v1\n");
+    let _ = writeln!(b, "run {}", m.run);
+    let _ = writeln!(b, "kind {}", m.kind);
+    let _ = writeln!(b, "shard {}", m.shard.label());
+    let _ = writeln!(b, "json {}", m.json);
+    for (bytes, sum, name) in &m.files {
+        let _ = writeln!(b, "file {bytes} {sum:016x} {name}");
+    }
+    b
+}
+
+/// Parse a manifest's text (no filesystem access; see
+/// [`read_manifest`]).
+pub fn parse_manifest(text: &str) -> Result<Manifest> {
+    let mut lines = text.lines();
+    let header = lines.next().context("empty manifest")?;
+    if header != "paraspawn-shard-manifest v1" {
+        bail!("unrecognized manifest header {header:?}");
+    }
+    let take = |lines: &mut std::str::Lines<'_>, prefix: &str| -> Result<String> {
+        let line = lines.next().with_context(|| format!("manifest missing '{prefix}' line"))?;
+        line.strip_prefix(prefix)
+            .and_then(|r| r.strip_prefix(' '))
+            .map(str::to_string)
+            .with_context(|| format!("manifest line {line:?} is not a '{prefix}' line"))
+    };
+    let run = take(&mut lines, "run")?;
+    let kind = take(&mut lines, "kind")?;
+    let shard = ShardSpec::parse(&take(&mut lines, "shard")?)?;
+    let json = match take(&mut lines, "json")?.as_str() {
+        "true" => true,
+        "false" => false,
+        other => bail!("bad manifest json flag {other:?}"),
+    };
+    let mut files = Vec::new();
+    for line in lines {
+        let rest = line
+            .strip_prefix("file ")
+            .with_context(|| format!("unexpected manifest line {line:?}"))?;
+        let mut it = rest.splitn(3, ' ');
+        let bytes: usize =
+            it.next().context("file entry missing size")?.parse().context("bad file size")?;
+        let sum = u64::from_str_radix(it.next().context("file entry missing checksum")?, 16)
+            .context("bad file checksum")?;
+        let name = it.next().context("file entry missing name")?.to_string();
+        files.push((bytes, sum, name));
+    }
+    Ok(Manifest { run, kind, shard, json, files })
+}
+
+/// Read a shard directory's manifest.
+pub fn read_manifest(dir: &Path) -> Result<Manifest> {
+    let path = dir.join(MANIFEST_FILE);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading manifest {}", path.display()))?;
+    parse_manifest(&text).map_err(|e| e.context(format!("parsing manifest {}", path.display())))
+}
+
+/// Check every file the manifest lists: present, exact size, exact
+/// checksum. A truncated or bit-flipped shard file fails here.
+pub fn validate_manifest_files(dir: &Path, m: &Manifest) -> Result<()> {
+    for (bytes, sum, name) in &m.files {
+        let path = dir.join(name);
+        let data = std::fs::read(&path)
+            .with_context(|| format!("shard file {} is missing or unreadable", path.display()))?;
+        if data.len() != *bytes {
+            bail!(
+                "shard file {} is {} bytes, manifest says {} (truncated or partially written)",
+                path.display(),
+                data.len(),
+                bytes
+            );
+        }
+        let got = fnv1a64(&data);
+        if got != *sum {
+            bail!(
+                "shard file {} checksum mismatch (manifest {sum:016x}, file {got:016x}): corrupt",
+                path.display()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// True iff `dir` holds a complete, validated output of exactly this
+/// `(run, kind, shard, json)` — the resumability predicate: a worker
+/// re-launched on the same shard skips recomputation iff this holds.
+pub fn shard_is_complete(dir: &Path, run: &str, kind: &str, shard: ShardSpec, json: bool) -> bool {
+    let m = match read_manifest(dir) {
+        Ok(m) => m,
+        Err(_) => return false,
+    };
+    m.run == run
+        && m.kind == kind
+        && m.shard == shard
+        && m.json == json
+        && validate_manifest_files(dir, &m).is_ok()
+}
+
+/// Did a shard invocation actually compute, or find valid prior output?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardOutcome {
+    /// The slice was executed and its outputs (re)written.
+    Computed,
+    /// A complete, checksum-valid output already existed; nothing ran.
+    Skipped,
+}
+
+/// What one shard invocation did and where.
+#[derive(Clone, Debug)]
+pub struct ShardRun {
+    /// Run id shared by all shards of this matrix.
+    pub run: String,
+    /// `out_root/run-<id>` — where [`merge_run`] writes the full sinks.
+    pub run_dir: PathBuf,
+    /// `run_dir/shard-K-of-N` — this shard's outputs.
+    pub shard_dir: PathBuf,
+    /// Computed vs skipped (resumability).
+    pub outcome: ShardOutcome,
+    /// Cells in the whole matrix.
+    pub cells_total: usize,
+    /// Cells in this shard's slice.
+    pub cells_run: usize,
+}
+
+/// The sweep matrices' cell-granular unit list: tasks grouped by cell
+/// (repetitions stay contiguous), in deterministic matrix/task order.
+/// Sharding at cell granularity keeps every per-cell statistic (median,
+/// CI, phase means) computable from one shard's complete data. Fails if
+/// two matrices of a group contain the same cell — the shards could not
+/// be merged unambiguously.
+pub fn sweep_cell_chunks(matrices: &[ScenarioMatrix]) -> Result<Vec<(CellKey, Vec<SweepTask>)>> {
+    let mut chunks: Vec<(CellKey, Vec<SweepTask>)> = Vec::new();
+    for m in matrices {
+        for t in m.tasks() {
+            match chunks.last_mut() {
+                Some((key, ts)) if *key == t.cell => ts.push(t),
+                _ => chunks.push((t.cell.clone(), vec![t])),
+            }
+        }
+    }
+    let mut seen = BTreeSet::new();
+    for (key, _) in &chunks {
+        if !seen.insert(key.clone()) {
+            bail!(
+                "cell ({} {} -> {} nodes, {}) appears more than once across the matrices; \
+                 sharding requires globally distinct cells",
+                key.cluster,
+                key.initial_nodes,
+                key.target_nodes,
+                key.config
+            );
+        }
+    }
+    Ok(chunks)
+}
+
+/// Write a shard's outputs: the slice's normal sinks, the machine-exact
+/// part file, then the manifest (the commit point) covering them all.
+fn commit_shard(
+    shard_dir: &Path,
+    run: &str,
+    shard: ShardSpec,
+    json: bool,
+    payload: &PartPayload,
+) -> Result<()> {
+    let sink_names: Vec<&str> = match payload {
+        PartPayload::Sweep(r) => {
+            r.write(shard_dir, json)?;
+            let mut names: Vec<&str> = SWEEP_SINKS.to_vec();
+            if json {
+                names.extend(SWEEP_SINKS_JSON);
+            }
+            names
+        }
+        PartPayload::Workload(r) => {
+            r.write(shard_dir, json)?;
+            let mut names: Vec<&str> = WORKLOAD_SINKS.to_vec();
+            if json {
+                names.extend(WORKLOAD_SINKS_JSON);
+            }
+            names
+        }
+    };
+    let part = render_part(run, shard, payload)?;
+    write_atomic(&shard_dir.join(PART_FILE), part.as_bytes())
+        .with_context(|| format!("writing {}", shard_dir.join(PART_FILE).display()))?;
+    let mut files = Vec::new();
+    for name in sink_names.iter().copied().chain([PART_FILE]) {
+        let data = std::fs::read(shard_dir.join(name))
+            .with_context(|| format!("reading back {name} for the manifest"))?;
+        files.push((data.len(), fnv1a64(&data), name.to_string()));
+    }
+    let manifest =
+        Manifest { run: run.to_string(), kind: payload.kind().to_string(), shard, json, files };
+    write_atomic(&shard_dir.join(MANIFEST_FILE), render_manifest(&manifest).as_bytes())
+        .with_context(|| format!("writing {}", shard_dir.join(MANIFEST_FILE).display()))
+}
+
+/// Run one shard of a (possibly multi-matrix) reconfiguration sweep
+/// into `out_root/run-<id>/shard-K-of-N/`. Resumable: if that directory
+/// already holds a complete, checksum-valid output of this exact run,
+/// nothing is recomputed ([`ShardOutcome::Skipped`]).
+pub fn run_sweep_shard(
+    matrices: &[ScenarioMatrix],
+    engine: Engine,
+    shard: ShardSpec,
+    out_root: &Path,
+    json: bool,
+    threads: usize,
+) -> Result<ShardRun> {
+    let run = sweep_run_id(matrices, engine);
+    let run_dir = out_root.join(format!("run-{run}"));
+    let shard_dir = run_dir.join(shard.dir_name());
+    let chunks = sweep_cell_chunks(matrices)?;
+    let cells_total = chunks.len();
+    let (start, end) = shard.bounds(cells_total);
+    let cells_run = end - start;
+    let mut out = ShardRun {
+        run,
+        run_dir,
+        shard_dir,
+        outcome: ShardOutcome::Skipped,
+        cells_total,
+        cells_run,
+    };
+    if shard_is_complete(&out.shard_dir, &out.run, "sweep", shard, json) {
+        return Ok(out);
+    }
+    let tasks: Vec<SweepTask> =
+        chunks.into_iter().skip(start).take(cells_run).flat_map(|(_, ts)| ts).collect();
+    let results = sweep::run_tasks_engine(tasks, threads, engine)?;
+    commit_shard(&out.shard_dir, &out.run, shard, json, &PartPayload::Sweep(results))?;
+    out.outcome = ShardOutcome::Computed;
+    Ok(out)
+}
+
+/// Run one shard of a workload sweep into
+/// `out_root/run-<id>/shard-K-of-N/` (see [`run_sweep_shard`]; the unit
+/// list is [`WorkloadMatrix::cell_keys`]).
+pub fn run_workload_shard(
+    matrix: &WorkloadMatrix,
+    shard: ShardSpec,
+    out_root: &Path,
+    json: bool,
+    threads: usize,
+) -> Result<ShardRun> {
+    let run = workload_run_id(matrix);
+    let run_dir = out_root.join(format!("run-{run}"));
+    let shard_dir = run_dir.join(shard.dir_name());
+    let cells_total = matrix.len();
+    let (start, end) = shard.bounds(cells_total);
+    let mut out = ShardRun {
+        run,
+        run_dir,
+        shard_dir,
+        outcome: ShardOutcome::Skipped,
+        cells_total,
+        cells_run: end - start,
+    };
+    if shard_is_complete(&out.shard_dir, &out.run, "workload", shard, json) {
+        return Ok(out);
+    }
+    let results = wsweep::run_workload_matrix_slice(matrix, start, end, threads)?;
+    commit_shard(&out.shard_dir, &out.run, shard, json, &PartPayload::Workload(results))?;
+    out.outcome = ShardOutcome::Computed;
+    Ok(out)
+}
+
+/// What [`merge_run`] reassembled.
+#[derive(Clone, Debug)]
+pub struct MergeReport {
+    /// The run directory the merged sinks were written into.
+    pub run_dir: PathBuf,
+    /// `"sweep"` or `"workload"`.
+    pub kind: String,
+    /// Run id of the merged shards.
+    pub run: String,
+    /// Number of shards merged.
+    pub shards: usize,
+    /// Total cells across all shards.
+    pub cells: usize,
+    /// Sink file names written into the run directory.
+    pub files: Vec<String>,
+}
+
+/// Accept either a run directory itself (contains `shard-*` children)
+/// or its parent `--out` root holding exactly one `run-*` child.
+fn resolve_run_dir(dir: &Path) -> Result<PathBuf> {
+    let names = sorted_dir_names(dir)?;
+    if names.iter().any(|n| n.starts_with("shard-")) {
+        return Ok(dir.to_path_buf());
+    }
+    let runs: Vec<&String> = names.iter().filter(|n| n.starts_with("run-")).collect();
+    match runs.as_slice() {
+        [one] => Ok(dir.join(one)),
+        [] => bail!(
+            "{} contains neither shard-K-of-N nor run-<id> directories",
+            dir.display()
+        ),
+        many => bail!(
+            "{} contains {} run directories ({}); pass one of them explicitly",
+            dir.display(),
+            many.len(),
+            many.iter().map(|s| s.as_str()).collect::<Vec<_>>().join(", ")
+        ),
+    }
+}
+
+/// Directory entries by name, sorted — deterministic shard assembly
+/// regardless of filesystem enumeration order.
+fn sorted_dir_names(dir: &Path) -> Result<Vec<String>> {
+    let mut names = Vec::new();
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("reading directory {}", dir.display()))?
+    {
+        let entry = entry.with_context(|| format!("reading directory {}", dir.display()))?;
+        names.push(entry.file_name().to_string_lossy().into_owned());
+    }
+    names.sort();
+    Ok(names)
+}
+
+/// Merge a run directory's shards into full-sweep sinks, byte-identical
+/// to an unsharded run: every shard's manifest and files are validated
+/// (missing shards, truncated or corrupt files, mixed runs and overlaps
+/// are refused), the parts are reassembled into the complete in-memory
+/// result set, and the sinks are rendered by the same writers an
+/// unsharded `--out` run uses, into the run directory itself.
+pub fn merge_run(dir: &Path) -> Result<MergeReport> {
+    let run_dir = resolve_run_dir(dir)?;
+    let shard_names: Vec<String> = sorted_dir_names(&run_dir)?
+        .into_iter()
+        .filter(|n| n.starts_with("shard-") && run_dir.join(n).is_dir())
+        .collect();
+    if shard_names.is_empty() {
+        bail!("no shard directories under {}", run_dir.display());
+    }
+
+    // Validate every shard's manifest + files, then collect the parts
+    // ordered by shard index.
+    let mut manifests: Vec<(Manifest, PathBuf)> = Vec::new();
+    for name in &shard_names {
+        let sdir = run_dir.join(name);
+        let m = read_manifest(&sdir)
+            .map_err(|e| e.context(format!("shard {name} has no valid manifest (incomplete run?)")))?;
+        validate_manifest_files(&sdir, &m)
+            .map_err(|e| e.context(format!("shard {name} failed validation")))?;
+        manifests.push((m, sdir));
+    }
+    manifests.sort_by_key(|(m, _)| m.shard.index);
+    let (first, _) = &manifests[0];
+    let (run, kind, count, json) =
+        (first.run.clone(), first.kind.clone(), first.shard.count, first.json);
+    let mut present = BTreeSet::new();
+    for (m, sdir) in &manifests {
+        if m.run != run {
+            bail!(
+                "{} belongs to run {}, expected {} (mixed runs in one directory)",
+                sdir.display(),
+                m.run,
+                run
+            );
+        }
+        if m.kind != kind {
+            bail!("{} is a {} shard, expected {}", sdir.display(), m.kind, kind);
+        }
+        if m.shard.count != count {
+            bail!(
+                "{} is shard {} but other shards claim a total of {count}",
+                sdir.display(),
+                m.shard.label()
+            );
+        }
+        if m.json != json {
+            bail!("{} disagrees with the other shards on --json", sdir.display());
+        }
+        if !present.insert(m.shard.index) {
+            bail!("shard {}/{count} appears twice under {}", m.shard.index, run_dir.display());
+        }
+    }
+    let missing: Vec<String> =
+        (1..=count).filter(|k| !present.contains(k)).map(|k| format!("{k}/{count}")).collect();
+    if !missing.is_empty() {
+        bail!(
+            "incomplete run: missing shard(s) {} under {}",
+            missing.join(", "),
+            run_dir.display()
+        );
+    }
+
+    let mut merged_sweep = SweepResults::default();
+    let mut merged_workload = WorkloadResults::default();
+    let mut cells = 0usize;
+    for (m, sdir) in &manifests {
+        let part = read_part(&sdir.join(PART_FILE))?;
+        if part.run != m.run || part.shard != m.shard || part.payload.kind() != m.kind {
+            bail!("{} disagrees with its manifest about run/shard identity", sdir.display());
+        }
+        cells += part.payload.cells();
+        match part.payload {
+            PartPayload::Sweep(r) => merged_sweep
+                .absorb(r)
+                .map_err(|e| e.context(format!("merging {}", sdir.display())))?,
+            PartPayload::Workload(r) => merged_workload
+                .absorb(r)
+                .map_err(|e| e.context(format!("merging {}", sdir.display())))?,
+        }
+    }
+
+    let files: Vec<String> = match kind.as_str() {
+        "sweep" => {
+            merged_sweep.write(&run_dir, json)?;
+            let mut names: Vec<&str> = SWEEP_SINKS.to_vec();
+            if json {
+                names.extend(SWEEP_SINKS_JSON);
+            }
+            names.iter().map(|s| s.to_string()).collect()
+        }
+        "workload" => {
+            merged_workload.write(&run_dir, json)?;
+            let mut names: Vec<&str> = WORKLOAD_SINKS.to_vec();
+            if json {
+                names.extend(WORKLOAD_SINKS_JSON);
+            }
+            names.iter().map(|s| s.to_string()).collect()
+        }
+        other => bail!("unknown shard kind {other:?}"),
+    };
+    Ok(MergeReport { run_dir, kind, run, shards: count, cells, files })
+}

@@ -424,6 +424,43 @@ impl ScenarioMatrix {
         self.clusters.len() * pairs * self.configs.len() * self.reps
     }
 
+    /// Canonical one-line description of every axis that determines the
+    /// matrix's results. Two workers that build the same matrix render
+    /// the same string, so the shard orchestration
+    /// ([`crate::coordinator::shard`]) hashes it into the run id and
+    /// independent machines agree on the output directory without any
+    /// coordination.
+    pub fn descriptor(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("matrix{clusters=[");
+        for (i, k) in self.clusters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k.name());
+        }
+        out.push_str("];configs=[");
+        for (i, mc) in self.configs.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{}={}+{}", mc.label, mc.method.name(), mc.strategy.name());
+        }
+        out.push_str("];pairs=[");
+        for (i, &(a, b)) in self.pairs.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{a}:{b}");
+        }
+        let _ = write!(
+            out,
+            "];reps={};seed={};data_bytes={}}}",
+            self.reps, self.seed, self.data_bytes
+        );
+        out
+    }
+
     /// True when no tasks would run.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
@@ -503,6 +540,31 @@ impl SweepResults {
     /// Total number of samples across all cells.
     pub fn total_samples(&self) -> usize {
         self.samples.values().map(Vec::len).sum()
+    }
+
+    /// Absorb another (disjoint) partial result set — the merge
+    /// primitive of the sharded sweep orchestration. Because shard
+    /// boundaries fall on whole cells, a cell appearing in two partials
+    /// is a shard-overlap bug and is refused rather than silently
+    /// concatenated (which would corrupt rep counts and medians).
+    pub fn absorb(&mut self, other: SweepResults) -> Result<()> {
+        for (cell, xs) in other.samples {
+            if self.samples.contains_key(&cell) {
+                anyhow::bail!(
+                    "overlapping shard results: cell ({} {} -> {} nodes, {}) appears in \
+                     more than one shard",
+                    cell.cluster,
+                    cell.initial_nodes,
+                    cell.target_nodes,
+                    cell.config
+                );
+            }
+            self.samples.insert(cell, xs);
+        }
+        for (cell, means) in other.phase_means {
+            self.phase_means.insert(cell, means);
+        }
+        Ok(())
     }
 
     /// Project a single-cluster sweep into the figure harness's

@@ -253,6 +253,81 @@ impl WorkloadMatrix {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// The matrix's cell identities in execution order (workload-major,
+    /// then policy, then pricing arm) — the unit list the sharded
+    /// orchestration ([`crate::coordinator::shard`]) slices.
+    pub fn cell_keys(&self) -> Vec<WorkloadKey> {
+        let mut keys = Vec::with_capacity(self.len());
+        for w in &self.workloads {
+            for &p in &self.policies {
+                for spec in &self.pricers {
+                    keys.push((w.label.clone(), p.name().to_string(), spec.label.clone()));
+                }
+            }
+        }
+        keys
+    }
+
+    /// Canonical description of everything that determines the matrix's
+    /// results: cluster shape, allocation policy, the three axes, and a
+    /// content hash of every workload's job list. Two workers that
+    /// build the same matrix render the same string, so the shard
+    /// orchestration hashes it into the run id and independent machines
+    /// agree on the output directory without coordination.
+    pub fn descriptor(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("workload-matrix{cluster=");
+        let _ = write!(out, "{}:[", self.cluster.name);
+        for (i, n) in self.cluster.nodes.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{}", n.cores);
+        }
+        let _ = write!(out, "];alloc={:?};policies=[", self.alloc);
+        for (i, p) in self.policies.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(p.name());
+        }
+        out.push_str("];pricers=[");
+        for (i, spec) in self.pricers.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            // Debug rendering covers every pricing parameter (cost-model
+            // constants, strategy, shrink mode, payload) exactly; f64
+            // Debug is the shortest round-tripping digit string, so two
+            // identically configured workers render identically.
+            let _ = write!(out, "{}={:?}", spec.label, spec.pricing);
+        }
+        out.push_str("];workloads=[");
+        for (i, w) in self.workloads.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{}:{}j#{:016x}", w.label, w.jobs.len(), hash_jobs(&w.jobs));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Order-sensitive FNV-1a content hash of a job list (bit-exact on the
+/// f64 fields), so the run id distinguishes workloads that share a
+/// label but not a trace.
+fn hash_jobs(jobs: &[JobSpec]) -> u64 {
+    let mut h = crate::coordinator::shard::Fnv1a::new();
+    for j in jobs {
+        h.write_u64(j.arrival.to_bits());
+        h.write_u64(j.work.to_bits());
+        h.write_usize(j.min_nodes);
+        h.write_usize(j.max_nodes);
+        h.write_u8(u8::from(j.malleable));
+    }
+    h.finish()
 }
 
 /// Cell identity: `(workload, policy, pricing)` labels.
@@ -339,6 +414,23 @@ impl WorkloadResults {
         t
     }
 
+    /// Absorb another (disjoint) partial result set — the merge
+    /// primitive of the sharded workload orchestration. A cell present
+    /// in two partials is a shard-overlap bug and is refused.
+    pub fn absorb(&mut self, other: WorkloadResults) -> Result<()> {
+        for (key, r) in other.cells {
+            if self.cells.contains_key(&key) {
+                let (w, p, c) = &key;
+                anyhow::bail!(
+                    "overlapping shard results: cell (workload {w}, policy {p}, pricing {c}) \
+                     appears in more than one shard"
+                );
+            }
+            self.cells.insert(key, r);
+        }
+        Ok(())
+    }
+
     /// Write `workload_summary` and `workload_jobs` into `dir` as CSV
     /// (plus JSON when `json` is set).
     pub fn write(&self, dir: &Path, json: bool) -> Result<()> {
@@ -357,6 +449,21 @@ impl WorkloadResults {
 /// count (each cell instantiates its own pricer, so analytic memo
 /// caches never cross threads).
 pub fn run_workload_matrix(matrix: &WorkloadMatrix, threads: usize) -> Result<WorkloadResults> {
+    run_workload_matrix_slice(matrix, 0, matrix.len(), threads)
+}
+
+/// Run the contiguous `[start, end)` slice of a workload matrix's cell
+/// list (execution order: workload-major, then policy, then pricing —
+/// see [`WorkloadMatrix::cell_keys`]). Every cell is an independent
+/// deterministic simulation, so a slice computes bit-identical results
+/// to the same cells inside a full run — the property the sharded
+/// orchestration's byte-identical merge rests on.
+pub fn run_workload_matrix_slice(
+    matrix: &WorkloadMatrix,
+    start: usize,
+    end: usize,
+    threads: usize,
+) -> Result<WorkloadResults> {
     let cluster = &matrix.cluster;
     let alloc = matrix.alloc;
     let mut tasks: Vec<(WorkloadKey, &WorkloadSpec, SchedPolicy, &PricerSpec)> = Vec::new();
@@ -372,7 +479,11 @@ pub fn run_workload_matrix(matrix: &WorkloadMatrix, threads: usize) -> Result<Wo
             }
         }
     }
-    let results = parallel_map(&tasks, threads, |(_, w, p, spec)| {
+    if start > end || end > tasks.len() {
+        anyhow::bail!("cell slice {start}..{end} out of bounds (matrix has {} cells)", tasks.len());
+    }
+    let tasks = &tasks[start..end];
+    let results = parallel_map(tasks, threads, |(_, w, p, spec)| {
         let mut pricer = spec.build(cluster);
         schedule_with_pricer(cluster, alloc, *p, pricer.as_mut(), &w.jobs)
             .map_err(|e| anyhow!("{e}"))

@@ -76,10 +76,7 @@ impl Table {
 
     /// Write the CSV rendering to `path`, creating parent directories.
     pub fn write_csv<P: AsRef<Path>>(&self, path: P) -> io::Result<()> {
-        if let Some(parent) = path.as_ref().parent() {
-            fs::create_dir_all(parent)?;
-        }
-        fs::write(path, self.to_csv())
+        write_atomic(path.as_ref(), self.to_csv().as_bytes())
     }
 
     /// Render as a JSON array of row objects keyed by the header. Cells
@@ -137,10 +134,35 @@ impl Table {
 
     /// Write the JSON rendering to `path`, creating parent directories.
     pub fn write_json<P: AsRef<Path>>(&self, path: P) -> io::Result<()> {
-        if let Some(parent) = path.as_ref().parent() {
-            fs::create_dir_all(parent)?;
+        write_atomic(path.as_ref(), self.to_json().as_bytes())
+    }
+}
+
+/// Write `bytes` to `path` atomically: the content lands in a sibling
+/// temporary file first and is renamed into place, so a crash mid-write
+/// leaves either the old file or the new one — never a truncated sink.
+/// Parent directories are created. The sharded-sweep resumability check
+/// ([`crate::coordinator::shard`]) relies on this: a shard output that
+/// exists is either complete or detectably stale, not half a CSV.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => {
+            fs::create_dir_all(p)?;
+            p.to_path_buf()
         }
-        fs::write(path, self.to_json())
+        _ => std::path::PathBuf::from("."),
+    };
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "path has no file name"))?;
+    let tmp = parent.join(format!(".{}.tmp-{}", file_name.to_string_lossy(), std::process::id()));
+    fs::write(&tmp, bytes)?;
+    match fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = fs::remove_file(&tmp);
+            Err(e)
+        }
     }
 }
 
@@ -265,5 +287,23 @@ mod tests {
     fn json_empty_table_is_empty_array() {
         let t = Table::new(vec!["a"]);
         assert_eq!(t.to_json().trim(), "[\n]");
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!("paraspawn-atomic-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let path = dir.join("nested").join("t.csv");
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"first");
+        write_atomic(&path, b"second").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"second");
+        // No temporary droppings next to the target.
+        let names: Vec<_> = fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["t.csv".to_string()]);
+        let _ = fs::remove_dir_all(&dir);
     }
 }

@@ -50,6 +50,22 @@ fn unordered_iter_fixtures() {
 }
 
 #[test]
+fn shard_map_fixtures() {
+    // The shard/merge subsystem's core hazard: merging a shard map by
+    // HashMap iteration reassembles in hash-seed order and breaks the
+    // byte-identical-merge guarantee. The good twin is the BTreeMap
+    // shape `coordinator::shard` actually uses (which the tree-wide
+    // self-check below lints for real).
+    assert_rule_pair(
+        "unordered-iter",
+        "shard_map_bad.rs",
+        include_str!("fixtures/detlint/shard_map_bad.rs"),
+        "shard_map_good.rs",
+        include_str!("fixtures/detlint/shard_map_good.rs"),
+    );
+}
+
+#[test]
 fn total_order_fixtures() {
     assert_rule_pair(
         "total-order-floats",

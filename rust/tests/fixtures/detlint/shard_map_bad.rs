@@ -1,0 +1,14 @@
+// detlint fixture: known-bad for `unordered-iter` — a shard map keyed
+// by shard index, merged by HashMap iteration.
+use std::collections::HashMap;
+
+pub fn merge_shards(parts: &HashMap<usize, Vec<f64>>) -> Vec<f64> {
+    let mut merged = Vec::new();
+    // Absorb order depends on the hash seed: two merges of the same
+    // shard set concatenate in different orders and the "byte-identical
+    // merge" guarantee silently breaks.
+    for (_, samples) in parts.iter() {
+        merged.extend_from_slice(samples);
+    }
+    merged
+}

@@ -1,0 +1,13 @@
+// detlint fixture: known-good for `unordered-iter` — the shard map
+// keyed by shard index in a BTreeMap, as `coordinator::shard` does.
+use std::collections::BTreeMap;
+
+pub fn merge_shards(parts: &BTreeMap<usize, Vec<f64>>) -> Vec<f64> {
+    let mut merged = Vec::new();
+    // BTreeMap iterates in shard-index order: every merge concatenates
+    // identically, which is what makes the reassembly byte-stable.
+    for (_, samples) in parts.iter() {
+        merged.extend_from_slice(samples);
+    }
+    merged
+}

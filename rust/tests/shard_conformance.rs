@@ -1,0 +1,510 @@
+//! Shard conformance: the sharded sweep orchestration
+//! (`coordinator::shard`) must reassemble results **byte-identical** to
+//! an unsharded run.
+//!
+//! Three layers of proof:
+//!
+//! 1. **Boundary math** — property tests over random matrices and every
+//!    `K/N` split (including `N = 1`, `N` larger than the matrix, and
+//!    empty shards): the shard slices partition the cell list exactly
+//!    once with no overlap, and every worker computes the same
+//!    boundaries independently.
+//! 2. **Differential byte-identity** — sweep (both engines, including a
+//!    `--preset`-derived matrix) and workload (a `--synth`-style trace)
+//!    runs sharded 1/3 + 2/3 + 3/3, merged, and compared byte-for-byte
+//!    against the unsharded CSV and JSON sinks; plus a loop over many
+//!    `K/N` splits.
+//! 3. **Lifecycle** — resumability (a complete shard re-run is a no-op;
+//!    after deleting one shard only that shard recomputes) and refusal
+//!    (truncated/corrupt/missing shard files make `merge` fail, and the
+//!    real binary exits non-zero).
+
+use paraspawn::coordinator::shard::{self, ShardOutcome, ShardSpec};
+use paraspawn::coordinator::sweep::{self, ClusterKind, Engine, ScenarioMatrix};
+use paraspawn::coordinator::wsweep::{self, WorkloadMatrix, WorkloadSpec};
+use paraspawn::util::rng::Rng;
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+const THREADS: usize = 2;
+
+const SWEEP_SINKS: [&str; 6] = [
+    "sweep_summary.csv",
+    "sweep_samples.csv",
+    "sweep_phases.csv",
+    "sweep_summary.json",
+    "sweep_samples.json",
+    "sweep_phases.json",
+];
+const WORKLOAD_SINKS: [&str; 4] = [
+    "workload_summary.csv",
+    "workload_jobs.csv",
+    "workload_summary.json",
+    "workload_jobs.json",
+];
+
+/// A fresh scratch directory unique to this test + process.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("paraspawn-shardconf-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("creating scratch dir");
+    dir
+}
+
+fn assert_same_files(unsharded: &Path, merged: &Path, names: &[&str], what: &str) {
+    for name in names {
+        let a = std::fs::read(unsharded.join(name))
+            .unwrap_or_else(|e| panic!("{what}: unsharded sink {name} missing: {e}"));
+        let b = std::fs::read(merged.join(name))
+            .unwrap_or_else(|e| panic!("{what}: merged sink {name} missing: {e}"));
+        assert_eq!(
+            a, b,
+            "{what}: merged {name} is not byte-identical to the unsharded run"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Boundary math
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bounds_partition_every_length_exactly_once() {
+    for len in 0..48usize {
+        for count in 1..=13usize {
+            let mut expect_start = 0usize;
+            let mut sizes = Vec::new();
+            for index in 1..=count {
+                let spec = ShardSpec { index, count };
+                let (start, end) = spec.bounds(len);
+                assert_eq!(start, expect_start, "gap/overlap at shard {index}/{count}, len {len}");
+                assert!(end >= start);
+                sizes.push(end - start);
+                expect_start = end;
+            }
+            assert_eq!(expect_start, len, "shards of {count} do not cover len {len}");
+            // Balanced: sizes differ by at most one.
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced split for len {len}, count {count}: {sizes:?}");
+            // N > len leaves exactly N - len shards empty.
+            if count > len {
+                assert_eq!(sizes.iter().filter(|&&s| s == 0).count(), count - len);
+            }
+        }
+    }
+}
+
+#[test]
+fn shard_spec_parse_accepts_and_rejects() {
+    let s = ShardSpec::parse("2/3").expect("2/3 parses");
+    assert_eq!((s.index, s.count), (2, 3));
+    assert_eq!(s.dir_name(), "shard-2-of-3");
+    assert_eq!(s.label(), "2/3");
+    assert_eq!(ShardSpec::parse(" 1 / 1 ").expect("whitespace ok").count, 1);
+    for bad in ["0/3", "4/3", "3", "x/y", "1/0", "/", ""] {
+        assert!(ShardSpec::parse(bad).is_err(), "{bad:?} should be rejected");
+    }
+}
+
+/// A random Mini-cluster matrix: random pair set, config subset, reps.
+fn random_matrix(rng: &mut Rng) -> ScenarioMatrix {
+    let all = sweep::mn5_expand_configs();
+    let nconf = rng.usize_in(1, all.len() + 1);
+    let mut pairs = BTreeSet::new();
+    for _ in 0..rng.usize_in(1, 6) {
+        // `i == n` pairs are legal inputs the expansion skips.
+        pairs.insert((rng.usize_in(1, 5), rng.usize_in(1, 9)));
+    }
+    ScenarioMatrix::new()
+        .clusters(vec![ClusterKind::Mini])
+        .configs(all.into_iter().take(nconf).collect())
+        .pairs(pairs.into_iter().collect())
+        .reps(rng.usize_in(1, 4))
+        .seed(rng.next_u64())
+}
+
+#[test]
+fn random_matrices_cover_exactly_once_for_all_splits() {
+    let mut rng = Rng::new(0x5eed_cafe);
+    for trial in 0..25 {
+        let m = random_matrix(&mut rng);
+        let matrices = vec![m];
+        let full: Vec<(sweep::CellKey, usize)> =
+            matrices.iter().flat_map(|m| m.tasks()).map(|t| (t.cell, t.rep)).collect();
+        let chunks = shard::sweep_cell_chunks(&matrices).expect("chunking succeeds");
+        let ncells = chunks.len();
+        for count in [1, 2, 3, 5, ncells.max(1), ncells + 4] {
+            // Each worker recomputes the chunk list from the matrix
+            // independently (as separate machines would) and takes only
+            // its own slice; the reassembly must be the full task list.
+            let mut union: Vec<(sweep::CellKey, usize)> = Vec::new();
+            for index in 1..=count {
+                let worker_chunks = shard::sweep_cell_chunks(&matrices).expect("worker chunking");
+                let (start, end) = ShardSpec { index, count }.bounds(worker_chunks.len());
+                assert_eq!(worker_chunks.len(), ncells, "workers disagree on the cell list");
+                for (_, tasks) in &worker_chunks[start..end] {
+                    union.extend(tasks.iter().map(|t| (t.cell.clone(), t.rep)));
+                }
+            }
+            assert_eq!(
+                union, full,
+                "trial {trial}, {count} shards: union of slices is not the exact task list"
+            );
+        }
+    }
+}
+
+#[test]
+fn preset_group_chunks_are_whole_cells_and_unique() {
+    // A multi-matrix preset group (the paper sweep) chunks cleanly:
+    // repetitions never straddle a chunk, and cells are globally unique.
+    let matrices = sweep::preset_group("mn5").expect("mn5 preset group exists");
+    let chunks = shard::sweep_cell_chunks(&matrices).expect("preset group chunks");
+    let mut seen = BTreeSet::new();
+    for (cell, tasks) in &chunks {
+        assert!(!tasks.is_empty());
+        assert!(tasks.iter().all(|t| t.cell == *cell), "chunk mixes cells");
+        let reps: Vec<usize> = tasks.iter().map(|t| t.rep).collect();
+        assert_eq!(reps, (0..reps.len()).collect::<Vec<_>>(), "reps not contiguous");
+        assert!(seen.insert(cell.clone()), "duplicate cell across the group");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Differential byte-identity
+// ---------------------------------------------------------------------------
+
+/// A small Mini-cluster matrix that is cheap on the simulated engine.
+fn mini_matrix() -> ScenarioMatrix {
+    ScenarioMatrix::new()
+        .clusters(vec![ClusterKind::Mini])
+        .configs(sweep::mn5_expand_configs().into_iter().take(2).collect())
+        .pairs(vec![(1, 2), (2, 4), (1, 4)])
+        .reps(2)
+        .seed(7)
+}
+
+/// Run `matrices` unsharded into `dir` (the exact single-machine path:
+/// `run_tasks_engine` + `SweepResults::write`).
+fn run_unsharded_sweep(matrices: &[ScenarioMatrix], engine: Engine, dir: &Path) {
+    let tasks: Vec<sweep::SweepTask> = matrices.iter().flat_map(|m| m.tasks()).collect();
+    let results = sweep::run_tasks_engine(tasks, THREADS, engine).expect("unsharded sweep");
+    results.write(dir, true).expect("unsharded write");
+}
+
+/// Shard `matrices` 1/N..N/N into `root`, merge, and return the merged
+/// run directory.
+fn shard_and_merge_sweep(
+    matrices: &[ScenarioMatrix],
+    engine: Engine,
+    root: &Path,
+    count: usize,
+) -> PathBuf {
+    let mut run_dir = None;
+    for index in 1..=count {
+        let spec = ShardSpec { index, count };
+        let report = shard::run_sweep_shard(matrices, engine, spec, root, true, THREADS)
+            .unwrap_or_else(|e| panic!("shard {index}/{count}: {e:#}"));
+        assert_eq!(report.outcome, ShardOutcome::Computed);
+        run_dir = Some(report.run_dir);
+    }
+    let report = shard::merge_run(root).expect("merge succeeds");
+    assert_eq!(report.shards, count);
+    assert_eq!(report.run_dir, run_dir.expect("at least one shard ran"));
+    report.run_dir
+}
+
+#[test]
+fn sweep_merge_is_byte_identical_on_both_engines() {
+    for engine in [Engine::Simulated, Engine::Analytic] {
+        let dir = scratch(&format!("sweep-{}", engine.name()));
+        let matrices = vec![mini_matrix()];
+        let unsharded = dir.join("unsharded");
+        run_unsharded_sweep(&matrices, engine, &unsharded);
+        let merged = shard_and_merge_sweep(&matrices, engine, &dir.join("sharded"), 3);
+        assert_same_files(&unsharded, &merged, &SWEEP_SINKS, engine.name());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn preset_matrix_merge_is_byte_identical() {
+    // The CLI-preset path: `--preset 4a --max-nodes 4 --reps 2` on the
+    // analytic engine, sharded 3 ways by a group of independent workers.
+    let dir = scratch("preset");
+    let m = sweep::preset("4a").expect("preset 4a exists").max_nodes(4).reps(2);
+    let matrices = vec![m];
+    let unsharded = dir.join("unsharded");
+    run_unsharded_sweep(&matrices, Engine::Analytic, &unsharded);
+    let merged = shard_and_merge_sweep(&matrices, Engine::Analytic, &dir.join("sharded"), 3);
+    assert_same_files(&unsharded, &merged, &SWEEP_SINKS, "preset 4a");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn every_tested_kn_split_is_byte_identical() {
+    // Analytic engine: cheap enough to prove byte-identity for many N,
+    // including N = 1, N equal to the cell count, and N far beyond it
+    // (some shards empty).
+    let dir = scratch("splits");
+    let matrices = vec![mini_matrix()];
+    let ncells = shard::sweep_cell_chunks(&matrices).expect("chunks").len();
+    let unsharded = dir.join("unsharded");
+    run_unsharded_sweep(&matrices, Engine::Analytic, &unsharded);
+    for count in [1, 2, 3, 4, ncells, ncells + 5] {
+        let root = dir.join(format!("n{count}"));
+        let merged = shard_and_merge_sweep(&matrices, Engine::Analytic, &root, count);
+        assert_same_files(&unsharded, &merged, &SWEEP_SINKS, &format!("{count} shards"));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A small workload matrix over a `--synth`-style trace (the same
+/// generator as `paraspawn workload --synth`).
+fn synth_workload_matrix() -> WorkloadMatrix {
+    let total_nodes = ClusterKind::Mini.cluster().len();
+    let mut m = WorkloadMatrix::for_kind(ClusterKind::Mini);
+    m.pricers = wsweep::scalar_pricers(&wsweep::default_costs());
+    m.workloads = vec![WorkloadSpec::synth(30, 9, total_nodes)];
+    m
+}
+
+#[test]
+fn workload_merge_is_byte_identical() {
+    let dir = scratch("workload");
+    let matrix = synth_workload_matrix();
+    let unsharded = dir.join("unsharded");
+    std::fs::create_dir_all(&unsharded).expect("mkdir");
+    let results = wsweep::run_workload_matrix(&matrix, THREADS).expect("unsharded workload");
+    results.write(&unsharded, true).expect("unsharded write");
+
+    let root = dir.join("sharded");
+    for index in 1..=3 {
+        let spec = ShardSpec { index, count: 3 };
+        let report = shard::run_workload_shard(&matrix, spec, &root, true, THREADS)
+            .unwrap_or_else(|e| panic!("workload shard {index}/3: {e:#}"));
+        assert_eq!(report.outcome, ShardOutcome::Computed);
+        assert_eq!(report.cells_total, matrix.len());
+    }
+    let report = shard::merge_run(&root).expect("workload merge");
+    assert_eq!(report.kind, "workload");
+    assert_eq!(report.cells, matrix.len());
+    assert_same_files(&unsharded, &report.run_dir, &WORKLOAD_SINKS, "workload");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Lifecycle: resumability and corrupt-shard refusal
+// ---------------------------------------------------------------------------
+
+#[test]
+fn complete_shards_are_skipped_and_deleted_ones_recompute() {
+    let dir = scratch("resume");
+    let matrices = vec![mini_matrix()];
+    let root = dir.join("out");
+    let run = |index: usize| {
+        shard::run_sweep_shard(
+            &matrices,
+            Engine::Analytic,
+            ShardSpec { index, count: 3 },
+            &root,
+            true,
+            THREADS,
+        )
+        .unwrap_or_else(|e| panic!("shard {index}/3: {e:#}"))
+    };
+    let mut shard2_dir = None;
+    for index in 1..=3 {
+        let r = run(index);
+        assert_eq!(r.outcome, ShardOutcome::Computed, "first pass computes");
+        if index == 2 {
+            shard2_dir = Some(r.shard_dir);
+        }
+    }
+    // Second pass: every shard's manifest validates, nothing recomputes.
+    for index in 1..=3 {
+        assert_eq!(run(index).outcome, ShardOutcome::Skipped, "complete shard re-runs");
+    }
+    // Delete one shard; only it recomputes.
+    std::fs::remove_dir_all(shard2_dir.expect("shard 2 ran")).expect("delete shard 2");
+    assert_eq!(run(1).outcome, ShardOutcome::Skipped);
+    assert_eq!(run(2).outcome, ShardOutcome::Computed, "deleted shard recomputes");
+    assert_eq!(run(3).outcome, ShardOutcome::Skipped);
+    // And the healed run still merges byte-identically.
+    let unsharded = dir.join("unsharded");
+    run_unsharded_sweep(&matrices, Engine::Analytic, &unsharded);
+    let report = shard::merge_run(&root).expect("merge after heal");
+    assert_same_files(&unsharded, &report.run_dir, &SWEEP_SINKS, "healed run");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_shard_is_refused_by_merge_and_recomputed_on_rerun() {
+    let dir = scratch("truncate");
+    let matrices = vec![mini_matrix()];
+    let root = dir.join("out");
+    let mut part_path = None;
+    for index in 1..=3 {
+        let r = shard::run_sweep_shard(
+            &matrices,
+            Engine::Analytic,
+            ShardSpec { index, count: 3 },
+            &root,
+            true,
+            THREADS,
+        )
+        .expect("shard runs");
+        if index == 2 {
+            part_path = Some(r.shard_dir.join(shard::PART_FILE));
+        }
+    }
+    let part_path = part_path.expect("shard 2 ran");
+    let intact = std::fs::read(&part_path).expect("read part");
+    std::fs::write(&part_path, &intact[..intact.len() / 2]).expect("truncate part");
+
+    let err = shard::merge_run(&root).expect_err("merge must refuse a truncated shard");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("truncated") || msg.contains("checksum") || msg.contains("validation"),
+        "error should name the corruption: {msg}"
+    );
+    // Resumability treats the damaged shard as incomplete and recomputes.
+    let r = shard::run_sweep_shard(
+        &matrices,
+        Engine::Analytic,
+        ShardSpec { index: 2, count: 3 },
+        &root,
+        true,
+        THREADS,
+    )
+    .expect("re-run over damaged shard");
+    assert_eq!(r.outcome, ShardOutcome::Computed, "damaged shard must recompute");
+    assert!(shard::merge_run(&root).is_ok(), "merge succeeds after recomputation");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_sink_bytes_are_refused() {
+    // Flip bytes in a shard's CSV sink (same length, different content):
+    // the manifest checksum must catch it.
+    let dir = scratch("bitrot");
+    let matrices = vec![mini_matrix()];
+    let root = dir.join("out");
+    let r = shard::run_sweep_shard(
+        &matrices,
+        Engine::Analytic,
+        ShardSpec { index: 1, count: 1 },
+        &root,
+        true,
+        THREADS,
+    )
+    .expect("shard runs");
+    let sink = r.shard_dir.join("sweep_summary.csv");
+    let mut bytes = std::fs::read(&sink).expect("read sink");
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x20;
+    std::fs::write(&sink, &bytes).expect("corrupt sink");
+    let err = shard::merge_run(&root).expect_err("merge must refuse corrupt sink bytes");
+    assert!(format!("{err:#}").contains("checksum"), "unexpected error: {err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn missing_shard_is_refused_with_its_index() {
+    let dir = scratch("missing");
+    let matrices = vec![mini_matrix()];
+    let root = dir.join("out");
+    let mut shard3_dir = None;
+    for index in 1..=3 {
+        let r = shard::run_sweep_shard(
+            &matrices,
+            Engine::Analytic,
+            ShardSpec { index, count: 3 },
+            &root,
+            true,
+            THREADS,
+        )
+        .expect("shard runs");
+        if index == 3 {
+            shard3_dir = Some(r.shard_dir);
+        }
+    }
+    std::fs::remove_dir_all(shard3_dir.expect("shard 3 ran")).expect("delete shard 3");
+    let err = shard::merge_run(&root).expect_err("merge must refuse an incomplete run");
+    assert!(format!("{err:#}").contains("3/3"), "error should name the missing shard: {err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn merge_binary_exits_nonzero_on_corrupt_shard() {
+    // The acceptance criterion end to end: a truncated shard file makes
+    // the real `paraspawn merge` process exit non-zero.
+    let dir = scratch("cli-corrupt");
+    let matrices = vec![mini_matrix()];
+    let root = dir.join("out");
+    let mut part_path = None;
+    for index in 1..=2 {
+        let r = shard::run_sweep_shard(
+            &matrices,
+            Engine::Analytic,
+            ShardSpec { index, count: 2 },
+            &root,
+            true,
+            THREADS,
+        )
+        .expect("shard runs");
+        if index == 1 {
+            part_path = Some(r.shard_dir.join(shard::PART_FILE));
+        }
+    }
+    let bin = env!("CARGO_BIN_EXE_paraspawn");
+    // Sanity: the intact run merges with exit code 0.
+    let ok = std::process::Command::new(bin)
+        .arg("merge")
+        .arg(&root)
+        .output()
+        .expect("spawning paraspawn merge");
+    assert!(
+        ok.status.success(),
+        "intact merge should succeed: {}",
+        String::from_utf8_lossy(&ok.stderr)
+    );
+    // Truncate a part file; the merge must now fail loudly.
+    let part_path = part_path.expect("shard 1 ran");
+    let intact = std::fs::read(&part_path).expect("read part");
+    std::fs::write(&part_path, &intact[..intact.len() - 7]).expect("truncate");
+    let bad = std::process::Command::new(bin)
+        .arg("merge")
+        .arg(&root)
+        .output()
+        .expect("spawning paraspawn merge");
+    assert!(
+        !bad.status.success(),
+        "merge over a truncated shard must exit non-zero (stdout: {})",
+        String::from_utf8_lossy(&bad.stdout)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shards_of_different_runs_do_not_collide() {
+    // Different matrices hash to different run ids, so their shard
+    // outputs land in different run directories under one --out root
+    // (the coordination-free property), and each merges independently.
+    let dir = scratch("two-runs");
+    let root = dir.join("out");
+    let a = vec![mini_matrix()];
+    let b = vec![mini_matrix().seed(8)]; // one axis differs -> new run id
+    let ra = shard::run_sweep_shard(&a, Engine::Analytic, ShardSpec { index: 1, count: 1 }, &root, true, THREADS)
+        .expect("run a");
+    let rb = shard::run_sweep_shard(&b, Engine::Analytic, ShardSpec { index: 1, count: 1 }, &root, true, THREADS)
+        .expect("run b");
+    assert_ne!(ra.run, rb.run, "distinct matrices must get distinct run ids");
+    assert_ne!(ra.run_dir, rb.run_dir);
+    assert!(shard::merge_run(&ra.run_dir).is_ok());
+    assert!(shard::merge_run(&rb.run_dir).is_ok());
+    // The shared root now holds two run dirs; a bare merge on the root
+    // must refuse to guess between them.
+    assert!(shard::merge_run(&root).is_err(), "ambiguous root must be refused");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -8,6 +8,13 @@
 //! JSON quoting of a field — fails loudly instead of silently breaking
 //! downstream parsing.
 //!
+//! The fixtures are blessed, not hand-written: a missing fixture — or
+//! `UPDATE_GOLDEN=1` in the environment after an *intentional* schema
+//! change — writes the current rendering as the new fixture (the same
+//! pattern as `replay2k_arms.txt` in `sched_conformance.rs`). Every
+//! bless is guarded by rendering twice and asserting both runs agree,
+//! so a nondeterministic renderer can never be pinned into the tree.
+//!
 //! The fixture inputs are hand-picked dyadic values (0.25, 0.125, ...)
 //! so every statistic is exact in binary and the `{:.6}`/`{:.9}`
 //! renderings are platform-independent.
@@ -22,10 +29,30 @@ fn golden_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
 }
 
-fn fixture(name: &str) -> String {
+/// Compare `render()` against the checked-in fixture `name`, blessing
+/// the fixture when it is missing or `UPDATE_GOLDEN=1` is set. The
+/// renderer runs twice first: a rendering that is not run-to-run
+/// deterministic fails before it can be blessed.
+fn check_golden(name: &str, render: impl Fn() -> String) {
+    let first = render();
+    let second = render();
+    assert_eq!(first, second, "{name}: rendering is not run-to-run deterministic");
     let path = golden_dir().join(name);
-    std::fs::read_to_string(&path)
-        .unwrap_or_else(|e| panic!("reading golden fixture {}: {e}", path.display()))
+    let update = std::env::var("UPDATE_GOLDEN").map(|v| v == "1").unwrap_or(false);
+    if update || !path.exists() {
+        std::fs::write(&path, &first)
+            .unwrap_or_else(|e| panic!("blessing {}: {e}", path.display()));
+        eprintln!("[blessed {}] commit the file to pin the sink schema", path.display());
+        return;
+    }
+    let pinned = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading golden fixture {}: {e}", path.display()));
+    assert_eq!(
+        first, pinned,
+        "{name} drifted from the blessed fixture {} \
+         (intentional schema change? re-bless with UPDATE_GOLDEN=1 and commit)",
+        path.display()
+    );
 }
 
 /// A synthetic two-cell result set covering both directions, a label
@@ -55,32 +82,32 @@ fn golden_results() -> SweepResults {
 
 #[test]
 fn summary_csv_matches_golden() {
-    assert_eq!(golden_results().summary_table().to_csv(), fixture("sweep_summary.csv"));
+    check_golden("sweep_summary.csv", || golden_results().summary_table().to_csv());
 }
 
 #[test]
 fn samples_csv_matches_golden() {
-    assert_eq!(golden_results().samples_table().to_csv(), fixture("sweep_samples.csv"));
+    check_golden("sweep_samples.csv", || golden_results().samples_table().to_csv());
 }
 
 #[test]
 fn phases_csv_matches_golden() {
-    assert_eq!(golden_results().phase_table().to_csv(), fixture("sweep_phases.csv"));
+    check_golden("sweep_phases.csv", || golden_results().phase_table().to_csv());
 }
 
 #[test]
 fn summary_json_matches_golden() {
-    assert_eq!(golden_results().summary_table().to_json(), fixture("sweep_summary.json"));
+    check_golden("sweep_summary.json", || golden_results().summary_table().to_json());
 }
 
 #[test]
 fn samples_json_matches_golden() {
-    assert_eq!(golden_results().samples_table().to_json(), fixture("sweep_samples.json"));
+    check_golden("sweep_samples.json", || golden_results().samples_table().to_json());
 }
 
 #[test]
 fn phases_json_matches_golden() {
-    assert_eq!(golden_results().phase_table().to_json(), fixture("sweep_phases.json"));
+    check_golden("sweep_phases.json", || golden_results().phase_table().to_json());
 }
 
 /// A synthetic two-cell workload result set (one FCFS baseline, one
@@ -130,71 +157,72 @@ fn golden_workload_results() -> WorkloadResults {
 
 #[test]
 fn workload_summary_csv_matches_golden() {
-    assert_eq!(
-        golden_workload_results().summary_table().to_csv(),
-        fixture("workload_summary.csv")
-    );
+    check_golden("workload_summary.csv", || golden_workload_results().summary_table().to_csv());
 }
 
 #[test]
 fn workload_jobs_csv_matches_golden() {
-    assert_eq!(golden_workload_results().jobs_table().to_csv(), fixture("workload_jobs.csv"));
+    check_golden("workload_jobs.csv", || golden_workload_results().jobs_table().to_csv());
 }
 
 #[test]
 fn workload_summary_json_matches_golden() {
-    assert_eq!(
-        golden_workload_results().summary_table().to_json(),
-        fixture("workload_summary.json")
-    );
+    check_golden("workload_summary.json", || {
+        golden_workload_results().summary_table().to_json()
+    });
 }
 
 #[test]
 fn workload_jobs_json_matches_golden() {
-    assert_eq!(golden_workload_results().jobs_table().to_json(), fixture("workload_jobs.json"));
+    check_golden("workload_jobs.json", || golden_workload_results().jobs_table().to_json());
 }
 
-/// `WorkloadResults::write` must emit exactly the golden workload file
-/// set — the contract of the `paraspawn workload --out` sinks the CI
-/// replay smoke asserts against.
+/// `WorkloadResults::write` must emit exactly the expected workload file
+/// set, with file bytes identical to the in-memory table renderings —
+/// the contract of the `paraspawn workload --out` sinks the CI replay
+/// smoke asserts against. (Compared against the renderers, not the
+/// fixtures, so this holds even mid-bless.)
 #[test]
 fn workload_write_emits_the_golden_file_set() {
     let dir = std::env::temp_dir().join(format!("paraspawn-wgolden-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
-    golden_workload_results().write(&dir, true).unwrap();
-    for name in [
-        "workload_summary.csv",
-        "workload_jobs.csv",
-        "workload_summary.json",
-        "workload_jobs.json",
+    let r = golden_workload_results();
+    r.write(&dir, true).unwrap();
+    for (name, expect) in [
+        ("workload_summary.csv", r.summary_table().to_csv()),
+        ("workload_jobs.csv", r.jobs_table().to_csv()),
+        ("workload_summary.json", r.summary_table().to_json()),
+        ("workload_jobs.json", r.jobs_table().to_json()),
     ] {
         let written = std::fs::read_to_string(dir.join(name))
             .unwrap_or_else(|e| panic!("write() did not produce {name}: {e}"));
-        assert_eq!(written, fixture(name), "byte mismatch in {name}");
+        assert_eq!(written, expect, "byte mismatch in {name}");
     }
     let _ = std::fs::remove_dir_all(&dir);
 }
 
-/// `SweepResults::write` must emit exactly the golden files (same
-/// basenames, same bytes) — the contract the CI smoke tests rely on.
+/// `SweepResults::write` must emit exactly the expected files (same
+/// basenames, bytes identical to the in-memory table renderings) — the
+/// contract the CI smoke tests and the shard/merge round-trip rely on.
 #[test]
 fn write_emits_the_golden_file_set() {
     let dir = std::env::temp_dir().join(format!("paraspawn-golden-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
-    golden_results().write(&dir, true).unwrap();
-    for name in [
-        "sweep_summary.csv",
-        "sweep_samples.csv",
-        "sweep_phases.csv",
-        "sweep_summary.json",
-        "sweep_samples.json",
-        "sweep_phases.json",
+    let r = golden_results();
+    r.write(&dir, true).unwrap();
+    for (name, expect) in [
+        ("sweep_summary.csv", r.summary_table().to_csv()),
+        ("sweep_samples.csv", r.samples_table().to_csv()),
+        ("sweep_phases.csv", r.phase_table().to_csv()),
+        ("sweep_summary.json", r.summary_table().to_json()),
+        ("sweep_samples.json", r.samples_table().to_json()),
+        ("sweep_phases.json", r.phase_table().to_json()),
     ] {
         let written = std::fs::read_to_string(dir.join(name))
             .unwrap_or_else(|e| panic!("write() did not produce {name}: {e}"));
-        assert_eq!(written, fixture(name), "byte mismatch in {name}");
+        assert_eq!(written, expect, "byte mismatch in {name}");
     }
     let _ = std::fs::remove_dir_all(&dir);
 }
