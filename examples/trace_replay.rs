@@ -1,19 +1,22 @@
 //! Paper-scale SWF trace replay under the pricing axis: the bundled
 //! 2000+-job shrink-heavy trace (MN5-shaped, 32 nodes × 112 cores)
 //! replayed end-to-end under the scalar TS/SS cost models, the exact
-//! analytic per-event pricers *and* the cluster-state-aware stateful
-//! pricers, reporting the makespan / mean-wait / reconfig-node-seconds
-//! deltas per strategy.
+//! analytic per-event pricers, the cluster-state-aware stateful
+//! pricers *and* the per-resize autotuner, reporting the makespan /
+//! mean-wait / reconfig-node-seconds deltas per strategy.
 //!
 //! The acceptance bar this example demonstrates: the full replay (all
 //! policy × pricing cells) finishes in well under ten seconds; the
 //! analytic pricer reproduces the paper's qualitative result at
 //! workload scale — TS yields strictly lower reconfiguration
-//! node-seconds and makespan than SS on a shrink-heavy trace — and the
+//! node-seconds and makespan than SS on a shrink-heavy trace — the
 //! stateful pricer never pays more reconfiguration node-seconds than
 //! the canonical analytic one (on a warm cluster, expansions skip the
 //! cold daemon rollout the canonical pair always charges, and victims
-//! are picked by predicted cost).
+//! are picked by predicted cost) — and the autotuned arm, which argmins
+//! the state-aware predicted cost over the TS-enabling
+//! (strategy × method) grid at every resize event, never pays more
+//! reconfiguration node-seconds than the best of the six fixed arms.
 //!
 //! ```bash
 //! cargo run --release --example trace_replay
@@ -21,8 +24,8 @@
 
 use paraspawn::coordinator::sweep::ClusterKind;
 use paraspawn::coordinator::wsweep::{
-    analytic_pricers, default_costs, kind_cost_model, run_workload_matrix, scalar_pricers,
-    stateful_pricers, WorkloadMatrix, WorkloadSpec,
+    analytic_pricers, auto_pricers, default_costs, kind_cost_model, run_workload_matrix,
+    scalar_pricers, stateful_pricers, WorkloadMatrix, WorkloadSpec,
 };
 use paraspawn::rms::sched::{self, AnalyticPricer, ResizePricer, SchedPolicy};
 use std::path::PathBuf;
@@ -41,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     sched::mark_malleable(&mut jobs, 0.7, 4, total_nodes, 2025);
     let n_jobs = jobs.len();
     println!(
-        "replaying {n_jobs} jobs on {} ({} nodes x {} cores) under 6 pricing arms",
+        "replaying {n_jobs} jobs on {} ({} nodes x {} cores) under 7 pricing arms",
         cluster.name, total_nodes, cores
     );
     assert!(n_jobs >= 2000, "the bundled trace must stay paper-scale (got {n_jobs})");
@@ -69,6 +72,7 @@ fn main() -> anyhow::Result<()> {
     let mut pricers = scalar_pricers(&default_costs());
     pricers.extend(analytic_pricers(&cost, None, 0));
     pricers.extend(stateful_pricers(&cost, None, 0));
+    pricers.extend(auto_pricers(&cost, 0));
     let matrix = WorkloadMatrix {
         policies: vec![SchedPolicy::Fcfs, SchedPolicy::Malleable],
         pricers,
@@ -138,6 +142,29 @@ fn main() -> anyhow::Result<()> {
         "stateful TS reconfig node-seconds {} must not exceed analytic TS {}",
         ts_st.reconfig_node_seconds,
         ts_x.reconfig_node_seconds
+    );
+
+    // The autotuned arm argmins over a grid that contains every fixed
+    // arm's per-event choice, priced in the same cluster state — so at
+    // replay scale it must not pay more reconfiguration node-seconds
+    // than the best of the six fixed arms.
+    let ss_st = get("malleable", "SS-state");
+    let auto = get("malleable", "auto");
+    let best_fixed = [&ts_s, &ss_s, &ts_x, &ss_x, &ts_st, &ss_st]
+        .iter()
+        .map(|r| r.reconfig_node_seconds)
+        .fold(f64::INFINITY, f64::min);
+    let decided = auto.decisions.iter().filter(|d| !d.is_empty()).count();
+    println!(
+        "auto vs best fixed arm (malleable policy): {:.1} vs {:.1} reconfig node-s \
+         ({decided} jobs carry per-event decisions)",
+        auto.reconfig_node_seconds, best_fixed
+    );
+    assert!(
+        auto.reconfig_node_seconds <= best_fixed,
+        "auto reconfig node-seconds {} must not exceed the best fixed arm {}",
+        auto.reconfig_node_seconds,
+        best_fixed
     );
 
     // Wall-clock budget (shared CI runners can override).

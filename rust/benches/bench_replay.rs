@@ -4,11 +4,13 @@
 //! Replays a seeded synthetic sustained-backlog trace
 //! (`testing::synth_trace` — the same generator as
 //! `paraspawn workload --synth N`) through the refactored event loop
-//! under all three policies with scalar TS pricing, measures the frozen
-//! pre-refactor loop (`rms::sched::reference`) on a capped prefix of
-//! the same trace as the speedup denominator, records analytic and
-//! stateful memo occupancy on a warm-up prefix, and writes everything
-//! to `BENCH_replay.json` (schema `paraspawn-bench-replay-v1`).
+//! under all three policies with scalar TS pricing plus the autotuned
+//! pricing arm (per-event grid argmin) on a capped prefix, measures the
+//! frozen pre-refactor loop (`rms::sched::reference`) on a capped
+//! prefix of the same trace as the speedup denominator, records
+//! analytic / stateful / auto memo occupancy on a warm-up prefix, and
+//! writes everything to `BENCH_replay.json` (schema
+//! `paraspawn-bench-replay-v1`).
 //!
 //! Modes:
 //!
@@ -22,6 +24,8 @@
 //! `PARASPAWN_BENCH_REF_JOBS` the reference-loop prefix (default
 //! 5 000 — the old loop is O(cluster + running + queue) per event, the
 //! very cost this PR removed, so it gets a shorter leash),
+//! `PARASPAWN_BENCH_AUTO_JOBS` the autotuned arm's prefix (default
+//! 5 000 — it prices whole candidate grids per distinct state profile),
 //! `PARASPAWN_BENCH_SEED` the trace seed, `--out PATH` the artifact
 //! path.
 //!
@@ -30,7 +34,7 @@
 use paraspawn::config::CostModel;
 use paraspawn::rms::sched::reference::schedule_with_pricer_reference;
 use paraspawn::rms::sched::{
-    schedule_with_pricer, AnalyticPricer, SchedPolicy, SchedResult, StatefulPricer,
+    schedule_with_pricer, AnalyticPricer, AutoPricer, SchedPolicy, SchedResult, StatefulPricer,
 };
 use paraspawn::rms::workload::{JobSpec, ReconfigCostModel};
 use paraspawn::rms::AllocPolicy;
@@ -123,6 +127,31 @@ fn main() {
         arms.push(Arm { name, jobs: n_jobs, seconds: secs, events: res.events });
     }
 
+    // The autotuned pricing arm on a capped prefix: the heaviest pricer
+    // (per-event (strategy, method) argmin against the live cluster
+    // state), gated so a selector-layer regression shows up as a rate
+    // drop. The decision memo keeps it replay-fast, but every distinct
+    // state profile is still priced once across the whole grid.
+    let auto_jobs = env_usize("PARASPAWN_BENCH_AUTO_JOBS", SMOKE_JOBS).min(n_jobs);
+    let auto_prefix = &jobs[..auto_jobs];
+    let mut auto_pricer = AutoPricer::new(cluster.clone(), CostModel::mn5(), 0);
+    let t0 = Instant::now();
+    let auto_res = schedule_with_pricer(
+        &cluster,
+        AllocPolicy::WholeNodes,
+        SchedPolicy::Malleable,
+        &mut auto_pricer,
+        auto_prefix,
+    )
+    .expect("auto arm replays the prefix");
+    let auto_secs = t0.elapsed().as_secs_f64();
+    eprintln!(
+        "  auto: {auto_jobs} jobs / {} events in {auto_secs:.2}s = {:.0} jobs/s",
+        auto_res.events,
+        auto_jobs as f64 / auto_secs.max(1e-9),
+    );
+    arms.push(Arm { name: "auto", jobs: auto_jobs, seconds: auto_secs, events: auto_res.events });
+
     // The frozen pre-refactor loop on a capped prefix of the same
     // trace: the speedup denominator. Same policy as the headline arm
     // (malleable), same pricer, bit-identical results — only the
@@ -171,11 +200,23 @@ fn main() {
         memo_prefix,
     )
     .expect("stateful memo prefix schedules");
+    let mut auto_memo = AutoPricer::new(cluster.clone(), CostModel::mn5(), 0);
+    schedule_with_pricer(
+        &cluster,
+        AllocPolicy::WholeNodes,
+        SchedPolicy::Malleable,
+        &mut auto_memo,
+        memo_prefix,
+    )
+    .expect("auto memo prefix schedules");
     eprintln!(
-        "  memo occupancy after {} jobs: {} analytic pairs, {} state profiles",
+        "  memo occupancy after {} jobs: {} analytic pairs, {} state profiles, \
+         {} auto decision profiles ({} auto pairs)",
         memo_prefix.len(),
         analytic.cached_pairs(),
         stateful.cached_states(),
+        auto_memo.cached_states(),
+        auto_memo.cached_pairs(),
     );
 
     let arm_lines: Vec<String> = arms.iter().map(Arm::json).collect();
@@ -184,7 +225,8 @@ fn main() {
          \"jobs\": {},\n  \"cluster_nodes\": {},\n  \"seed\": {},\n  \"arms\": [\n{}\n  ],\n  \
          \"reference\": {{\"jobs\": {}, \"seconds\": {:.3}, \"jobs_per_sec\": {:.1}}},\n  \
          \"speedup_vs_reference\": {:.2},\n  \
-         \"memo\": {{\"prefix_jobs\": {}, \"analytic_pairs\": {}, \"state_profiles\": {}}}\n}}\n",
+         \"memo\": {{\"prefix_jobs\": {}, \"analytic_pairs\": {}, \"state_profiles\": {}, \
+         \"auto_state_profiles\": {}, \"auto_pairs\": {}}}\n}}\n",
         if full { "full" } else { "smoke" },
         n_jobs,
         NODES,
@@ -197,6 +239,8 @@ fn main() {
         memo_prefix.len(),
         analytic.cached_pairs(),
         stateful.cached_states(),
+        auto_memo.cached_states(),
+        auto_memo.cached_pairs(),
     );
     std::fs::write(&out, json).unwrap_or_else(|e| panic!("writing {}: {e}", out.display()));
     println!("[written {}]", out.display());

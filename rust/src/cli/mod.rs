@@ -509,21 +509,22 @@ fn cmd_workload(a: &Args) -> Result<()> {
     }
     let threads = a.usize_or("threads", sweep::default_threads())?;
 
-    // The pricing axis: scalar (two fitted constants per arm), analytic
-    // (exact per-event prices from the closed-form engine against the
-    // canonical empty-cluster pair), stateful (per-event prices against
-    // the actual cluster state, which also makes the malleable policy
-    // pick shrink victims and expansion targets by predicted cost),
+    // The pricing axis ([`wsweep::ArmFamily`], the single source for
+    // what `--pricing` accepts and what each selection expands to):
+    // scalar (two fitted constants per arm), analytic (exact per-event
+    // prices from the closed-form engine against the canonical
+    // empty-cluster pair), stateful (per-event prices against the
+    // actual cluster state, which also makes the malleable policy pick
+    // shrink victims and expansion targets by predicted cost), auto
+    // (per-event (strategy, method) argmin over the TS-enabling grid),
     // or combinations side-by-side.
     let pricing = a.get("pricing").unwrap_or("scalar");
-    let (scalar_arm, analytic_arm, stateful_arm) = match pricing {
-        "scalar" => (true, false, false),
-        "analytic" => (false, true, false),
-        "stateful" => (false, false, true),
-        "both" => (true, true, false),
-        "all" => (true, true, true),
-        other => bail!("unknown pricing '{other}' (scalar | analytic | stateful | both | all)"),
-    };
+    let families = wsweep::ArmFamily::parse_selection(pricing)
+        .with_context(|| format!("unknown pricing '{pricing}' ({})", wsweep::ArmFamily::HELP))?;
+    let scalar_arm = families.contains(&wsweep::ArmFamily::Scalar);
+    let analytic_arm = families.contains(&wsweep::ArmFamily::Analytic);
+    let stateful_arm = families.contains(&wsweep::ArmFamily::Stateful);
+    let auto_arm = families.contains(&wsweep::ArmFamily::Auto);
     let strategy = match a.get("strategy") {
         Some(s) => Some(SpawnStrategy::parse(s).with_context(|| {
             format!("unknown strategy '{s}' (plain|single|nodebynode|hypercube|diffusive)")
@@ -533,17 +534,18 @@ fn cmd_workload(a: &Args) -> Result<()> {
     if strategy.is_some() && !(analytic_arm || stateful_arm) {
         bail!(
             "--strategy only affects analytic/stateful pricing \
-             (use --pricing analytic|stateful|both|all)"
+             (use --pricing analytic|stateful|both|all; the auto arm \
+             chooses its strategy per resize event)"
         );
     }
     if a.get("cost-from-sweep").is_some() && !scalar_arm {
         bail!("--cost-from-sweep only affects scalar pricing (use --pricing scalar|both|all)");
     }
     let data_bytes = a.usize_or("data-bytes", 0)? as u64;
-    if data_bytes > 0 && !(analytic_arm || stateful_arm) {
+    if data_bytes > 0 && !(analytic_arm || stateful_arm || auto_arm) {
         bail!(
-            "--data-bytes only affects analytic/stateful pricing \
-             (use --pricing analytic|stateful|both|all)"
+            "--data-bytes only affects analytic/stateful/auto pricing \
+             (use --pricing analytic|stateful|auto|both|all)"
         );
     }
     let mut pricers: Vec<wsweep::PricerSpec> = Vec::new();
@@ -587,6 +589,20 @@ fn cmd_workload(a: &Args) -> Result<()> {
                 "pricing {} (stateful): per-event prices against the actual cluster state \
                  of '{}' (daemon warmth, concrete nodes); victim/target selection by \
                  predicted resize seconds",
+                p.label,
+                cluster.name
+            );
+        }
+        pricers.extend(arms);
+    }
+    if auto_arm {
+        let cost = wsweep::kind_cost_model(kind);
+        let arms = wsweep::auto_pricers(&cost, data_bytes);
+        for p in &arms {
+            eprintln!(
+                "pricing {} (auto): per-event (strategy, method) argmin over the TS-enabling \
+                 grid, priced against the actual cluster state of '{}'; chosen pairs land \
+                 in the jobs sink's decision column",
                 p.label,
                 cluster.name
             );
@@ -750,7 +766,7 @@ USAGE:
   paraspawn workload [--cluster mn5|nasp|mini] [--nodes N] [--jobs J]
                      [--seed S] [--malleable-frac F]
                      [--policy fcfs|easy|malleable|all]
-                     [--pricing scalar|analytic|stateful|both|all]
+                     [--pricing scalar|analytic|stateful|auto|both|all]
                      [--strategy plain|single|nodebynode|hypercube|diffusive]
                      [--data-bytes B]
                      [--trace FILE.swf] [--synth N] [--save-trace FILE.swf]
@@ -773,8 +789,11 @@ with thousands of jobs replay with exact prices at scalar speed;
 'stateful' prices each resize against the actual cluster state (the
 concrete nodes gained/lost, daemon warmth, co-located load) and makes
 the malleable policy pick shrink victims and expansion targets by
-predicted resize seconds. 'both' = scalar + analytic; 'all' adds the
-stateful arms.
+predicted resize seconds; 'auto' fixes nothing up front — at every
+resize event it argmins the state-aware predicted cost over the
+TS-enabling (strategy x method) grid, and the chosen pair per event
+lands in the jobs sink's decision column. 'both' = scalar + analytic;
+'all' = every family.
 
 Workload sources: --trace replays an SWF file; --synth N generates a
 seeded sustained-backlog trace of N jobs (testing::synth_trace, the

@@ -6,6 +6,13 @@
 //! The cost model is a linear feature model evaluated either by the
 //! AOT-compiled JAX/Pallas kernel (one PJRT call scores all candidates)
 //! or by a bit-identical host fallback when artifacts are absent.
+//!
+//! This module is the *offline advisor* face of the shared selector
+//! layer ([`crate::selector`]): candidate enumeration and the NaN-safe
+//! argmin live there (shared with the scheduler's inner-loop
+//! [`crate::rms::sched::AutoPricer`]); this module contributes the two
+//! scoring backends — the linear feature proxy ([`select`]) and the
+//! model-exact analytic scorer ([`select_exact`]).
 
 use crate::config::CostModel;
 use crate::mam::connect::connection_rounds;
@@ -13,20 +20,14 @@ use crate::mam::model::predict_resize_time;
 use crate::mam::plan::{plan_steps, Plan};
 use crate::mam::{Method, SpawnStrategy};
 use crate::runtime::CostModelKernel;
+use crate::selector::best_index;
 use crate::topology::Cluster;
+
+pub use crate::selector::Candidate;
 
 /// Number of features per candidate (must match `python/compile`'s
 /// `cost_f`).
 pub const N_FEATURES: usize = 8;
-
-/// A candidate configuration for an upcoming reconfiguration.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct Candidate {
-    /// Process-management method.
-    pub method: Method,
-    /// Spawning strategy.
-    pub strategy: SpawnStrategy,
-}
 
 /// Context for scoring: the plan geometry plus how many shrinks the job
 /// expects before it ends (the term that makes parallel strategies pay
@@ -128,20 +129,9 @@ pub fn select(
             .expect("cost-model kernel execution failed"),
         None => host_scores(&rows, candidates.len(), &coeffs),
     };
-    // NaN-safe minimum: a poisoned score must neither panic the harness
-    // nor win the selection (NaNs compare greater than every finite
-    // score, whatever their sign bit).
-    let best = scores
-        .iter()
-        .enumerate()
-        .min_by(|a, b| match (a.1.is_nan(), b.1.is_nan()) {
-            (true, true) => std::cmp::Ordering::Equal,
-            (true, false) => std::cmp::Ordering::Greater,
-            (false, true) => std::cmp::Ordering::Less,
-            (false, false) => a.1.total_cmp(b.1),
-        })
-        .map(|(i, _)| i)
-        .unwrap();
+    // The shared NaN-safe argmin: a poisoned score must neither panic
+    // the harness nor win the selection.
+    let best = best_index(&scores);
     (best, scores)
 }
 
@@ -192,12 +182,7 @@ pub fn select_exact(
     for c in candidates {
         scores.push(exact_score(cluster, cost, &mk_plan(c), ctx)?);
     }
-    let best = scores
-        .iter()
-        .enumerate()
-        .min_by(|a, b| a.1.total_cmp(b.1))
-        .map(|(i, _)| i)
-        .unwrap();
+    let best = best_index(&scores);
     Ok((best, scores))
 }
 

@@ -295,14 +295,19 @@ fn render_part(run: &str, shard: ShardSpec, payload: &PartPayload) -> Result<Str
                     res.events,
                     res.jobs.len(),
                 );
-                for j in &res.jobs {
+                for (ji, j) in res.jobs.iter().enumerate() {
+                    // Decision tokens never contain spaces; an empty
+                    // column (fixed arms) rides as the `-` sentinel,
+                    // unambiguous because real tokens always hold ':'.
+                    let d = res.decisions.get(ji).map(String::as_str).unwrap_or("");
                     let _ = writeln!(
                         b,
-                        "job {} {} {} {}",
+                        "job {} {} {} {} {}",
                         f64_hex(j.start),
                         f64_hex(j.finish),
                         f64_hex(j.wait),
-                        j.reconfigs
+                        j.reconfigs,
+                        if d.is_empty() { "-" } else { d }
                     );
                 }
             }
@@ -429,6 +434,7 @@ pub fn parse_part(text: &str) -> Result<Part> {
                 }
                 let njobs: usize = f[11].parse().context("bad job count")?;
                 let mut jobs = Vec::with_capacity(njobs);
+                let mut decisions = Vec::with_capacity(njobs);
                 for _ in 0..njobs {
                     let job_line = next(&mut lines, "job record")?;
                     let jf: Vec<&str> = job_line
@@ -436,7 +442,7 @@ pub fn parse_part(text: &str) -> Result<Part> {
                         .context("expected a 'job' record")?
                         .split(' ')
                         .collect();
-                    if jf.len() != 4 {
+                    if jf.len() != 5 {
                         bail!("malformed job record {job_line:?}");
                     }
                     jobs.push(JobOutcome {
@@ -445,6 +451,7 @@ pub fn parse_part(text: &str) -> Result<Part> {
                         wait: f64_from_hex(jf[2])?,
                         reconfigs: jf[3].parse().context("bad reconfig count")?,
                     });
+                    decisions.push(if jf[4] == "-" { String::new() } else { jf[4].to_string() });
                 }
                 let res = SchedResult {
                     makespan: f64_from_hex(f[0])?,
@@ -459,6 +466,7 @@ pub fn parse_part(text: &str) -> Result<Part> {
                     total_node_seconds: f64_from_hex(f[9])?,
                     events: f[10].parse().context("bad event count")?,
                     jobs,
+                    decisions,
                 };
                 if r.cells.insert(key, res).is_some() {
                     bail!("duplicate cell in part file");

@@ -2,8 +2,8 @@
 //! batch scheduler ([`crate::rms::sched`]), executed on the same thread
 //! pool as the reconfiguration sweeps ([`super::sweep::parallel_map`]).
 //!
-//! This closes the loop from microbenchmark to makespan along three
-//! pricing arms ([`PricerSpec`]):
+//! This closes the loop from microbenchmark to makespan along four
+//! pricing families ([`PricerSpec`], selectable via [`ArmFamily`]):
 //!
 //! * **Scalar** — the spawn-strategy medians the sweep engine measures
 //!   (Merge/TS vs the spawn-based SS baseline) become
@@ -19,6 +19,11 @@
 //!   nodes gained or lost, their daemon warmth and co-located load. The
 //!   malleable policy then picks shrink victims and expansion targets
 //!   by predicted resize seconds instead of node counts.
+//! * **Auto** — nothing is fixed up front: at every resize event the
+//!   [`crate::rms::sched::AutoPricer`] argmins the state-aware predicted
+//!   cost over the TS-enabling (strategy × method) grid
+//!   ([`crate::selector`]), and the chosen pair lands in the jobs
+//!   sink's `decision` column.
 //!
 //! Either way the scheduler turns the 1387×/20× cheaper TS shrinks into
 //! workload-level makespan and mean-wait wins — the paper's §1
@@ -34,8 +39,8 @@ use super::sweep::{parallel_map, ClusterKind, Engine, ScenarioMatrix};
 use crate::config::CostModel;
 use crate::mam::SpawnStrategy;
 use crate::rms::sched::{
-    schedule_with_pricer, AnalyticPricer, ResizePricer, SchedPolicy, SchedResult, ShrinkPricing,
-    StatefulPricer,
+    schedule_with_pricer, AnalyticPricer, AutoPricer, ResizePricer, SchedPolicy, SchedResult,
+    ShrinkPricing, StatefulPricer,
 };
 use crate::rms::workload::{synthetic_workload, JobSpec, ReconfigCostModel};
 use crate::rms::AllocPolicy;
@@ -90,10 +95,20 @@ pub enum Pricing {
         /// Application payload redistributed per resize.
         data_bytes: u64,
     },
+    /// Per-resize autotuned pricing ([`crate::rms::sched::AutoPricer`]):
+    /// no fixed (strategy, shrink) pair — at every resize event the
+    /// pricer argmins the state-aware predicted cost over the
+    /// TS-enabling (strategy × method) grid ([`crate::selector`]).
+    Auto {
+        /// The calibrated per-phase cost model (e.g. [`CostModel::mn5`]).
+        cost: CostModel,
+        /// Application payload redistributed per resize.
+        data_bytes: u64,
+    },
 }
 
 /// A labelled pricing arm (e.g. `"TS"` scalar, `"TS-exact"` analytic,
-/// `"TS-state"` stateful).
+/// `"TS-state"` stateful, `"auto"` autotuned).
 #[derive(Clone, Debug)]
 pub struct PricerSpec {
     /// Arm label shown in the `pricing` sink column.
@@ -133,6 +148,9 @@ impl PricerSpec {
                     *shrink,
                     *data_bytes,
                 ))
+            }
+            Pricing::Auto { cost, data_bytes } => {
+                Box::new(AutoPricer::new(cluster.clone(), cost.clone(), *data_bytes))
             }
         }
     }
@@ -181,6 +199,68 @@ pub fn stateful_pricers(
         arm("TS-state", ShrinkPricing::Termination),
         arm("SS-state", ShrinkPricing::Respawn),
     ]
+}
+
+/// The autotuned pricing arm: a single `"auto"` arm whose
+/// [`crate::rms::sched::AutoPricer`] argmins the state-aware predicted
+/// cost over the TS-enabling (strategy × method) grid at every resize
+/// event. The per-event winners land in the jobs sink's `decision`
+/// column.
+pub fn auto_pricers(cost: &CostModel, data_bytes: u64) -> Vec<PricerSpec> {
+    vec![PricerSpec {
+        label: "auto".to_string(),
+        pricing: Pricing::Auto { cost: cost.clone(), data_bytes },
+    }]
+}
+
+/// One selectable family of pricing arms — the single source of truth
+/// for the CLI's `--pricing` flag and for sweep construction, so the
+/// arm lists cannot drift between the two.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArmFamily {
+    /// Scalar TS/SS: two fitted constants per arm ([`scalar_pricers`]).
+    Scalar,
+    /// Exact analytic TS-exact/SS-exact ([`analytic_pricers`]).
+    Analytic,
+    /// Cluster-state-aware TS-state/SS-state ([`stateful_pricers`]).
+    Stateful,
+    /// The per-resize autotuner, one `"auto"` arm ([`auto_pricers`]).
+    Auto,
+}
+
+impl ArmFamily {
+    /// Every family, in canonical sink order.
+    pub const ALL: [ArmFamily; 4] =
+        [ArmFamily::Scalar, ArmFamily::Analytic, ArmFamily::Stateful, ArmFamily::Auto];
+
+    /// The values `--pricing` accepts, for USAGE/help text: each family
+    /// by name, plus `both` (scalar + analytic) and `all` (every
+    /// family).
+    pub const HELP: &'static str = "scalar|analytic|stateful|auto|both|all";
+
+    /// The family's `--pricing` value.
+    pub fn name(self) -> &'static str {
+        match self {
+            ArmFamily::Scalar => "scalar",
+            ArmFamily::Analytic => "analytic",
+            ArmFamily::Stateful => "stateful",
+            ArmFamily::Auto => "auto",
+        }
+    }
+
+    /// Families selected by a `--pricing` value ([`Self::HELP`] lists
+    /// them); `None` for an unknown value.
+    pub fn parse_selection(value: &str) -> Option<Vec<ArmFamily>> {
+        match value {
+            "scalar" => Some(vec![ArmFamily::Scalar]),
+            "analytic" => Some(vec![ArmFamily::Analytic]),
+            "stateful" => Some(vec![ArmFamily::Stateful]),
+            "auto" => Some(vec![ArmFamily::Auto]),
+            "both" => Some(vec![ArmFamily::Scalar, ArmFamily::Analytic]),
+            "all" => Some(ArmFamily::ALL.to_vec()),
+            _ => None,
+        }
+    }
 }
 
 /// The per-phase [`CostModel`] the paper calibrates for a cluster kind
@@ -396,6 +476,7 @@ impl WorkloadResults {
             "finish_s",
             "wait_s",
             "reconfigs",
+            "decision",
         ]);
         for ((w, p, c), r) in &self.cells {
             for (j, o) in r.jobs.iter().enumerate() {
@@ -408,6 +489,7 @@ impl WorkloadResults {
                     format!("{:.3}", o.finish),
                     format!("{:.3}", o.wait),
                     o.reconfigs.to_string(),
+                    r.decisions.get(j).cloned().unwrap_or_default(),
                 ]);
             }
         }
@@ -592,14 +674,16 @@ pub fn default_pricers() -> Vec<PricerSpec> {
 }
 
 /// The workload figure: makespan / mean-wait across the three policies
-/// and six pricing arms — the sweep-calibrated scalar TS/SS cost
-/// models next to the exact analytic TS/SS per-event pricers and the
-/// cluster-state-aware TS/SS stateful pricers — on synthetic workloads.
-/// The malleability-aware policy with TS pricing is the paper's pitch;
-/// FCFS is the rigid baseline, the scalar-vs-exact columns show what
-/// per-event pricing changes at workload scale, and the exact-vs-state
-/// columns show what pricing against the real cluster state (warm
-/// daemons, price-ordered victim selection) buys on top.
+/// and seven pricing arms — the sweep-calibrated scalar TS/SS cost
+/// models next to the exact analytic TS/SS per-event pricers, the
+/// cluster-state-aware TS/SS stateful pricers and the per-resize
+/// autotuner — on synthetic workloads. The malleability-aware policy
+/// with TS pricing is the paper's pitch; FCFS is the rigid baseline,
+/// the scalar-vs-exact columns show what per-event pricing changes at
+/// workload scale, the exact-vs-state columns show what pricing against
+/// the real cluster state (warm daemons, price-ordered victim
+/// selection) buys on top, and the auto column shows what choosing
+/// (strategy, method) per resize event buys over any fixed arm.
 pub fn fig_workload(cfg: &FigureConfig) -> Result<(Table, WorkloadResults)> {
     let kind = ClusterKind::Mn5;
     let total_nodes = kind.cluster().len();
@@ -607,6 +691,7 @@ pub fn fig_workload(cfg: &FigureConfig) -> Result<(Table, WorkloadResults)> {
     let mut pricers = scalar_pricers(&costs);
     pricers.extend(analytic_pricers(&kind_cost_model(kind), None, 0));
     pricers.extend(stateful_pricers(&kind_cost_model(kind), None, 0));
+    pricers.extend(auto_pricers(&kind_cost_model(kind), 0));
     let workloads = vec![
         WorkloadSpec {
             label: "synthetic-a".to_string(),

@@ -144,6 +144,7 @@ pub mod redistrib;
 pub mod rms;
 #[allow(missing_docs)] // legacy: PJRT runtime + offline stub (feature-gated)
 pub mod runtime;
+pub mod selector;
 #[allow(missing_docs)] // legacy: virtual-time MPI substrate internals
 pub mod simmpi;
 #[allow(missing_docs)] // legacy: offline proptest stand-in

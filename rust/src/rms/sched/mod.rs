@@ -30,7 +30,7 @@
 //! seconds themselves need not be: the scalar pricer charges one
 //! constant per direction, while the analytic pricer prices an
 //! expansion (a spawn protocol) very differently from a TS shrink (pure
-//! termination — the paper's 1387×/20× gap). Two pricers ship:
+//! termination — the paper's 1387×/20× gap). Four pricers ship:
 //!
 //! * [`ReconfigCostModel`] — the scalar pricer: two fitted constants
 //!   (expand/shrink seconds), blind to node counts and cluster shape.
@@ -49,6 +49,14 @@
 //!   pricer also changes the *decisions*: the malleable policy picks
 //!   shrink victims by cheapest predicted release (not largest surplus)
 //!   and steers expansions toward warm nodes.
+//! * [`AutoPricer`] — the per-resize autotuner (`--pricing auto`):
+//!   instead of fixing one (strategy, method) pair per trace, it argmins
+//!   the state-aware predicted cost over the TS-enabling candidate grid
+//!   of the shared selector layer ([`crate::selector`]) at every resize
+//!   event, memoized per state profile, with a [`Decision::Forced`]
+//!   escape hatch per job class that reproduces the corresponding fixed
+//!   stateful arm bit-exactly. Per-event winners are recorded in
+//!   [`SchedResult::decisions`].
 //!
 //! The scheduler is deterministic: same cluster, policy, pricer and job
 //! list in, bit-identical [`SchedResult`] out. Node-seconds are conserved:
@@ -85,9 +93,10 @@ use crate::mam::model::{
     predict_resize_in_state, predict_resize_pair, state_resize_split_into, ClusterState,
 };
 use crate::mam::{Method, SpawnStrategy};
+use crate::selector::{best_index, expand_grid, shrink_grid, Candidate, Decision};
 use crate::topology::{Cluster, NodeId};
 use crate::util::rng::Rng;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 /// Work considered zero (simulation epsilon, matches `rms::workload`).
 const EPS_WORK: f64 = 1e-9;
@@ -197,6 +206,21 @@ pub trait ResizePricer {
         target: &[NodeId],
     ) -> Result<f64, String> {
         self.shrink_seconds(held.len(), target.len())
+    }
+
+    /// Declare the job whose resizes the following queries will price.
+    /// The scheduler calls this before every pricing query; the default
+    /// ignores it. The [`AutoPricer`] uses it to resolve its per-job-class
+    /// [`Decision`] (the `Forced` escape hatch keyed on `min_nodes`).
+    fn set_job(&mut self, _spec: &JobSpec) {}
+
+    /// The (method, strategy) pair the most recent pricing query *chose*,
+    /// when the pricer chooses online (the [`AutoPricer`] in
+    /// [`Decision::Inferred`] mode). `None` — the default — for fixed
+    /// arms and forced decisions, whose configuration is not a per-event
+    /// choice; the jobs sink's `decision` column stays empty for them.
+    fn last_decision(&self) -> Option<(Method, SpawnStrategy)> {
+        None
     }
 }
 
@@ -382,7 +406,7 @@ impl ResizePricer for AnalyticPricer {
 /// shape, so the cache stays as small as the analytic pricer's pair
 /// cache once every daemon is warm. On asymmetric clusters the
 /// concrete ids are part of the key.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 struct StateKey {
     shrink: bool,
     /// Source-side nodes in plan order: (warm, load, cores).
@@ -392,6 +416,49 @@ struct StateKey {
     /// Concrete `(source, rest)` node ids (asymmetric clusters only —
     /// on symmetric clusters same-profile resizes price identically).
     ids: Option<(Vec<NodeId>, Vec<NodeId>)>,
+}
+
+/// Fill a reusable [`StateKey`] probe in place from a `(src, rest)`
+/// split and `state` — the normalization shared by [`StatefulPricer`]
+/// and [`AutoPricer`]. The evaluation forces every *held* node warm
+/// (the job's own daemons run there): source nodes always, and for a
+/// shrink the dropped nodes too — normalized here so provably identical
+/// prices share one memo slot. On symmetric clusters the ids are
+/// dropped; on asymmetric ones they are copied into the probe's
+/// retained buffers.
+fn fill_state_probe(
+    probe: &mut StateKey,
+    shrink: bool,
+    state: &ClusterState,
+    cluster: &Cluster,
+    symmetric: bool,
+    src: &[NodeId],
+    rest: &[NodeId],
+) {
+    probe.shrink = shrink;
+    probe.src.clear();
+    for &n in src {
+        probe.src.push((true, state.load(n), cluster.cores(n)));
+    }
+    probe.rest.clear();
+    for &n in rest {
+        probe.rest.push((shrink || state.is_warm(n), state.load(n), cluster.cores(n)));
+    }
+    if symmetric {
+        probe.ids = None;
+    } else {
+        match &mut probe.ids {
+            Some((s, r)) => {
+                s.clear();
+                s.extend_from_slice(src);
+                r.clear();
+                r.extend_from_slice(rest);
+            }
+            None => {
+                probe.ids = Some((src.to_vec(), rest.to_vec()));
+            }
+        }
+    }
 }
 
 /// The cluster-state-aware pricer: every reconfiguration is priced by
@@ -506,42 +573,17 @@ impl StatefulPricer {
     }
 
     /// Fill the reusable probe key in place from the scratch split and
-    /// `state`. The evaluation forces every *held* node warm (the job's
-    /// own daemons run there): source nodes always, and for a shrink
-    /// the dropped nodes too — normalized here so provably identical
-    /// prices share one memo slot. On symmetric clusters the ids are
-    /// dropped; on asymmetric ones they are copied into the probe's
-    /// retained buffers.
+    /// `state` (see [`fill_state_probe`] for the normalization rules).
     fn fill_probe(&mut self, shrink: bool, state: &ClusterState) {
-        self.probe.shrink = shrink;
-        self.probe.src.clear();
-        for &n in &self.scratch_src {
-            self.probe.src.push((true, state.load(n), self.canonical.cluster.cores(n)));
-        }
-        self.probe.rest.clear();
-        for &n in &self.scratch_rest {
-            self.probe.rest.push((
-                shrink || state.is_warm(n),
-                state.load(n),
-                self.canonical.cluster.cores(n),
-            ));
-        }
-        if self.symmetric {
-            self.probe.ids = None;
-        } else {
-            match &mut self.probe.ids {
-                Some((s, r)) => {
-                    s.clear();
-                    s.extend_from_slice(&self.scratch_src);
-                    r.clear();
-                    r.extend_from_slice(&self.scratch_rest);
-                }
-                None => {
-                    self.probe.ids =
-                        Some((self.scratch_src.clone(), self.scratch_rest.clone()));
-                }
-            }
-        }
+        fill_state_probe(
+            &mut self.probe,
+            shrink,
+            state,
+            &self.canonical.cluster,
+            self.symmetric,
+            &self.scratch_src,
+            &self.scratch_rest,
+        );
     }
 
     fn price_in_state(
@@ -619,6 +661,351 @@ impl ResizePricer for StatefulPricer {
     }
 }
 
+/// The online per-resize autotuner — the seventh pricing arm
+/// (`--pricing auto`): at every reconfiguration event it argmins over
+/// the candidate (method, strategy) grid of the shared selector layer
+/// ([`crate::selector`]), pricing each candidate against the concrete
+/// cluster state through
+/// [`crate::mam::model::predict_resize_in_state`], and charges the
+/// winner. Where every fixed arm configures one answer for the whole
+/// trace, this pricer *chooses per event* — which is the paper's actual
+/// payoff surface (TS shrinks ~1387× cheaper, SS competitive on
+/// expansions).
+///
+/// Because every fixed stateful arm's per-event choice is inside the
+/// grid (see [`crate::selector::shrink_grid`]), each event's charge is
+/// `<=` what TS-state or SS-state would pay in the same state; on the
+/// bundled traces the *totals* also come out `<=` the minimum over all
+/// six fixed arms (trajectories diverge, so the totals are asserted
+/// empirically in `rust/tests/auto_pricing.rs` and
+/// `examples/trace_replay.rs`).
+///
+/// Decisions resolve per job class through the selector's
+/// [`Decision`] idiom: the default is [`Decision::Inferred`] (score the
+/// grid), and [`AutoPricer::force_class`] pins a `min_nodes` range to a
+/// [`Decision::Forced`] pair — a forced-everywhere auto run is
+/// bit-identical to the corresponding fixed stateful arm. Inferred
+/// queries are memoized per state profile like [`StatefulPricer`],
+/// storing `(seconds, winning candidate)` per profile; the memo is a
+/// `BTreeMap`, so any iteration over it is deterministic by
+/// construction (pinned by the detlint fixture pair
+/// `auto_memo_{bad,good}.rs`).
+///
+/// # Examples
+///
+/// ```
+/// use paraspawn::config::CostModel;
+/// use paraspawn::mam::model::ClusterState;
+/// use paraspawn::rms::sched::{AutoPricer, ResizePricer, StatefulPricer};
+/// use paraspawn::topology::Cluster;
+///
+/// let cluster = Cluster::mini(8, 4);
+/// let mut auto = AutoPricer::new(cluster.clone(), CostModel::mn5(), 0);
+/// let mut ts = StatefulPricer::ts(cluster.clone(), CostModel::mn5());
+/// let mut ss = StatefulPricer::ss(cluster, CostModel::mn5());
+/// let state = ClusterState::warm_all(8);
+/// let held: Vec<usize> = (0..6).collect();
+/// let kept: Vec<usize> = (0..2).collect();
+/// // Per event, the argmin never pays more than either fixed arm.
+/// let a = auto.shrink_seconds_in_state(&state, &held, &kept).unwrap();
+/// let t = ts.shrink_seconds_in_state(&state, &held, &kept).unwrap();
+/// let s = ss.shrink_seconds_in_state(&state, &held, &kept).unwrap();
+/// assert!(a <= t.min(s));
+/// ```
+#[derive(Clone, Debug)]
+pub struct AutoPricer {
+    cluster: Cluster,
+    cost: CostModel,
+    data_bytes: u64,
+    /// Homogeneous cores + single switch: node identity cannot affect a
+    /// price, so memo keys drop the ids (same rule as [`StatefulPricer`]).
+    symmetric: bool,
+    /// Selector grids, fixed per cluster (Hypercube only when
+    /// core-homogeneous); grid order is the deterministic tie-break.
+    expand_candidates: Vec<Candidate>,
+    shrink_candidates: Vec<Candidate>,
+    /// Decision for jobs no [`AutoPricer::force_class`] rule matches.
+    default_decision: Decision,
+    /// `(min_nodes lo, min_nodes hi, decision)` job-class rules, first
+    /// match wins.
+    rules: Vec<(usize, usize, Decision)>,
+    /// Decision in force for the job declared by the last `set_job`.
+    current: Decision,
+    /// Winner of the most recent *inferred* query (`None` after forced
+    /// ones — their configuration is not a per-event choice).
+    last: Option<Candidate>,
+    /// Count-based query memos: `(pre, post) -> (seconds, winner)`.
+    /// BTreeMaps on purpose — any iteration is deterministic.
+    expand_pairs: BTreeMap<(usize, usize), (f64, Candidate)>,
+    shrink_pairs: BTreeMap<(usize, usize), (f64, Candidate)>,
+    /// State-profile memo (the decision memo): normalized profile ->
+    /// `(seconds, winner)`, shared across jobs in the same state.
+    state_cache: BTreeMap<StateKey, (f64, Candidate)>,
+    /// Reusable probe + split buffers (see [`StatefulPricer`]):
+    /// steady-state memo hits allocate nothing.
+    probe: StateKey,
+    scratch_src: Vec<NodeId>,
+    scratch_rest: Vec<NodeId>,
+}
+
+impl AutoPricer {
+    /// An autotuning pricer over `cluster`, redistributing `data_bytes`
+    /// of application payload per resize. Every job defaults to
+    /// [`Decision::Inferred`].
+    pub fn new(cluster: Cluster, cost: CostModel, data_bytes: u64) -> AutoPricer {
+        let symmetric = cluster.is_core_homogeneous() && cluster.switches.len() <= 1;
+        AutoPricer {
+            symmetric,
+            expand_candidates: expand_grid(&cluster),
+            shrink_candidates: shrink_grid(&cluster),
+            cluster,
+            cost,
+            data_bytes,
+            default_decision: Decision::Inferred,
+            rules: Vec::new(),
+            current: Decision::Inferred,
+            last: None,
+            expand_pairs: BTreeMap::new(),
+            shrink_pairs: BTreeMap::new(),
+            state_cache: BTreeMap::new(),
+            probe: StateKey { shrink: false, src: Vec::new(), rest: Vec::new(), ids: None },
+            scratch_src: Vec::new(),
+            scratch_rest: Vec::new(),
+        }
+    }
+
+    /// An auto pricer whose *default* decision is
+    /// `Forced(strategy, method)` — the degenerate mode that reproduces
+    /// a fixed arm bit-exactly: `forced(auto_strategy, Merge)` is
+    /// TS-state, `forced(auto_strategy, Baseline)` is SS-state
+    /// (asserted in `rust/tests/auto_pricing.rs`).
+    pub fn forced(
+        cluster: Cluster,
+        cost: CostModel,
+        strategy: SpawnStrategy,
+        method: Method,
+        data_bytes: u64,
+    ) -> AutoPricer {
+        let mut p = AutoPricer::new(cluster, cost, data_bytes);
+        p.default_decision = Decision::Forced(strategy, method);
+        p.current = p.default_decision;
+        p
+    }
+
+    /// Pin the job class with `min_nodes` in `lo..=hi` to a forced
+    /// (strategy, method) pair — the per-job-class escape hatch. Rules
+    /// are checked in insertion order; the first match wins.
+    pub fn force_class(&mut self, lo: usize, hi: usize, strategy: SpawnStrategy, method: Method) {
+        self.rules.push((lo, hi, Decision::Forced(strategy, method)));
+    }
+
+    /// Distinct state profiles in the decision memo (cache occupancy) —
+    /// the `auto_state_profiles` stat of `BENCH_replay.json`.
+    pub fn cached_states(&self) -> usize {
+        self.state_cache.len()
+    }
+
+    /// Distinct `(pre, post)` pairs in the count-based memos.
+    pub fn cached_pairs(&self) -> usize {
+        self.expand_pairs.len() + self.shrink_pairs.len()
+    }
+
+    /// Price one state query under the current decision. Forced
+    /// decisions price the dictated pair directly (expansions always
+    /// Merge, like every fixed arm; the forced method selects the
+    /// shrink pricing) and leave no per-event decision to record.
+    /// Inferred decisions argmin over the grid, memoized per state
+    /// profile; a candidate whose prediction fails scores NaN (it can
+    /// never win), and only an all-fail query surfaces an error.
+    fn price_in_state(
+        &mut self,
+        shrink: bool,
+        state: &ClusterState,
+        held: &[NodeId],
+        target: &[NodeId],
+    ) -> Result<f64, String> {
+        match self.current {
+            Decision::Forced(strategy, method) => {
+                self.last = None;
+                let method = if shrink { method } else { Method::Merge };
+                predict_resize_in_state(
+                    &self.cluster,
+                    &self.cost,
+                    method,
+                    strategy,
+                    state,
+                    held,
+                    target,
+                    self.data_bytes,
+                )
+                .map_err(|e| format!("{e:#}"))
+            }
+            Decision::Inferred => {
+                state_resize_split_into(
+                    held,
+                    target,
+                    &mut self.scratch_src,
+                    &mut self.scratch_rest,
+                )
+                .map_err(|e| format!("{e:#}"))?;
+                fill_state_probe(
+                    &mut self.probe,
+                    shrink,
+                    state,
+                    &self.cluster,
+                    self.symmetric,
+                    &self.scratch_src,
+                    &self.scratch_rest,
+                );
+                if let Some(&(secs, winner)) = self.state_cache.get(&self.probe) {
+                    self.last = Some(winner);
+                    return Ok(secs);
+                }
+                let candidates =
+                    if shrink { &self.shrink_candidates } else { &self.expand_candidates };
+                let mut first_err: Option<String> = None;
+                let mut scores = Vec::with_capacity(candidates.len());
+                for c in candidates {
+                    match predict_resize_in_state(
+                        &self.cluster,
+                        &self.cost,
+                        c.method,
+                        c.strategy,
+                        state,
+                        held,
+                        target,
+                        self.data_bytes,
+                    ) {
+                        Ok(s) => scores.push(s),
+                        Err(e) => {
+                            if first_err.is_none() {
+                                first_err = Some(format!("{e:#}"));
+                            }
+                            scores.push(f64::NAN);
+                        }
+                    }
+                }
+                let best = best_index(&scores);
+                if scores[best].is_nan() {
+                    return Err(first_err
+                        .unwrap_or_else(|| "no viable resize candidate".to_string()));
+                }
+                let (secs, winner) = (scores[best], candidates[best]);
+                self.state_cache.insert(self.probe.clone(), (secs, winner));
+                self.last = Some(winner);
+                Ok(secs)
+            }
+        }
+    }
+
+    /// The count-based counterpart of [`AutoPricer::price_in_state`]:
+    /// canonical `(pre, post)` pairs through
+    /// [`crate::mam::model::predict_resize_pair`], memoized per pair.
+    fn price_pair(&mut self, shrink: bool, pre: usize, post: usize) -> Result<f64, String> {
+        match self.current {
+            Decision::Forced(strategy, method) => {
+                self.last = None;
+                let method = if shrink { method } else { Method::Merge };
+                predict_resize_pair(
+                    &self.cluster,
+                    &self.cost,
+                    method,
+                    strategy,
+                    pre,
+                    post,
+                    self.data_bytes,
+                )
+                .map_err(|e| format!("{e:#}"))
+            }
+            Decision::Inferred => {
+                let cache = if shrink { &self.shrink_pairs } else { &self.expand_pairs };
+                if let Some(&(secs, winner)) = cache.get(&(pre, post)) {
+                    self.last = Some(winner);
+                    return Ok(secs);
+                }
+                let candidates =
+                    if shrink { &self.shrink_candidates } else { &self.expand_candidates };
+                let mut first_err: Option<String> = None;
+                let mut scores = Vec::with_capacity(candidates.len());
+                for c in candidates {
+                    match predict_resize_pair(
+                        &self.cluster,
+                        &self.cost,
+                        c.method,
+                        c.strategy,
+                        pre,
+                        post,
+                        self.data_bytes,
+                    ) {
+                        Ok(s) => scores.push(s),
+                        Err(e) => {
+                            if first_err.is_none() {
+                                first_err = Some(format!("{e:#}"));
+                            }
+                            scores.push(f64::NAN);
+                        }
+                    }
+                }
+                let best = best_index(&scores);
+                if scores[best].is_nan() {
+                    return Err(first_err
+                        .unwrap_or_else(|| "no viable resize candidate".to_string()));
+                }
+                let (secs, winner) = (scores[best], candidates[best]);
+                let cache = if shrink { &mut self.shrink_pairs } else { &mut self.expand_pairs };
+                cache.insert((pre, post), (secs, winner));
+                self.last = Some(winner);
+                Ok(secs)
+            }
+        }
+    }
+}
+
+impl ResizePricer for AutoPricer {
+    fn expand_seconds(&mut self, pre: usize, post: usize) -> Result<f64, String> {
+        self.price_pair(false, pre, post)
+    }
+
+    fn shrink_seconds(&mut self, pre: usize, post: usize) -> Result<f64, String> {
+        self.price_pair(true, pre, post)
+    }
+
+    fn is_stateful(&self) -> bool {
+        true
+    }
+
+    fn expand_seconds_in_state(
+        &mut self,
+        state: &ClusterState,
+        held: &[NodeId],
+        target: &[NodeId],
+    ) -> Result<f64, String> {
+        self.price_in_state(false, state, held, target)
+    }
+
+    fn shrink_seconds_in_state(
+        &mut self,
+        state: &ClusterState,
+        held: &[NodeId],
+        target: &[NodeId],
+    ) -> Result<f64, String> {
+        self.price_in_state(true, state, held, target)
+    }
+
+    fn set_job(&mut self, spec: &JobSpec) {
+        self.current = self
+            .rules
+            .iter()
+            .find(|&&(lo, hi, _)| (lo..=hi).contains(&spec.min_nodes))
+            .map(|&(_, _, d)| d)
+            .unwrap_or(self.default_decision);
+    }
+
+    fn last_decision(&self) -> Option<(Method, SpawnStrategy)> {
+        self.last.map(|c| (c.method, c.strategy))
+    }
+}
+
 /// Per-job outcome of a scheduled workload (input order).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct JobOutcome {
@@ -661,6 +1048,13 @@ pub struct SchedResult {
     pub events: usize,
     /// Per-job outcomes in input order.
     pub jobs: Vec<JobOutcome>,
+    /// Per-job record of the (method, strategy) pairs an *online*
+    /// pricer chose, in input order and event order within a job:
+    /// `;`-joined `e:{method}+{strategy}` / `s:{method}+{strategy}`
+    /// tokens (`e` = expansion, `s` = shrink). Empty strings for fixed
+    /// arms and forced decisions — their configuration is not a
+    /// per-event choice. Rendered as the jobs sink's `decision` column.
+    pub decisions: Vec<String>,
 }
 
 impl SchedResult {
@@ -714,6 +1108,8 @@ struct Scheduler<'a> {
     starts: Vec<f64>,
     finishes: Vec<f64>,
     job_reconfigs: Vec<usize>,
+    /// Per-job `;`-joined decision tokens (see [`SchedResult::decisions`]).
+    job_decisions: Vec<String>,
     expands: usize,
     shrinks: usize,
     reconfig_node_seconds: f64,
@@ -784,6 +1180,7 @@ pub fn schedule_with_pricer(
         starts: vec![0.0; jobs.len()],
         finishes: vec![0.0; jobs.len()],
         job_reconfigs: vec![0; jobs.len()],
+        job_decisions: vec![String::new(); jobs.len()],
         expands: 0,
         shrinks: 0,
         reconfig_node_seconds: 0.0,
@@ -888,6 +1285,7 @@ pub fn schedule_with_pricer(
                 reconfigs: s.job_reconfigs[j],
             })
             .collect(),
+        decisions: std::mem::take(&mut s.job_decisions),
     })
 }
 
@@ -896,6 +1294,25 @@ impl Scheduler<'_> {
     fn mark_warm(&mut self, alloc: &Allocation) {
         for &(node, _) in &alloc.slots {
             self.warm[node] = true;
+        }
+    }
+
+    /// Append one decision token for an *executed* resize of `job` —
+    /// `e:`/`s:` + the chosen `method+strategy` — when the pricer made
+    /// a per-event choice (`None` for fixed arms: their sink column
+    /// stays empty, and fixed-arm results stay bit-identical to the
+    /// pre-selector loop).
+    fn record_decision(&mut self, job: usize, expand: bool, d: Option<(Method, SpawnStrategy)>) {
+        if let Some((method, strategy)) = d {
+            let dst = &mut self.job_decisions[job];
+            if !dst.is_empty() {
+                dst.push(';');
+            }
+            dst.push(if expand { 'e' } else { 's' });
+            dst.push(':');
+            dst.push_str(method.name());
+            dst.push('+');
+            dst.push_str(strategy.name());
         }
     }
 
@@ -1188,6 +1605,7 @@ impl Scheduler<'_> {
                 let deficit = need.saturating_sub(idle);
                 let give = if deficit == 0 { surplus } else { surplus.min(deficit) };
                 let post = pre - give;
+                self.pricer.set_job(&self.jobs[job]);
                 let secs = self
                     .pricer
                     .shrink_seconds(pre, post)
@@ -1245,9 +1663,13 @@ impl Scheduler<'_> {
             // candidate prices against precisely `ambient_state(its
             // alloc)` — bit-identical to the per-candidate rebuild.
             let mut state = self.ambient_state_all();
-            // (charge, job, running index, post nodes) of the cheapest
-            // predicted release so far.
-            let mut best: Option<(f64, usize, usize, usize)> = None;
+            // (charge, job, running index, post nodes, decision) of the
+            // cheapest predicted release so far. The winner's decision
+            // is captured at pricing time — `last_decision` is
+            // per-query state, so reading it after the round would
+            // report whichever candidate happened to be priced last.
+            let mut best: Option<(f64, usize, usize, usize, Option<(Method, SpawnStrategy)>)> =
+                None;
             for &i in candidates {
                 let (job, pre) = {
                     let r = &self.running[i];
@@ -1272,10 +1694,12 @@ impl Scheduler<'_> {
                 for &(node, cores) in &self.running[i].alloc.slots {
                     state.sub_load(node, cores);
                 }
+                self.pricer.set_job(&self.jobs[job]);
                 let secs = self
                     .pricer
                     .shrink_seconds_in_state(&state, &held, &kept)
                     .map_err(|reason| WorkloadError::Pricing { job, pre, post, reason })?;
+                let decision = self.pricer.last_decision();
                 for &(node, cores) in &self.running[i].alloc.slots {
                     state.add_load(node, cores);
                 }
@@ -1285,10 +1709,10 @@ impl Scheduler<'_> {
                     Some((c, j, ..)) => charge.total_cmp(&c).then(job.cmp(&j)).is_lt(),
                 };
                 if cheaper {
-                    best = Some((charge, job, i, post));
+                    best = Some((charge, job, i, post, decision));
                 }
             }
-            let Some((charge, job, i, post)) = best else {
+            let Some((charge, job, i, post, decision)) = best else {
                 return Ok(false); // no surplus left anywhere (defensive)
             };
             let r = &mut self.running[i];
@@ -1298,6 +1722,7 @@ impl Scheduler<'_> {
             self.reconfig_node_seconds += charge;
             self.shrinks += 1;
             self.job_reconfigs[job] += 1;
+            self.record_decision(job, false, decision);
         }
     }
 
@@ -1381,6 +1806,7 @@ impl Scheduler<'_> {
             match grown {
                 Ok(alloc) => {
                     let post = alloc.n_nodes();
+                    self.pricer.set_job(&self.jobs[job]);
                     let secs = if stateful {
                         // The gained nodes are claimed already, so the
                         // ambient state excludes the whole grown
@@ -1397,6 +1823,8 @@ impl Scheduler<'_> {
                         self.pricer.expand_seconds(cur, post)
                     }
                     .map_err(|reason| WorkloadError::Pricing { job, pre: cur, post, reason })?;
+                    let decision = self.pricer.last_decision();
+                    self.record_decision(job, true, decision);
                     self.mark_warm(&alloc);
                     let r = &mut self.running[i];
                     r.progress_to(self.now);

@@ -206,6 +206,10 @@ pub fn schedule_with_pricer_reference(
                 reconfigs: s.job_reconfigs[j],
             })
             .collect(),
+        // The frozen loop predates online decisions: every fixed arm's
+        // column is empty, which is exactly what the refactored loop
+        // records for them — the conformance equality stays exact.
+        decisions: vec![String::new(); jobs.len()],
     })
 }
 

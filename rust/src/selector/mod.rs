@@ -1,0 +1,219 @@
+//! The shared per-resize decision layer: candidate enumeration and the
+//! NaN-safe argmin that both decision paths of the system run on.
+//!
+//! Before this module existed the logic that chooses a (method,
+//! strategy) pair lived in two places with two duplicated argmins:
+//! [`crate::coordinator::select`] scored candidates *offline* (the
+//! advisor a user consults before submitting a job) while the
+//! [`crate::rms::sched`] pricers charged whatever fixed arm they were
+//! built with — nothing chose *per resize*, which is where the paper's
+//! payoff actually lives (TS shrinks ~1387× cheaper, SS competitive on
+//! expansions). Both paths now share this module:
+//!
+//! * [`Candidate`] — one (method, strategy) pair under consideration.
+//! * [`Decision`] — whether the answer is dictated ([`Decision::Forced`])
+//!   or chosen by scoring ([`Decision::Inferred`]); the escape hatch
+//!   that lets an operator pin a job class to a known-good pair while
+//!   everything else is autotuned.
+//! * [`best_index`] — the single NaN-safe argmin. A poisoned score
+//!   (failed prediction, overflowed feature) must neither panic nor win,
+//!   whatever its sign bit; ties resolve to the lowest index, keeping
+//!   every caller deterministic.
+//! * [`expand_grid`] / [`shrink_grid`] — the candidate grids the online
+//!   autotuner ([`crate::rms::sched::AutoPricer`]) argmins over at each
+//!   resize event.
+//!
+//! # Why the grids are TS-enabling only
+//!
+//! The paper's termination shrink (TS, §4.7) requires the job's layout
+//! to keep every `MPI_COMM_WORLD` on a single node — a property only
+//! the per-node spawning strategies establish
+//! ([`SpawnStrategy::enables_ts`]). A greedy per-event argmin that
+//! could pick `Plain` for a cheap expansion would price itself into a
+//! corner: every later shrink of that job would be forced to respawn.
+//! The grids therefore only enumerate TS-enabling strategies, so the
+//! selector never trades a small expansion win for the loss of the
+//! 1387× shrink discount — and every fixed arm's per-event choice stays
+//! inside the grid, which is what makes `auto ≤ min(fixed arms)`
+//! achievable per event.
+
+use crate::mam::{Method, SpawnStrategy};
+use crate::topology::Cluster;
+
+/// A candidate configuration for an upcoming reconfiguration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Candidate {
+    /// Process-management method.
+    pub method: Method,
+    /// Spawning strategy.
+    pub strategy: SpawnStrategy,
+}
+
+impl Candidate {
+    /// Stable `method+strategy` label (e.g. `merge+hypercube`), used by
+    /// the jobs sink's `decision` column.
+    pub fn label(&self) -> String {
+        format!("{}+{}", self.method.name(), self.strategy.name())
+    }
+}
+
+/// How a per-resize decision is made: dictated or scored.
+///
+/// This is the selector idiom (cubek's `BlueprintStrategy`): a decision
+/// site either carries an explicit answer — [`Decision::Forced`] — or
+/// defers to the scoring layer — [`Decision::Inferred`]. The
+/// [`crate::rms::sched::AutoPricer`] resolves one `Decision` per job
+/// class: forced classes price exactly like the corresponding fixed arm
+/// (bit-identical, tested in `rust/tests/auto_pricing.rs`), inferred
+/// classes argmin over the grid at every resize event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Use exactly this strategy and method: expansions spawn with the
+    /// strategy under Merge, shrinks price under the method (Merge =
+    /// termination, Baseline = respawn) — the same convention as the
+    /// fixed TS/SS arms, so a forced decision reproduces them exactly.
+    Forced(SpawnStrategy, Method),
+    /// Score the candidate grid and take the argmin.
+    Inferred,
+}
+
+/// Index of the smallest score, NaN-safe and deterministic: a NaN never
+/// wins (it compares greater than every finite score, whatever its sign
+/// bit), and ties resolve to the lowest index. Panics on an empty
+/// slice — every caller asserts non-emptiness at the API boundary.
+///
+/// # Examples
+///
+/// ```
+/// use paraspawn::selector::best_index;
+///
+/// assert_eq!(best_index(&[3.0f64, 1.0, 2.0]), 1);
+/// assert_eq!(best_index(&[f64::NAN, 5.0]), 1); // NaN never wins
+/// assert_eq!(best_index(&[2.0f32, 2.0]), 0); // ties -> lowest index
+/// ```
+pub fn best_index<S: Score>(scores: &[S]) -> usize {
+    assert!(!scores.is_empty(), "argmin over an empty candidate set");
+    let mut best = 0usize;
+    for (i, &s) in scores.iter().enumerate().skip(1) {
+        // Strictly-less keeps ties on the earlier index.
+        if Score::lt(s, scores[best]) {
+            best = i;
+        }
+    }
+    best
+}
+
+/// A score [`best_index`] can argmin over: a float type with a NaN-safe
+/// total order in which NaN sorts above every finite value.
+pub trait Score: Copy {
+    /// Whether `self` sorts strictly below `other` — NaN never does.
+    fn lt(self, other: Self) -> bool;
+}
+
+impl Score for f32 {
+    fn lt(self, other: Self) -> bool {
+        match (self.is_nan(), other.is_nan()) {
+            (true, _) => false,
+            (false, true) => true,
+            (false, false) => self.total_cmp(&other) == std::cmp::Ordering::Less,
+        }
+    }
+}
+
+impl Score for f64 {
+    fn lt(self, other: Self) -> bool {
+        match (self.is_nan(), other.is_nan()) {
+            (true, _) => false,
+            (false, true) => true,
+            (false, false) => self.total_cmp(&other) == std::cmp::Ordering::Less,
+        }
+    }
+}
+
+/// The TS-enabling spawn strategies applicable on `cluster`: NodeByNode
+/// and Iterative Diffusive always, Hypercube only on core-homogeneous
+/// clusters (§5.3: it cannot spawn correctly on heterogeneous
+/// allocations). Order is fixed — it is the deterministic tie-break
+/// order of the grids below.
+fn ts_enabling(cluster: &Cluster) -> Vec<SpawnStrategy> {
+    let mut out = Vec::with_capacity(3);
+    if cluster.is_core_homogeneous() {
+        out.push(SpawnStrategy::ParallelHypercube);
+    }
+    out.push(SpawnStrategy::ParallelDiffusive);
+    out.push(SpawnStrategy::NodeByNode);
+    out
+}
+
+/// Expansion candidates on `cluster`: every applicable TS-enabling
+/// strategy under Merge (expansions always merge the spawned world —
+/// the same convention every fixed arm prices with, so each fixed arm's
+/// expansion choice is in this grid).
+pub fn expand_grid(cluster: &Cluster) -> Vec<Candidate> {
+    ts_enabling(cluster)
+        .into_iter()
+        .map(|strategy| Candidate { method: Method::Merge, strategy })
+        .collect()
+}
+
+/// Shrink candidates on `cluster`: termination (Merge — the paper's
+/// contribution) and respawn (Baseline — the spawn-based baseline)
+/// under every applicable TS-enabling strategy. Contains both fixed
+/// arms' shrink choices, so the argmin never prices above either.
+pub fn shrink_grid(cluster: &Cluster) -> Vec<Candidate> {
+    let strategies = ts_enabling(cluster);
+    let mut out = Vec::with_capacity(strategies.len() * 2);
+    for method in [Method::Merge, Method::Baseline] {
+        for &strategy in &strategies {
+            out.push(Candidate { method, strategy });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_index_is_nan_safe_and_tie_stable() {
+        assert_eq!(best_index(&[2.0f64, 1.0, 1.0]), 1);
+        assert_eq!(best_index(&[f64::NAN, f64::NAN, 7.0]), 2);
+        assert_eq!(best_index(&[f64::NAN]), 0); // all-NaN: first index
+        assert_eq!(best_index(&[-0.0f64, 0.0]), 0); // total order, tie -> first
+        assert_eq!(best_index(&[0.0f64, -0.0]), 1); // -0.0 < 0.0 under total_cmp
+        assert_eq!(best_index(&[1.5f32, f32::NAN, 0.5]), 2);
+    }
+
+    #[test]
+    fn grids_are_ts_enabling_and_respect_heterogeneity() {
+        let homog = Cluster::mini(8, 4);
+        let expand = expand_grid(&homog);
+        assert!(expand.iter().all(|c| c.method == Method::Merge));
+        assert!(expand.iter().all(|c| c.strategy.enables_ts()));
+        assert!(expand.iter().any(|c| c.strategy == SpawnStrategy::ParallelHypercube));
+
+        let hetero = Cluster::nasp();
+        assert!(!hetero.is_core_homogeneous());
+        let expand = expand_grid(&hetero);
+        assert!(
+            expand.iter().all(|c| c.strategy != SpawnStrategy::ParallelHypercube),
+            "hypercube cannot spawn on heterogeneous allocations"
+        );
+
+        let shrink = shrink_grid(&homog);
+        assert!(shrink.iter().any(|c| c.method == Method::Merge));
+        assert!(shrink.iter().any(|c| c.method == Method::Baseline));
+        assert!(shrink.iter().all(|c| c.strategy.enables_ts()));
+        assert_eq!(shrink.len(), 2 * expand_grid(&homog).len());
+    }
+
+    #[test]
+    fn candidate_label_is_stable() {
+        let c = Candidate {
+            method: Method::Merge,
+            strategy: SpawnStrategy::ParallelHypercube,
+        };
+        assert_eq!(c.label(), "merge+hypercube");
+    }
+}

@@ -1,0 +1,168 @@
+//! Acceptance tests for per-resize strategy autotuning
+//! ([`paraspawn::selector`] + [`paraspawn::rms::sched::AutoPricer`] —
+//! the `--pricing auto` arm).
+//!
+//! Three claims are pinned:
+//!
+//! 1. **Dominance**: on both bundled traces the auto arm's total
+//!    reconfiguration node-seconds never exceed the cheaper of the two
+//!    fixed stateful arms — the grid it argmins over contains both
+//!    arms' per-event choices, priced in the same cluster state.
+//! 2. **The Forced escape hatch**: an `AutoPricer` forced everywhere to
+//!    a fixed (strategy, method) pair is bit-identical in
+//!    `SchedResult` to the corresponding fixed stateful arm, down to
+//!    the empty decision column.
+//! 3. **Determinism**: `--pricing auto` workloads are bit-identical
+//!    across thread counts, like every other arm.
+
+use paraspawn::config::CostModel;
+use paraspawn::coordinator::sweep::ClusterKind;
+use paraspawn::coordinator::wsweep::{
+    auto_pricers, kind_cost_model, run_workload_matrix, stateful_pricers, WorkloadMatrix,
+    WorkloadSpec,
+};
+use paraspawn::mam::Method;
+use paraspawn::rms::sched::{
+    self, schedule_with_pricer, AnalyticPricer, AutoPricer, ResizePricer, SchedPolicy,
+    StatefulPricer,
+};
+use paraspawn::rms::workload::JobSpec;
+use paraspawn::rms::AllocPolicy;
+use paraspawn::topology::Cluster;
+use std::path::PathBuf;
+
+/// A bundled SWF trace with the canonical malleability overlay (the
+/// same parameters the replay example and the stateful acceptance
+/// tests use).
+fn trace_jobs(name: &str, total_nodes: usize, cores: u32) -> Vec<JobSpec> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data").join(name);
+    let text = std::fs::read_to_string(&path).expect("bundled trace readable");
+    let mut jobs = sched::read_swf(&text, cores, total_nodes).expect("bundled trace parses");
+    sched::mark_malleable(&mut jobs, 0.7, 4, total_nodes, 2025);
+    jobs
+}
+
+/// Run the malleable policy under TS-state, SS-state and auto on one
+/// trace and assert the auto arm never pays more reconfiguration
+/// node-seconds than the cheaper fixed arm.
+fn assert_auto_dominates(kind: ClusterKind, trace: &str) {
+    let cluster = kind.cluster();
+    let cores = cluster.nodes.iter().map(|n| n.cores).min().unwrap_or(1);
+    let jobs = trace_jobs(trace, cluster.len(), cores);
+    assert!(jobs.len() >= 50, "bundled trace must stay non-trivial ({})", jobs.len());
+    let cost = kind_cost_model(kind);
+    let mut pricers = stateful_pricers(&cost, None, 0);
+    pricers.extend(auto_pricers(&cost, 0));
+    let matrix = WorkloadMatrix {
+        pricers,
+        policies: vec![SchedPolicy::Malleable],
+        workloads: vec![WorkloadSpec { label: trace.to_string(), jobs }],
+        ..WorkloadMatrix::for_kind(kind)
+    };
+    let r = run_workload_matrix(&matrix, 2).unwrap();
+    let get = |arm: &str| {
+        r.cells[&(trace.to_string(), "malleable".to_string(), arm.to_string())].clone()
+    };
+    let auto = get("auto");
+    let ts = get("TS-state");
+    let ss = get("SS-state");
+    assert!(auto.reconfigurations() > 0, "{trace}: the auto arm never reconfigured");
+    let best = ts.reconfig_node_seconds.min(ss.reconfig_node_seconds);
+    assert!(
+        auto.reconfig_node_seconds <= best,
+        "{trace}: auto reconfig node-seconds {} exceed the best fixed stateful arm {}",
+        auto.reconfig_node_seconds,
+        best
+    );
+    // The per-event winners actually land in the decision column, and
+    // only there — fixed arms stay empty.
+    assert!(
+        auto.decisions.iter().any(|d| !d.is_empty()),
+        "{trace}: the auto arm recorded no decisions"
+    );
+    assert!(
+        auto.decisions.iter().flat_map(|d| d.split(';')).all(|t| {
+            t.is_empty() || t.starts_with("e:") || t.starts_with("s:")
+        }),
+        "{trace}: malformed decision tokens: {:?}",
+        auto.decisions
+    );
+    assert!(
+        ts.decisions.iter().chain(&ss.decisions).all(|d| d.is_empty()),
+        "{trace}: fixed arms must keep an empty decision column"
+    );
+}
+
+#[test]
+fn auto_never_pays_more_than_fixed_stateful_arms_smoke() {
+    assert_auto_dominates(ClusterKind::Mini, "replay_smoke.swf");
+}
+
+#[test]
+fn auto_never_pays_more_than_fixed_stateful_arms_replay2k() {
+    assert_auto_dominates(ClusterKind::Mn5, "replay2k.swf");
+}
+
+/// The Forced escape hatch reproduces a fixed arm exactly: forcing
+/// (widest strategy, Merge) everywhere must schedule bit-identically to
+/// `StatefulPricer::ts`, and (widest strategy, Baseline) to
+/// `StatefulPricer::ss` — same trajectory, same prices, same (empty)
+/// decision column.
+#[test]
+fn forced_auto_is_bit_identical_to_the_fixed_stateful_arm() {
+    let cluster = Cluster::mini(8, 4);
+    let cost = CostModel::mn5();
+    let jobs = trace_jobs("replay_smoke.swf", cluster.len(), 4);
+    let strategy = AnalyticPricer::auto_strategy(&cluster);
+
+    let run = |pricer: &mut dyn ResizePricer| {
+        schedule_with_pricer(
+            &cluster,
+            AllocPolicy::WholeNodes,
+            SchedPolicy::Malleable,
+            pricer,
+            &jobs,
+        )
+        .unwrap()
+    };
+
+    for (method, label) in [(Method::Merge, "TS-state"), (Method::Baseline, "SS-state")] {
+        let mut forced = AutoPricer::forced(cluster.clone(), cost.clone(), strategy, method, 0);
+        let mut fixed: Box<dyn ResizePricer> = match method {
+            Method::Merge => Box::new(StatefulPricer::ts(cluster.clone(), cost.clone())),
+            Method::Baseline => Box::new(StatefulPricer::ss(cluster.clone(), cost.clone())),
+        };
+        let f = run(&mut forced);
+        let x = run(fixed.as_mut());
+        assert!(f.reconfigurations() > 0, "{label}: the forced run never reconfigured");
+        assert_eq!(f, x, "forced auto must reproduce {label} bit-exactly");
+        assert!(
+            f.decisions.iter().all(|d| d.is_empty()),
+            "{label}: forced runs must record no online decisions"
+        );
+    }
+}
+
+/// `--pricing auto` is bit-identical across thread counts: the decision
+/// memo iterates in deterministic order, every cell builds its own
+/// pricer, and cells are reassembled in task order.
+#[test]
+fn auto_workload_is_bit_identical_across_thread_counts() {
+    let kind = ClusterKind::Mini;
+    let cluster = kind.cluster();
+    let jobs = trace_jobs("replay_smoke.swf", cluster.len(), 4);
+    let matrix = WorkloadMatrix {
+        pricers: auto_pricers(&kind_cost_model(kind), 0),
+        policies: vec![SchedPolicy::Fcfs, SchedPolicy::Malleable],
+        workloads: vec![WorkloadSpec { label: "smoke".to_string(), jobs }],
+        ..WorkloadMatrix::for_kind(kind)
+    };
+    let serial = run_workload_matrix(&matrix, 1).unwrap();
+    let parallel = run_workload_matrix(&matrix, 4).unwrap();
+    assert_eq!(serial, parallel, "auto cells must not depend on thread count");
+    for ((_, policy, pricing), cell) in &serial.cells {
+        if policy == "malleable" {
+            assert!(cell.reconfigurations() > 0, "{pricing}: no reconfigurations");
+        }
+    }
+}

@@ -66,6 +66,23 @@ fn shard_map_fixtures() {
 }
 
 #[test]
+fn auto_memo_fixtures() {
+    // The autotuner's core hazard: rendering the per-resize decision
+    // memo by HashMap iteration orders the winners by hash seed and
+    // breaks the `--pricing auto` thread-count-determinism guarantee.
+    // The good twin is the BTreeMap shape `rms::sched::AutoPricer`
+    // actually uses (which the tree-wide self-check below lints for
+    // real).
+    assert_rule_pair(
+        "unordered-iter",
+        "auto_memo_bad.rs",
+        include_str!("fixtures/detlint/auto_memo_bad.rs"),
+        "auto_memo_good.rs",
+        include_str!("fixtures/detlint/auto_memo_good.rs"),
+    );
+}
+
+#[test]
 fn total_order_fixtures() {
     assert_rule_pair(
         "total-order-floats",

@@ -1,0 +1,14 @@
+// detlint fixture: known-bad for `unordered-iter` — an autotuner
+// decision memo keyed by state profile, rendered by HashMap iteration.
+use std::collections::HashMap;
+
+pub fn render_decisions(memo: &HashMap<String, usize>, labels: &[String]) -> Vec<String> {
+    let mut out = Vec::new();
+    // Render order depends on the hash seed: two replays of the same
+    // trace would list the per-resize winners in different orders and
+    // the bit-identical-across-thread-counts guarantee silently breaks.
+    for (profile, winner) in memo.iter() {
+        out.push(format!("{profile}={}", labels[*winner]));
+    }
+    out
+}

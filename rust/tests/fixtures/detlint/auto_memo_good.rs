@@ -1,0 +1,14 @@
+// detlint fixture: known-good for `unordered-iter` — the decision memo
+// keyed by state profile in a BTreeMap, as `rms::sched::AutoPricer`
+// does.
+use std::collections::BTreeMap;
+
+pub fn render_decisions(memo: &BTreeMap<String, usize>, labels: &[String]) -> Vec<String> {
+    let mut out = Vec::new();
+    // BTreeMap iterates in state-profile order: every replay renders
+    // the decision column identically, whatever the thread count.
+    for (profile, winner) in memo.iter() {
+        out.push(format!("{profile}={}", labels[*winner]));
+    }
+    out
+}

@@ -113,7 +113,9 @@ fn phases_json_matches_golden() {
 /// A synthetic two-cell workload result set (one FCFS baseline, one
 /// malleable cell with reconfigurations) with dyadic values, pinning
 /// the workload sink schema — including the `pricing` column of the
-/// pricing axis — the CI replay smoke invocations parse.
+/// pricing axis and the `decision` column of the autotuned arm (empty
+/// for fixed arms, `;`-joined per-event tokens otherwise) — the CI
+/// replay smoke invocations parse.
 fn golden_workload_results() -> WorkloadResults {
     let mut r = WorkloadResults::default();
     let fcfs = SchedResult {
@@ -132,6 +134,7 @@ fn golden_workload_results() -> WorkloadResults {
             JobOutcome { start: 0.0, finish: 16.0, wait: 0.0, reconfigs: 0 },
             JobOutcome { start: 1.0, finish: 32.0, wait: 1.0, reconfigs: 0 },
         ],
+        decisions: vec![String::new(); 2],
     };
     let malleable = SchedResult {
         makespan: 16.0,
@@ -148,6 +151,10 @@ fn golden_workload_results() -> WorkloadResults {
         jobs: vec![
             JobOutcome { start: 0.0, finish: 8.0, wait: 0.0, reconfigs: 2 },
             JobOutcome { start: 0.5, finish: 16.0, wait: 0.5, reconfigs: 1 },
+        ],
+        decisions: vec![
+            "e:merge+hypercube;s:baseline+diffusive".to_string(),
+            "e:merge+nodebynode".to_string(),
         ],
     };
     r.cells.insert(("wA".to_string(), "fcfs".to_string(), "TS".to_string()), fcfs);
