@@ -31,10 +31,10 @@ fn main() -> anyhow::Result<()> {
 
     let matrix = WorkloadMatrix {
         pricers: scalar_pricers(&costs),
-        workloads: vec![WorkloadSpec {
-            label: "synthetic".to_string(),
-            jobs: synthetic_workload(50, total_nodes, 0.6, 2025),
-        }],
+        workloads: vec![WorkloadSpec::new(
+            "synthetic",
+            synthetic_workload(50, total_nodes, 0.6, 2025),
+        )],
         ..WorkloadMatrix::for_kind(kind)
     };
     let results = run_workload_matrix(&matrix, 4)?;

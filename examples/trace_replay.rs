@@ -76,7 +76,7 @@ fn main() -> anyhow::Result<()> {
     let matrix = WorkloadMatrix {
         policies: vec![SchedPolicy::Fcfs, SchedPolicy::Malleable],
         pricers,
-        workloads: vec![WorkloadSpec { label: "replay2k".to_string(), jobs }],
+        workloads: vec![WorkloadSpec::new("replay2k", jobs)],
         ..WorkloadMatrix::for_kind(kind)
     };
     let t0 = Instant::now();

@@ -7,6 +7,7 @@
 //! * `figures`  — regenerate the paper's tables/figures into CSV + ASCII.
 //! * `table2`   — print the diffusive worked example (paper Table 2).
 //! * `workload` — RMS makespan simulation (DRM on/off).
+//! * `gen`      — expand a scenario manifest into annotated SWF traces.
 //! * `merge`    — reassemble a sharded run's sinks byte-identically.
 //! * `select`   — cost-model strategy selection demo.
 //! * `lint`     — the `detlint` determinism static-analysis pass.
@@ -438,23 +439,49 @@ fn cmd_workload(a: &Args) -> Result<()> {
     use crate::rms::workload::synthetic_workload;
     use crate::topology::LinkKind;
 
+    let seed = a.usize_or("seed", 42)? as u64;
+    // --manifest expands a scenario manifest (rms::gen) into one
+    // workload per scenario; the manifest declares the cluster and the
+    // malleability/failure overlays itself, so the overlapping flags
+    // conflict instead of being silently ignored.
+    let manifest = match a.get("manifest") {
+        Some(path) => {
+            for conflict in ["trace", "synth", "cluster", "nodes", "malleable-frac"] {
+                if a.get(conflict).is_some() {
+                    bail!(
+                        "--manifest and --{conflict} are mutually exclusive (the manifest \
+                         declares the cluster, workload and malleability itself)"
+                    );
+                }
+            }
+            let text =
+                std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            Some(wsweep::manifest_workloads(&text, seed)?)
+        }
+        None => None,
+    };
     let cluster_name = a.get("cluster").unwrap_or("mn5");
-    let kind = ClusterKind::parse(cluster_name)
-        .with_context(|| format!("unknown cluster '{cluster_name}' (mn5 | nasp | mini)"))?;
+    let kind = match &manifest {
+        // Calibration/pricing kind for the manifest's cluster (custom
+        // mini:N:C shapes price like the mini testbed, i.e. MN5-like).
+        Some((c, _, _)) => ClusterKind::parse(&c.name).unwrap_or(ClusterKind::Mini),
+        None => ClusterKind::parse(cluster_name)
+            .with_context(|| format!("unknown cluster '{cluster_name}' (mn5 | nasp | mini)"))?,
+    };
     // --nodes N overrides the topology with an N-node MN5-like cluster;
     // cost calibration still runs on the named cluster kind.
-    let (cluster, alloc) = match a.get("nodes") {
-        Some(_) => {
+    let (cluster, alloc) = match (&manifest, a.get("nodes")) {
+        (Some((c, alloc, _)), _) => (c.clone(), *alloc),
+        (None, Some(_)) => {
             let n = a.usize_or("nodes", 16)?;
             (
                 crate::topology::Cluster::homogeneous("custom", n, 112, LinkKind::InfiniBand100),
                 crate::rms::AllocPolicy::WholeNodes,
             )
         }
-        None => (kind.cluster(), kind.alloc_policy()),
+        (None, None) => (kind.cluster(), kind.alloc_policy()),
     };
     let total_nodes = cluster.len();
-    let seed = a.usize_or("seed", 42)? as u64;
     let frac: f64 = match a.get("malleable-frac") {
         Some(v) => v.parse().context("--malleable-frac must be a number in [0, 1]")?,
         None => 0.6,
@@ -467,17 +494,31 @@ fn cmd_workload(a: &Args) -> Result<()> {
     if a.get("trace").is_some() && a.get("synth").is_some() {
         bail!("--trace and --synth are mutually exclusive");
     }
-    let (label, jobs) = if let Some(path) = a.get("trace") {
+    let (workloads, annotated) = if let Some((_, _, ws)) = manifest {
+        (ws, true)
+    } else if let Some(path) = a.get("trace") {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        let mut jobs = sched::read_swf(&text, cores_per_node, total_nodes)
+        let trace = sched::read_swf_trace(&text, cores_per_node, total_nodes)
             .map_err(|e| anyhow::anyhow!("parsing SWF trace {path}: {e}"))?;
-        // Traces are rigid; overlay malleability deterministically.
-        sched::mark_malleable(&mut jobs, frac, 4, total_nodes, seed);
+        // Annotated traces carry their own malleability and failure
+        // overlays. Plain (legacy) traces are rigid and get the
+        // deterministic malleability overlay, exactly as before the
+        // annotation format existed.
+        let annotated = !trace.checkpoint_s.is_empty()
+            || !trace.outages.is_empty()
+            || trace.jobs.iter().any(|j| j.malleable);
+        let mut jobs = trace.jobs;
+        if !annotated {
+            sched::mark_malleable(&mut jobs, frac, 4, total_nodes, seed);
+        }
         let label = std::path::Path::new(path)
             .file_stem()
             .map(|s| s.to_string_lossy().into_owned())
             .unwrap_or_else(|| "trace".to_string());
-        (label, jobs)
+        let mut w = WorkloadSpec::new(label, jobs);
+        w.checkpoint_s = trace.checkpoint_s;
+        w.outages = trace.outages;
+        (vec![w], annotated)
     } else if a.get("synth").is_some() {
         // Escape hatch for scale testing: the seeded sustained-backlog
         // generator behind the replay bench, sized on the command line.
@@ -485,17 +526,31 @@ fn cmd_workload(a: &Args) -> Result<()> {
         let n = a.usize_or("synth", 100_000)?;
         let mut spec = crate::testing::SynthTrace::new(n, seed, total_nodes);
         spec.malleable_frac = frac;
-        (format!("synth{n}"), spec.generate())
+        (vec![WorkloadSpec::new(format!("synth{n}"), spec.generate())], false)
     } else {
         let jobs_n = a.usize_or("jobs", 40)?;
-        ("synthetic".to_string(), synthetic_workload(jobs_n, total_nodes, frac, seed))
+        let w = WorkloadSpec::new("synthetic", synthetic_workload(jobs_n, total_nodes, frac, seed));
+        (vec![w], false)
     };
-    if jobs.is_empty() {
-        bail!("the workload is empty (all trace entries skipped?)");
+    if workloads.iter().any(|w| w.jobs.is_empty()) {
+        bail!("the workload is empty (all trace entries skipped, or a zero-rate scenario?)");
     }
     if let Some(path) = a.get("save-trace") {
-        std::fs::write(path, sched::write_swf(&jobs, cores_per_node))
-            .with_context(|| format!("writing {path}"))?;
+        if workloads.len() != 1 {
+            bail!(
+                "--save-trace needs a single workload \
+                 (use `paraspawn gen` for multi-scenario manifests)"
+            );
+        }
+        let w = &workloads[0];
+        // Annotated workloads keep their overlays in the written trace;
+        // legacy sources keep the byte-exact plain SWF format.
+        let text = if annotated {
+            sched::write_swf_trace(&w.trace(), cores_per_node)
+        } else {
+            sched::write_swf(&w.jobs, cores_per_node)
+        };
+        std::fs::write(path, text).with_context(|| format!("writing {path}"))?;
         println!("[written {path}]");
     }
 
@@ -610,16 +665,12 @@ fn cmd_workload(a: &Args) -> Result<()> {
         pricers.extend(arms);
     }
 
-    let matrix = WorkloadMatrix {
-        cluster,
-        alloc,
-        policies,
-        pricers,
-        workloads: vec![WorkloadSpec { label, jobs }],
-    };
+    let matrix = WorkloadMatrix { cluster, alloc, policies, pricers, workloads };
     eprintln!(
-        "workload: {} jobs x {} polic{} x {} pricing arm(s) on {} nodes, {} thread(s)",
-        matrix.workloads[0].jobs.len(),
+        "workload: {} jobs x {} workload(s) x {} polic{} x {} pricing arm(s) on {} nodes, \
+         {} thread(s)",
+        matrix.workloads.iter().map(|w| w.jobs.len()).sum::<usize>(),
+        matrix.workloads.len(),
         matrix.policies.len(),
         if matrix.policies.len() == 1 { "y" } else { "ies" },
         matrix.pricers.len(),
@@ -646,6 +697,56 @@ fn cmd_workload(a: &Args) -> Result<()> {
     if let Some(dir) = a.get("out") {
         results.write(std::path::Path::new(dir), a.get("json").is_some())?;
         println!("[written {dir}/workload_{{summary,jobs}}.csv]");
+    }
+    Ok(())
+}
+
+/// `paraspawn gen`: expand a scenario manifest ([`crate::rms::gen`])
+/// into annotated SWF trace files — one per scenario — deterministic
+/// per `(manifest, seed)`.
+fn cmd_gen(a: &Args) -> Result<()> {
+    use crate::rms::{gen, sched};
+
+    let path = a.get("manifest").context("gen needs --manifest FILE")?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let manifest = gen::parse_manifest(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+    let (cluster, _) =
+        gen::cluster_for(&manifest.cluster_key).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+    let cores_per_node = cluster.nodes.iter().map(|n| n.cores).min().unwrap_or(1);
+    let seed = a.usize_or("seed", 42)? as u64;
+    let mut traces = gen::expand_manifest(&manifest, seed);
+    if let Some(only) = a.get("scenario") {
+        traces.retain(|(name, _)| name == only || (name.is_empty() && only == "default"));
+        if traces.is_empty() {
+            bail!("manifest has no scenario '{only}'");
+        }
+    }
+    let out = a
+        .get("out")
+        .context("gen needs --out FILE (or an output DIR for multi-scenario manifests)")?;
+    let out = std::path::Path::new(out);
+    let multi = traces.len() > 1;
+    if multi && !out.is_dir() {
+        std::fs::create_dir_all(out)
+            .with_context(|| format!("creating output directory {}", out.display()))?;
+    }
+    for (name, trace) in &traces {
+        let label = if name.is_empty() { "default" } else { name.as_str() };
+        let file = if multi || out.is_dir() {
+            out.join(format!("{label}.swf"))
+        } else {
+            out.to_path_buf()
+        };
+        std::fs::write(&file, sched::write_swf_trace(trace, cores_per_node))
+            .with_context(|| format!("writing {}", file.display()))?;
+        println!(
+            "[written {} ({}: {} jobs, {} outages, cluster {})]",
+            file.display(),
+            label,
+            trace.jobs.len(),
+            trace.outages.len(),
+            manifest.cluster_key,
+        );
     }
     Ok(())
 }
@@ -769,9 +870,12 @@ USAGE:
                      [--pricing scalar|analytic|stateful|auto|both|all]
                      [--strategy plain|single|nodebynode|hypercube|diffusive]
                      [--data-bytes B]
-                     [--trace FILE.swf] [--synth N] [--save-trace FILE.swf]
+                     [--trace FILE.swf] [--synth N] [--manifest FILE]
+                     [--save-trace FILE.swf]
                      [--cost-from-sweep] [--calib-reps K]
                      [--threads T] [--out DIR] [--json] [--shard K/N]
+  paraspawn gen      --manifest FILE --out FILE.swf|DIR
+                     [--seed S] [--scenario NAME]
   paraspawn merge    DIR
   paraspawn select   [--i I] [--n N] [--cores C] [--expected-shrinks K]
                      [--exact]
@@ -795,11 +899,26 @@ TS-enabling (strategy x method) grid, and the chosen pair per event
 lands in the jobs sink's decision column. 'both' = scalar + analytic;
 'all' = every family.
 
-Workload sources: --trace replays an SWF file; --synth N generates a
-seeded sustained-backlog trace of N jobs (testing::synth_trace, the
-same generator as the replay-throughput bench) — the scale escape
-hatch for 10^5-10^6-job runs; neither flag falls back to the default
-40-job synthetic workload. --trace and --synth are mutually exclusive.
+Workload sources: --trace replays an SWF file (annotated traces carry
+their own malleability, checkpoint-cost and node-outage overlays as
+'; paraspawn:' directives; plain traces get the deterministic
+malleability overlay, exactly as before); --synth N generates a seeded
+sustained-backlog trace of N jobs (testing::synth_trace, the same
+generator as the replay-throughput bench) — the scale escape hatch for
+10^5-10^6-job runs; --manifest F expands a scenario manifest (see
+docs/ARCHITECTURE.md and examples/manifests/) into one workload per
+scenario, with the manifest's cluster, overlays and a 'scenario' sink
+column. The three sources are mutually exclusive; none falls back to
+the default 40-job synthetic workload.
+
+Trace generation (gen): 'paraspawn gen --manifest F --out T.swf'
+synthesizes annotated SWF traces from a declarative manifest —
+time-of-day x day-of-week arrival rates, burst windows, width/runtime
+and malleability distributions, checkpoint costs and node outages —
+deterministic per (manifest, seed): the same inputs yield the same
+bytes on any machine or thread count. Multi-scenario manifests write
+one <scenario>.swf per scenario into the --out directory; --scenario
+NAME selects one.
 
 Sharded sweeps (--shard K/N, with --out): any number of independent
 workers split a sweep or workload matrix at deterministic cell
@@ -835,6 +954,7 @@ pub fn main() -> Result<()> {
             Ok(())
         }
         "workload" => cmd_workload(&args),
+        "gen" => cmd_gen(&args),
         "merge" => cmd_merge(&args),
         "select" => cmd_select(&args),
         "lint" => cmd_lint(&args),

@@ -278,10 +278,17 @@ fn render_part(run: &str, shard: ShardSpec, payload: &PartPayload) -> Result<Str
                 check_label("workload", w)?;
                 check_label("policy", p)?;
                 check_label("pricing", c)?;
-                let _ = writeln!(b, "cell\t{w}\t{p}\t{c}");
+                // The scenario tag rides in the cell record (`-` for
+                // plain workloads) so merged results rebuild the
+                // label -> scenario map without a side channel.
+                let s = r.scenarios.get(w).map(String::as_str).unwrap_or("");
+                if !s.is_empty() {
+                    check_label("scenario", s)?;
+                }
+                let _ = writeln!(b, "cell\t{w}\t{p}\t{c}\t{}", if s.is_empty() { "-" } else { s });
                 let _ = writeln!(
                     b,
-                    "result {} {} {} {} {} {} {} {} {} {} {} {}",
+                    "result {} {} {} {} {} {} {} {} {} {} {} {} {}",
                     f64_hex(res.makespan),
                     f64_hex(res.mean_wait),
                     f64_hex(res.max_wait),
@@ -291,6 +298,7 @@ fn render_part(run: &str, shard: ShardSpec, payload: &PartPayload) -> Result<Str
                     f64_hex(res.reconfig_node_seconds),
                     f64_hex(res.work_node_seconds),
                     f64_hex(res.idle_node_seconds),
+                    f64_hex(res.outage_node_seconds),
                     f64_hex(res.total_node_seconds),
                     res.events,
                     res.jobs.len(),
@@ -418,21 +426,24 @@ pub fn parse_part(text: &str) -> Result<Part> {
                 let cell_line = next(&mut lines, "cell record")?;
                 let rest = cell_line.strip_prefix("cell\t").context("expected a 'cell' record")?;
                 let fields: Vec<&str> = rest.split('\t').collect();
-                if fields.len() != 3 {
+                if fields.len() != 4 {
                     bail!("malformed workload cell record {cell_line:?}");
                 }
                 let key =
                     (fields[0].to_string(), fields[1].to_string(), fields[2].to_string());
+                if fields[3] != "-" {
+                    r.scenarios.insert(fields[0].to_string(), fields[3].to_string());
+                }
                 let result_line = next(&mut lines, "result record")?;
                 let f: Vec<&str> = result_line
                     .strip_prefix("result ")
                     .context("expected a 'result' record")?
                     .split(' ')
                     .collect();
-                if f.len() != 12 {
+                if f.len() != 13 {
                     bail!("malformed result record {result_line:?}");
                 }
-                let njobs: usize = f[11].parse().context("bad job count")?;
+                let njobs: usize = f[12].parse().context("bad job count")?;
                 let mut jobs = Vec::with_capacity(njobs);
                 let mut decisions = Vec::with_capacity(njobs);
                 for _ in 0..njobs {
@@ -463,8 +474,9 @@ pub fn parse_part(text: &str) -> Result<Part> {
                     reconfig_node_seconds: f64_from_hex(f[6])?,
                     work_node_seconds: f64_from_hex(f[7])?,
                     idle_node_seconds: f64_from_hex(f[8])?,
-                    total_node_seconds: f64_from_hex(f[9])?,
-                    events: f[10].parse().context("bad event count")?,
+                    outage_node_seconds: f64_from_hex(f[9])?,
+                    total_node_seconds: f64_from_hex(f[10])?,
+                    events: f[11].parse().context("bad event count")?,
                     jobs,
                     decisions,
                 };

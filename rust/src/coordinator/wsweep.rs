@@ -38,9 +38,10 @@ use super::figures::FigureConfig;
 use super::sweep::{parallel_map, ClusterKind, Engine, ScenarioMatrix};
 use crate::config::CostModel;
 use crate::mam::SpawnStrategy;
+use crate::rms::gen::{expand_manifest, parse_manifest};
 use crate::rms::sched::{
-    schedule_with_pricer, AnalyticPricer, AutoPricer, ResizePricer, SchedPolicy, SchedResult,
-    ShrinkPricing, StatefulPricer,
+    schedule_trace, AnalyticPricer, AutoPricer, Outage, ResizePricer, SchedPolicy, SchedResult,
+    ShrinkPricing, StatefulPricer, Trace,
 };
 use crate::rms::workload::{synthetic_workload, JobSpec, ReconfigCostModel};
 use crate::rms::AllocPolicy;
@@ -272,27 +273,83 @@ pub fn kind_cost_model(kind: ClusterKind) -> CostModel {
     }
 }
 
-/// A labelled job list.
+/// A labelled job list, optionally carrying a scenario tag and the
+/// failure-realism overlays ([`crate::rms::gen`] manifests populate
+/// all three; plain traces leave them empty).
 #[derive(Clone, Debug)]
 pub struct WorkloadSpec {
     /// Workload label shown in the sink tables.
     pub label: String,
     /// The jobs to schedule.
     pub jobs: Vec<JobSpec>,
+    /// Manifest scenario this workload was expanded from (empty for
+    /// plain traces; rendered as `-` in the `scenario` sink column).
+    pub scenario: String,
+    /// Per-job checkpoint shrink surcharge (empty, or one per job).
+    pub checkpoint_s: Vec<f64>,
+    /// Node-outage events injected mid-trace.
+    pub outages: Vec<Outage>,
 }
 
 impl WorkloadSpec {
+    /// A plain workload: no scenario tag, no overlays.
+    pub fn new(label: impl Into<String>, jobs: Vec<JobSpec>) -> WorkloadSpec {
+        WorkloadSpec {
+            label: label.into(),
+            jobs,
+            scenario: String::new(),
+            checkpoint_s: Vec::new(),
+            outages: Vec::new(),
+        }
+    }
+
     /// A seeded sustained-backlog synthetic trace of `jobs` jobs sized
     /// for `total_nodes` (see [`crate::testing::synth_trace`]), labelled
     /// `synth{jobs}` — the same generator the replay-throughput bench
     /// and `paraspawn workload --synth N` use, packaged for matrix
     /// construction.
     pub fn synth(jobs: usize, seed: u64, total_nodes: usize) -> WorkloadSpec {
-        WorkloadSpec {
-            label: format!("synth{jobs}"),
-            jobs: crate::testing::synth_trace(jobs, seed, total_nodes),
+        let jobs_list = crate::testing::synth_trace(jobs, seed, total_nodes);
+        WorkloadSpec::new(format!("synth{jobs}"), jobs_list)
+    }
+
+    /// The workload as a scheduler [`Trace`] (jobs + overlays).
+    pub fn trace(&self) -> Trace {
+        Trace {
+            jobs: self.jobs.clone(),
+            checkpoint_s: self.checkpoint_s.clone(),
+            outages: self.outages.clone(),
         }
     }
+}
+
+/// Expand a scenario manifest ([`crate::rms::gen`]) into the cluster it
+/// declares and one [`WorkloadSpec`] per scenario, each carrying its
+/// scenario tag and overlays into the sink tables. An unnamed (global)
+/// scenario is labelled `default`. This is the manifest-expansion mode
+/// of the workload sweep: the returned parts drop straight into a
+/// [`WorkloadMatrix`].
+pub fn manifest_workloads(
+    text: &str,
+    seed: u64,
+) -> Result<(Cluster, AllocPolicy, Vec<WorkloadSpec>)> {
+    let manifest = parse_manifest(text).map_err(|e| anyhow!("manifest: {e}"))?;
+    let (cluster, alloc) =
+        crate::rms::gen::cluster_for(&manifest.cluster_key).map_err(|e| anyhow!("manifest: {e}"))?;
+    let workloads = expand_manifest(&manifest, seed)
+        .into_iter()
+        .map(|(name, t)| {
+            let name = if name.is_empty() { "default".to_string() } else { name };
+            WorkloadSpec {
+                label: name.clone(),
+                jobs: t.jobs,
+                scenario: name,
+                checkpoint_s: t.checkpoint_s,
+                outages: t.outages,
+            }
+        })
+        .collect();
+    Ok((cluster, alloc, workloads))
 }
 
 /// A declarative workload sweep: every policy × pricing × workload cell
@@ -389,6 +446,18 @@ impl WorkloadMatrix {
                 out.push(',');
             }
             let _ = write!(out, "{}:{}j#{:016x}", w.label, w.jobs.len(), hash_jobs(&w.jobs));
+            // Scenario tag and overlays extend the descriptor only when
+            // present, so plain matrices keep their pre-manifest run ids.
+            if !w.scenario.is_empty() {
+                let _ = write!(out, "@{}", w.scenario);
+            }
+            if !w.checkpoint_s.is_empty() || !w.outages.is_empty() {
+                let _ = write!(
+                    out,
+                    "+ov#{:016x}",
+                    hash_overlays(&w.checkpoint_s, &w.outages)
+                );
+            }
         }
         out.push_str("]}");
         out
@@ -410,6 +479,22 @@ fn hash_jobs(jobs: &[JobSpec]) -> u64 {
     h.finish()
 }
 
+/// Order-sensitive FNV-1a content hash of a workload's failure-realism
+/// overlays (bit-exact on the f64 fields).
+fn hash_overlays(checkpoint_s: &[f64], outages: &[Outage]) -> u64 {
+    let mut h = crate::coordinator::shard::Fnv1a::new();
+    h.write_usize(checkpoint_s.len());
+    for &c in checkpoint_s {
+        h.write_u64(c.to_bits());
+    }
+    for o in outages {
+        h.write_u64(o.start.to_bits());
+        h.write_usize(o.nodes);
+        h.write_u64(o.duration.to_bits());
+    }
+    h.finish()
+}
+
 /// Cell identity: `(workload, policy, pricing)` labels.
 pub type WorkloadKey = (String, String, String);
 
@@ -418,6 +503,9 @@ pub type WorkloadKey = (String, String, String);
 pub struct WorkloadResults {
     /// One scheduler result per `(workload, policy, pricing)` cell.
     pub cells: BTreeMap<WorkloadKey, SchedResult>,
+    /// Manifest scenario per workload label (only workloads expanded
+    /// from a manifest appear; plain workloads render `-`).
+    pub scenarios: BTreeMap<String, String>,
 }
 
 impl WorkloadResults {
@@ -429,6 +517,7 @@ impl WorkloadResults {
             "workload",
             "policy",
             "pricing",
+            "scenario",
             "makespan_s",
             "mean_wait_s",
             "max_wait_s",
@@ -436,6 +525,7 @@ impl WorkloadResults {
             "expands",
             "shrinks",
             "reconfig_node_s",
+            "outage_node_s",
             "idle_node_s",
             "utilization",
             "makespan_vs_fcfs",
@@ -450,6 +540,7 @@ impl WorkloadResults {
                 w.clone(),
                 p.clone(),
                 c.clone(),
+                self.scenario_of(w),
                 format!("{:.3}", r.makespan),
                 format!("{:.3}", r.mean_wait),
                 format!("{:.3}", r.max_wait),
@@ -457,6 +548,7 @@ impl WorkloadResults {
                 r.expands.to_string(),
                 r.shrinks.to_string(),
                 format!("{:.3}", r.reconfig_node_seconds),
+                format!("{:.3}", r.outage_node_seconds),
                 format!("{:.3}", r.idle_node_seconds),
                 format!("{:.4}", r.utilization()),
                 rel,
@@ -465,12 +557,19 @@ impl WorkloadResults {
         t
     }
 
+    /// The `scenario` sink value for a workload label (`-` when the
+    /// workload was not expanded from a manifest).
+    fn scenario_of(&self, label: &str) -> String {
+        self.scenarios.get(label).cloned().unwrap_or_else(|| "-".to_string())
+    }
+
     /// Long-form per-job table (one row per job per cell).
     pub fn jobs_table(&self) -> Table {
         let mut t = Table::new(vec![
             "workload",
             "policy",
             "pricing",
+            "scenario",
             "job",
             "start_s",
             "finish_s",
@@ -484,6 +583,7 @@ impl WorkloadResults {
                     w.clone(),
                     p.clone(),
                     c.clone(),
+                    self.scenario_of(w),
                     j.to_string(),
                     format!("{:.3}", o.start),
                     format!("{:.3}", o.finish),
@@ -509,6 +609,17 @@ impl WorkloadResults {
                 );
             }
             self.cells.insert(key, r);
+        }
+        for (label, scenario) in other.scenarios {
+            match self.scenarios.get(&label) {
+                Some(existing) if *existing != scenario => anyhow::bail!(
+                    "conflicting shard results: workload {label} tagged scenario \
+                     {existing} in one shard and {scenario} in another"
+                ),
+                _ => {
+                    self.scenarios.insert(label, scenario);
+                }
+            }
         }
         Ok(())
     }
@@ -567,7 +678,7 @@ pub fn run_workload_matrix_slice(
     let tasks = &tasks[start..end];
     let results = parallel_map(tasks, threads, |(_, w, p, spec)| {
         let mut pricer = spec.build(cluster);
-        schedule_with_pricer(cluster, alloc, *p, pricer.as_mut(), &w.jobs)
+        schedule_trace(cluster, alloc, *p, pricer.as_mut(), &w.trace())
             .map_err(|e| anyhow!("{e}"))
     })
     .map_err(|(idx, e)| {
@@ -575,8 +686,11 @@ pub fn run_workload_matrix_slice(
         anyhow!("workload cell failed (workload {w}, policy {p}, pricing {c}): {e:#}")
     })?;
     let mut out = WorkloadResults::default();
-    for ((key, ..), r) in tasks.iter().zip(results) {
+    for ((key, w, ..), r) in tasks.iter().zip(results) {
         out.cells.insert(key.clone(), r);
+        if !w.scenario.is_empty() {
+            out.scenarios.insert(w.label.clone(), w.scenario.clone());
+        }
     }
     Ok(out)
 }
@@ -693,14 +807,11 @@ pub fn fig_workload(cfg: &FigureConfig) -> Result<(Table, WorkloadResults)> {
     pricers.extend(stateful_pricers(&kind_cost_model(kind), None, 0));
     pricers.extend(auto_pricers(&kind_cost_model(kind), 0));
     let workloads = vec![
-        WorkloadSpec {
-            label: "synthetic-a".to_string(),
-            jobs: synthetic_workload(40, total_nodes, 0.6, cfg.seed),
-        },
-        WorkloadSpec {
-            label: "synthetic-b".to_string(),
-            jobs: synthetic_workload(40, total_nodes, 0.6, cfg.seed.wrapping_add(7919)),
-        },
+        WorkloadSpec::new("synthetic-a", synthetic_workload(40, total_nodes, 0.6, cfg.seed)),
+        WorkloadSpec::new(
+            "synthetic-b",
+            synthetic_workload(40, total_nodes, 0.6, cfg.seed.wrapping_add(7919)),
+        ),
     ];
     let matrix = WorkloadMatrix { pricers, workloads, ..WorkloadMatrix::for_kind(kind) };
     let results = run_workload_matrix(&matrix, cfg.threads)?;
@@ -714,10 +825,7 @@ mod tests {
     fn tiny_matrix() -> WorkloadMatrix {
         WorkloadMatrix {
             pricers: default_pricers(),
-            workloads: vec![WorkloadSpec {
-                label: "w".to_string(),
-                jobs: synthetic_workload(15, 8, 0.6, 3),
-            }],
+            workloads: vec![WorkloadSpec::new("w", synthetic_workload(15, 8, 0.6, 3))],
             ..WorkloadMatrix::for_kind(ClusterKind::Mini)
         }
     }
@@ -732,7 +840,7 @@ mod tests {
         // FCFS-relative column: FCFS rows are exactly 1.0.
         for row in &t.rows {
             if row[1] == "fcfs" {
-                assert_eq!(row[12], "1.0000");
+                assert_eq!(row[14], "1.0000");
             }
         }
     }

@@ -1,0 +1,788 @@
+//! Scenario-manifest workload generator: declarative SWF trace synthesis.
+//!
+//! Every headline result so far was proven on two bundled traces plus
+//! one synthetic backlog shape. This module turns that single-trace
+//! harness into a *scenario-family* harness: a declarative key-value
+//! manifest describes an arrival-rate schedule (time-of-day ×
+//! day-of-week rate tables, burst/drain regimes), job width/runtime/
+//! malleability distributions, and failure realism (checkpoint-cost-
+//! bearing shrinks, mid-trace node outages), and [`expand_manifest`]
+//! synthesizes one deterministic [`Trace`] per declared scenario.
+//!
+//! ## Determinism
+//!
+//! Generation follows the repo's lineage-RNG discipline: each scenario
+//! samples from `Rng::new(seed).split(fnv1a(name))`, so a scenario's
+//! trace depends only on `(manifest, seed, scenario name)` — never on
+//! thread count, expansion order, or which sibling scenarios exist.
+//! Arrivals are an *exact* non-homogeneous Poisson process over the
+//! piecewise-constant rate schedule (unit-exponential inversion,
+//! integrating the rate across hour/burst boundaries), so the realized
+//! rate in any regime window tracks the schedule — pinned by
+//! `rust/tests/gen_conformance.rs`.
+//!
+//! ## Manifest format
+//!
+//! One `key = value` per line, `#` comments, parsed by
+//! [`crate::config::parse::parse_kv`]. All keys are optional; defaults
+//! give a flat one-day trace. See `docs/ARCHITECTURE.md` for the full
+//! reference and `examples/manifests/` for bundled scenarios.
+//!
+//! ```text
+//! cluster = mini:8:4          # mn5 | nasp | mini | mini:<nodes>:<cores>
+//! days = 7                    # horizon in days
+//! base_rate = 40              # jobs/hour before multipliers
+//! dow = 1,1,1,1,1,0.4,0.3     # Mon..Sun multipliers
+//! hod = 0.2,...,0.2           # 24 hour-of-day multipliers
+//! bursts = 3600:1800:4        # start_s:duration_s:mult (mult<1 = drain)
+//! width_min = 1
+//! width_max = 8
+//! runtime_min = 60
+//! runtime_max = 600
+//! malleable_frac = 0.5
+//! growth = 4                  # malleable max_nodes = width * growth
+//! checkpoint_frac = 0.25      # fraction of jobs bearing checkpoint cost
+//! checkpoint_s = 3.0          # per-shrink checkpoint surcharge (seconds)
+//! outages = 7200:2:600        # start_s:nodes:duration_s
+//! max_jobs = 100000
+//! scenarios = weekday, weekend   # optional; names are [A-Za-z0-9]+
+//! weekend_base_rate = 10         # per-scenario override: <name>_<key>
+//! ```
+//!
+//! Scenario names must be alphanumeric (no underscore) so the
+//! `<name>_<key>` override prefix splits unambiguously; a key that
+//! matches a global key verbatim is always treated as global.
+
+use super::sched::{Outage, Trace};
+use super::workload::JobSpec;
+use super::AllocPolicy;
+use crate::config::parse::{parse_kv, ParseError};
+use crate::topology::Cluster;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Errors from manifest parsing or trace generation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GenError {
+    /// The manifest text failed key-value parsing.
+    Parse(ParseError),
+    /// A key is neither a known manifest key nor a scenario override.
+    UnknownKey {
+        /// The offending key as written.
+        key: String,
+    },
+    /// A key's value failed to parse or violates its constraint.
+    Invalid {
+        /// The offending key (override prefix stripped).
+        key: String,
+        /// Human-readable constraint that was violated.
+        reason: String,
+    },
+}
+
+impl fmt::Display for GenError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GenError::Parse(e) => write!(f, "manifest: {e}"),
+            GenError::UnknownKey { key } => {
+                write!(f, "manifest: unknown key `{key}` (declare scenarios before overrides)")
+            }
+            GenError::Invalid { key, reason } => write!(f, "manifest: key `{key}`: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for GenError {}
+
+impl From<ParseError> for GenError {
+    fn from(e: ParseError) -> Self {
+        GenError::Parse(e)
+    }
+}
+
+/// A burst (or drain) regime: multiply the arrival rate by `mult` on
+/// `[start, start + duration)`. `mult > 1` is a rush-hour burst,
+/// `mult < 1` a drain window, `mult = 0` an outage-like arrival gap.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Burst {
+    /// Window start, seconds from trace origin.
+    pub start: f64,
+    /// Window length in seconds.
+    pub duration: f64,
+    /// Rate multiplier applied inside the window.
+    pub mult: f64,
+}
+
+/// The four-class job width mix shared with [`crate::testing::SynthTrace`].
+///
+/// This is the single source of truth for the class-mix *sampling
+/// discipline*: two draws per job, `below(4)` to pick a class cap
+/// (classes 0 and 1 are narrow, 2 medium, 3 wide) then `below(cap)`
+/// for the width inside it. `testing::synth_trace` delegates here so
+/// its historical output stays bit-identical.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WidthMix {
+    /// Width cap for the narrow class (drawn with probability 1/2).
+    pub narrow: usize,
+    /// Width cap for the medium class (probability 1/4).
+    pub medium: usize,
+    /// Width cap for the wide class (probability 1/4).
+    pub wide: usize,
+}
+
+impl WidthMix {
+    /// The historical caps for a pool of `total_nodes` nodes —
+    /// byte-for-byte the values `SynthTrace::width_caps` has always
+    /// used: narrow ≤ 2, medium ≤ total/16, wide ≤ total/4.
+    #[must_use]
+    pub fn for_pool(total_nodes: usize) -> Self {
+        WidthMix {
+            narrow: 2usize.min(total_nodes.max(1)),
+            medium: (total_nodes / 16).max(1),
+            wide: (total_nodes / 4).max(1),
+        }
+    }
+
+    /// Sample a job width: exactly two RNG draws, preserving the
+    /// historical draw order (`below(4)` then `below(cap)`).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let cap = match rng.below(4) {
+            0 | 1 => self.narrow,
+            2 => self.medium,
+            _ => self.wide,
+        };
+        1 + rng.below(cap as u64) as usize
+    }
+
+    /// Expected sampled width (before clamping), for load accounting.
+    #[must_use]
+    pub fn expected_width(&self) -> f64 {
+        let mean = |cap: usize| (1.0 + cap as f64) / 2.0;
+        0.5 * mean(self.narrow) + 0.25 * mean(self.medium) + 0.25 * mean(self.wide)
+    }
+}
+
+/// One scenario's generator configuration (all manifest knobs bar
+/// `cluster`/`scenarios`, which are manifest-global).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenConfig {
+    /// Trace horizon in days (fractional allowed).
+    pub days: f64,
+    /// Base arrival rate in jobs/hour, before any multiplier.
+    pub base_rate: f64,
+    /// Day-of-week rate multipliers, day 0 = trace origin.
+    pub dow: [f64; 7],
+    /// Hour-of-day rate multipliers.
+    pub hod: [f64; 24],
+    /// Burst/drain regime windows (multipliers compose).
+    pub bursts: Vec<Burst>,
+    /// Smallest admitted job width (nodes).
+    pub width_min: usize,
+    /// Largest admitted job width (nodes); clamped to the cluster.
+    pub width_max: usize,
+    /// Shortest per-job runtime at minimum width (seconds).
+    pub runtime_min: f64,
+    /// Longest per-job runtime at minimum width (seconds).
+    pub runtime_max: f64,
+    /// Probability a job is malleable.
+    pub malleable_frac: f64,
+    /// Malleable growth factor: `max_nodes = width * growth`.
+    pub growth: usize,
+    /// Probability a job bears checkpoint cost on forced shrinks.
+    pub checkpoint_frac: f64,
+    /// Checkpoint surcharge in seconds for checkpoint-bearing jobs.
+    pub checkpoint_s: f64,
+    /// Mid-trace node outages the scheduler must absorb.
+    pub outages: Vec<Outage>,
+    /// Hard cap on generated jobs (guards runaway rate schedules).
+    pub max_jobs: usize,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig {
+            days: 1.0,
+            base_rate: 60.0,
+            dow: [1.0; 7],
+            hod: [1.0; 24],
+            bursts: Vec::new(),
+            width_min: 1,
+            width_max: usize::MAX,
+            runtime_min: 60.0,
+            runtime_max: 600.0,
+            malleable_frac: 0.3,
+            growth: 4,
+            checkpoint_frac: 0.0,
+            checkpoint_s: 0.0,
+            outages: Vec::new(),
+            max_jobs: 100_000,
+        }
+    }
+}
+
+const SECS_PER_HOUR: f64 = 3600.0;
+const SECS_PER_DAY: f64 = 86_400.0;
+
+impl GenConfig {
+    /// The instantaneous arrival rate in jobs/second at trace time `t`:
+    /// `base_rate/3600 × dow[day] × hod[hour] × Π burst multipliers`.
+    /// Piecewise constant between hour marks and burst edges.
+    #[must_use]
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let day = ((t / SECS_PER_DAY).floor() as usize) % 7;
+        let hour = (((t % SECS_PER_DAY) / SECS_PER_HOUR).floor() as usize).min(23);
+        let mut r = self.base_rate / SECS_PER_HOUR * self.dow[day] * self.hod[hour];
+        for b in &self.bursts {
+            if t >= b.start && t < b.start + b.duration {
+                r *= b.mult;
+            }
+        }
+        r
+    }
+
+    /// Trace horizon in seconds.
+    #[must_use]
+    pub fn horizon(&self) -> f64 {
+        self.days * SECS_PER_DAY
+    }
+
+    /// The next instant after `t` where the rate may change: the next
+    /// hour mark or the nearest burst edge, capped at `horizon`.
+    fn next_boundary(&self, t: f64, horizon: f64) -> f64 {
+        let mut b = (((t / SECS_PER_HOUR).floor() + 1.0) * SECS_PER_HOUR).min(horizon);
+        for burst in &self.bursts {
+            for edge in [burst.start, burst.start + burst.duration] {
+                if edge > t + 1e-9 && edge < b {
+                    b = edge;
+                }
+            }
+        }
+        b
+    }
+
+    /// Synthesize one trace from this configuration on a pool of
+    /// `total_nodes` nodes, drawing from `rng`.
+    ///
+    /// Arrivals are exact non-homogeneous Poisson over the
+    /// piecewise-constant schedule: one unit-exponential draw per
+    /// arrival, inverted by integrating the rate segment-by-segment
+    /// (zero-rate windows are skipped without a draw). Each admitted
+    /// job then draws, in this fixed order: width class + width
+    /// ([`WidthMix::sample`]), runtime (uniform), malleability
+    /// (Bernoulli), checkpoint-bearing (Bernoulli).
+    #[must_use]
+    pub fn generate(&self, total_nodes: usize, rng: &mut Rng) -> Trace {
+        let horizon = self.horizon();
+        let mix = WidthMix::for_pool(total_nodes);
+        let hi = self.width_max.min(total_nodes.max(1)).max(self.width_min.max(1));
+        let lo = self.width_min.max(1).min(hi);
+        let mut jobs = Vec::new();
+        let mut ckpt = Vec::new();
+        let mut any_ckpt = false;
+        let mut t = 0.0_f64;
+        while jobs.len() < self.max_jobs {
+            // Advance t by one exponential inter-arrival over ∫rate.
+            let mut need = -(1.0 - rng.f64()).ln();
+            let mut arrived = false;
+            while t < horizon {
+                let r = self.rate_at(t);
+                let seg_end = self.next_boundary(t, horizon);
+                let cap = (seg_end - t) * r;
+                if r > 0.0 && need <= cap {
+                    t += need / r;
+                    arrived = true;
+                    break;
+                }
+                need -= cap;
+                t = seg_end;
+            }
+            if !arrived {
+                break;
+            }
+            let width = mix.sample(rng).clamp(lo, hi);
+            let runtime =
+                self.runtime_min + (self.runtime_max - self.runtime_min) * rng.f64();
+            let malleable = rng.f64() < self.malleable_frac;
+            let bears_ckpt = rng.f64() < self.checkpoint_frac;
+            let max_nodes = if malleable {
+                (width * self.growth.max(1)).min(total_nodes).max(width)
+            } else {
+                width
+            };
+            jobs.push(JobSpec {
+                arrival: t,
+                work: runtime * width as f64,
+                min_nodes: width,
+                max_nodes,
+                malleable,
+            });
+            let c = if bears_ckpt { self.checkpoint_s } else { 0.0 };
+            any_ckpt = any_ckpt || c > 0.0;
+            ckpt.push(c);
+        }
+        let mut outages = self.outages.clone();
+        outages.sort_by(|a, b| a.start.total_cmp(&b.start));
+        Trace { jobs, checkpoint_s: if any_ckpt { ckpt } else { Vec::new() }, outages }
+    }
+}
+
+/// A parsed manifest: the (global) cluster key plus one named
+/// [`GenConfig`] per scenario, in declaration order. A manifest with
+/// no `scenarios` key holds a single scenario named `""`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// The raw `cluster` value (`mn5`, `nasp`, `mini`, `mini:N:C`).
+    pub cluster_key: String,
+    /// `(name, config)` per scenario, manifest declaration order.
+    pub scenarios: Vec<(String, GenConfig)>,
+}
+
+/// All recognized per-scenario manifest keys.
+const CONFIG_KEYS: [&str; 15] = [
+    "days",
+    "base_rate",
+    "dow",
+    "hod",
+    "bursts",
+    "width_min",
+    "width_max",
+    "runtime_min",
+    "runtime_max",
+    "malleable_frac",
+    "growth",
+    "checkpoint_frac",
+    "checkpoint_s",
+    "outages",
+    "max_jobs",
+];
+
+fn invalid(key: &str, reason: impl Into<String>) -> GenError {
+    GenError::Invalid { key: key.to_string(), reason: reason.into() }
+}
+
+fn parse_f64(key: &str, v: &str) -> Result<f64, GenError> {
+    let x: f64 =
+        v.trim().parse().map_err(|_| invalid(key, format!("`{v}` is not a number")))?;
+    if x.is_finite() {
+        Ok(x)
+    } else {
+        Err(invalid(key, "must be finite"))
+    }
+}
+
+fn parse_usize(key: &str, v: &str) -> Result<usize, GenError> {
+    v.trim().parse().map_err(|_| invalid(key, format!("`{v}` is not a non-negative integer")))
+}
+
+fn parse_multipliers<const N: usize>(key: &str, v: &str) -> Result<[f64; N], GenError> {
+    let parts: Vec<&str> = v.split(',').collect();
+    if parts.len() != N {
+        return Err(invalid(key, format!("needs exactly {N} comma-separated values")));
+    }
+    let mut out = [0.0; N];
+    for (slot, part) in out.iter_mut().zip(&parts) {
+        let x = parse_f64(key, part)?;
+        if x < 0.0 {
+            return Err(invalid(key, "multipliers must be >= 0"));
+        }
+        *slot = x;
+    }
+    Ok(out)
+}
+
+fn parse_triples(key: &str, v: &str) -> Result<Vec<[&str; 3]>, GenError> {
+    v.split(',')
+        .map(str::trim)
+        .filter(|e| !e.is_empty())
+        .map(|entry| {
+            let f: Vec<&str> = entry.split(':').collect();
+            if f.len() == 3 {
+                Ok([f[0], f[1], f[2]])
+            } else {
+                Err(invalid(key, format!("entry `{entry}` is not start:x:y")))
+            }
+        })
+        .collect()
+}
+
+/// Apply one `key = value` onto `cfg`. `key` is the bare config key
+/// (scenario prefix already stripped).
+fn apply_key(cfg: &mut GenConfig, key: &str, v: &str) -> Result<(), GenError> {
+    match key {
+        "days" => {
+            cfg.days = parse_f64(key, v)?;
+            if cfg.days <= 0.0 {
+                return Err(invalid(key, "must be > 0"));
+            }
+        }
+        "base_rate" => {
+            cfg.base_rate = parse_f64(key, v)?;
+            if cfg.base_rate < 0.0 {
+                return Err(invalid(key, "must be >= 0"));
+            }
+        }
+        "dow" => cfg.dow = parse_multipliers::<7>(key, v)?,
+        "hod" => cfg.hod = parse_multipliers::<24>(key, v)?,
+        "bursts" => {
+            cfg.bursts = parse_triples(key, v)?
+                .into_iter()
+                .map(|[s, d, m]| {
+                    let b = Burst {
+                        start: parse_f64(key, s)?,
+                        duration: parse_f64(key, d)?,
+                        mult: parse_f64(key, m)?,
+                    };
+                    if b.start < 0.0 || b.duration <= 0.0 || b.mult < 0.0 {
+                        return Err(invalid(
+                            key,
+                            "needs start >= 0, duration > 0, mult >= 0",
+                        ));
+                    }
+                    Ok(b)
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        "width_min" => {
+            cfg.width_min = parse_usize(key, v)?;
+            if cfg.width_min == 0 {
+                return Err(invalid(key, "must be >= 1"));
+            }
+        }
+        "width_max" => {
+            cfg.width_max = parse_usize(key, v)?;
+            if cfg.width_max == 0 {
+                return Err(invalid(key, "must be >= 1"));
+            }
+        }
+        "runtime_min" => {
+            cfg.runtime_min = parse_f64(key, v)?;
+            if cfg.runtime_min <= 0.0 {
+                return Err(invalid(key, "must be > 0"));
+            }
+        }
+        "runtime_max" => {
+            cfg.runtime_max = parse_f64(key, v)?;
+            if cfg.runtime_max <= 0.0 {
+                return Err(invalid(key, "must be > 0"));
+            }
+        }
+        "malleable_frac" => {
+            cfg.malleable_frac = parse_f64(key, v)?;
+            if !(0.0..=1.0).contains(&cfg.malleable_frac) {
+                return Err(invalid(key, "must be in [0, 1]"));
+            }
+        }
+        "growth" => {
+            cfg.growth = parse_usize(key, v)?;
+            if cfg.growth == 0 {
+                return Err(invalid(key, "must be >= 1"));
+            }
+        }
+        "checkpoint_frac" => {
+            cfg.checkpoint_frac = parse_f64(key, v)?;
+            if !(0.0..=1.0).contains(&cfg.checkpoint_frac) {
+                return Err(invalid(key, "must be in [0, 1]"));
+            }
+        }
+        "checkpoint_s" => {
+            cfg.checkpoint_s = parse_f64(key, v)?;
+            if cfg.checkpoint_s < 0.0 {
+                return Err(invalid(key, "must be >= 0"));
+            }
+        }
+        "outages" => {
+            cfg.outages = parse_triples(key, v)?
+                .into_iter()
+                .map(|[s, n, d]| {
+                    let o = Outage {
+                        start: parse_f64(key, s)?,
+                        nodes: parse_usize(key, n)?,
+                        duration: parse_f64(key, d)?,
+                    };
+                    if o.start < 0.0 || o.nodes == 0 || o.duration <= 0.0 {
+                        return Err(invalid(
+                            key,
+                            "needs start >= 0, nodes >= 1, duration > 0",
+                        ));
+                    }
+                    Ok(o)
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        "max_jobs" => {
+            cfg.max_jobs = parse_usize(key, v)?;
+            if cfg.max_jobs == 0 {
+                return Err(invalid(key, "must be >= 1"));
+            }
+        }
+        other => return Err(GenError::UnknownKey { key: other.to_string() }),
+    }
+    Ok(())
+}
+
+fn check_config(name: &str, cfg: &GenConfig) -> Result<(), GenError> {
+    let ctx = if name.is_empty() { String::new() } else { format!(" (scenario `{name}`)") };
+    if cfg.width_min > cfg.width_max {
+        return Err(invalid("width_min", format!("exceeds width_max{ctx}")));
+    }
+    if cfg.runtime_min > cfg.runtime_max {
+        return Err(invalid("runtime_min", format!("exceeds runtime_max{ctx}")));
+    }
+    Ok(())
+}
+
+/// Parse a manifest from its text form.
+///
+/// Global keys seed every scenario; `<name>_<key>` overrides apply on
+/// top. A key that matches a global key verbatim is always global —
+/// scenario names that collide with a key's leading word (e.g. a
+/// scenario literally called `width`) are therefore best avoided.
+pub fn parse_manifest(text: &str) -> Result<Manifest, GenError> {
+    let kv = parse_kv(text)?;
+    let cluster_key = kv.get("cluster").cloned().unwrap_or_else(|| "mini".to_string());
+    // Fail early on an unknown cluster so `gen` errors at parse time.
+    cluster_for(&cluster_key)?;
+    let names: Vec<String> = match kv.get("scenarios") {
+        Some(v) => {
+            let names: Vec<String> =
+                v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+            if names.is_empty() {
+                return Err(invalid("scenarios", "needs at least one name"));
+            }
+            for n in &names {
+                if !n.chars().all(|c| c.is_ascii_alphanumeric()) {
+                    return Err(invalid(
+                        "scenarios",
+                        format!("name `{n}` must be alphanumeric ([A-Za-z0-9]+)"),
+                    ));
+                }
+            }
+            names
+        }
+        None => vec![String::new()],
+    };
+
+    // Split the remaining keys into global config keys and per-scenario
+    // overrides; anything else is unknown.
+    let mut globals: Vec<(&str, &str)> = Vec::new();
+    let mut overrides: BTreeMap<&str, Vec<(&str, &str)>> = BTreeMap::new();
+    for (k, v) in &kv {
+        if k == "cluster" || k == "scenarios" {
+            continue;
+        }
+        if CONFIG_KEYS.contains(&k.as_str()) {
+            globals.push((k, v));
+            continue;
+        }
+        let mut matched = false;
+        if let Some((prefix, rest)) = k.split_once('_') {
+            if names.iter().any(|n| n == prefix) && CONFIG_KEYS.contains(&rest) {
+                overrides.entry(prefix).or_default().push((rest, v));
+                matched = true;
+            }
+        }
+        if !matched {
+            return Err(GenError::UnknownKey { key: k.clone() });
+        }
+    }
+
+    let mut base = GenConfig::default();
+    for (k, v) in &globals {
+        apply_key(&mut base, k, v)?;
+    }
+    let mut scenarios = Vec::with_capacity(names.len());
+    for name in &names {
+        let mut cfg = base.clone();
+        if let Some(ovs) = overrides.get(name.as_str()) {
+            for (k, v) in ovs {
+                apply_key(&mut cfg, k, v)?;
+            }
+        }
+        check_config(name, &cfg)?;
+        scenarios.push((name.clone(), cfg));
+    }
+    Ok(Manifest { cluster_key, scenarios })
+}
+
+/// Resolve a manifest `cluster` key into a concrete cluster and its
+/// canonical allocation policy. Deliberately environment-free (no
+/// `PARASPAWN_MAX_NODES`): a manifest means the same trace everywhere.
+pub fn cluster_for(key: &str) -> Result<(Cluster, AllocPolicy), GenError> {
+    let key = key.trim();
+    match key {
+        "mn5" => return Ok((Cluster::mn5(), AllocPolicy::WholeNodes)),
+        "nasp" => return Ok((Cluster::nasp(), AllocPolicy::BalancedTypes)),
+        "mini" => return Ok((Cluster::mini(8, 4), AllocPolicy::WholeNodes)),
+        _ => {}
+    }
+    if let Some(rest) = key.strip_prefix("mini:") {
+        if let Some((n, c)) = rest.split_once(':') {
+            let n = parse_usize("cluster", n)?;
+            let c = parse_usize("cluster", c)?;
+            if n == 0 || c == 0 || c > u32::MAX as usize {
+                return Err(invalid("cluster", "mini:<nodes>:<cores> needs both >= 1"));
+            }
+            return Ok((Cluster::mini(n, c as u32), AllocPolicy::WholeNodes));
+        }
+    }
+    Err(invalid("cluster", format!("unknown cluster `{key}` (mn5 | nasp | mini | mini:N:C)")))
+}
+
+/// FNV-1a over a scenario name, the lineage key for its RNG stream.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325_u64;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Expand a manifest into `(scenario name, trace)` pairs, one per
+/// declared scenario, each from its own lineage-split RNG stream.
+///
+/// # Examples
+///
+/// ```
+/// use paraspawn::rms::gen::{expand_manifest, parse_manifest};
+///
+/// let m = parse_manifest("cluster = mini:4:2\nbase_rate = 30\nmax_jobs = 50").unwrap();
+/// let a = expand_manifest(&m, 7);
+/// let b = expand_manifest(&m, 7);
+/// assert_eq!(a, b, "same (manifest, seed) => identical traces");
+/// assert_eq!(a.len(), 1);
+/// ```
+#[must_use]
+pub fn expand_manifest(m: &Manifest, seed: u64) -> Vec<(String, Trace)> {
+    let (cluster, _) = match cluster_for(&m.cluster_key) {
+        Ok(c) => c,
+        // parse_manifest validated the key; a hand-built Manifest with
+        // a bad key degenerates to the mini testbed rather than panic.
+        Err(_) => (Cluster::mini(8, 4), AllocPolicy::WholeNodes),
+    };
+    let total_nodes = cluster.len();
+    m.scenarios
+        .iter()
+        .map(|(name, cfg)| {
+            let mut rng = Rng::new(seed).split(fnv1a(name.as_bytes()));
+            (name.clone(), cfg.generate(total_nodes, &mut rng))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_parse_and_generate() {
+        let m = parse_manifest("").expect("empty manifest is all-defaults");
+        assert_eq!(m.cluster_key, "mini");
+        assert_eq!(m.scenarios.len(), 1);
+        let traces = expand_manifest(&m, 42);
+        let (name, trace) = &traces[0];
+        assert!(name.is_empty());
+        assert!(!trace.jobs.is_empty(), "a flat day at 60 jobs/hour yields jobs");
+        assert!(trace.checkpoint_s.is_empty() && trace.outages.is_empty());
+        for w in trace.jobs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival, "arrivals are sorted");
+        }
+    }
+
+    #[test]
+    fn scenario_overrides_and_streams_are_independent() {
+        let text = "cluster = mini:8:4\nbase_rate = 120\nmax_jobs = 200\n\
+                    scenarios = calm, storm\nstorm_base_rate = 480\n";
+        let m = parse_manifest(text).expect("manifest parses");
+        assert_eq!(m.scenarios.len(), 2);
+        let traces = expand_manifest(&m, 11);
+        let calm = &traces[0].1;
+        let storm = &traces[1].1;
+        assert!(
+            storm.jobs.len() > calm.jobs.len() * 2,
+            "4x the rate must yield far more jobs ({} vs {})",
+            storm.jobs.len(),
+            calm.jobs.len()
+        );
+        // A scenario's stream depends only on its name: dropping a
+        // sibling must not change the other's trace.
+        let solo = parse_manifest(
+            "cluster = mini:8:4\nbase_rate = 120\nmax_jobs = 200\nscenarios = calm\n",
+        )
+        .expect("solo manifest parses");
+        let solo_traces = expand_manifest(&solo, 11);
+        assert_eq!(solo_traces[0].1, *calm, "sibling scenarios must not perturb the stream");
+    }
+
+    #[test]
+    fn unknown_and_invalid_keys_are_rejected() {
+        assert!(matches!(
+            parse_manifest("boost = 2"),
+            Err(GenError::UnknownKey { key }) if key == "boost"
+        ));
+        assert!(matches!(
+            parse_manifest("malleable_frac = 1.5"),
+            Err(GenError::Invalid { key, .. }) if key == "malleable_frac"
+        ));
+        assert!(matches!(
+            parse_manifest("dow = 1,2,3"),
+            Err(GenError::Invalid { key, .. }) if key == "dow"
+        ));
+        assert!(matches!(
+            parse_manifest("cluster = petascale"),
+            Err(GenError::Invalid { key, .. }) if key == "cluster"
+        ));
+        assert!(parse_manifest("width_min = 6\nwidth_max = 2").is_err());
+    }
+
+    #[test]
+    fn zero_rate_hours_get_no_arrivals() {
+        let mut hod = vec!["1"; 24];
+        for h in hod.iter_mut().take(12) {
+            *h = "0";
+        }
+        let text =
+            format!("cluster = mini:8:4\nbase_rate = 240\nhod = {}\n", hod.join(","));
+        let m = parse_manifest(&text).expect("manifest parses");
+        let trace = &expand_manifest(&m, 5)[0].1;
+        assert!(!trace.jobs.is_empty());
+        for j in &trace.jobs {
+            let hour = (j.arrival % 86_400.0 / 3600.0).floor() as usize;
+            assert!(hour >= 12, "arrival at {:.1}s falls in a zero-rate hour", j.arrival);
+        }
+    }
+
+    #[test]
+    fn burst_windows_concentrate_arrivals() {
+        // 1-hour 10x burst in an otherwise flat day.
+        let text = "cluster = mini:8:4\nbase_rate = 60\nbursts = 36000:3600:10\n";
+        let m = parse_manifest(text).expect("manifest parses");
+        let trace = &expand_manifest(&m, 3)[0].1;
+        let in_burst = trace
+            .jobs
+            .iter()
+            .filter(|j| (36_000.0..39_600.0).contains(&j.arrival))
+            .count();
+        // The burst hour carries 10/33 of the day's expected mass in
+        // 1/24 of its span; demand a crude concentration signal.
+        assert!(
+            in_burst * 10 > trace.jobs.len(),
+            "burst hour holds {in_burst} of {} jobs",
+            trace.jobs.len()
+        );
+    }
+
+    #[test]
+    fn overlays_follow_the_manifest() {
+        let text = "cluster = mini:8:4\nbase_rate = 240\ncheckpoint_frac = 1\n\
+                    checkpoint_s = 2.5\noutages = 600:2:300, 100:1:50\nwidth_max = 3\n";
+        let m = parse_manifest(text).expect("manifest parses");
+        let trace = &expand_manifest(&m, 9)[0].1;
+        assert_eq!(trace.checkpoint_s.len(), trace.jobs.len());
+        assert!(trace.checkpoint_s.iter().all(|&c| c == 2.5));
+        assert_eq!(trace.outages.len(), 2);
+        assert!(trace.outages[0].start <= trace.outages[1].start, "outages sorted");
+        assert!(trace.jobs.iter().all(|j| j.min_nodes <= 3));
+    }
+}

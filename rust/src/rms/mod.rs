@@ -5,6 +5,7 @@
 //! FCFS / EASY-backfill / malleability-aware policies over real
 //! allocations from the node pool.
 
+pub mod gen;
 pub mod sched;
 pub mod workload;
 

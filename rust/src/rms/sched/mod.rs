@@ -68,6 +68,23 @@
 //! [`write_swf`] emits it, so synthetic workloads round-trip through
 //! files and real traces can be replayed.
 //!
+//! **Failure realism** (the scenario-generator layer, see
+//! [`crate::rms::gen`]): a [`Trace`] bundles jobs with two optional
+//! overlays — per-job *checkpoint surcharges* (seconds added to every
+//! shrink's stall time for checkpoint-bearing jobs, in both the scalar
+//! charge and the stateful victim-selection price) and mid-trace node
+//! [`Outage`]s. [`schedule_trace`] absorbs an outage by seizing idle
+//! nodes first (ascending id), then force-shrinking malleable runners
+//! through the normal pricing path, then requeueing victims (youngest
+//! start first, re-admitted at the queue head); downed-node time and
+//! the work a requeue throws away are charged to
+//! [`SchedResult::outage_node_seconds`], extending the conservation
+//! law to `work + reconfig + idle + outage == total`. With empty
+//! overlays [`schedule_trace`] is bit-identical to
+//! [`schedule_with_pricer`] by construction. Annotated traces
+//! round-trip through [`write_swf_trace`] / [`read_swf_trace`] via
+//! `; paraspawn:` comment directives that legacy readers skip.
+//!
 //! **Trace-rate internals** (the million-job refactor): the event loop
 //! leans on the [`Rms`] free-pool index (O(1) [`Rms::idle_count`],
 //! scratch-free allocation planning), count-gates every admission
@@ -1006,6 +1023,43 @@ impl ResizePricer for AutoPricer {
     }
 }
 
+/// A mid-trace node outage: `nodes` nodes leave the pool at `start`
+/// for `duration` seconds. The scheduler seizes idle nodes first, then
+/// force-shrinks malleable runners, then requeues victims — see
+/// [`schedule_trace`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Outage {
+    /// Instant the nodes go down (trace time, seconds).
+    pub start: f64,
+    /// How many nodes go down (capped at the cluster size).
+    pub nodes: usize,
+    /// Seconds until the nodes rejoin the pool.
+    pub duration: f64,
+}
+
+/// A workload trace: jobs plus the optional failure-realism overlays
+/// the scenario generator ([`crate::rms::gen`]) produces. Round-trips
+/// through [`write_swf_trace`] / [`read_swf_trace`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    /// The jobs, as for [`schedule_with_pricer`].
+    pub jobs: Vec<JobSpec>,
+    /// Per-job checkpoint surcharge in seconds, parallel to `jobs`
+    /// (`0.0` = bears no checkpoint cost). Empty means no overlay —
+    /// bit-identical to the plain scheduling path.
+    pub checkpoint_s: Vec<f64>,
+    /// Mid-trace node outages (any order; sorted by start internally).
+    pub outages: Vec<Outage>,
+}
+
+impl Trace {
+    /// Wrap plain jobs as a trace with no overlays.
+    #[must_use]
+    pub fn from_jobs(jobs: Vec<JobSpec>) -> Self {
+        Trace { jobs, checkpoint_s: Vec::new(), outages: Vec::new() }
+    }
+}
+
 /// Per-job outcome of a scheduled workload (input order).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct JobOutcome {
@@ -1040,6 +1094,13 @@ pub struct SchedResult {
     pub work_node_seconds: f64,
     /// Node-seconds no job occupied, integrated to the makespan.
     pub idle_node_seconds: f64,
+    /// Node-seconds lost to outages: downed-node time integrated over
+    /// the replay, plus the work (and absorbed reconfiguration
+    /// charges) thrown away when an outage forces a requeue. Exactly
+    /// `0.0` on an outage-free trace, and the fourth bucket of the
+    /// conservation law:
+    /// `work + reconfig + idle + outage == total_node_seconds`.
+    pub outage_node_seconds: f64,
     /// `total_nodes * makespan` — the conservation budget.
     pub total_node_seconds: f64,
     /// Event-loop iterations executed (arrival/completion instants
@@ -1126,6 +1187,21 @@ struct Scheduler<'a> {
     /// state-aware pricing queries and the warm-first expansion-target
     /// choice of stateful pricers; cheap enough to track always.
     warm: Vec<bool>,
+    /// Per-job checkpoint surcharge seconds, parallel to `jobs` (empty
+    /// = no overlay, every lookup reads `0.0`).
+    ckpt: &'a [f64],
+    /// Outages sorted by start; `next_outage` indexes the first one
+    /// not yet begun.
+    outages: Vec<Outage>,
+    next_outage: usize,
+    /// Active outages: `(end instant, the seized allocation)`.
+    active_outages: Vec<(f64, Allocation)>,
+    /// Nodes currently seized by active outages.
+    down_nodes: usize,
+    /// Downed-node time integrated so far (node-seconds).
+    outage_down_ns: f64,
+    /// Work + absorbed charges lost to outage-forced requeues.
+    outage_lost_ns: f64,
 }
 
 /// Schedule `jobs` on `cluster` under `policy`, charging the scalar
@@ -1159,6 +1235,93 @@ pub fn schedule_with_pricer(
     pricer: &mut dyn ResizePricer,
     jobs: &[JobSpec],
 ) -> Result<SchedResult, WorkloadError> {
+    schedule_impl(cluster, alloc_policy, policy, pricer, jobs, &[], &[])
+}
+
+/// [`schedule_with_pricer`] over a full [`Trace`] — jobs plus the
+/// checkpoint and outage overlays. A trace with empty overlays runs
+/// the identical code path (same events, same draws, bit-identical
+/// [`SchedResult`]); a populated one adds:
+///
+/// * **checkpoint surcharges** — `checkpoint_s[job]` seconds added to
+///   every shrink's stall time for that job, in both the scalar
+///   charge and the stateful victim-selection price (an expensive
+///   checkpoint makes a job a *worse* shrink victim);
+/// * **outages** — at each [`Outage`]'s start the scheduler takes
+///   `nodes` nodes out of the pool: idle nodes first (ascending id),
+///   then by force-shrinking malleable runners through the normal
+///   pricing path (so forced shrinks are priced, charged and
+///   decision-recorded exactly like policy-driven ones), then by
+///   requeueing victims — youngest recorded start first, ties by
+///   higher job id, re-admitted at the queue head with their full
+///   work. Downed-node time and requeue-lost work land in
+///   [`SchedResult::outage_node_seconds`]; a requeued job's
+///   [`JobOutcome::start`]/`wait` reflect its final admission.
+///
+/// Errors with [`WorkloadError::Overlay`] when the checkpoint vector
+/// length mismatches the job list or an outage is malformed.
+pub fn schedule_trace(
+    cluster: &Cluster,
+    alloc_policy: AllocPolicy,
+    policy: SchedPolicy,
+    pricer: &mut dyn ResizePricer,
+    trace: &Trace,
+) -> Result<SchedResult, WorkloadError> {
+    if !trace.checkpoint_s.is_empty() && trace.checkpoint_s.len() != trace.jobs.len() {
+        return Err(WorkloadError::Overlay {
+            reason: format!(
+                "checkpoint overlay holds {} entries for {} jobs",
+                trace.checkpoint_s.len(),
+                trace.jobs.len()
+            ),
+        });
+    }
+    for (i, &c) in trace.checkpoint_s.iter().enumerate() {
+        if !c.is_finite() || c < 0.0 {
+            return Err(WorkloadError::Overlay {
+                reason: format!("checkpoint_s[{i}] = {c} must be finite and >= 0"),
+            });
+        }
+    }
+    for (i, o) in trace.outages.iter().enumerate() {
+        if !o.start.is_finite() || o.start < 0.0 || !o.duration.is_finite() || o.duration <= 0.0
+        {
+            return Err(WorkloadError::Overlay {
+                reason: format!(
+                    "outage[{i}] needs finite start >= 0 and duration > 0 \
+                     (got start {}, duration {})",
+                    o.start, o.duration
+                ),
+            });
+        }
+        if o.nodes == 0 {
+            return Err(WorkloadError::Overlay {
+                reason: format!("outage[{i}] must take down at least one node"),
+            });
+        }
+    }
+    schedule_impl(
+        cluster,
+        alloc_policy,
+        policy,
+        pricer,
+        &trace.jobs,
+        &trace.checkpoint_s,
+        &trace.outages,
+    )
+}
+
+/// The shared event loop behind [`schedule_with_pricer`] (empty
+/// overlays) and [`schedule_trace`].
+fn schedule_impl(
+    cluster: &Cluster,
+    alloc_policy: AllocPolicy,
+    policy: SchedPolicy,
+    pricer: &mut dyn ResizePricer,
+    jobs: &[JobSpec],
+    ckpt: &[f64],
+    outages: &[Outage],
+) -> Result<SchedResult, WorkloadError> {
     let total_nodes = cluster.len();
     validate_jobs(total_nodes, jobs)?;
     if jobs.is_empty() {
@@ -1167,6 +1330,11 @@ pub fn schedule_with_pricer(
 
     let mut order: Vec<usize> = (0..jobs.len()).collect();
     order.sort_by(|&a, &b| jobs[a].arrival.total_cmp(&jobs[b].arrival).then(a.cmp(&b)));
+
+    // Outages fire in start order regardless of how the trace listed
+    // them (stable, so equal starts keep their listed order).
+    let mut sorted_outages = outages.to_vec();
+    sorted_outages.sort_by(|a, b| a.start.total_cmp(&b.start));
 
     let mut s = Scheduler {
         jobs,
@@ -1188,11 +1356,24 @@ pub fn schedule_with_pricer(
         events: 0,
         frees: Vec::new(),
         warm: vec![false; total_nodes],
+        ckpt,
+        outages: sorted_outages,
+        next_outage: 0,
+        active_outages: Vec::new(),
+        down_nodes: 0,
+        outage_down_ns: 0.0,
+        outage_lost_ns: 0.0,
     };
 
     let mut next_arrival = 0usize;
     loop {
         s.events += 1;
+        // Outage edges due now: ends first (releasing seized nodes, so
+        // a back-to-back outage can recycle them), then starts — which
+        // seize idle nodes, force-shrink malleable runners, and
+        // requeue victims before the policy acts on the shrunken pool.
+        s.end_outages_due();
+        s.begin_outages_due()?;
         // Move due arrivals into the queue, then let the policy act.
         while next_arrival < order.len()
             && s.jobs[order[next_arrival]].arrival <= s.now + EPS_TIME
@@ -1202,7 +1383,9 @@ pub fn schedule_with_pricer(
         }
         s.scheduling_pass()?;
 
-        // Next event: earliest projected finish or next arrival.
+        // Next event: earliest projected finish, next arrival, or the
+        // nearest outage edge (start of a pending one, end of an
+        // active one).
         let next_finish =
             s.running.iter().map(Run::projected_finish).fold(f64::INFINITY, f64::min);
         let arrival = if next_arrival < order.len() {
@@ -1210,12 +1393,14 @@ pub fn schedule_with_pricer(
         } else {
             f64::INFINITY
         };
-        let t = next_finish.min(arrival);
+        let work_t = next_finish.min(arrival);
+        let t = work_t.min(s.next_outage_edge());
         if !t.is_finite() {
             if let Some(&head) = s.queue.front() {
-                // No running jobs, no arrivals, yet the head cannot be
-                // placed (e.g. BalancedTypes type-imbalance on an
-                // otherwise idle cluster): surface instead of spinning.
+                // No running jobs, no arrivals, no outage edge, yet the
+                // head cannot be placed (e.g. BalancedTypes
+                // type-imbalance on an otherwise idle cluster): surface
+                // instead of spinning.
                 return Err(WorkloadError::Unschedulable {
                     job: head,
                     min_nodes: s.jobs[head].min_nodes,
@@ -1224,14 +1409,23 @@ pub fn schedule_with_pricer(
             }
             break;
         }
+        if !work_t.is_finite() && s.queue.is_empty() {
+            // Only outage edges remain and no work is left to run or
+            // admit: retiring them cannot change any job outcome, and
+            // integrating down-time past the last completion would
+            // breach the `total_nodes * makespan` conservation budget.
+            break;
+        }
         let t = t.max(s.now);
 
         // Integrate busy node-seconds across the interval, advance work.
         // Every allocation holds whole nodes and nodes are never shared,
-        // so busy == total - idle exactly — same integer, no O(running)
-        // sum per event.
-        let busy: usize = total_nodes - s.rms.idle_count();
+        // so busy == total - idle - down exactly — same integer, no
+        // O(running) sum per event. Downed nodes integrate into the
+        // outage ledger instead (a no-op add of 0.0 without outages).
+        let busy: usize = total_nodes - s.rms.idle_count() - s.down_nodes;
         s.busy_node_seconds += busy as f64 * (t - s.now);
+        s.outage_down_ns += s.down_nodes as f64 * (t - s.now);
         s.now = t;
         for r in s.running.iter_mut() {
             r.progress_to(t);
@@ -1274,7 +1468,10 @@ pub fn schedule_with_pricer(
         shrinks: s.shrinks,
         reconfig_node_seconds: s.reconfig_node_seconds,
         work_node_seconds,
-        idle_node_seconds: total_node_seconds - s.busy_node_seconds,
+        // Down-time is neither busy nor idle; subtracting 0.0 keeps
+        // the outage-free path bit-identical.
+        idle_node_seconds: total_node_seconds - s.busy_node_seconds - s.outage_down_ns,
+        outage_node_seconds: s.outage_down_ns + s.outage_lost_ns,
         total_node_seconds,
         events: s.events,
         jobs: (0..jobs.len())
@@ -1295,6 +1492,137 @@ impl Scheduler<'_> {
         for &(node, _) in &alloc.slots {
             self.warm[node] = true;
         }
+    }
+
+    /// The checkpoint surcharge `job` pays per shrink (0.0 without an
+    /// overlay).
+    fn ckpt_of(&self, job: usize) -> f64 {
+        self.ckpt.get(job).copied().unwrap_or(0.0)
+    }
+
+    /// The nearest outage edge: the next pending start or the earliest
+    /// active end, `INFINITY` when neither exists.
+    fn next_outage_edge(&self) -> f64 {
+        let start = self.outages.get(self.next_outage).map_or(f64::INFINITY, |o| o.start);
+        self.active_outages.iter().map(|&(end, _)| end).fold(start, f64::min)
+    }
+
+    /// Release every active outage whose end is due, returning its
+    /// seized nodes to the pool.
+    fn end_outages_due(&mut self) {
+        let mut i = 0;
+        while i < self.active_outages.len() {
+            if self.active_outages[i].0 <= self.now + EPS_TIME {
+                let (_, alloc) = self.active_outages.remove(i);
+                self.down_nodes -= alloc.n_nodes();
+                self.rms.release(&alloc);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Begin every pending outage whose start is due (sorted order).
+    fn begin_outages_due(&mut self) -> Result<(), WorkloadError> {
+        while self.next_outage < self.outages.len()
+            && self.outages[self.next_outage].start <= self.now + EPS_TIME
+        {
+            let o = self.outages[self.next_outage];
+            self.next_outage += 1;
+            self.begin_outage(o)?;
+        }
+        Ok(())
+    }
+
+    /// Seize up to `want` idle nodes (ascending id — deterministic)
+    /// into `slots`, claiming them from the pool.
+    fn seize_idle(&mut self, want: usize, slots: &mut Vec<(NodeId, u32)>) {
+        if want == 0 {
+            return;
+        }
+        let take: Vec<(NodeId, u32)> = self
+            .rms
+            .idle_nodes()
+            .into_iter()
+            .take(want)
+            .map(|n| (n, self.rms.cluster.cores(n)))
+            .collect();
+        if take.is_empty() {
+            return;
+        }
+        let a = Allocation::new(take);
+        self.rms.claim(&a).expect("idle nodes claim cleanly under an outage");
+        slots.extend(a.slots);
+    }
+
+    /// Take `o.nodes` nodes out of the pool for `o.duration` seconds:
+    /// idle nodes first, then nodes freed by force-shrinking malleable
+    /// runners (through [`Scheduler::shrink_to_fit`], so forced shrinks
+    /// are priced, charged and decision-recorded exactly like
+    /// policy-driven ones — checkpoint surcharges included), then
+    /// nodes freed by requeueing victims. Overlapping outages may
+    /// leave fewer than `o.nodes` seizable (already-downed nodes
+    /// cannot go down twice); the outage takes what it can get.
+    fn begin_outage(&mut self, o: Outage) -> Result<(), WorkloadError> {
+        let want = o.nodes.min(self.rms.cluster.len());
+        let mut slots: Vec<(NodeId, u32)> = Vec::new();
+        self.seize_idle(want, &mut slots);
+        if slots.len() < want {
+            // The idle pool is drained; ask malleable runners for the
+            // deficit. shrink_to_fit's doomed-pass dry-run keeps its
+            // no-charge-without-progress guarantee here too.
+            let _ = self.shrink_to_fit(want - slots.len())?;
+            self.seize_idle(want - slots.len(), &mut slots);
+        }
+        while slots.len() < want {
+            if !self.requeue_one_victim() {
+                break;
+            }
+            self.seize_idle(want - slots.len(), &mut slots);
+        }
+        if !slots.is_empty() {
+            self.down_nodes += slots.len();
+            self.active_outages.push((self.now + o.duration, Allocation::new(slots)));
+        }
+        Ok(())
+    }
+
+    /// Kill the running job with the youngest recorded start (ties by
+    /// higher job id), release its nodes, and push it to the queue
+    /// *head* (preempted work re-admits first). The work and absorbed
+    /// reconfiguration charges consumed this run are lost — charged to
+    /// the outage ledger so node-seconds stay conserved. Returns false
+    /// when nothing is running.
+    fn requeue_one_victim(&mut self) -> bool {
+        let mut best: Option<usize> = None;
+        for i in 0..self.running.len() {
+            let j = self.running[i].job;
+            let younger = match best {
+                None => true,
+                Some(b) => {
+                    let jb = self.running[b].job;
+                    self.starts[j].total_cmp(&self.starts[jb]).then(j.cmp(&jb)).is_gt()
+                }
+            };
+            if younger {
+                best = Some(i);
+            }
+        }
+        let Some(i) = best else {
+            return false;
+        };
+        let mut r = self.running.remove(i);
+        r.progress_to(self.now);
+        let job = r.job;
+        // consumed-this-run = (work + absorbed charges) - remaining;
+        // work_node_seconds counts the job once and reconfig counts
+        // the charges, so the conservation remainder is exactly
+        // `work - remaining` (negative when charges outweighed
+        // progress — the ledger is signed on purpose).
+        self.outage_lost_ns += self.jobs[job].work - r.remaining;
+        self.rms.release(&r.alloc);
+        self.queue.push_front(job);
+        true
     }
 
     /// Append one decision token for an *executed* resize of `job` —
@@ -1610,6 +1938,13 @@ impl Scheduler<'_> {
                     .pricer
                     .shrink_seconds(pre, post)
                     .map_err(|reason| WorkloadError::Pricing { job, pre, post, reason })?;
+                // Checkpoint-bearing jobs save state before releasing
+                // nodes: the surcharge rides the stall seconds (so it
+                // multiplies by the participant count like any other
+                // stall). Guarded to keep overlay-free runs
+                // bit-identical.
+                let ck = self.ckpt_of(job);
+                let secs = if ck > 0.0 { secs + ck } else { secs };
                 let r = &mut self.running[i];
                 r.progress_to(self.now);
                 r.alloc = self.rms.shrink(&r.alloc, post);
@@ -1703,6 +2038,12 @@ impl Scheduler<'_> {
                 for &(node, cores) in &self.running[i].alloc.slots {
                     state.add_load(node, cores);
                 }
+                // The checkpoint surcharge enters the *predicted*
+                // charge too: an expensive checkpoint makes a job a
+                // worse shrink victim, exactly like an expensive
+                // protocol release.
+                let ck = self.ckpt_of(job);
+                let secs = if ck > 0.0 { secs + ck } else { secs };
                 let charge = secs * pre as f64;
                 let cheaper = match best {
                     None => true,
@@ -1950,6 +2291,193 @@ pub fn write_swf(jobs: &[JobSpec], cores_per_node: u32) -> String {
         ));
     }
     out
+}
+
+/// Render a [`Trace`] as an annotated SWF-style text: the plain
+/// [`write_swf`] job lines followed by `; paraspawn:` comment
+/// directives carrying the overlays — `malleable <id> <max_nodes>` per
+/// malleable job, `ckpt <id> <seconds>` per job with a positive
+/// checkpoint cost, `outage <start> <nodes> <duration>` per outage.
+/// Legacy SWF readers see ordinary comments; [`read_swf_trace`]
+/// restores the full trace, and a trace written by this function
+/// round-trips byte-identically.
+pub fn write_swf_trace(trace: &Trace, cores_per_node: u32) -> String {
+    let mut out = write_swf(&trace.jobs, cores_per_node);
+    for (i, j) in trace.jobs.iter().enumerate() {
+        if j.malleable {
+            out.push_str(&format!("; paraspawn:malleable {} {}\n", i + 1, j.max_nodes));
+        }
+    }
+    for (i, &c) in trace.checkpoint_s.iter().enumerate() {
+        if c > 0.0 {
+            out.push_str(&format!("; paraspawn:ckpt {} {:.6}\n", i + 1, c));
+        }
+    }
+    for o in &trace.outages {
+        out.push_str(&format!(
+            "; paraspawn:outage {:.6} {} {:.6}\n",
+            o.start, o.nodes, o.duration
+        ));
+    }
+    out
+}
+
+/// Parse an SWF-style trace together with its `; paraspawn:` overlay
+/// directives into a [`Trace`]. Plain traces (no directives) parse to
+/// the exact job list [`read_swf`] would return, with empty overlays.
+/// Directives reference jobs by their SWF id (field 1); a directive
+/// naming an unknown or duplicated id is an error, as is an unknown
+/// `; paraspawn:` directive name.
+///
+/// # Examples
+///
+/// ```
+/// use paraspawn::rms::sched::{read_swf_trace, write_swf_trace};
+///
+/// let text = "1 0.0 -1 100.0 8 -1 -1 8 100.0 -1 1 -1 -1 -1 -1 -1 -1 -1\n\
+///             ; paraspawn:malleable 1 4\n\
+///             ; paraspawn:outage 50.000000 2 10.000000\n";
+/// let trace = read_swf_trace(text, 4, 8).unwrap();
+/// assert!(trace.jobs[0].malleable);
+/// assert_eq!(trace.outages.len(), 1);
+/// let canon = write_swf_trace(&trace, 4);
+/// assert_eq!(canon, write_swf_trace(&read_swf_trace(&canon, 4, 8).unwrap(), 4));
+/// ```
+pub fn read_swf_trace(
+    text: &str,
+    cores_per_node: u32,
+    total_nodes: usize,
+) -> Result<Trace, String> {
+    let mut entries: Vec<(Option<u64>, JobSpec)> = Vec::new();
+    let mut ckpt_dir: Vec<(u64, f64)> = Vec::new();
+    let mut mall_dir: Vec<(u64, usize)> = Vec::new();
+    let mut outages: Vec<Outage> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix(';') {
+            let Some(body) = rest.trim_start().strip_prefix("paraspawn:") else {
+                continue; // ordinary SWF comment
+            };
+            let f: Vec<&str> = body.split_whitespace().collect();
+            let bad = |what: &str| format!("line {}: bad paraspawn:{} directive", lineno + 1, what);
+            match f.first().copied() {
+                Some("outage") => {
+                    if f.len() != 4 {
+                        return Err(bad("outage"));
+                    }
+                    let start = f[1].parse::<f64>().map_err(|_| bad("outage"))?;
+                    let nodes = f[2].parse::<usize>().map_err(|_| bad("outage"))?;
+                    let duration = f[3].parse::<f64>().map_err(|_| bad("outage"))?;
+                    outages.push(Outage { start, nodes, duration });
+                }
+                Some("ckpt") => {
+                    if f.len() != 3 {
+                        return Err(bad("ckpt"));
+                    }
+                    let id = f[1].parse::<u64>().map_err(|_| bad("ckpt"))?;
+                    let secs = f[2].parse::<f64>().map_err(|_| bad("ckpt"))?;
+                    if !(secs.is_finite() && secs >= 0.0) {
+                        return Err(bad("ckpt"));
+                    }
+                    ckpt_dir.push((id, secs));
+                }
+                Some("malleable") => {
+                    if f.len() != 3 {
+                        return Err(bad("malleable"));
+                    }
+                    let id = f[1].parse::<u64>().map_err(|_| bad("malleable"))?;
+                    let max = f[2].parse::<usize>().map_err(|_| bad("malleable"))?;
+                    mall_dir.push((id, max));
+                }
+                Some(other) => {
+                    return Err(format!(
+                        "line {}: unknown paraspawn directive '{}'",
+                        lineno + 1,
+                        other
+                    ));
+                }
+                None => {
+                    return Err(format!("line {}: empty paraspawn directive", lineno + 1));
+                }
+            }
+            continue;
+        }
+        // Data lines follow read_swf's rules exactly (same fields, same
+        // skip conditions, same stable arrival sort below) so plain
+        // traces parse identically through either entry point. The only
+        // addition is remembering the SWF id so directives can refer
+        // back; an unparseable id field just cannot be referenced.
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() < 5 {
+            return Err(format!("line {}: expected >= 5 SWF fields, got {}", lineno + 1, f.len()));
+        }
+        let num = |idx: usize| -> Result<f64, String> {
+            f.get(idx)
+                .map(|s| {
+                    s.parse::<f64>()
+                        .map_err(|_| format!("line {}: bad numeric field {}", lineno + 1, idx + 1))
+                })
+                .unwrap_or(Ok(-1.0))
+        };
+        let submit = num(1)?;
+        let run_time = num(3)?;
+        let used_procs = num(4)?;
+        let req_procs = num(7).unwrap_or(-1.0);
+        let procs = if req_procs > 0.0 { req_procs } else { used_procs };
+        if run_time <= 0.0 || procs <= 0.0 || submit < 0.0 {
+            continue; // failed/cancelled entries carry -1 markers
+        }
+        let nodes =
+            (((procs / cores_per_node as f64).ceil()) as usize).clamp(1, total_nodes.max(1));
+        entries.push((
+            f[0].parse::<u64>().ok(),
+            JobSpec {
+                arrival: submit,
+                work: run_time * nodes as f64,
+                min_nodes: nodes,
+                max_nodes: nodes,
+                malleable: false,
+            },
+        ));
+    }
+    entries.sort_by(|a, b| a.1.arrival.total_cmp(&b.1.arrival));
+    let mut by_id: BTreeMap<u64, Option<usize>> = BTreeMap::new();
+    for (i, (id, _)) in entries.iter().enumerate() {
+        if let Some(id) = *id {
+            by_id
+                .entry(id)
+                .and_modify(|slot| *slot = None) // duplicated id: unreferencable
+                .or_insert(Some(i));
+        }
+    }
+    let resolve = |id: u64| -> Result<usize, String> {
+        match by_id.get(&id) {
+            Some(Some(i)) => Ok(*i),
+            Some(None) => Err(format!("directive references duplicated SWF job id {id}")),
+            None => Err(format!("directive references unknown SWF job id {id}")),
+        }
+    };
+    let mut jobs: Vec<JobSpec> = entries.into_iter().map(|(_, j)| j).collect();
+    let mut checkpoint_s = vec![0.0; jobs.len()];
+    let mut any_ckpt = false;
+    for (id, secs) in ckpt_dir {
+        checkpoint_s[resolve(id)?] = secs;
+        any_ckpt = any_ckpt || secs > 0.0;
+    }
+    for (id, max) in mall_dir {
+        let j = &mut jobs[resolve(id)?];
+        j.malleable = true;
+        j.max_nodes = max.clamp(j.min_nodes, total_nodes.max(1));
+    }
+    outages.sort_by(|a, b| a.start.total_cmp(&b.start));
+    Ok(Trace {
+        jobs,
+        checkpoint_s: if any_ckpt { checkpoint_s } else { Vec::new() },
+        outages,
+    })
 }
 
 #[cfg(test)]

@@ -196,6 +196,7 @@ pub fn schedule_with_pricer_reference(
         reconfig_node_seconds: s.reconfig_node_seconds,
         work_node_seconds,
         idle_node_seconds: total_node_seconds - s.busy_node_seconds,
+        outage_node_seconds: 0.0,
         total_node_seconds,
         events: s.events,
         jobs: (0..jobs.len())

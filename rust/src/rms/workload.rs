@@ -42,7 +42,7 @@ impl ReconfigCostModel {
 }
 
 /// One job of the workload.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct JobSpec {
     /// Submission instant (seconds).
     pub arrival: f64,
@@ -105,6 +105,14 @@ pub enum WorkloadError {
         /// The pricer's error message.
         reason: String,
     },
+    /// A trace overlay (checkpoint-cost vector or outage list) is
+    /// malformed: wrong length, non-finite or negative values, or a
+    /// zero-node/zero-duration outage. Surfaced before scheduling so a
+    /// bad manifest cannot silently degrade to the overlay-free path.
+    Overlay {
+        /// What is malformed about the overlay.
+        reason: String,
+    },
 }
 
 impl std::fmt::Display for WorkloadError {
@@ -119,6 +127,9 @@ impl std::fmt::Display for WorkloadError {
             }
             WorkloadError::Pricing { job, pre, post, reason } => {
                 write!(f, "pricing job {job}'s resize {pre} -> {post} nodes failed: {reason}")
+            }
+            WorkloadError::Overlay { reason } => {
+                write!(f, "invalid trace overlay: {reason}")
             }
         }
     }

@@ -19,6 +19,7 @@
 //! index and the replay seed; re-run a single case with
 //! `PARASPAWN_PROP_SEED=<seed> PARASPAWN_PROP_CASES=1`.
 
+use crate::rms::gen::WidthMix;
 use crate::rms::workload::JobSpec;
 use crate::util::rng::Rng;
 
@@ -77,21 +78,12 @@ impl SynthTrace {
         }
     }
 
-    /// Width-class bounds: `(narrow, medium, wide)` upper bounds, each
-    /// at least 1 node.
-    fn width_caps(&self) -> (usize, usize, usize) {
-        let wide = (self.total_nodes / 4).max(1);
-        let medium = (self.total_nodes / 16).max(1);
-        (2usize.min(self.total_nodes.max(1)), medium, wide)
-    }
-
-    /// Expected nodes per job under the width mix of
-    /// [`SynthTrace::generate`] (half narrow, a quarter medium, a
-    /// quarter wide; each class uniform on `1..=cap`).
-    fn expected_width(&self) -> f64 {
-        let (narrow, medium, wide) = self.width_caps();
-        let mean = |cap: usize| (1.0 + cap as f64) / 2.0;
-        0.5 * mean(narrow) + 0.25 * mean(medium) + 0.25 * mean(wide)
+    /// The width-class mix: delegated to [`WidthMix::for_pool`]
+    /// (`rms::gen` is the single source of truth for the class caps and
+    /// the sampling discipline; the caps and draw order are exactly the
+    /// historical ones, so traces stay bit-identical).
+    fn mix(&self) -> WidthMix {
+        WidthMix::for_pool(self.total_nodes)
     }
 
     /// The mean interarrival gap actually used: the explicit override,
@@ -102,7 +94,7 @@ impl SynthTrace {
             return g;
         }
         let expected_runtime = (self.min_runtime + self.max_runtime) / 2.0;
-        let expected_work = self.expected_width() * expected_runtime;
+        let expected_work = self.mix().expected_width() * expected_runtime;
         expected_work / (self.total_nodes as f64 * self.load.max(1e-6))
     }
 
@@ -113,7 +105,7 @@ impl SynthTrace {
     /// get `growth ×` expansion headroom. Jobs come out
     /// arrival-sorted, ready for `rms::sched::schedule_with_pricer`.
     pub fn generate(&self) -> Vec<JobSpec> {
-        let (narrow, medium, wide) = self.width_caps();
+        let mix = self.mix();
         let gap = self.gap();
         let mut rng = Rng::new(self.seed);
         let mut arrival = 0.0f64;
@@ -122,12 +114,7 @@ impl SynthTrace {
             // Fixed draw order per job keeps the stream stable:
             // gap, class, width, runtime, malleable.
             arrival += 2.0 * gap * rng.f64();
-            let cap = match rng.below(4) {
-                0 | 1 => narrow,
-                2 => medium,
-                _ => wide,
-            };
-            let width = 1 + rng.below(cap as u64) as usize;
+            let width = mix.sample(&mut rng);
             let runtime = self.min_runtime + (self.max_runtime - self.min_runtime) * rng.f64();
             let malleable = rng.f64() < self.malleable_frac;
             let max_nodes = if malleable {
@@ -302,12 +289,9 @@ mod tests {
         let a = spec.generate();
         let b = spec.generate();
         assert_eq!(a.len(), 500);
-        // JobSpec has no PartialEq; compare field by field (floats must
-        // be bit-identical, so exact == is the right comparison here).
-        for (x, y) in a.iter().zip(&b) {
-            assert!(x.arrival == y.arrival && x.work == y.work);
-            assert_eq!((x.min_nodes, x.max_nodes, x.malleable), (y.min_nodes, y.max_nodes, y.malleable));
-        }
+        // Floats must be bit-identical, so derived == is the right
+        // comparison here.
+        assert_eq!(a, b);
         let mut prev = 0.0;
         let mut any_malleable = false;
         for j in &a {
@@ -327,6 +311,34 @@ mod tests {
         // A different seed must change the trace.
         let c = synth_trace(500, 43, 64);
         assert!(a.iter().zip(&c).any(|(x, y)| x.arrival != y.arrival || x.work != y.work));
+    }
+
+    #[test]
+    fn width_mix_delegation_is_bit_identical_to_the_legacy_draws() {
+        // Pin the legacy parameters: the caps WidthMix::for_pool
+        // produces must equal the formulas SynthTrace::width_caps
+        // historically inlined, and WidthMix::sample must consume the
+        // RNG stream exactly like the historical two-draw match —
+        // together these keep `workload --synth N` output bit-identical
+        // across the delegation to rms::gen.
+        for &total in &[1usize, 2, 3, 8, 15, 16, 31, 64, 100] {
+            let mix = WidthMix::for_pool(total);
+            let narrow = 2usize.min(total.max(1));
+            let medium = (total / 16).max(1);
+            let wide = (total / 4).max(1);
+            assert_eq!((mix.narrow, mix.medium, mix.wide), (narrow, medium, wide));
+            let mut delegated = Rng::new(0xDECAF ^ total as u64);
+            let mut legacy_rng = delegated.clone();
+            for _ in 0..200 {
+                let cap = match legacy_rng.below(4) {
+                    0 | 1 => narrow,
+                    2 => medium,
+                    _ => wide,
+                };
+                let legacy = 1 + legacy_rng.below(cap as u64) as usize;
+                assert_eq!(mix.sample(&mut delegated), legacy);
+            }
+        }
     }
 
     #[test]

@@ -56,7 +56,7 @@ fn assert_auto_dominates(kind: ClusterKind, trace: &str) {
     let matrix = WorkloadMatrix {
         pricers,
         policies: vec![SchedPolicy::Malleable],
-        workloads: vec![WorkloadSpec { label: trace.to_string(), jobs }],
+        workloads: vec![WorkloadSpec::new(trace, jobs)],
         ..WorkloadMatrix::for_kind(kind)
     };
     let r = run_workload_matrix(&matrix, 2).unwrap();
@@ -154,7 +154,7 @@ fn auto_workload_is_bit_identical_across_thread_counts() {
     let matrix = WorkloadMatrix {
         pricers: auto_pricers(&kind_cost_model(kind), 0),
         policies: vec![SchedPolicy::Fcfs, SchedPolicy::Malleable],
-        workloads: vec![WorkloadSpec { label: "smoke".to_string(), jobs }],
+        workloads: vec![WorkloadSpec::new("smoke", jobs)],
         ..WorkloadMatrix::for_kind(kind)
     };
     let serial = run_workload_matrix(&matrix, 1).unwrap();

@@ -39,6 +39,23 @@ fn wall_clock_fixtures() {
 }
 
 #[test]
+fn gen_clock_seed_fixtures() {
+    // The workload generator's core hazard: seeding trace synthesis
+    // from the wall clock breaks the `(manifest, seed)` ->
+    // byte-identical-SWF guarantee pinned by
+    // `rust/tests/gen_conformance.rs`. The good twin is the lineage-
+    // seeding shape `rms::gen::expand_manifest` actually uses (which
+    // the tree-wide self-check below lints for real).
+    assert_rule_pair(
+        "wall-clock",
+        "gen_clock_seed_bad.rs",
+        include_str!("fixtures/detlint/gen_clock_seed_bad.rs"),
+        "gen_clock_seed_good.rs",
+        include_str!("fixtures/detlint/gen_clock_seed_good.rs"),
+    );
+}
+
+#[test]
 fn unordered_iter_fixtures() {
     assert_rule_pair(
         "unordered-iter",

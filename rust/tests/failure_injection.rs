@@ -3,11 +3,23 @@
 //! hang, and RMS/plan validation must reject inconsistent inputs.
 
 use paraspawn::config::{CostModel, SimConfig};
+use paraspawn::coordinator::sweep::ClusterKind;
+use paraspawn::coordinator::wsweep::{
+    analytic_pricers, auto_pricers, default_costs, kind_cost_model, scalar_pricers,
+    stateful_pricers,
+};
 use paraspawn::coordinator::{run_reconfiguration, Scenario};
 use paraspawn::mam::{Method, SpawnStrategy};
+use paraspawn::rms::gen::{expand_manifest, parse_manifest};
+use paraspawn::rms::sched::{
+    schedule_trace, schedule_with_pricer, Outage, SchedPolicy, SchedResult, StatefulPricer,
+    Trace,
+};
+use paraspawn::rms::workload::{JobSpec, ReconfigCostModel, WorkloadError};
 use paraspawn::rms::{AllocPolicy, Rms};
 use paraspawn::simmpi::{Comm, Ctx, Payload, World};
 use paraspawn::topology::Cluster;
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -251,4 +263,233 @@ fn abandoned_async_completion_hits_watchdog_not_hang() {
     assert!(format!("{err}").contains("watchdog"), "unexpected: {err}");
     // Scaled budget: 1.5 s base + 10 ms x 4 ranks, plus wakeup slack.
     assert!(t0.elapsed().as_secs_f64() < 20.0, "watchdog must bound the hang");
+}
+
+// ---------------------------------------------------------------------------
+// Trace-level failure injection: mid-trace node outages
+// (rms::gen manifests -> rms::sched::schedule_trace) must be absorbed
+// by forced shrink/requeue, conserve node-seconds under every pricing
+// arm, and cost the outage-free path nothing.
+// ---------------------------------------------------------------------------
+
+fn conservation(label: &str, r: &SchedResult) {
+    let lhs = r.work_node_seconds
+        + r.reconfig_node_seconds
+        + r.idle_node_seconds
+        + r.outage_node_seconds;
+    let rel = (lhs - r.total_node_seconds).abs() / r.total_node_seconds.max(1.0);
+    assert!(
+        rel < 1e-6,
+        "{label}: work + reconfig + idle + outage = {lhs} but total = {} (rel {rel:e})",
+        r.total_node_seconds
+    );
+}
+
+/// A mid-trace outage on a cluster saturated by one malleable job is
+/// absorbed by a forced (priced) shrink; the downed node-time lands in
+/// the outage ledger and the run still conserves node-seconds.
+#[test]
+fn outage_forces_priced_shrink_on_a_malleable_runner() {
+    let cluster = Cluster::mini(8, 4);
+    let jobs = vec![JobSpec {
+        arrival: 0.0,
+        work: 8000.0,
+        min_nodes: 2,
+        max_nodes: 8,
+        malleable: true,
+    }];
+    let outage = Outage { start: 10.0, nodes: 4, duration: 50.0 };
+    let run = |outages: Vec<Outage>| {
+        let mut pricer = ReconfigCostModel::ts(1.0);
+        let trace = Trace { jobs: jobs.clone(), checkpoint_s: Vec::new(), outages };
+        schedule_trace(
+            &cluster,
+            AllocPolicy::WholeNodes,
+            SchedPolicy::Malleable,
+            &mut pricer,
+            &trace,
+        )
+        .unwrap()
+    };
+    let plain = run(Vec::new());
+    let hit = run(vec![outage]);
+
+    assert!(hit.shrinks > plain.shrinks, "the outage must force a shrink: {hit:?}");
+    assert!(hit.expands >= plain.expands, "the runner re-expands after the outage ends");
+    // 4 nodes down for 50 s, no requeue -> exactly 200 downed
+    // node-seconds and no lost work.
+    assert!(
+        (hit.outage_node_seconds - 200.0).abs() < 1e-9,
+        "outage ledger {} != 200",
+        hit.outage_node_seconds
+    );
+    assert!(hit.makespan > plain.makespan, "losing capacity cannot speed the run up");
+    conservation("forced shrink", &hit);
+    conservation("outage-free", &plain);
+    assert_eq!(plain.outage_node_seconds, 0.0);
+}
+
+/// With only a rigid full-width runner, the outage cannot shrink
+/// anyone: the victim is requeued (losing its progress), the job
+/// restarts after the outage ends, and both the downed node-time and
+/// the lost work land in the outage ledger.
+#[test]
+fn outage_requeues_a_rigid_runner_and_accounts_the_lost_work() {
+    let cluster = Cluster::mini(8, 4);
+    let jobs = vec![JobSpec {
+        arrival: 0.0,
+        work: 800.0,
+        min_nodes: 8,
+        max_nodes: 8,
+        malleable: false,
+    }];
+    let trace = Trace {
+        jobs,
+        checkpoint_s: Vec::new(),
+        outages: vec![Outage { start: 10.0, nodes: 1, duration: 50.0 }],
+    };
+    let mut pricer = ReconfigCostModel::ts(1.0);
+    let r = schedule_trace(
+        &cluster,
+        AllocPolicy::WholeNodes,
+        SchedPolicy::Fcfs,
+        &mut pricer,
+        &trace,
+    )
+    .unwrap();
+
+    // Runs 0..10 on 8 nodes (80 node-seconds lost), waits out the
+    // outage (1 node down for 50 s), restarts at t = 60 and runs its
+    // full 100 s: finish 160, outage ledger 80 + 50 = 130.
+    assert_eq!(r.shrinks, 0, "a rigid job cannot be shrunk: {r:?}");
+    assert!((r.jobs[0].finish - 160.0).abs() < 1e-9, "finish {} != 160", r.jobs[0].finish);
+    assert!((r.jobs[0].wait - 60.0).abs() < 1e-9, "final admission wait {}", r.jobs[0].wait);
+    assert!(
+        (r.outage_node_seconds - 130.0).abs() < 1e-9,
+        "outage ledger {} != 130",
+        r.outage_node_seconds
+    );
+    conservation("requeue", &r);
+}
+
+fn smoke_manifest_text() -> String {
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("examples/manifests/ci_smoke.conf");
+    std::fs::read_to_string(&path).expect("bundled smoke manifest readable")
+}
+
+/// Node-seconds conserve under all seven pricing arms on a generated
+/// outage-bearing, checkpoint-bearing trace, for every scheduling
+/// policy: work + reconfig + idle + outage always equals the
+/// `total_nodes x makespan` budget.
+#[test]
+fn node_seconds_conserve_under_all_seven_pricing_arms() {
+    let manifest = parse_manifest(&smoke_manifest_text()).unwrap();
+    let traces = expand_manifest(&manifest, 42);
+    let (name, diurnal) = &traces[0];
+    assert_eq!(name, "diurnal");
+    assert!(!diurnal.outages.is_empty() && !diurnal.checkpoint_s.is_empty());
+
+    let cluster = Cluster::mini(8, 4);
+    let cost = kind_cost_model(ClusterKind::Mini);
+    let mut arms = scalar_pricers(&default_costs());
+    arms.extend(analytic_pricers(&cost, None, 0));
+    arms.extend(stateful_pricers(&cost, None, 0));
+    arms.extend(auto_pricers(&cost, 0));
+    assert_eq!(arms.len(), 7);
+
+    for spec in &arms {
+        for &policy in SchedPolicy::ALL.iter() {
+            let mut pricer = spec.build(&cluster);
+            let r = schedule_trace(
+                &cluster,
+                AllocPolicy::WholeNodes,
+                policy,
+                pricer.as_mut(),
+                diurnal,
+            )
+            .unwrap();
+            assert!(r.outage_node_seconds > 0.0, "{}: the outage must cost", spec.label);
+            conservation(&format!("{}/{}", spec.label, policy.name()), &r);
+        }
+    }
+}
+
+/// A zero-overlay trace schedules bit-identically to the plain
+/// outage-free entry point, under both a scalar and a stateful pricer,
+/// for every policy — the overlay machinery costs the legacy path
+/// nothing, not even an event count.
+#[test]
+fn zero_outage_trace_is_bit_identical_to_the_outage_free_path() {
+    let manifest = parse_manifest(&smoke_manifest_text()).unwrap();
+    let traces = expand_manifest(&manifest, 42);
+    let (name, flat) = &traces[1];
+    assert_eq!(name, "flat");
+    assert!(flat.checkpoint_s.is_empty() && flat.outages.is_empty());
+    assert!(flat.jobs.len() >= 50, "flat control must stay non-trivial");
+
+    let cluster = Cluster::mini(8, 4);
+    let cost = CostModel::mn5();
+    for &policy in SchedPolicy::ALL.iter() {
+        let mut a = ReconfigCostModel::ts(1.0);
+        let mut b = ReconfigCostModel::ts(1.0);
+        let via_trace =
+            schedule_trace(&cluster, AllocPolicy::WholeNodes, policy, &mut a, flat).unwrap();
+        let via_jobs =
+            schedule_with_pricer(&cluster, AllocPolicy::WholeNodes, policy, &mut b, &flat.jobs)
+                .unwrap();
+        assert_eq!(via_trace, via_jobs, "{}: scalar paths diverged", policy.name());
+
+        let mut a = StatefulPricer::ts(cluster.clone(), cost.clone());
+        let mut b = StatefulPricer::ts(cluster.clone(), cost.clone());
+        let via_trace =
+            schedule_trace(&cluster, AllocPolicy::WholeNodes, policy, &mut a, flat).unwrap();
+        let via_jobs =
+            schedule_with_pricer(&cluster, AllocPolicy::WholeNodes, policy, &mut b, &flat.jobs)
+                .unwrap();
+        assert_eq!(via_trace, via_jobs, "{}: stateful paths diverged", policy.name());
+    }
+}
+
+/// Malformed overlays are rejected loudly before any scheduling runs.
+#[test]
+fn malformed_trace_overlays_are_rejected() {
+    let cluster = Cluster::mini(2, 4);
+    let jobs = vec![JobSpec {
+        arrival: 0.0,
+        work: 10.0,
+        min_nodes: 1,
+        max_nodes: 1,
+        malleable: false,
+    }];
+    let run = |trace: &Trace| {
+        let mut pricer = ReconfigCostModel::ts(1.0);
+        schedule_trace(&cluster, AllocPolicy::WholeNodes, SchedPolicy::Fcfs, &mut pricer, trace)
+    };
+    let cases = [
+        Trace { jobs: jobs.clone(), checkpoint_s: vec![1.0, 2.0], outages: Vec::new() },
+        Trace { jobs: jobs.clone(), checkpoint_s: vec![-1.0], outages: Vec::new() },
+        Trace {
+            jobs: jobs.clone(),
+            checkpoint_s: Vec::new(),
+            outages: vec![Outage { start: 0.0, nodes: 0, duration: 1.0 }],
+        },
+        Trace {
+            jobs: jobs.clone(),
+            checkpoint_s: Vec::new(),
+            outages: vec![Outage { start: f64::NAN, nodes: 1, duration: 1.0 }],
+        },
+        Trace {
+            jobs,
+            checkpoint_s: Vec::new(),
+            outages: vec![Outage { start: 0.0, nodes: 1, duration: 0.0 }],
+        },
+    ];
+    for (i, trace) in cases.iter().enumerate() {
+        let err = run(trace).unwrap_err();
+        assert!(
+            matches!(err, WorkloadError::Overlay { .. }),
+            "case {i}: expected an overlay error, got {err}"
+        );
+    }
 }

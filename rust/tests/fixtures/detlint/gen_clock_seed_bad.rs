@@ -1,0 +1,13 @@
+// detlint fixture: known-bad for `wall-clock` in a generator shape.
+// The hazard the scenario-manifest generator must avoid: seeding trace
+// synthesis from the wall clock makes every expansion of the same
+// (manifest, seed) pair drift, so re-runs stop being byte-identical.
+use std::time::SystemTime;
+
+pub fn trace_seed(manifest_seed: u64) -> u64 {
+    let now = SystemTime::now();
+    let entropy = now
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map_or(0, |d| d.as_secs());
+    manifest_seed ^ entropy
+}

@@ -1,0 +1,13 @@
+// detlint fixture: known-good twin for `wall-clock` in a generator
+// shape. Lineage seeding: the sampler stream derives from the manifest
+// seed and the scenario name alone, so the same (manifest, seed) pair
+// re-expands byte-identically no matter when or where it runs.
+
+pub fn trace_seed(manifest_seed: u64, scenario: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in scenario.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    manifest_seed ^ h
+}

@@ -1,0 +1,318 @@
+//! Generator conformance suite for the scenario-manifest workload
+//! generator ([`paraspawn::rms::gen`] + `paraspawn gen`).
+//!
+//! Five claims are pinned:
+//!
+//! 1. **Determinism**: the same `(manifest, seed)` expands to
+//!    byte-identical annotated SWF traces on re-run and across thread
+//!    counts (lineage-RNG per scenario; no global state).
+//! 2. **Rate conformance**: the realized arrival count in every
+//!    regime window (flat, burst, drain, dow/hod gating) tracks the
+//!    declared schedule — the arrivals are an exact non-homogeneous
+//!    Poisson process, so a 10% window tolerance is ~6σ headroom.
+//! 3. **Distribution conformance**: job widths and runtimes stay in
+//!    their declared bounds and the malleable/checkpoint fractions are
+//!    honored.
+//! 4. **Round-trip**: annotated traces survive write → read → write
+//!    byte-identically, and the legacy bundled traces parse through
+//!    [`read_swf_trace`] exactly as through plain [`read_swf`].
+//! 5. **The headline**: on the bundled drain scenario the
+//!    state-aware and autotuned pricing arms strictly beat the scalar
+//!    arms on reconfiguration node-seconds.
+
+use paraspawn::coordinator::sweep::ClusterKind;
+use paraspawn::coordinator::wsweep::{
+    analytic_pricers, auto_pricers, default_costs, kind_cost_model, manifest_workloads,
+    run_workload_matrix, scalar_pricers, stateful_pricers, WorkloadMatrix,
+};
+use paraspawn::rms::gen::{expand_manifest, parse_manifest, GenConfig, Manifest};
+use paraspawn::rms::sched::{
+    read_swf, read_swf_trace, write_swf_trace, SchedPolicy, SchedResult, Trace,
+};
+use paraspawn::util::rng::Rng;
+use std::path::PathBuf;
+
+fn repo_path(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+fn bundled_manifest(name: &str) -> Manifest {
+    let path = repo_path("examples/manifests").join(name);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading bundled manifest {}: {e}", path.display()));
+    parse_manifest(&text).unwrap_or_else(|e| panic!("bundled manifest {name} must parse: {e}"))
+}
+
+/// Render every scenario of an expansion to its annotated SWF bytes.
+fn swf_bytes(manifest: &Manifest, seed: u64) -> Vec<(String, String)> {
+    expand_manifest(manifest, seed)
+        .into_iter()
+        .map(|(name, trace)| (name, write_swf_trace(&trace, 4)))
+        .collect()
+}
+
+/// Arrivals of `trace` inside the half-open window `[a, b)`.
+fn arrivals_in(trace: &Trace, a: f64, b: f64) -> usize {
+    trace.jobs.iter().filter(|j| j.arrival >= a && j.arrival < b).count()
+}
+
+fn assert_close(label: &str, observed: usize, expected: f64, rel_tol: f64) {
+    let lo = expected * (1.0 - rel_tol);
+    let hi = expected * (1.0 + rel_tol);
+    assert!(
+        (observed as f64) >= lo && (observed as f64) <= hi,
+        "{label}: observed {observed} arrivals, expected {expected} ± {:.0}%",
+        rel_tol * 100.0
+    );
+}
+
+/// Same `(manifest, seed)` → byte-identical SWF on re-run; a different
+/// seed produces a different trace; and four concurrent expansions of
+/// the same manifest agree byte-for-byte with the sequential one.
+#[test]
+fn expansion_is_byte_identical_on_rerun_and_across_threads() {
+    let manifest = bundled_manifest("ci_smoke.conf");
+    let first = swf_bytes(&manifest, 42);
+    let second = swf_bytes(&manifest, 42);
+    assert_eq!(first, second, "same (manifest, seed) must re-expand byte-identically");
+    assert_eq!(first.len(), 2, "ci_smoke declares two scenarios");
+    assert_ne!(
+        first,
+        swf_bytes(&manifest, 43),
+        "a different seed must produce a different trace"
+    );
+
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let m = manifest.clone();
+            std::thread::spawn(move || swf_bytes(&m, 42))
+        })
+        .collect();
+    for h in handles {
+        let threaded = h.join().expect("expansion thread panicked");
+        assert_eq!(threaded, first, "expansion must not depend on the calling thread");
+    }
+}
+
+/// Flat / burst / drain regime windows: the realized arrival count in
+/// each window tracks the declared piecewise-constant rate.
+#[test]
+fn realized_arrival_rate_tracks_the_regime_schedule() {
+    // 0.5 jobs/s flat, doubled on [7200, 14400).
+    let m = parse_manifest(
+        "cluster = mini:8:4\ndays = 0.25\nbase_rate = 1800\nbursts = 7200:7200:2\n",
+    )
+    .unwrap();
+    let (_, trace) = &expand_manifest(&m, 7)[0];
+    assert_close("flat head", arrivals_in(trace, 0.0, 7200.0), 3600.0, 0.10);
+    assert_close("burst window", arrivals_in(trace, 7200.0, 14400.0), 7200.0, 0.10);
+    assert_close("flat tail", arrivals_in(trace, 14400.0, 21600.0), 3600.0, 0.10);
+
+    // A zero-multiplier window is a hard arrival gap, not just a lull.
+    let m = parse_manifest(
+        "cluster = mini:8:4\ndays = 0.125\nbase_rate = 1800\nbursts = 3600:3600:0\n",
+    )
+    .unwrap();
+    let (_, trace) = &expand_manifest(&m, 7)[0];
+    assert_close("pre-drain", arrivals_in(trace, 0.0, 3600.0), 1800.0, 0.10);
+    assert_eq!(
+        arrivals_in(trace, 3600.0, 7200.0),
+        0,
+        "a mult-0 window must admit no arrivals"
+    );
+    assert_close("post-drain", arrivals_in(trace, 7200.0, 10800.0), 1800.0, 0.10);
+}
+
+/// Day-of-week and hour-of-day multipliers gate arrivals exactly: with
+/// only hour 0 of day 0 enabled, every arrival lands there.
+#[test]
+fn dow_and_hod_schedules_gate_arrivals() {
+    let hod = format!("1{}", ",0".repeat(23));
+    let text = format!(
+        "cluster = mini:8:4\ndays = 2\nbase_rate = 1200\ndow = 1,0,1,1,1,1,1\nhod = {hod}\n"
+    );
+    let m = parse_manifest(&text).unwrap();
+    let (_, trace) = &expand_manifest(&m, 11)[0];
+    assert_close("enabled hour", trace.jobs.len(), 1200.0, 0.10);
+    for j in &trace.jobs {
+        assert!(
+            j.arrival < 3600.0,
+            "arrival {} escaped hour 0 of day 0 (dow[1] = 0, hod = hour 0 only)",
+            j.arrival
+        );
+    }
+}
+
+/// Widths, runtimes, malleability and the checkpoint overlay all honor
+/// their declared bounds and fractions.
+#[test]
+fn job_distributions_honor_bounds_and_fractions() {
+    let total_nodes = 16;
+    let cfg = GenConfig {
+        base_rate: 300.0,
+        width_min: 2,
+        width_max: 4,
+        runtime_min: 100.0,
+        runtime_max: 200.0,
+        malleable_frac: 0.25,
+        growth: 3,
+        checkpoint_frac: 0.5,
+        checkpoint_s: 7.5,
+        ..GenConfig::default()
+    };
+    let trace = cfg.generate(total_nodes, &mut Rng::new(7));
+    let n = trace.jobs.len();
+    assert!(n > 5000, "need a statistically meaningful trace, got {n} jobs");
+    assert_eq!(trace.checkpoint_s.len(), n, "checkpoint overlay must cover every job");
+
+    for (j, &c) in trace.jobs.iter().zip(&trace.checkpoint_s) {
+        assert!((2..=4).contains(&j.min_nodes), "width {} out of [2, 4]", j.min_nodes);
+        let runtime = j.work / j.min_nodes as f64;
+        assert!(
+            (100.0 - 1e-9..=200.0 + 1e-9).contains(&runtime),
+            "runtime {runtime} out of [100, 200]"
+        );
+        if j.malleable {
+            let want = (j.min_nodes * 3).min(total_nodes);
+            assert_eq!(j.max_nodes, want, "malleable growth must be width × 3, clamped");
+        } else {
+            assert_eq!(j.max_nodes, j.min_nodes, "rigid jobs must not grow");
+        }
+        assert!(c == 0.0 || c == 7.5, "checkpoint overlay entry {c} is neither 0 nor 7.5");
+    }
+
+    let malleable = trace.jobs.iter().filter(|j| j.malleable).count() as f64 / n as f64;
+    assert!(
+        (malleable - 0.25).abs() < 0.05,
+        "realized malleable fraction {malleable} is off the declared 0.25"
+    );
+    let bearing =
+        trace.checkpoint_s.iter().filter(|&&c| c > 0.0).count() as f64 / n as f64;
+    assert!(
+        (bearing - 0.5).abs() < 0.05,
+        "realized checkpoint fraction {bearing} is off the declared 0.5"
+    );
+}
+
+/// Annotated traces survive write → read → write byte-identically,
+/// with all three overlay kinds (malleability, checkpoint, outage)
+/// exercised.
+#[test]
+fn annotated_swf_round_trip_is_byte_identical() {
+    let manifest = bundled_manifest("ci_smoke.conf");
+    let traces = expand_manifest(&manifest, 42);
+    let (name, trace) = &traces[0];
+    assert_eq!(name, "diurnal");
+    assert!(trace.jobs.iter().any(|j| j.malleable), "diurnal must have malleable jobs");
+    assert!(!trace.checkpoint_s.is_empty(), "diurnal must carry a checkpoint overlay");
+    assert!(!trace.outages.is_empty(), "diurnal must carry an outage");
+
+    let first = write_swf_trace(trace, 4);
+    let reread = read_swf_trace(&first, 4, 8).expect("generated trace must re-parse");
+    let second = write_swf_trace(&reread, 4);
+    assert_eq!(first, second, "write → read → write must be byte-identical");
+}
+
+/// The bundled legacy traces parse through the annotated reader exactly
+/// as through the plain one: same jobs, no overlays — the trace-format
+/// extension costs legacy traces nothing.
+#[test]
+fn legacy_swf_traces_still_parse_identically() {
+    for (kind, name) in [
+        (ClusterKind::Mini, "replay_smoke.swf"),
+        (ClusterKind::Mn5, "replay2k.swf"),
+    ] {
+        let cluster = kind.cluster();
+        let cores = cluster.nodes.iter().map(|n| n.cores).min().unwrap_or(1);
+        let path = repo_path("rust/tests/data").join(name);
+        let text = std::fs::read_to_string(&path).expect("bundled trace readable");
+        let legacy = read_swf(&text, cores, cluster.len()).expect("legacy parse");
+        let trace = read_swf_trace(&text, cores, cluster.len()).expect("annotated parse");
+        assert_eq!(trace.jobs, legacy, "{name}: job lists must agree");
+        assert!(trace.checkpoint_s.is_empty(), "{name}: no checkpoint overlay");
+        assert!(trace.outages.is_empty(), "{name}: no outages");
+    }
+}
+
+/// The headline acceptance claim: on the bundled expansion-heavy drain
+/// scenario, the state-aware arms price the repeated warm expansions
+/// against warm RTE daemons and strictly undercut the flat scalar
+/// arms; the autotuner in turn never pays more than any fixed arm.
+/// The full seven-arm sweep (TS, SS, TS-exact, SS-exact, TS-state,
+/// SS-state, auto) runs end-to-end, and the manifest's scenario tag
+/// lands in the results.
+#[test]
+fn stateful_and_auto_strictly_beat_scalar_on_the_drain_scenario() {
+    let text = std::fs::read_to_string(repo_path("examples/manifests/drain_expand.conf"))
+        .expect("bundled drain manifest readable");
+    let (cluster, alloc, workloads) = manifest_workloads(&text, 42).unwrap();
+    assert_eq!(workloads.len(), 1);
+    assert_eq!(workloads[0].label, "drain");
+    assert!(workloads[0].jobs.len() >= 30, "drain backlog must stay non-trivial");
+
+    let cost = kind_cost_model(ClusterKind::Mini);
+    let mut pricers = scalar_pricers(&default_costs());
+    pricers.extend(analytic_pricers(&cost, None, 0));
+    pricers.extend(stateful_pricers(&cost, None, 0));
+    pricers.extend(auto_pricers(&cost, 0));
+    assert_eq!(pricers.len(), 7, "the full pricing axis is seven arms");
+
+    let matrix = WorkloadMatrix {
+        cluster,
+        alloc,
+        policies: vec![SchedPolicy::Malleable],
+        pricers,
+        workloads,
+    };
+    let r = run_workload_matrix(&matrix, 2).unwrap();
+    assert_eq!(r.cells.len(), 7, "every arm must produce a cell");
+    assert_eq!(r.scenarios.get("drain").map(String::as_str), Some("drain"));
+
+    let get = |arm: &str| -> SchedResult {
+        r.cells[&("drain".to_string(), "malleable".to_string(), arm.to_string())].clone()
+    };
+    let scalar_best =
+        get("TS").reconfig_node_seconds.min(get("SS").reconfig_node_seconds);
+    assert!(
+        get("TS").expands > 0,
+        "the drain scenario must force expansions under the scalar arm"
+    );
+    for arm in ["TS-state", "SS-state", "auto"] {
+        let got = get(arm).reconfig_node_seconds;
+        assert!(
+            got < scalar_best,
+            "{arm} reconfig node-seconds {got} must strictly undercut \
+             the best scalar arm {scalar_best}"
+        );
+    }
+    let auto = get("auto").reconfig_node_seconds;
+    let fixed_best = get("TS-state")
+        .reconfig_node_seconds
+        .min(get("SS-state").reconfig_node_seconds);
+    assert!(
+        auto <= fixed_best,
+        "auto {auto} must never pay more than the best fixed stateful arm {fixed_best}"
+    );
+}
+
+/// Manifest-driven matrices stay bit-identical across thread counts —
+/// including the per-workload scenario tags assembled from parallel
+/// cells.
+#[test]
+fn manifest_matrix_is_bit_identical_across_thread_counts() {
+    let text = std::fs::read_to_string(repo_path("examples/manifests/ci_smoke.conf"))
+        .expect("bundled smoke manifest readable");
+    let (cluster, alloc, workloads) = manifest_workloads(&text, 42).unwrap();
+    assert_eq!(workloads.len(), 2, "ci_smoke declares two scenarios");
+    let matrix = WorkloadMatrix {
+        cluster,
+        alloc,
+        policies: vec![SchedPolicy::Malleable],
+        pricers: scalar_pricers(&default_costs()),
+        workloads,
+    };
+    let serial = run_workload_matrix(&matrix, 1).unwrap();
+    let parallel = run_workload_matrix(&matrix, 4).unwrap();
+    assert_eq!(serial, parallel, "manifest cells must not depend on thread count");
+    assert_eq!(serial.scenarios.len(), 2, "both scenario tags must be assembled");
+}

@@ -121,8 +121,8 @@ fn c_workload_sweep_is_bit_identical_across_thread_counts() {
     let matrix = WorkloadMatrix {
         pricers,
         workloads: vec![
-            WorkloadSpec { label: "w0".into(), jobs: synthetic_workload(25, 8, 0.6, 5) },
-            WorkloadSpec { label: "w1".into(), jobs: synthetic_workload(25, 8, 0.3, 6) },
+            WorkloadSpec::new("w0", synthetic_workload(25, 8, 0.6, 5)),
+            WorkloadSpec::new("w1", synthetic_workload(25, 8, 0.3, 6)),
         ],
         ..WorkloadMatrix::for_kind(ClusterKind::Mini)
     };

@@ -128,6 +128,7 @@ fn golden_workload_results() -> WorkloadResults {
         reconfig_node_seconds: 0.0,
         work_node_seconds: 192.0,
         idle_node_seconds: 64.0,
+        outage_node_seconds: 0.0,
         total_node_seconds: 256.0,
         events: 4,
         jobs: vec![
@@ -146,6 +147,7 @@ fn golden_workload_results() -> WorkloadResults {
         reconfig_node_seconds: 3.5,
         work_node_seconds: 120.0,
         idle_node_seconds: 4.5,
+        outage_node_seconds: 0.0,
         total_node_seconds: 128.0,
         events: 6,
         jobs: vec![
@@ -159,6 +161,9 @@ fn golden_workload_results() -> WorkloadResults {
     };
     r.cells.insert(("wA".to_string(), "fcfs".to_string(), "TS".to_string()), fcfs);
     r.cells.insert(("wA".to_string(), "malleable".to_string(), "TS".to_string()), malleable);
+    // A scenario tag pins the manifest-expansion `scenario` column
+    // plumbing (plain workloads render `-` instead).
+    r.scenarios.insert("wA".to_string(), "diurnal".to_string());
     r
 }
 

@@ -152,7 +152,7 @@ fn stateful_workload_is_bit_identical_across_thread_counts() {
     let matrix = WorkloadMatrix {
         pricers: stateful_pricers(&kind_cost_model(kind), None, 0),
         policies: vec![SchedPolicy::Fcfs, SchedPolicy::Malleable],
-        workloads: vec![WorkloadSpec { label: "smoke".to_string(), jobs }],
+        workloads: vec![WorkloadSpec::new("smoke", jobs)],
         ..WorkloadMatrix::for_kind(kind)
     };
     let serial = run_workload_matrix(&matrix, 1).unwrap();
